@@ -1,0 +1,103 @@
+//! Budget-constrained fine-tuning: the paper's full offline-online flow.
+//!
+//! 1. Offline: probe activations + exact gradients on the host, measure
+//!    activation perplexity across the eps grid (eq. 7), run the eq.-9
+//!    backtracking rank selection under a user-given memory budget.
+//! 2. Online: fine-tune with the ASI executable whose baked ranks are
+//!    closest to the selection, and report how far under budget the
+//!    run actually stayed.
+//!
+//! ```bash
+//! cargo run --release --example finetune_budget -- 48   # budget in KiB
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use asi::coordinator::{backtracking_select, greedy_select,
+                       measure_perplexity, probe, HostEdgeNet, Session,
+                       WarmStart, DEFAULT_EPS};
+use asi::tensor::{ConvGeom, Tensor4};
+
+fn main() -> Result<()> {
+    let budget_kb: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48);
+    let depth = 2usize;
+    let session = Session::open(Path::new("artifacts"), 42)?;
+    let cnn = session.engine.manifest.cnn("mcunet")?.clone();
+
+    // ---- offline phase -----------------------------------------------
+    println!("== offline: perplexity probe + rank selection ==");
+    let params = session.engine.load_params("mcunet")?;
+    let net = HostEdgeNet::from_params(&cnn, &params)?;
+    let pb = 8;
+    let b = session.downstream_ds.batch("train", 0, pb);
+    let x = Tensor4::from_vec(
+        [pb, cnn.in_channels, cnn.image_size, cnn.image_size],
+        b.x[..pb * cnn.in_channels * cnn.image_size * cnn.image_size]
+            .to_vec(),
+    );
+    let cap = probe(&net, &x, &b.y[..pb]);
+    let geoms: Vec<ConvGeom> = cnn
+        .convs
+        .iter()
+        .map(|&(_, s)| ConvGeom { stride: s, padding: cnn.padding,
+                                  ksize: cnn.ksize })
+        .collect();
+    let tail_start = cnn.convs.len() - depth;
+    let table = measure_perplexity(&cap, &geoms, tail_start, &DEFAULT_EPS)?;
+
+    let budget = budget_kb * 1024;
+    let exact = backtracking_select(&table, budget);
+    let greedy = greedy_select(&table, budget);
+    match (&exact, &greedy) {
+        (Some(e), Some(g)) => {
+            println!("backtracking: perp {:.5}, mem {:.1} KiB, eps {:?}",
+                     e.total_perplexity,
+                     e.total_mem_bytes as f64 / 1024.0,
+                     e.choice.iter().map(|&j| table.eps[j])
+                         .collect::<Vec<_>>());
+            println!("greedy      : perp {:.5}, mem {:.1} KiB",
+                     g.total_perplexity,
+                     g.total_mem_bytes as f64 / 1024.0);
+            for (li, r) in e.ranks(&table).iter().enumerate() {
+                println!("  layer {}: ranks {:?}", tail_start + li, r);
+            }
+        }
+        _ => {
+            println!("budget {budget_kb} KiB infeasible for depth {depth}");
+            return Ok(());
+        }
+    }
+
+    // ---- online phase -------------------------------------------------
+    // Pick the baked rank variant closest to the selected mean rank.
+    let sel = exact.unwrap();
+    let mean_rank: f64 = sel
+        .ranks(&table)
+        .iter()
+        .flat_map(|r| r.iter())
+        .map(|&r| r as f64)
+        .sum::<f64>()
+        / (4.0 * depth as f64);
+    let variant = [1usize, 2, 4, 8]
+        .into_iter()
+        .min_by_key(|&r| ((r as f64 - mean_rank).abs() * 1000.0) as i64)
+        .unwrap();
+    let exec = format!("mcunet_asi_d{depth}_r{variant}");
+    println!("\n== online: fine-tuning with {exec} ==");
+    let pre = session.pretrain("mcunet", 60, 0.05, 1)?;
+    let rep = session.finetune("mcunet", &exec, Some(&pre), 80, 0.05,
+                               WarmStart::Warm, 4, 7)?;
+    println!("loss curve : {}", rep.loss.sparkline(50));
+    println!("accuracy   : {:.2}%", 100.0 * rep.accuracy);
+    println!(
+        "warm-start state carried by the coordinator: {:.1} KiB \
+         (budget {budget_kb} KiB)",
+        rep.state_bytes as f64 / 1024.0
+    );
+    Ok(())
+}

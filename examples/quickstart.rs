@@ -1,0 +1,72 @@
+//! Quickstart: the smallest end-to-end ASI fine-tuning run.
+//!
+//! Loads the AOT artifacts (run `make artifacts` first), pre-trains the
+//! compact MCUNet on the synthetic pretrain split, fine-tunes its last
+//! two conv layers with ASI under a warm start, and reports loss,
+//! accuracy and the activation state the coordinator carries.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use asi::coordinator::{Session, WarmStart};
+use asi::metrics::flops::{train_cost, LayerDims, Method};
+
+fn main() -> Result<()> {
+    let session = Session::open(Path::new("artifacts"), 42)?;
+    println!("platform: {}", session.engine.platform());
+
+    // 1. Pre-train (the "ImageNet checkpoint" substitute).
+    println!("pre-training mcunet (vanilla, all layers)...");
+    let pre = session.pretrain("mcunet", 60, 0.05, 1)?;
+
+    // 2. Fine-tune the last 2 conv layers with ASI (rank 4 per mode).
+    println!("fine-tuning with ASI (depth 2, warm start)...");
+    let rep = session.finetune(
+        "mcunet",
+        "mcunet_asi_d2_r4",
+        Some(&pre),
+        80,
+        0.05,
+        WarmStart::Warm,
+        4,
+        7,
+    )?;
+
+    println!("loss curve : {}", rep.loss.sparkline(50));
+    println!("final loss : {:.4}", rep.final_loss);
+    println!("accuracy   : {:.2}%", 100.0 * rep.accuracy);
+    println!("per step   : {:.1} ms", 1e3 * rep.wall_s / rep.steps as f64);
+    println!("ASI state  : {} bytes (warm-start factors)", rep.state_bytes);
+
+    // 3. The paper's analytic accounting for the same configuration.
+    let cnn = session.engine.manifest.cnn("mcunet")?;
+    let layers: Vec<LayerDims> = cnn
+        .activation_shapes
+        .iter()
+        .zip(&cnn.convs)
+        .map(|(&[b, c, h, w], &(cout, stride))| {
+            LayerDims::new(b, c, h, w, cout, stride, cnn.ksize)
+        })
+        .collect();
+    let ranks = vec![[4, 4, 4, 4]; 2];
+    let vanilla = train_cost(&layers, 2, &Method::Vanilla);
+    let asi = train_cost(&layers, 2, &Method::Asi(ranks));
+    println!(
+        "activation memory: vanilla {:.1} KiB vs ASI {:.1} KiB ({:.1}x)",
+        vanilla.act_bytes as f64 / 1024.0,
+        asi.act_bytes as f64 / 1024.0,
+        vanilla.act_bytes as f64 / asi.act_bytes as f64
+    );
+    println!(
+        "train FLOPs/step : vanilla {:.1} M vs ASI {:.1} M ({:.2}x)",
+        vanilla.flops as f64 / 1e6,
+        asi.flops as f64 / 1e6,
+        vanilla.flops as f64 / asi.flops as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Rank-selection deep dive: perplexity landscape + search comparison.
+//!
+//! Reproduces the Fig. 6 measurement (perplexity vs explained-variance
+//! threshold for the last layers) and then sweeps the memory budget to
+//! show how the eq.-9 backtracking allocates thresholds per layer, and
+//! where the greedy fallback diverges from the exact search.
+//!
+//! ```bash
+//! cargo run --release --example rank_selection
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use asi::coordinator::{backtracking_select, greedy_select,
+                       measure_perplexity, probe, HostEdgeNet, Session,
+                       DEFAULT_EPS};
+use asi::tensor::{ConvGeom, Tensor4};
+
+fn main() -> Result<()> {
+    let session = Session::open(Path::new("artifacts"), 42)?;
+    let model = "mcunet";
+    let depth = 4usize;
+    let cnn = session.engine.manifest.cnn(model)?.clone();
+    let params = session.engine.load_params(model)?;
+    let net = HostEdgeNet::from_params(&cnn, &params)?;
+
+    let pb = 8;
+    let b = session.downstream_ds.batch("train", 0, pb);
+    let x = Tensor4::from_vec(
+        [pb, cnn.in_channels, cnn.image_size, cnn.image_size],
+        b.x[..pb * cnn.in_channels * cnn.image_size * cnn.image_size]
+            .to_vec(),
+    );
+    let cap = probe(&net, &x, &b.y[..pb]);
+    let geoms: Vec<ConvGeom> = cnn
+        .convs
+        .iter()
+        .map(|&(_, s)| ConvGeom { stride: s, padding: cnn.padding,
+                                  ksize: cnn.ksize })
+        .collect();
+    let tail_start = cnn.convs.len() - depth;
+    let table = measure_perplexity(&cap, &geoms, tail_start, &DEFAULT_EPS)?;
+
+    println!("== perplexity landscape (Fig. 6) ==");
+    println!("{:>5} {:>5} {:>12} {:>16} {:>9}", "layer", "eps",
+             "perplexity", "ranks", "mem KiB");
+    for l in &table.layers {
+        for (j, &eps) in table.eps.iter().enumerate() {
+            println!(
+                "{:>5} {:>5.1} {:>12.5} {:>16} {:>9.1}",
+                tail_start + l.layer,
+                eps,
+                l.perplexity[j],
+                format!("{:?}", l.ranks[j]),
+                l.mem_bytes[j] as f64 / 1024.0
+            );
+        }
+    }
+
+    println!("\n== budget sweep: exact (eq. 9) vs greedy ==");
+    println!("{:>10} {:>14} {:>14} {:>18}", "budget KiB", "exact perp",
+             "greedy perp", "exact eps choice");
+    for budget_kb in [8u64, 16, 32, 64, 128, 256] {
+        let budget = budget_kb * 1024;
+        let e = backtracking_select(&table, budget);
+        let g = greedy_select(&table, budget);
+        match (e, g) {
+            (Some(e), Some(g)) => println!(
+                "{:>10} {:>14.5} {:>14.5} {:>18}",
+                budget_kb,
+                e.total_perplexity,
+                g.total_perplexity,
+                format!("{:?}",
+                        e.choice.iter().map(|&j| table.eps[j])
+                            .collect::<Vec<_>>())
+            ),
+            _ => println!("{budget_kb:>10} {:>14} {:>14}", "infeasible",
+                          "infeasible"),
+        }
+    }
+    Ok(())
+}

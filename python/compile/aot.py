@@ -1,0 +1,319 @@
+"""AOT pipeline: lower every training/inference graph to HLO text.
+
+``python -m compile.aot --out-dir ../artifacts`` produces:
+
+* one ``<name>.hlo.txt`` per executable (HLO *text*, never a serialized
+  ``HloModuleProto`` — jax >= 0.5 emits 64-bit instruction ids that
+  xla_extension 0.5.1 rejects; the text parser reassigns ids), and
+* ``manifest.json`` — everything the Rust runtime needs: model configs,
+  executable -> file mapping, and the exact flat input/output signatures
+  (names derived from the pytree paths, shapes, dtypes).
+
+This is the only place Python runs; after ``make artifacts`` the Rust
+binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+SEED = 0
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission (see /opt/xla-example/gen_hlo.py for the rationale)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE = {"float32": "f32", "int32": "s32", "uint32": "u32"}
+
+
+def _sig(tree, roles: tuple[str, ...] | None = None) -> list[dict]:
+    """Flat (name, role, shape, dtype) signature from a pytree of arrays.
+
+    ``roles`` names the *top-level* elements of the tuple ``tree``; every
+    leaf under element ``i`` is tagged ``roles[i]`` so the Rust runtime can
+    group buffers semantically (trained / frozen / x / y / lr / us / ...)
+    without parsing names.
+    """
+    out = []
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        name = "".join(str(p) for p in path).strip(".")
+        name = (
+            name.replace("[", ".").replace("]", "").replace("'", "")
+            .replace(".", "_").strip("_")
+        ) or "arg"
+        role = ""
+        if roles is not None and len(path) > 0:
+            top = path[0]
+            idx = getattr(top, "idx", getattr(top, "key", None))
+            if isinstance(idx, int) and idx < len(roles):
+                role = roles[idx]
+                name = f"{role}_{name}" if name != str(idx) else role
+        out.append({
+            "name": name,
+            "role": role,
+            "shape": [int(s) for s in leaf.shape],
+            "dtype": _DTYPE[str(leaf.dtype)],
+        })
+    return out
+
+
+def spec_like(tree):
+    """ShapeDtypeStruct pytree mirroring a pytree of concrete arrays."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+class Emitter:
+    """Accumulates lowered executables + manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: dict = {"version": 1, "models": {}, "executables": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, example_args: tuple, meta: dict,
+             in_roles: tuple[str, ...] | None = None,
+             out_roles: tuple[str, ...] | None = None):
+        lowered = jax.jit(fn).lower(*spec_like(example_args))
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *spec_like(example_args))
+        entry = {
+            "file": fname,
+            "inputs": _sig(example_args, in_roles),
+            "outputs": _sig(outs, out_roles),
+            **meta,
+        }
+        self.manifest["executables"][name] = entry
+        n_in = len(entry["inputs"])
+        n_out = len(entry["outputs"])
+        print(f"  {name}: {n_in} inputs -> {n_out} outputs "
+              f"({len(text) // 1024} KiB)")
+
+    def emit_params(self, model_name: str, params_tree):
+        """Serialize initial parameters as raw little-endian f32 bytes.
+
+        Parameter *initialization* runs at build time (here), not in an
+        executable: xla_extension 0.5.1 aborts on the closed_call chains
+        jax.random.fold_in lowers to, and shipping data is simpler and
+        faster than shipping an RNG graph anyway.
+        """
+        flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+        fname = f"{model_name}_params.bin"
+        sig = []
+        with open(os.path.join(self.out_dir, fname), "wb") as f:
+            for path, leaf in flat:
+                arr = np.asarray(leaf, dtype=np.float32)
+                f.write(arr.tobytes())
+                name = "".join(str(p) for p in path)
+                name = (name.replace("[", ".").replace("]", "")
+                        .replace("'", "").replace(".", "_").strip("_"))
+                sig.append({
+                    "name": name,
+                    "shape": [int(s) for s in arr.shape],
+                    "dtype": "f32",
+                })
+        self.manifest["models"][model_name]["params_file"] = fname
+        self.manifest["models"][model_name]["params"] = sig
+        print(f"  {model_name}: params.bin with {len(sig)} tensors")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.manifest['executables'])} "
+              "executables)")
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (shapes only matter; values are placeholders)
+# ---------------------------------------------------------------------------
+
+
+def cnn_examples(cfg: configs.EdgeNetConfig, depth: int,
+                 plan: configs.RankPlan | None):
+    key = jax.random.PRNGKey(SEED)
+    params = model.init_edgenet(cfg, key)
+    n_trained = depth + 1  # tail convs + FC head
+    trained = params[-n_trained:]
+    frozen = params[: len(params) - n_trained]
+    x = jnp.zeros((cfg.batch_size, cfg.in_channels, cfg.image_size,
+                   cfg.image_size), jnp.float32)
+    y = jnp.zeros((cfg.batch_size,), jnp.int32)
+    lr = jnp.float32(0.05)
+    us = None
+    if plan is not None:
+        shapes = cfg.activation_shapes()[-depth:] if depth else []
+        us = [
+            [jnp.zeros((shape[m], plan.ranks[i][m]), jnp.float32)
+             for m in range(4)]
+            for i, shape in enumerate(shapes)
+        ]
+    return params, trained, frozen, x, y, lr, us
+
+
+def emit_cnn(em: Emitter, cfg: configs.EdgeNetConfig, *,
+             depths_full: bool):
+    """All executables for one CNN config.
+
+    ``depths_full`` selects the rich artifact set (the paper's primary
+    model) vs. the economical one used for the other architectures.
+    """
+    name = cfg.name
+    em.manifest["models"][name] = configs.config_to_dict(cfg)
+    params, *_ = cnn_examples(cfg, 0, None)
+    x = jnp.zeros((cfg.batch_size, cfg.in_channels, cfg.image_size,
+                   cfg.image_size), jnp.float32)
+    y = jnp.zeros((cfg.batch_size,), jnp.int32)
+
+    # -- initial parameters as data (deterministic seed)
+    em.emit_params(name, model.init_edgenet(cfg, jax.random.PRNGKey(SEED)))
+
+    # -- infer: (params, x) -> logits
+    em.emit(f"{name}_infer", model.make_edgenet_infer(cfg), (params, x), {
+        "model": name, "kind": "infer"},
+        in_roles=("params", "x"), out_roles=("logits",))
+
+    # -- full vanilla training (used for in-repo pre-training)
+    depth_all = len(cfg.convs)
+    tail = model.TailSpec("vanilla", depth_all, None)
+    step = model.make_edgenet_train_step(cfg, tail)
+    em.emit(f"{name}_train_full", step,
+            (params, [], x, y, jnp.float32(0.05)), {
+                "model": name, "kind": "train", "method": "vanilla",
+                "depth": depth_all},
+            in_roles=("trained", "frozen", "x", "y", "lr"),
+            out_roles=("loss", "trained", "us"))
+
+    depths = (1, 2, 4) if depths_full else (2,)
+    rank_sweeps = {2: (1, 2, 4, 8)} if depths_full else {2: (4,)}
+
+    for depth in depths:
+        _, trained, frozen, x_, y_, lr, _ = cnn_examples(cfg, depth, None)
+
+        # vanilla tail
+        tail = model.TailSpec("vanilla", depth, None)
+        em.emit(f"{name}_vanilla_d{depth}",
+                model.make_edgenet_train_step(cfg, tail),
+                (trained, frozen, x_, y_, lr), {
+                    "model": name, "kind": "train", "method": "vanilla",
+                    "depth": depth},
+                in_roles=("trained", "frozen", "x", "y", "lr"),
+                out_roles=("loss", "trained", "us"))
+
+        # gradient filtering tail
+        tail = model.TailSpec("gf", depth, None)
+        em.emit(f"{name}_gf_d{depth}",
+                model.make_edgenet_train_step(cfg, tail),
+                (trained, frozen, x_, y_, lr), {
+                    "model": name, "kind": "train", "method": "gf",
+                    "depth": depth},
+                in_roles=("trained", "frozen", "x", "y", "lr"),
+                out_roles=("loss", "trained", "us"))
+
+        # ASI tails (rank sweep on the sweep depth only)
+        for r in rank_sweeps.get(depth, (configs.DEFAULT_RANK,)):
+            plan = configs.RankPlan.uniform(cfg, depth, r)
+            _, trained, frozen, x_, y_, lr, us = cnn_examples(
+                cfg, depth, plan)
+            tail = model.TailSpec("asi", depth, plan)
+            em.emit(f"{name}_asi_d{depth}_r{r}",
+                    model.make_edgenet_train_step(cfg, tail),
+                    (trained, frozen, x_, y_, lr, us), {
+                        "model": name, "kind": "train", "method": "asi",
+                        "depth": depth,
+                        "ranks": [list(t) for t in plan.ranks]},
+                    in_roles=("trained", "frozen", "x", "y", "lr", "us"),
+                    out_roles=("loss", "trained", "us"))
+
+        # HOSVD baseline (static eps-quantile ranks == ASI default ranks
+        # for a like-for-like comparison; see DESIGN.md substitutions)
+        plan = configs.RankPlan.uniform(cfg, depth, configs.DEFAULT_RANK)
+        tail = model.TailSpec("hosvd", depth, plan)
+        _, trained, frozen, x_, y_, lr, _ = cnn_examples(cfg, depth, None)
+        em.emit(f"{name}_hosvd_d{depth}",
+                model.make_edgenet_train_step(cfg, tail),
+                (trained, frozen, x_, y_, lr, jnp.int32(0)), {
+                    "model": name, "kind": "train", "method": "hosvd",
+                    "depth": depth,
+                    "ranks": [list(t) for t in plan.ranks]},
+                in_roles=("trained", "frozen", "x", "y", "lr", "step"),
+                out_roles=("loss", "trained", "us"))
+
+
+def emit_lm(em: Emitter, cfg: configs.TinyLMConfig):
+    em.manifest["models"][cfg.name] = configs.lm_config_to_dict(cfg)
+    key = jax.random.PRNGKey(SEED)
+    params = model.init_tinylm(cfg, key)
+    toks = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+    lr = jnp.float32(0.01)
+    n = cfg.batch_size * cfg.seq_len
+
+    em.emit_params(cfg.name, params)
+    em.emit(f"{cfg.name}_infer", model.make_tinylm_infer(cfg),
+            (params, toks), {"model": cfg.name, "kind": "infer"},
+            in_roles=("params", "tokens"), out_roles=("loss", "logits"))
+
+    for depth in (1, 3, 5):
+        tuned, rest = model.split_lm_params(params, depth)
+        em.emit(f"{cfg.name}_vanilla_d{depth}",
+                model.make_tinylm_train_step(cfg, depth, "vanilla"),
+                (tuned, rest, toks, lr), {
+                    "model": cfg.name, "kind": "train", "method": "vanilla",
+                    "depth": depth},
+                in_roles=("trained", "rest", "x", "lr"),
+                out_roles=("loss", "trained", "us"))
+        us = [jnp.zeros((n, cfg.rank), jnp.float32)
+              for _ in range(depth * len(model.LM_LINEARS))]
+        em.emit(f"{cfg.name}_asi_d{depth}",
+                model.make_tinylm_train_step(cfg, depth, "asi"),
+                (tuned, rest, toks, lr, us), {
+                    "model": cfg.name, "kind": "train", "method": "asi",
+                    "depth": depth, "rank": cfg.rank},
+                in_roles=("trained", "rest", "x", "lr", "us"),
+                out_roles=("loss", "trained", "us"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mcunet,mbv2,rn18,rn34,tinylm",
+                    help="comma-separated subset to emit")
+    args = ap.parse_args()
+    wanted = set(args.models.split(","))
+
+    em = Emitter(args.out_dir)
+    for cname, cfg in configs.CNN_ZOO.items():
+        if cname in wanted:
+            print(f"[aot] {cname}")
+            emit_cnn(em, cfg, depths_full=(cname == "mcunet"))
+    if "tinylm" in wanted:
+        print("[aot] tinylm")
+        emit_lm(em, configs.TINYLM)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

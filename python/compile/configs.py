@@ -1,0 +1,189 @@
+"""Model-zoo configurations shared between the AOT pipeline and Rust.
+
+These compact architectures mirror the *layer-shape schedules* of the
+paper's models (MCUNet, MobileNetV2, ResNet-18/34) scaled down to 32x32
+inputs so that the full training system can be exercised end-to-end on a
+laptop-class CPU. The real 224x224 ImageNet shape schedules used for the
+paper's analytic Mem/GFLOPs columns live in ``rust/src/models/zoo.rs``.
+
+``aot.py`` serializes everything a Rust runtime needs into
+``artifacts/manifest.json`` — these configs are the single source of truth
+for the trainable variants.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """One convolution layer: 3x3 kernel, ``pad = 1`` throughout."""
+
+    cout: int
+    stride: int
+
+
+@dataclass(frozen=True)
+class EdgeNetConfig:
+    """A compact plain-conv CNN: stem-free conv stack + GAP + FC head."""
+
+    name: str
+    convs: tuple[ConvSpec, ...]
+    num_classes: int = 10
+    in_channels: int = 3
+    image_size: int = 32
+    batch_size: int = 32
+    ksize: int = 3
+    padding: int = 1
+
+    def activation_shapes(self) -> list[tuple[int, int, int, int]]:
+        """Input activation shape (B, C, H, W) of every conv layer."""
+        shapes = []
+        c, s = self.in_channels, self.image_size
+        for spec in self.convs:
+            shapes.append((self.batch_size, c, s, s))
+            s = (s + 2 * self.padding - self.ksize) // spec.stride + 1
+            c = spec.cout
+        return shapes
+
+    def output_shapes(self) -> list[tuple[int, int, int, int]]:
+        """Output shape (B, C', H', W') of every conv layer."""
+        shapes = []
+        s = self.image_size
+        for spec in self.convs:
+            s = (s + 2 * self.padding - self.ksize) // spec.stride + 1
+            shapes.append((self.batch_size, spec.cout, s, s))
+        return shapes
+
+
+@dataclass(frozen=True)
+class TinyLMConfig:
+    """A small decoder-only transformer for the Table-4 LM experiment."""
+
+    name: str = "tinylm"
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_blocks: int = 5
+    d_ff: int = 256
+    seq_len: int = 64
+    batch_size: int = 8
+    rank: int = 20  # the paper fixes ASI rank 20 for the LM experiment
+
+
+@dataclass(frozen=True)
+class RankPlan:
+    """Per-layer, per-mode truncation ranks for a compressed tail."""
+
+    depth: int                      # number of fine-tuned conv layers
+    ranks: tuple[tuple[int, int, int, int], ...]  # one 4-tuple per layer
+
+    @staticmethod
+    def uniform(cfg: EdgeNetConfig, depth: int, r: int) -> "RankPlan":
+        """Rank ``r`` on every mode, capped by each mode's dimension."""
+        shapes = cfg.activation_shapes()[-depth:]
+        ranks = tuple(
+            tuple(min(r, d) for d in shape) for shape in shapes
+        )
+        return RankPlan(depth=depth, ranks=ranks)
+
+
+# ---------------------------------------------------------------------------
+# The model zoo
+# ---------------------------------------------------------------------------
+
+MCUNET = EdgeNetConfig(
+    name="mcunet",
+    convs=(
+        ConvSpec(16, 2),
+        ConvSpec(24, 1),
+        ConvSpec(40, 2),
+        ConvSpec(48, 1),
+        ConvSpec(96, 2),
+        ConvSpec(96, 1),
+    ),
+)
+
+MOBILENETV2 = EdgeNetConfig(
+    name="mbv2",
+    convs=(
+        ConvSpec(16, 2),
+        ConvSpec(24, 1),
+        ConvSpec(32, 1),
+        ConvSpec(64, 2),
+        ConvSpec(96, 1),
+        ConvSpec(160, 2),
+        ConvSpec(320, 1),
+    ),
+)
+
+RESNET18 = EdgeNetConfig(
+    name="rn18",
+    convs=(
+        ConvSpec(64, 2),
+        ConvSpec(64, 1),
+        ConvSpec(128, 2),
+        ConvSpec(128, 1),
+        ConvSpec(256, 2),
+        ConvSpec(256, 1),
+        ConvSpec(512, 2),
+        ConvSpec(512, 1),
+    ),
+)
+
+RESNET34 = EdgeNetConfig(
+    name="rn34",
+    convs=(
+        ConvSpec(64, 2),
+        ConvSpec(64, 1),
+        ConvSpec(64, 1),
+        ConvSpec(128, 2),
+        ConvSpec(128, 1),
+        ConvSpec(128, 1),
+        ConvSpec(256, 2),
+        ConvSpec(256, 1),
+        ConvSpec(512, 2),
+        ConvSpec(512, 1),
+    ),
+)
+
+TINYLM = TinyLMConfig()
+
+CNN_ZOO: dict[str, EdgeNetConfig] = {
+    c.name: c for c in (MCUNET, MOBILENETV2, RESNET18, RESNET34)
+}
+
+# Default per-mode rank used when no rank-selection output is baked in.
+DEFAULT_RANK = 4
+
+
+def config_to_dict(cfg: EdgeNetConfig) -> dict:
+    return {
+        "name": cfg.name,
+        "kind": "cnn",
+        "convs": [{"cout": c.cout, "stride": c.stride} for c in cfg.convs],
+        "num_classes": cfg.num_classes,
+        "in_channels": cfg.in_channels,
+        "image_size": cfg.image_size,
+        "batch_size": cfg.batch_size,
+        "ksize": cfg.ksize,
+        "padding": cfg.padding,
+        "activation_shapes": [list(s) for s in cfg.activation_shapes()],
+        "output_shapes": [list(s) for s in cfg.output_shapes()],
+    }
+
+
+def lm_config_to_dict(cfg: TinyLMConfig) -> dict:
+    return {
+        "name": cfg.name,
+        "kind": "lm",
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_blocks": cfg.n_blocks,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch_size": cfg.batch_size,
+        "rank": cfg.rank,
+    }

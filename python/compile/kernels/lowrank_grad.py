@@ -1,0 +1,112 @@
+"""Pallas kernel for the eq.-15 low-rank weight gradient.
+
+The dominant term of eq. 15 is the rank-space correlation convolution
+(``r1 r2 C' H' W' D^2``). We cast it as one big matmul via im2col:
+
+* the spatially-expanded core ``A~ in R^{r1 x r2 x H x W}`` is patch-
+  extracted (``lax.conv_general_dilated_patches``, cheap data movement)
+  into ``cols in R^{(r1 H' W') x (r2 D^2)}``;
+* the batch-projected output gradient ``gy1 in R^{r1 x C' x H' x W'}`` is
+  reshaped to ``gmat in R^{(r1 H' W') x C'}``;
+* the rank-space gradient is then ``dW_r = gmat^T @ cols`` — a single
+  tall-skinny matmul executed by the tiled Pallas kernel below.
+
+The reduction axis (``r1 H' W'``) is the long one, so the kernel runs a
+sequential grid reduction over its tiles while both small output operands
+stay resident in VMEM — the same schedule as ``_power_step_kernel``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .subspace_iter import pick_tile
+
+# Reduction tile: 256 rows x (C' + r2 D^2) columns of f32 per step.
+DEFAULT_TILE_N = 256
+
+
+def _corr_matmul_kernel(g_ref, c_ref, o_ref):
+    """o += g[tile]^T @ c[tile] — sequential reduction over row tiles."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += g_ref[...].T @ c_ref[...]
+
+
+def corr_matmul(gmat: jax.Array, cols: jax.Array, *,
+                tile_n: int | None = None) -> jax.Array:
+    """``gmat^T @ cols`` with a Pallas grid reduction over rows.
+
+    ``gmat``: (n, co), ``cols``: (n, ck) -> (co, ck). ``n = r1 H' W'`` is
+    the long axis; ``co = C'`` and ``ck = r2 D^2`` are small.
+    """
+    n, co = gmat.shape
+    _, ck = cols.shape
+    tn = tile_n or pick_tile(n, DEFAULT_TILE_N)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _corr_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, co), lambda i: (i, 0)),
+            pl.BlockSpec((tn, ck), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((co, ck), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((co, ck), gmat.dtype),
+        interpret=True,
+    )(gmat, cols)
+
+
+def lowrank_dw(core: jax.Array, us: list[jax.Array], gy: jax.Array,
+               stride: int, padding: int, ksize: int) -> jax.Array:
+    """Eq. 15 weight gradient with the hot contraction in Pallas.
+
+    Semantics identical to :func:`ref.lowrank_dw_ref`.
+    """
+    u1, u2, u3, u4 = us
+    r1, r2 = core.shape[0], core.shape[1]
+    cout = gy.shape[1]
+    hp, wp = gy.shape[2], gy.shape[3]
+
+    # (1) project gy onto the batch subspace: (r1, C', H', W').
+    gy1 = jnp.einsum("br,bchw->rchw", u1, gy)
+
+    # (2) expand the spatial modes of the core: (r1, r2, H, W).
+    at = ref.mode_product(ref.mode_product(core, u3, 2), u4, 3)
+
+    # (3) im2col on the rank-space activation. Patches come out as
+    #     (r1, r2*D*D, H', W') with the channel-major feature order that
+    #     conv_general_dilated_patches documents (c, i, j).
+    patches = jax.lax.conv_general_dilated_patches(
+        at,
+        filter_shape=(ksize, ksize),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (r1, r2*D*D, H', W')
+    ck = r2 * ksize * ksize
+    cols = patches.transpose(0, 2, 3, 1).reshape(r1 * hp * wp, ck)
+    gmat = gy1.transpose(0, 2, 3, 1).reshape(r1 * hp * wp, cout)
+
+    # The hot matmul: (C', r2*D*D).
+    dw_r = corr_matmul(gmat, cols).reshape(cout, r2, ksize, ksize)
+
+    # (4) expand the channel mode.
+    return jnp.einsum("orij,cr->ocij", dw_r, u2)
+
+
+def lowrank_dw_linear(u: jax.Array, v: jax.Array, gy: jax.Array) -> jax.Array:
+    """Low-rank weight gradient for linear layers: ``v @ (u^T gy)``.
+
+    ``u``: (n, r) orthonormal, ``v``: (d, r), ``gy``: (n, dout).
+    The first contraction streams the long ``n`` axis through the Pallas
+    reduction kernel; the second is an (d, r) x (r, dout) small matmul.
+    """
+    ug = corr_matmul(u, gy)  # (r, dout)
+    return v @ ug

@@ -1,0 +1,236 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything in this file is the *correctness ground truth* used by pytest
+(and, indirectly, by the Rust host implementation, which mirrors the same
+conventions). Nothing here is ever lowered into a shipped artifact except
+the HOSVD baseline, which has no Pallas counterpart by design (it is the
+expensive method ASI replaces).
+
+Conventions
+-----------
+* Activations are NCHW: ``A in R^{B x C x H x W}``.
+* ``unfold(A, m)`` is the mode-m unfolding ``A_(m) in R^{d_m x prod(d_j)}``
+  obtained by ``moveaxis(A, m, 0).reshape(d_m, -1)``. The Rust tensor
+  library implements the identical layout.
+* Factor matrices ``U_m in R^{d_m x r_m}`` are column-orthonormal.
+* The Tucker core is ``S = A x_1 U1^T x_2 U2^T x_3 U3^T x_4 U4^T``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Tensor algebra primitives
+# ---------------------------------------------------------------------------
+
+
+def unfold(a: jax.Array, mode: int) -> jax.Array:
+    """Mode-``mode`` unfolding of a tensor: ``(d_mode, prod(other dims))``."""
+    return jnp.moveaxis(a, mode, 0).reshape(a.shape[mode], -1)
+
+
+def fold(mat: jax.Array, mode: int, shape: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`unfold` for a tensor of logical shape ``shape``."""
+    moved = [shape[mode]] + [s for i, s in enumerate(shape) if i != mode]
+    return jnp.moveaxis(mat.reshape(moved), 0, mode)
+
+
+def mode_product(a: jax.Array, mat: jax.Array, mode: int) -> jax.Array:
+    """m-mode product ``A x_mode mat`` with ``mat in R^{Q x d_mode}``."""
+    am = unfold(a, mode)
+    out = mat @ am
+    new_shape = list(a.shape)
+    new_shape[mode] = mat.shape[0]
+    return fold(out, mode, tuple(new_shape))
+
+
+def mgs(p: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Modified Gram-Schmidt orthonormalization of the columns of ``p``.
+
+    ``p`` is ``(a, r)`` with small static ``r``; the loop is unrolled at
+    trace time, exactly like the Pallas kernel does.
+    """
+    _, r = p.shape
+    cols = []
+    for j in range(r):
+        v = p[:, j]
+        for k in range(j):
+            v = v - jnp.dot(cols[k], v) * cols[k]
+        norm = jnp.sqrt(jnp.sum(v * v))
+        cols.append(v / jnp.maximum(norm, eps))
+    return jnp.stack(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Subspace iteration (Algorithm 1 inner step) — reference
+# ---------------------------------------------------------------------------
+
+
+def si_step_ref(am: jax.Array, u_prev: jax.Array) -> jax.Array:
+    """One warm-started subspace-iteration step on an unfolded matrix.
+
+    ``am``     : (a, b) mode unfolding of the activation.
+    ``u_prev`` : (a, r) previous factor (or random at t=0 / cold start).
+    Returns the new column-orthonormal factor ``U`` of shape (a, r).
+    """
+    v = am.T @ u_prev        # (b, r) — "V = A^T U" warm-start projection
+    p = am @ v               # (a, r) — power step
+    return mgs(p)
+
+
+def asi_compress_ref(a: jax.Array, us_prev: list[jax.Array]):
+    """Algorithm 1: per-mode warm-started single subspace iteration.
+
+    Returns ``(core, [U1..U4])`` where ``core`` has shape ``ranks``.
+    All factors are computed from the *original* tensor (as in Alg. 1);
+    the core is then projected progressively.
+    """
+    us = []
+    for m in range(a.ndim):
+        am = unfold(a, m)
+        us.append(si_step_ref(am, us_prev[m]))
+    core = a
+    for m, u in enumerate(us):
+        core = mode_product(core, u.T, m)
+    return core, us
+
+
+def tucker_reconstruct(core: jax.Array, us: list[jax.Array]) -> jax.Array:
+    """Reconstruct ``A~ = S x_1 U1 ... x_n Un``."""
+    out = core
+    for m, u in enumerate(us):
+        out = mode_product(out, u, m)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HOSVD_eps baseline (the method ASI replaces)
+# ---------------------------------------------------------------------------
+
+
+def hosvd_ranks_for_eps(a: jax.Array, eps: float) -> list[int]:
+    """Smallest per-mode ranks whose singular energy reaches ``eps``.
+
+    'Energy' is the cumulative squared singular values normalised by the
+    total, per mode — the explained-variance criterion of HOSVD_eps.
+    """
+    ranks = []
+    for m in range(a.ndim):
+        am = unfold(a, m)
+        s = jnp.linalg.svd(am, compute_uv=False)
+        energy = jnp.cumsum(s**2) / jnp.maximum(jnp.sum(s**2), 1e-30)
+        r = int(jnp.searchsorted(energy, eps) + 1)
+        ranks.append(min(r, am.shape[0]))
+    return ranks
+
+
+def hosvd_fixed_rank(a: jax.Array, ranks: list[int]):
+    """Truncated HOSVD with static per-mode ranks (AOT-friendly baseline).
+
+    Returns ``(core, [U_m])`` with ``U_m`` the top ``ranks[m]`` left
+    singular vectors of the mode-m unfolding.
+    """
+    us = []
+    for m in range(a.ndim):
+        am = unfold(a, m)
+        u, _, _ = jnp.linalg.svd(am, full_matrices=False)
+        us.append(u[:, : ranks[m]])
+    core = a
+    for m, u in enumerate(us):
+        core = mode_product(core, u.T, m)
+    return core, us
+
+
+# ---------------------------------------------------------------------------
+# Convolution + gradients — reference (NCHW / OIHW)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int, padding: int) -> jax.Array:
+    """Plain 2-D convolution, NCHW x OIHW -> NCHW."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv_dw_ref(x: jax.Array, gy: jax.Array, stride: int, padding: int,
+                ksize: int) -> jax.Array:
+    """Exact weight gradient ``dL/dW`` of :func:`conv2d` (eq. 1)."""
+
+    def f(w):
+        return conv2d(x, w, stride, padding)
+
+    cin = x.shape[1]
+    cout = gy.shape[1]
+    w0 = jnp.zeros((cout, cin, ksize, ksize), x.dtype)
+    _, vjp = jax.vjp(f, w0)
+    return vjp(gy)[0]
+
+
+def conv_dx_ref(gy: jax.Array, w: jax.Array, x_shape, stride: int,
+                padding: int) -> jax.Array:
+    """Exact input gradient ``dL/dA_i`` of :func:`conv2d` (eq. 2).
+
+    The convolution is linear in ``x`` so the VJP at ``x = 0`` is exact.
+    """
+
+    def f(x):
+        return conv2d(x, w, stride, padding)
+
+    _, vjp = jax.vjp(f, jnp.zeros(x_shape, gy.dtype))
+    return vjp(gy)[0]
+
+
+def lowrank_dw_ref(core: jax.Array, us: list[jax.Array], gy: jax.Array,
+                   stride: int, padding: int, ksize: int) -> jax.Array:
+    """Eq. 15 — weight gradient computed directly on the Tucker factors.
+
+    Modes 1 (batch) and 2 (channel) stay compressed; spatial modes are
+    expanded. Steps (FLOP terms of eq. 15 in parentheses):
+
+      1. ``gy1 = U1^T gy``                        (r1 B C' H' W')
+      2. ``A~  = S x3 U3 x4 U4``                  (r1 r2 r3 r4 H + r1 r2 r4 H W)
+      3. rank-space correlation conv              (r1 r2 C' H' W' D^2)
+      4. expand the channel mode through ``U2``   (r2 C' C D^2)
+    """
+    _, u2, u3, u4 = us
+    u1 = us[0]
+    # (1) project the output gradient onto the batch subspace.
+    gy1 = jnp.einsum("br,bchw->rchw", u1, gy)
+    # (2) expand only the spatial modes of the core.
+    at = mode_product(mode_product(core, u3, 2), u4, 3)  # (r1, r2, H, W)
+    # (3) correlation in (r1=batch, r2=channel) space.
+    dw_r = conv_dw_ref(at, gy1, stride, padding, ksize)  # (C', r2, D, D)
+    # (4) expand channels.
+    return jnp.einsum("orij,cr->ocij", dw_r, u2)
+
+
+# ---------------------------------------------------------------------------
+# Matrix (2-mode) ASI for sequence models — reference
+# ---------------------------------------------------------------------------
+
+
+def matrix_si_step_ref(a: jax.Array, u_prev: jax.Array):
+    """PowerSGD-style rank-r factorization of a matrix ``a`` (n, d).
+
+    Returns ``(u, v)`` with ``u`` (n, r) orthonormal and ``v = a^T u``
+    so that ``a ~= u v^T``.
+    """
+    u = si_step_ref(a, u_prev)
+    v = a.T @ u
+    return u, v
+
+
+def lowrank_dw_linear_ref(u: jax.Array, v: jax.Array, gy: jax.Array):
+    """Weight gradient of ``y = a @ w`` with ``a ~= u v^T``.
+
+    ``gy`` is (n, dout); the exact gradient is ``a^T gy``; the low-rank
+    version is ``v (u^T gy)`` — cost ``2 n r dout`` instead of ``n d dout``.
+    """
+    return v @ (u.T @ gy)

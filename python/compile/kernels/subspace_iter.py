@@ -1,0 +1,226 @@
+"""Pallas kernels for Algorithm 1 — warm-started single subspace iteration.
+
+One ASI mode step on an unfolded activation ``A_m in R^{a x b}`` with a
+previous factor ``U_prev in R^{a x r}`` is::
+
+    V = A_m^T U_prev          # warm-start projection        (b, r)
+    P = A_m V                 # power step                   (a, r)
+    U = MGS(P)                # column orthonormalization    (a, r)
+
+The two matmuls stream the large unfolding once each; ``r`` is tiny
+(<= 32), so ``V``/``P``/``U`` always fit on-chip. We split the step into
+three Pallas kernels:
+
+* ``_project_v_kernel`` — grid over tiles of the long axis ``b``; each
+  program computes an independent ``(tile_b, r)`` slab of ``V``.
+* ``_power_step_kernel`` — grid reduction over the same ``b`` tiles,
+  accumulating ``P += A[:, tile] V[tile, :]`` into the output block.
+* ``_mgs_kernel`` — a single program orthonormalizing the ``(a, r)``
+  block; the Gram-Schmidt loop is unrolled over the static rank.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): each grid step holds an
+``(a, tile_b)`` slab of the unfolding plus the ``(b_tile, r)``/``(a, r)``
+small operands in VMEM; the matmuls are MXU-shaped (``r`` is padded to the
+lane width by Mosaic). On this CPU-only image the kernels run under
+``interpret=True``; structure, not wallclock, is what we optimize here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile of the long (reduction) axis. 512 f32 lanes x a<=128 rows
+# keeps each slab comfortably under the ~16 MiB VMEM budget of one core.
+DEFAULT_TILE_B = 512
+
+# Floor for column norms inside MGS — matches ref.mgs.
+MGS_EPS = 1e-8
+
+
+def pick_tile(n: int, cap: int = DEFAULT_TILE_B) -> int:
+    """Largest divisor of ``n`` that is <= cap (pallas blocks must tile)."""
+    t = min(n, cap)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _project_v_kernel(am_ref, u_ref, v_ref):
+    """V[tile] = A[:, tile]^T @ U — tiles are independent (no reduction)."""
+    v_ref[...] = am_ref[...].T @ u_ref[...]
+
+
+def _power_step_kernel(am_ref, v_ref, p_ref):
+    """P += A[:, tile] @ V[tile] — sequential grid reduction over b."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    p_ref[...] += am_ref[...] @ v_ref[...]
+
+
+def _fused_power_kernel(am_ref, u_ref, p_ref):
+    """P += A[:, tile] (A[:, tile]^T U) — one pass, V never materialized.
+
+    Identity: A (A^T U) = sum_tiles A_t (A_t^T U), so the warm-start
+    projection and the power step fuse into a single streaming pass over
+    the unfolding. Halves HBM traffic on A and removes the (b, r)
+    intermediate; this is the §Perf L1 optimization (see EXPERIMENTS.md).
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    a_t = am_ref[...]
+    p_ref[...] += a_t @ (a_t.T @ u_ref[...])
+
+
+def _mgs_kernel(p_ref, u_ref, *, rank: int):
+    """Column-wise modified Gram-Schmidt, unrolled over the static rank."""
+    p = p_ref[...]
+    cols = []
+    for j in range(rank):
+        v = p[:, j]
+        for k in range(j):
+            v = v - jnp.sum(cols[k] * v) * cols[k]
+        norm = jnp.sqrt(jnp.sum(v * v))
+        cols.append(v / jnp.maximum(norm, MGS_EPS))
+    u_ref[...] = jnp.stack(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Host-callable wrappers (lowered into the L2 graph)
+# ---------------------------------------------------------------------------
+
+
+def project_v(am: jax.Array, u_prev: jax.Array, *,
+              tile_b: int | None = None) -> jax.Array:
+    """``V = A_m^T U_prev`` as a Pallas call tiled over the long axis."""
+    a, b = am.shape
+    r = u_prev.shape[1]
+    tb = tile_b or pick_tile(b)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _project_v_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a, tb), lambda i: (0, i)),
+            pl.BlockSpec((a, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), am.dtype),
+        interpret=True,
+    )(am, u_prev)
+
+
+def power_step(am: jax.Array, v: jax.Array, *,
+               tile_b: int | None = None) -> jax.Array:
+    """``P = A_m V`` as a Pallas grid reduction over the long axis."""
+    a, b = am.shape
+    r = v.shape[1]
+    tb = tile_b or pick_tile(b)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _power_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a, tb), lambda i: (0, i)),
+            pl.BlockSpec((tb, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((a, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, r), am.dtype),
+        interpret=True,
+    )(am, v)
+
+
+def mgs_orth(p: jax.Array) -> jax.Array:
+    """Orthonormalize the (a, r) power-step output in a single program."""
+    a, r = p.shape
+    return pl.pallas_call(
+        functools.partial(_mgs_kernel, rank=r),
+        in_specs=[pl.BlockSpec((a, r), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((a, r), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, r), p.dtype),
+        interpret=True,
+    )(p)
+
+
+def fused_power(am: jax.Array, u_prev: jax.Array, *,
+                tile_b: int | None = None) -> jax.Array:
+    """``P = A (A^T U_prev)`` in a single streaming Pallas pass."""
+    a, b = am.shape
+    r = u_prev.shape[1]
+    tb = tile_b or pick_tile(b)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _fused_power_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a, tb), lambda i: (0, i)),
+            pl.BlockSpec((a, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((a, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((a, r), am.dtype),
+        interpret=True,
+    )(am, u_prev)
+
+
+def si_step(am: jax.Array, u_prev: jax.Array, *,
+            tile_b: int | None = None, fused: bool = True) -> jax.Array:
+    """One warm-started subspace-iteration step (Pallas composition).
+
+    Equivalent to :func:`ref.si_step_ref`; FLOPs ``2 a b r + r^3`` (eq. 14
+    per-mode term). The fused path (default) streams the unfolding once;
+    ``fused=False`` keeps the two-pass reference composition for A/B
+    comparison in the perf harness.
+    """
+    if fused:
+        p = fused_power(am, u_prev, tile_b=tile_b)
+    else:
+        v = project_v(am, u_prev, tile_b=tile_b)
+        p = power_step(am, v, tile_b=tile_b)
+    return mgs_orth(p)
+
+
+def asi_compress(a: jax.Array, us_prev: list[jax.Array], *,
+                 tile_b: int | None = None):
+    """Algorithm 1 over all modes of ``a`` (any ndim >= 2).
+
+    Factor updates run through the Pallas kernels; the progressive core
+    projection is a plain contraction XLA fuses on its own (it is not a
+    hot spot — the core shrinks at every mode).
+    Returns ``(core, [U_m])``.
+    """
+    us = []
+    for m in range(a.ndim):
+        am = ref.unfold(a, m)
+        us.append(si_step(am, us_prev[m], tile_b=tile_b))
+    core = a
+    for m, u in enumerate(us):
+        core = ref.mode_product(core, u.T, m)
+    return core, us
+
+
+def matrix_si_step(a: jax.Array, u_prev: jax.Array, *,
+                   tile_b: int | None = None):
+    """2-mode (PowerSGD-style) ASI used for sequence-model linear layers.
+
+    Returns ``(u, v)`` with ``a ~= u v^T``; ``v`` is recomputed against the
+    *new* orthonormal basis so the factorization is consistent.
+    """
+    u = si_step(a, u_prev, tile_b=tile_b)
+    v = project_v(a, u, tile_b=tile_b)
+    return u, v

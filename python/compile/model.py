@@ -1,0 +1,544 @@
+"""L2 — JAX model definitions and train-step graphs (build-time only).
+
+Every function in here is lowered *once* by ``aot.py`` to HLO text and then
+executed from the Rust coordinator; Python never runs on the training path.
+
+Two model families:
+
+* ``EdgeNet`` — a compact plain-conv CNN (configs in :mod:`configs`) whose
+  fine-tuned tail layers can run with one of four activation-handling
+  methods: ``vanilla`` (exact), ``asi`` (the paper, Alg. 1 + eq. 15),
+  ``hosvd`` (the NeurIPS-24 baseline ASI replaces), ``gf`` (gradient
+  filtering, Yang et al. 2023).
+* ``TinyLM`` — a small decoder-only transformer for the Table-4 experiment
+  with matrix-mode ASI on the fine-tuned blocks' linear layers.
+
+Key mechanism: compressed layers are ``jax.custom_vjp`` primitives whose
+*forward* emits the updated warm-start factors as primal outputs (so Rust
+can thread them across steps) and stashes only the Tucker factors as
+residuals — the full activation is never saved — and whose *backward*
+computes the weight gradient with the eq.-15 Pallas kernel.
+
+AOT constraint: nothing here may lower to a jaxlib LAPACK custom-call
+(the standalone PJRT runtime has no jaxlib registry). Hence the HOSVD
+baseline uses converged *orthogonal iteration* (matmuls + MGS) instead of
+``jnp.linalg.svd`` — numerically the same subspace, plain-HLO lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import EdgeNetConfig, RankPlan, TinyLMConfig
+from .kernels import lowrank_grad as lg
+from .kernels import ref
+from .kernels import subspace_iter as si
+
+# =============================================================================
+# Compressed convolution layers (custom_vjp)
+# =============================================================================
+
+
+def _bias_add(y: jax.Array, b: jax.Array) -> jax.Array:
+    return y + b[None, :, None, None]
+
+
+def make_asi_conv(stride: int, padding: int, ksize: int):
+    """ASI-compressed conv: factors in, factors out, eq.-15 backward."""
+
+    @jax.custom_vjp
+    def asi_conv(x, w, b, us_prev):
+        y = _bias_add(ref.conv2d(x, w, stride, padding), b)
+        _, us = si.asi_compress(x, us_prev)
+        return y, us
+
+    def fwd(x, w, b, us_prev):
+        y = _bias_add(ref.conv2d(x, w, stride, padding), b)
+        core, us = si.asi_compress(x, us_prev)
+        # Residuals are the low-rank factors only — this is the memory win.
+        return (y, us), (core, us, w, x.shape)
+
+    def bwd(res, cts):
+        gy, _ = cts  # cotangent w.r.t. the factor outputs is irrelevant
+        core, us, w, x_shape = res
+        dx = ref.conv_dx_ref(gy, w, x_shape, stride, padding)
+        dw = lg.lowrank_dw(core, us, gy, stride, padding, ksize)
+        db = gy.sum(axis=(0, 2, 3))
+        d_us = [jnp.zeros_like(u) for u in us]
+        return dx, dw, db, d_us
+
+    asi_conv.defvjp(fwd, bwd)
+    return asi_conv
+
+
+def orth_iteration(am: jax.Array, rank: int, iters: int, key: jax.Array):
+    """Converged orthogonal iteration — the in-graph HOSVD surrogate.
+
+    Fresh random start each call (the baseline re-decomposes from scratch
+    every step, which is exactly its cost problem). Lowers to matmuls +
+    MGS only; converges to the top-``rank`` left singular subspace.
+    """
+    u = ref.mgs(jax.random.normal(key, (am.shape[0], rank), am.dtype))
+    for _ in range(iters):
+        u = ref.mgs(am @ (am.T @ u))
+    return u
+
+
+def hosvd_compress_graph(a: jax.Array, ranks, key: jax.Array, iters: int = 6):
+    """HOSVD with static ranks via per-mode orthogonal iteration."""
+    us = []
+    for m in range(a.ndim):
+        am = ref.unfold(a, m)
+        us.append(orth_iteration(am, ranks[m], iters, jax.random.fold_in(key, m)))
+    core = a
+    for m, u in enumerate(us):
+        core = ref.mode_product(core, u.T, m)
+    return core, us
+
+
+def make_hosvd_conv(stride: int, padding: int, ksize: int, ranks, iters: int = 6):
+    """HOSVD-compressed conv (per-step re-decomposition, eq.-15 backward)."""
+
+    @jax.custom_vjp
+    def hosvd_conv(x, w, b, key):
+        return _bias_add(ref.conv2d(x, w, stride, padding), b)
+
+    def fwd(x, w, b, key):
+        y = _bias_add(ref.conv2d(x, w, stride, padding), b)
+        core, us = hosvd_compress_graph(x, ranks, key, iters)
+        return y, (core, us, w, x.shape)
+
+    def bwd(res, gy):
+        core, us, w, x_shape = res
+        dx = ref.conv_dx_ref(gy, w, x_shape, stride, padding)
+        dw = lg.lowrank_dw(core, us, gy, stride, padding, ksize)
+        db = gy.sum(axis=(0, 2, 3))
+        return dx, dw, db, None
+
+    hosvd_conv.defvjp(fwd, bwd)
+    return hosvd_conv
+
+
+def _avg_pool2(x: jax.Array) -> jax.Array:
+    """2x2 average pooling (the R2 patch of gradient filtering)."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    ) * 0.25
+
+
+def make_gf_conv(stride: int, padding: int, ksize: int):
+    """Gradient filtering (R2): pooled activation + pooled gradient.
+
+    Stores the 2x2-pooled activation as residual (4x memory saving) and
+    approximates ``dW`` by correlating the pooled tensors; ``dx`` uses the
+    pooled-then-replicated output gradient. This follows Yang et al.'s
+    structure (patch-constant gradient approximation).
+    """
+
+    @jax.custom_vjp
+    def gf_conv(x, w, b):
+        return _bias_add(ref.conv2d(x, w, stride, padding), b)
+
+    def fwd(x, w, b):
+        y = _bias_add(ref.conv2d(x, w, stride, padding), b)
+        return y, (_avg_pool2(x), w, x.shape)
+
+    def bwd(res, gy):
+        xp, w, x_shape = res
+        gyp = _avg_pool2(gy)
+        # Patch-constant gradient: replicate pooled gy back to full size.
+        gy_up = jnp.repeat(jnp.repeat(gyp, 2, axis=2), 2, axis=3)
+        dx = ref.conv_dx_ref(gy_up, w, x_shape, stride, padding)
+        # dW on pooled tensors; x and gy both shrink 2x spatially so the
+        # correlation geometry is preserved; scale compensates the pooling.
+        dw = ref.conv_dw_ref(xp, gyp, stride, padding, ksize) * 4.0
+        db = gy.sum(axis=(0, 2, 3))
+        return dx, dw, db
+
+    gf_conv.defvjp(fwd, bwd)
+    return gf_conv
+
+
+# =============================================================================
+# EdgeNet — parameters and forward pass
+# =============================================================================
+
+
+def init_edgenet(cfg: EdgeNetConfig, key: jax.Array):
+    """He-init EdgeNet parameters: ``[(w_i, b_i)...] + (w_fc, b_fc)``."""
+    params = []
+    cin = cfg.in_channels
+    for i, spec in enumerate(cfg.convs):
+        k = jax.random.fold_in(key, i)
+        fan_in = cin * cfg.ksize * cfg.ksize
+        w = jax.random.normal(
+            k, (spec.cout, cin, cfg.ksize, cfg.ksize), jnp.float32
+        ) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((spec.cout,), jnp.float32)
+        params.append((w, b))
+        cin = spec.cout
+    k = jax.random.fold_in(key, 1000)
+    w_fc = jax.random.normal(
+        k, (cin, cfg.num_classes), jnp.float32
+    ) * jnp.sqrt(1.0 / cin)
+    b_fc = jnp.zeros((cfg.num_classes,), jnp.float32)
+    params.append((w_fc, b_fc))
+    return params
+
+
+@dataclass(frozen=True)
+class TailSpec:
+    """Which conv layers are fine-tuned and how they are compressed."""
+
+    method: str            # vanilla | asi | hosvd | gf
+    depth: int             # number of fine-tuned conv layers (from the end)
+    plan: RankPlan | None  # per-layer per-mode ranks (asi/hosvd)
+
+
+def edgenet_forward(cfg: EdgeNetConfig, tail: TailSpec, trained, frozen,
+                    x, us_prev=None, key=None):
+    """Forward pass; returns ``(logits, new_us)``.
+
+    ``trained`` holds the parameters of the last ``tail.depth`` convs plus
+    the FC head; ``frozen`` holds everything below. Compressed layers are
+    exactly the fine-tuned convs (vanilla tail layers save full
+    activations — that is the baseline's memory cost).
+    """
+    n = len(cfg.convs)
+    start = n - tail.depth
+    new_us = []
+    h = x
+    for i, spec in enumerate(cfg.convs):
+        if i < start:
+            w, b = frozen[i]
+            # Frozen layer: no gradient flows below `start`, so a plain
+            # conv (with stop_gradient to make DCE explicit) is exact.
+            h = _bias_add(
+                ref.conv2d(jax.lax.stop_gradient(h), w, spec.stride,
+                           cfg.padding), b)
+        else:
+            w, b = trained[i - start]
+            if tail.method == "asi":
+                f = make_asi_conv(spec.stride, cfg.padding, cfg.ksize)
+                h, us = f(h, w, b, us_prev[i - start])
+                new_us.append(us)
+            elif tail.method == "hosvd":
+                f = make_hosvd_conv(spec.stride, cfg.padding, cfg.ksize,
+                                    tail.plan.ranks[i - start])
+                h = f(h, w, b, jax.random.fold_in(key, i))
+            elif tail.method == "gf":
+                f = make_gf_conv(spec.stride, cfg.padding, cfg.ksize)
+                h = f(h, w, b)
+            else:
+                h = _bias_add(ref.conv2d(h, w, spec.stride, cfg.padding), b)
+        h = jax.nn.relu(h)
+    gap = h.mean(axis=(2, 3))
+    w_fc, b_fc = trained[-1]
+    logits = gap @ w_fc + b_fc
+    return logits, new_us
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# =============================================================================
+# Train-step graphs (what aot.py lowers)
+# =============================================================================
+
+
+def make_edgenet_train_step(cfg: EdgeNetConfig, tail: TailSpec):
+    """Returns ``step(trained, frozen, x, y, lr[, us, key]) -> outputs``.
+
+    Outputs are always a tuple ``(loss, new_trained, new_us)`` with
+    ``new_us = ()`` for methods without warm-start state. SGD with the
+    paper's fine-tuning recipe (momentum 0); gradient L2-clipped at 2.0
+    like the paper's setup.
+    """
+
+    def loss_fn(trained, frozen, x, y, us_prev, key):
+        logits, new_us = edgenet_forward(
+            cfg, tail, trained, frozen, x, us_prev=us_prev, key=key)
+        return cross_entropy(logits, y), new_us
+
+    grad_fn = jax.value_and_grad(loss_fn, argnums=0, has_aux=True)
+
+    def clip(g, max_norm=2.0):
+        leaves = jax.tree_util.tree_leaves(g)
+        total = jnp.sqrt(sum(jnp.sum(l * l) for l in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-12))
+        return jax.tree_util.tree_map(lambda l: l * scale, g)
+
+    def sgd(p, g, lr):
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    if tail.method == "asi":
+
+        def step(trained, frozen, x, y, lr, us_prev):
+            (loss, new_us), grads = grad_fn(
+                trained, frozen, x, y, us_prev, None)
+            return loss, sgd(trained, clip(grads), lr), new_us
+
+        return step
+
+    if tail.method == "hosvd":
+
+        def step(trained, frozen, x, y, lr, step_idx):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), step_idx)
+            (loss, _), grads = grad_fn(trained, frozen, x, y, None, key)
+            return loss, sgd(trained, clip(grads), lr), ()
+
+        return step
+
+    def step(trained, frozen, x, y, lr):
+        (loss, _), grads = grad_fn(trained, frozen, x, y, None, None)
+        return loss, sgd(trained, clip(grads), lr), ()
+
+    return step
+
+
+def make_edgenet_infer(cfg: EdgeNetConfig):
+    """Inference graph over the full parameter list (for eval accuracy)."""
+
+    def infer(params, x):
+        tail = TailSpec(method="vanilla", depth=0, plan=None)
+        logits, _ = edgenet_forward(cfg, tail, [params[-1]], params[:-1], x)
+        return (logits,)
+
+    return infer
+
+
+# =============================================================================
+# TinyLM — decoder-only transformer with matrix-mode ASI
+# =============================================================================
+
+
+def make_asi_linear():
+    """ASI-compressed linear: ``y = x @ w + b`` with PowerSGD-style state.
+
+    ``x2d`` is the flattened (B*T, d_in) input; the warm-start factor
+    ``u_prev`` is (B*T, r). Backward uses the low-rank weight gradient
+    ``v (u^T gy)`` — the activation is never a residual.
+    """
+
+    @jax.custom_vjp
+    def asi_linear(x2d, w, b, u_prev):
+        y = x2d @ w + b
+        u, v = si.matrix_si_step(x2d, u_prev)
+        return y, u
+
+    def fwd(x2d, w, b, u_prev):
+        y = x2d @ w + b
+        u, v = si.matrix_si_step(x2d, u_prev)
+        return (y, u), (u, v, w)
+
+    def bwd(res, cts):
+        gy, _ = cts
+        u, v, w = res
+        dx = gy @ w.T
+        dw = lg.lowrank_dw_linear(u, v, gy)
+        db = gy.sum(axis=0)
+        return dx, dw, db, jnp.zeros_like(u)
+
+    asi_linear.defvjp(fwd, bwd)
+    return asi_linear
+
+
+def make_asi_qkv():
+    """Shared-compression ASI for the attention projections.
+
+    q/k/v consume the *same* activation, so one warm-started matrix
+    factorization serves all three backward passes — a 3x reduction of
+    the compression overhead and of the warm-start state for attention
+    (§Perf L2 optimization).
+    """
+
+    @jax.custom_vjp
+    def asi_qkv(x2d, wq, bq, wk, bk, wv, bv, u_prev):
+        u, _ = si.matrix_si_step(x2d, u_prev)
+        return x2d @ wq + bq, x2d @ wk + bk, x2d @ wv + bv, u
+
+    def fwd(x2d, wq, bq, wk, bk, wv, bv, u_prev):
+        u, v = si.matrix_si_step(x2d, u_prev)
+        outs = (x2d @ wq + bq, x2d @ wk + bk, x2d @ wv + bv, u)
+        return outs, (u, v, wq, wk, wv)
+
+    def bwd(res, cts):
+        gq, gk, gv, _ = cts
+        u, v, wq, wk, wv = res
+        dx = gq @ wq.T + gk @ wk.T + gv @ wv.T
+        dwq = lg.lowrank_dw_linear(u, v, gq)
+        dwk = lg.lowrank_dw_linear(u, v, gk)
+        dwv = lg.lowrank_dw_linear(u, v, gv)
+        return (dx, dwq, gq.sum(0), dwk, gk.sum(0), dwv, gv.sum(0),
+                jnp.zeros_like(u))
+
+    asi_qkv.defvjp(fwd, bwd)
+    return asi_qkv
+
+
+def init_tinylm(cfg: TinyLMConfig, key: jax.Array):
+    """Parameters: token embedding, per-block dict, final LN. Tied head."""
+
+    def dense(k, din, dout):
+        return (jax.random.normal(k, (din, dout), jnp.float32)
+                * jnp.sqrt(1.0 / din), jnp.zeros((dout,), jnp.float32))
+
+    d = cfg.d_model
+    params = {
+        "embed": jax.random.normal(
+            jax.random.fold_in(key, 0), (cfg.vocab, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.seq_len, d), jnp.float32) * 0.02,
+        "ln_f": (jnp.ones((d,)), jnp.zeros((d,))),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        k = jax.random.fold_in(key, 100 + i)
+        blk = {
+            "ln1": (jnp.ones((d,)), jnp.zeros((d,))),
+            "ln2": (jnp.ones((d,)), jnp.zeros((d,))),
+            "wq": dense(jax.random.fold_in(k, 0), d, d),
+            "wk": dense(jax.random.fold_in(k, 1), d, d),
+            "wv": dense(jax.random.fold_in(k, 2), d, d),
+            "wo": dense(jax.random.fold_in(k, 3), d, d),
+            "w1": dense(jax.random.fold_in(k, 4), d, cfg.d_ff),
+            "w2": dense(jax.random.fold_in(k, 5), cfg.d_ff, d),
+        }
+        params["blocks"].append(blk)
+    return params
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+# Warm-start state slots per fine-tuned block: one shared factor for the
+# q/k/v projections plus one each for wo / w1 / w2.
+LM_LINEARS = ("qkv", "wo", "w1", "w2")
+LM_US_PER_BLOCK = len(LM_LINEARS)
+
+
+def tinylm_forward(cfg: TinyLMConfig, params, tokens, us_prev=None,
+                   n_tuned: int = 0, method: str = "vanilla"):
+    """Causal LM forward. Returns ``(logits, new_us)``.
+
+    The last ``n_tuned`` blocks are fine-tuned; with ``method='asi'``
+    every linear in those blocks is ASI-compressed at rank ``cfg.rank``.
+    """
+    b, t = tokens.shape
+    d = cfg.d_model
+    h = params["embed"][tokens] + params["pos"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    start = cfg.n_blocks - n_tuned
+    asi_lin = make_asi_linear()
+    asi_qkv = make_asi_qkv()
+    new_us = []
+
+    for i, blk in enumerate(params["blocks"]):
+        tuned = i >= start and method == "asi"
+
+        def lin(name, x2d, li):
+            w, bia = blk[name]
+            if tuned:
+                # warm-start state is a flat list: block-major, slot-minor
+                y, u = asi_lin(
+                    x2d, w, bia,
+                    us_prev[(i - start) * LM_US_PER_BLOCK + li])
+                new_us.append(u)
+                return y
+            return x2d @ w + bia
+
+        if i < start:
+            h = jax.lax.stop_gradient(h)
+        hn = _layernorm(h, *blk["ln1"])
+        x2d = hn.reshape(b * t, d)
+        if tuned:
+            # One shared compression serves all three projections.
+            yq, yk, yv, u = asi_qkv(
+                x2d, blk["wq"][0], blk["wq"][1], blk["wk"][0],
+                blk["wk"][1], blk["wv"][0], blk["wv"][1],
+                us_prev[(i - start) * LM_US_PER_BLOCK])
+            new_us.append(u)
+        else:
+            yq = x2d @ blk["wq"][0] + blk["wq"][1]
+            yk = x2d @ blk["wk"][0] + blk["wk"][1]
+            yv = x2d @ blk["wv"][0] + blk["wv"][1]
+        q = yq.reshape(b, t, cfg.n_heads, -1)
+        k_ = yk.reshape(b, t, cfg.n_heads, -1)
+        v = yv.reshape(b, t, cfg.n_heads, -1)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k_) / jnp.sqrt(d / cfg.n_heads)
+        att = jnp.where(mask[None, None].astype(bool), att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * t, d)
+        h = h + lin("wo", o, 1).reshape(b, t, d)
+        hn = _layernorm(h, *blk["ln2"]).reshape(b * t, d)
+        ff = jax.nn.relu(lin("w1", hn, 2))
+        h = h + lin("w2", ff, 3).reshape(b, t, d)
+
+    h = _layernorm(h, *params["ln_f"])
+    logits = h @ params["embed"].T
+    return logits, new_us
+
+
+def lm_loss(logits, tokens):
+    """Next-token cross entropy (shifted)."""
+    tgt = tokens[:, 1:]
+    lg_ = logits[:, :-1]
+    logz = jax.nn.logsumexp(lg_, axis=-1)
+    gold = jnp.take_along_axis(lg_, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def split_lm_params(params, n_tuned: int):
+    """Split into (trained_blocks, rest) — only tail blocks are trained."""
+    return params["blocks"][len(params["blocks"]) - n_tuned:], {
+        **params, "blocks": params["blocks"][: len(params["blocks"]) - n_tuned]
+    }
+
+
+def make_tinylm_train_step(cfg: TinyLMConfig, n_tuned: int, method: str):
+    """``step(tuned_blocks, rest, tokens, lr[, us]) -> (loss, tuned', us')``."""
+
+    def loss_fn(tuned_blocks, rest, tokens, us_prev):
+        params = {**rest, "blocks": rest["blocks"] + tuned_blocks}
+        logits, new_us = tinylm_forward(
+            cfg, params, tokens, us_prev=us_prev, n_tuned=n_tuned,
+            method=method)
+        return lm_loss(logits, tokens), new_us
+
+    grad_fn = jax.value_and_grad(loss_fn, argnums=0, has_aux=True)
+
+    def sgd(p, g, lr):
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    if method == "asi":
+
+        def step(tuned_blocks, rest, tokens, lr, us_prev):
+            (loss, new_us), grads = grad_fn(tuned_blocks, rest, tokens,
+                                            us_prev)
+            return loss, sgd(tuned_blocks, grads, lr), new_us
+
+        return step
+
+    def step(tuned_blocks, rest, tokens, lr):
+        (loss, _), grads = grad_fn(tuned_blocks, rest, tokens, None)
+        return loss, sgd(tuned_blocks, grads, lr), ()
+
+    return step
+
+
+def make_tinylm_infer(cfg: TinyLMConfig):
+    def infer(params, tokens):
+        logits, _ = tinylm_forward(cfg, params, tokens)
+        return (lm_loss(logits, tokens), logits)
+
+    return infer

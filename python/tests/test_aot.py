@@ -1,0 +1,138 @@
+"""AOT pipeline tests: HLO emission, manifest signatures, params blob."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_cfg():
+    return configs.EdgeNetConfig(
+        name="t",
+        convs=(configs.ConvSpec(4, 2), configs.ConvSpec(6, 1)),
+        num_classes=3,
+        image_size=8,
+        batch_size=2,
+    )
+
+
+class TestHloEmission:
+    def test_hlo_text_is_parsable_hlo(self):
+        cfg = tiny_cfg()
+        step = model.make_edgenet_train_step(
+            cfg, model.TailSpec("vanilla", 1, None))
+        params = model.init_edgenet(cfg, jax.random.PRNGKey(0))
+        args = (params[-2:], params[:-2],
+                jnp.zeros((2, 3, 8, 8)), jnp.zeros((2,), jnp.int32),
+                jnp.float32(0.1))
+        lowered = jax.jit(step).lower(*aot.spec_like(args))
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # Must not contain jaxlib-registered custom calls — the
+        # standalone PJRT runtime cannot resolve them.
+        assert "custom-call" not in text, "graph leaked a custom call"
+
+    def test_asi_graph_has_no_custom_calls(self):
+        cfg = tiny_cfg()
+        plan = configs.RankPlan.uniform(cfg, 1, 2)
+        step = model.make_edgenet_train_step(
+            cfg, model.TailSpec("asi", 1, plan))
+        params = model.init_edgenet(cfg, jax.random.PRNGKey(0))
+        shapes = cfg.activation_shapes()[-1:]
+        us = [[jnp.zeros((s[m], plan.ranks[0][m])) for m in range(4)]
+              for s in shapes]
+        args = (params[-2:], params[:-2], jnp.zeros((2, 3, 8, 8)),
+                jnp.zeros((2,), jnp.int32), jnp.float32(0.1), us)
+        text = aot.to_hlo_text(jax.jit(step).lower(*aot.spec_like(args)))
+        assert "custom-call" not in text
+
+    def test_hosvd_graph_has_no_custom_calls(self):
+        # The HOSVD baseline must lower through orthogonal iteration,
+        # not LAPACK SVD (which would be a jaxlib custom call).
+        cfg = tiny_cfg()
+        plan = configs.RankPlan.uniform(cfg, 1, 2)
+        step = model.make_edgenet_train_step(
+            cfg, model.TailSpec("hosvd", 1, plan))
+        params = model.init_edgenet(cfg, jax.random.PRNGKey(0))
+        args = (params[-2:], params[:-2], jnp.zeros((2, 3, 8, 8)),
+                jnp.zeros((2,), jnp.int32), jnp.float32(0.1),
+                jnp.int32(0))
+        text = aot.to_hlo_text(jax.jit(step).lower(*aot.spec_like(args)))
+        assert "custom-call" not in text
+
+
+class TestSignatures:
+    def test_sig_roles(self):
+        args = ([(jnp.zeros((2, 2)), jnp.zeros((2,)))], [],
+                jnp.zeros((4,)), jnp.float32(1.0))
+        sig = aot._sig(args, roles=("trained", "frozen", "x", "lr"))
+        roles = [s["role"] for s in sig]
+        assert roles == ["trained", "trained", "x", "lr"]
+        assert sig[0]["shape"] == [2, 2]
+        assert sig[3]["dtype"] == "f32"
+
+    def test_sig_dtypes(self):
+        sig = aot._sig((jnp.zeros((3,), jnp.int32),), roles=("y",))
+        assert sig[0]["dtype"] == "s32"
+
+
+class TestEmitter:
+    def test_emit_cnn_roundtrip(self, tmp_path):
+        em = aot.Emitter(str(tmp_path))
+        cfg = tiny_cfg()
+        aot_cfg_backup = dict(configs.CNN_ZOO)
+        try:
+            aot.emit_cnn(em, cfg, depths_full=False)
+        finally:
+            configs.CNN_ZOO.clear()
+            configs.CNN_ZOO.update(aot_cfg_backup)
+        em.finish()
+        man = json.load(open(tmp_path / "manifest.json"))
+        assert "t" in man["models"]
+        assert man["models"]["t"]["params_file"] == "t_params.bin"
+        # Params blob has the right byte count.
+        total = sum(
+            int(np.prod(p["shape"])) if p["shape"] else 1
+            for p in man["models"]["t"]["params"]
+        )
+        blob = os.path.getsize(tmp_path / "t_params.bin")
+        assert blob == 4 * total
+        # Every executable's HLO file exists and is nonempty.
+        for name, e in man["executables"].items():
+            p = tmp_path / e["file"]
+            assert p.exists() and p.stat().st_size > 100, name
+        # Train executables expose the role-tagged signature.
+        ev = man["executables"]["t_vanilla_d2"]
+        roles = {s["role"] for s in ev["inputs"]}
+        assert {"trained", "x", "y", "lr"} <= roles
+        out_roles = [s["role"] for s in ev["outputs"]]
+        assert out_roles[0] == "loss"
+
+    def test_real_manifest_consistency(self):
+        # If the repo artifacts exist, cross-check a few invariants.
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        man = json.load(open(path))
+        assert len(man["executables"]) >= 30
+        for name, e in man["executables"].items():
+            assert e["kind"] in ("train", "infer"), name
+            if e["kind"] == "train":
+                assert any(s["role"] == "loss" for s in e["outputs"]), name
+            if e.get("method") == "asi" and "tinylm" not in name:
+                n_us_in = sum(1 for s in e["inputs"] if s["role"] == "us")
+                n_us_out = sum(1 for s in e["outputs"] if s["role"] == "us")
+                assert n_us_in == n_us_out == 4 * e["depth"], name
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,214 @@
+"""L2 graph correctness: EdgeNet/TinyLM train steps across all methods."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_cfg():
+    return configs.EdgeNetConfig(
+        name="t",
+        convs=(configs.ConvSpec(8, 2), configs.ConvSpec(12, 1),
+               configs.ConvSpec(16, 1)),
+        num_classes=4,
+        image_size=16,
+        batch_size=8,
+    )
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = small_cfg()
+    params = model.init_edgenet(cfg, KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (cfg.batch_size, 3, 16, 16))
+    y = jax.random.randint(jax.random.PRNGKey(2), (cfg.batch_size,), 0, 4)
+    return cfg, params, x, y
+
+
+def make_us(cfg, depth, r, seed=3):
+    shapes = cfg.activation_shapes()[-depth:]
+    return [
+        [jax.random.normal(jax.random.PRNGKey(seed + 10 * i + m),
+                           (s[m], min(r, s[m]))) for m in range(4)]
+        for i, s in enumerate(shapes)
+    ]
+
+
+class TestEdgeNet:
+    def test_init_shapes(self, setup):
+        cfg, params, _, _ = setup
+        assert len(params) == len(cfg.convs) + 1
+        assert params[0][0].shape == (8, 3, 3, 3)
+        assert params[-1][0].shape == (16, 4)
+
+    def test_infer_shapes(self, setup):
+        cfg, params, x, _ = setup
+        logits, = jax.jit(model.make_edgenet_infer(cfg))(params, x)
+        assert logits.shape == (8, 4)
+
+    def test_losses_identical_across_methods_step0(self, setup):
+        # Compression only changes the backward pass: the first reported
+        # loss must agree across every method.
+        cfg, params, x, y = setup
+        depth = 2
+        trained, frozen = params[-(depth + 1):], params[:-(depth + 1)]
+        losses = {}
+        for method in ("vanilla", "gf", "asi", "hosvd"):
+            plan = configs.RankPlan.uniform(cfg, depth, 2)
+            tail = model.TailSpec(method, depth, plan)
+            step = jax.jit(model.make_edgenet_train_step(cfg, tail))
+            if method == "asi":
+                loss, _, _ = step(trained, frozen, x, y, 0.05,
+                                  make_us(cfg, depth, 2))
+            elif method == "hosvd":
+                loss, _, _ = step(trained, frozen, x, y, 0.05, 0)
+            else:
+                loss, _, _ = step(trained, frozen, x, y, 0.05)
+            losses[method] = float(loss)
+        vals = list(losses.values())
+        assert max(vals) - min(vals) < 1e-5, losses
+
+    def test_vanilla_matches_autodiff_grad(self, setup):
+        # The tail-split vanilla step must produce the same update as a
+        # plain end-to-end autodiff step over those parameters.
+        cfg, params, x, y = setup
+        depth = len(cfg.convs)
+        tail = model.TailSpec("vanilla", depth, None)
+        step = jax.jit(model.make_edgenet_train_step(cfg, tail))
+        loss, new_params, _ = step(params, [], x, y, 0.05)
+
+        def loss_fn(ps):
+            logits, _ = model.edgenet_forward(
+                cfg, tail, ps, [], x)
+            return model.cross_entropy(logits, y)
+
+        l2, grads = jax.value_and_grad(loss_fn)(params)
+        assert abs(float(loss) - float(l2)) < 1e-5
+
+    def test_asi_training_reduces_loss(self, setup):
+        cfg, params, x, y = setup
+        depth = 2
+        trained, frozen = params[-(depth + 1):], params[:-(depth + 1)]
+        plan = configs.RankPlan.uniform(cfg, depth, 4)
+        step = jax.jit(model.make_edgenet_train_step(
+            cfg, model.TailSpec("asi", depth, plan)))
+        us = make_us(cfg, depth, 4)
+        first = None
+        for _ in range(8):
+            loss, trained, us = step(trained, frozen, x, y, 0.1, us)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+    def test_asi_grad_close_to_vanilla_at_high_rank(self, setup):
+        # With near-full ranks the ASI update should track vanilla.
+        cfg, params, x, y = setup
+        depth = 1
+        trained, frozen = params[-2:], params[:-2]
+        sv = jax.jit(model.make_edgenet_train_step(
+            cfg, model.TailSpec("vanilla", depth, None)))
+        _, tv, _ = sv(trained, frozen, x, y, 0.05)
+        plan = configs.RankPlan.uniform(cfg, depth, 64)  # capped to dims
+        sa = jax.jit(model.make_edgenet_train_step(
+            cfg, model.TailSpec("asi", depth, plan)))
+        us = make_us(cfg, depth, 64)
+        # A couple of iterations to converge the subspaces, then compare.
+        ta = trained
+        for _ in range(4):
+            _, ta2, us = sa(trained, frozen, x, y, 0.05, us)
+        _, ta2, us = sa(trained, frozen, x, y, 0.05, us)
+        for (wv, bv), (wa, ba) in zip(tv, ta2):
+            np.testing.assert_allclose(wv, wa, rtol=0.05, atol=5e-3)
+
+    def test_frozen_params_untouched(self, setup):
+        cfg, params, x, y = setup
+        depth = 1
+        trained, frozen = params[-2:], params[:-2]
+        plan = configs.RankPlan.uniform(cfg, depth, 2)
+        step = jax.jit(model.make_edgenet_train_step(
+            cfg, model.TailSpec("asi", depth, plan)))
+        _, new_trained, _ = step(trained, frozen, x, y, 0.05,
+                                 make_us(cfg, depth, 2))
+        # Trained params changed; the step returns only trained ones.
+        assert any(
+            not np.allclose(a[0], b[0]) for a, b in zip(trained, new_trained)
+        )
+
+    def test_gradient_clipping_bounds_update(self, setup):
+        cfg, params, x, y = setup
+        depth = 1
+        trained, frozen = params[-2:], params[:-2]
+        step = jax.jit(model.make_edgenet_train_step(
+            cfg, model.TailSpec("vanilla", depth, None)))
+        lr = 1.0
+        _, new_trained, _ = step(trained, frozen, x, y, lr)
+        total = 0.0
+        for (w0, b0), (w1, b1) in zip(trained, new_trained):
+            total += float(jnp.sum((w0 - w1) ** 2) + jnp.sum((b0 - b1) ** 2))
+        # ||update|| = lr * ||clipped grad|| <= lr * 2.0
+        assert total ** 0.5 <= lr * 2.0 + 1e-4
+
+
+class TestTinyLM:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        cfg = configs.TinyLMConfig(n_blocks=2, d_model=32, n_heads=2,
+                                   d_ff=64, seq_len=16, batch_size=4,
+                                   vocab=64, rank=4)
+        params = model.init_tinylm(cfg, KEY)
+        toks = jax.random.randint(jax.random.PRNGKey(5), (4, 16), 0, 64)
+        return cfg, params, toks
+
+    def test_forward_shapes(self, lm):
+        cfg, params, toks = lm
+        logits, _ = model.tinylm_forward(cfg, params, toks)
+        assert logits.shape == (4, 16, 64)
+
+    def test_causality(self, lm):
+        # Changing a future token must not change past logits.
+        cfg, params, toks = lm
+        logits, _ = model.tinylm_forward(cfg, params, toks)
+        toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % 64)
+        logits2, _ = model.tinylm_forward(cfg, params, toks2)
+        np.testing.assert_allclose(logits[:, :-1], logits2[:, :-1],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_vanilla_vs_asi_loss_step0(self, lm):
+        cfg, params, toks = lm
+        tuned, rest = model.split_lm_params(params, 1)
+        sv = jax.jit(model.make_tinylm_train_step(cfg, 1, "vanilla"))
+        lv, _, _ = sv(tuned, rest, toks, 0.01)
+        sa = jax.jit(model.make_tinylm_train_step(cfg, 1, "asi"))
+        n = cfg.batch_size * cfg.seq_len
+        us = [jax.random.normal(jax.random.PRNGKey(6 + i), (n, cfg.rank))
+              for i in range(model.LM_US_PER_BLOCK)]
+        la, _, us2 = sa(tuned, rest, toks, 0.01, us)
+        assert abs(float(lv) - float(la)) < 1e-4
+        assert len(us2) == model.LM_US_PER_BLOCK
+        assert us2[0].shape == (n, cfg.rank)
+
+    def test_asi_lm_trains(self, lm):
+        cfg, params, toks = lm
+        tuned, rest = model.split_lm_params(params, 2)
+        sa = jax.jit(model.make_tinylm_train_step(cfg, 2, "asi"))
+        n = cfg.batch_size * cfg.seq_len
+        us = [jax.random.normal(jax.random.PRNGKey(7 + i), (n, cfg.rank))
+              for i in range(2 * model.LM_US_PER_BLOCK)]
+        first = None
+        for _ in range(6):
+            loss, tuned, us = sa(tuned, rest, toks, 0.05, us)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

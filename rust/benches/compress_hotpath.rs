@@ -1,0 +1,49 @@
+//! Bench: host compression kernels — ASI single iteration vs full HOSVD
+//! on realistic activation shapes. This is the host-side mirror of the
+//! paper's Sec. 3.5 complexity argument: one warm subspace iteration per
+//! mode must be far cheaper than four truncated SVDs.
+//!
+//! Run: `cargo bench --bench compress_hotpath`
+
+use asi::compress::{asi_compress, hosvd_fixed, AsiState};
+use asi::tensor::Tensor4;
+use asi::util::rng::Rng;
+use asi::util::timer;
+
+fn main() {
+    for (dims, name) in [
+        ([32usize, 16, 16, 16], "B32 C16 16x16"),
+        ([32, 48, 8, 8], "B32 C48 8x8"),
+        ([32, 96, 4, 4], "B32 C96 4x4"),
+    ] {
+        let mut rng = Rng::new(1);
+        let a = Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()));
+        let ranks = [4usize, 4, 4, 4].map(|r| {
+            r.min(dims[0]).min(dims[1]).min(dims[2]).min(dims[3])
+        });
+        let ranks = [
+            ranks[0].min(dims[0]),
+            ranks[1].min(dims[1]),
+            ranks[2].min(dims[2]),
+            ranks[3].min(dims[3]),
+        ];
+
+        let mut st = AsiState::init(dims, ranks, &mut Rng::new(2));
+        let asi = timer::bench(&format!("asi  {name}"), 2, 10, || {
+            let _ = asi_compress(&a, &mut st);
+        });
+        let hosvd = timer::bench(&format!("hosvd {name}"), 1, 3, || {
+            let _ = hosvd_fixed(&a, ranks);
+        });
+        println!("{}", asi.report());
+        println!("{}", hosvd.report());
+        println!(
+            "  speedup asi vs hosvd: {:.1}x\n",
+            hosvd.mean_s / asi.mean_s
+        );
+        assert!(
+            asi.mean_s < hosvd.mean_s,
+            "{name}: single subspace iteration must beat full HOSVD"
+        );
+    }
+}

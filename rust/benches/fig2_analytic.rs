@@ -1,0 +1,28 @@
+//! Bench: Fig. 2 — regenerates all four analytic panels and times the
+//! cost-model evaluation itself (criterion is unavailable offline; the
+//! in-repo harness prints mean/min/max).
+//!
+//! Run: `cargo bench --bench fig2_analytic`
+
+use asi::experiments::fig2;
+use asi::metrics::flops::LayerDims;
+use asi::util::timer;
+
+fn main() {
+    println!("{}", fig2::flops_vs_map_size().render());
+    println!("{}", fig2::ratios_vs_rank().render());
+
+    // Microbench the analytic model (it sits inside every experiment
+    // driver's inner loop, so it should be effectively free).
+    let l = LayerDims::new(128, 64, 32, 32, 64, 1, 3);
+    let mut acc = 0u64;
+    let st = timer::bench("cost_model_eval", 100, 10_000, || {
+        acc = acc
+            .wrapping_add(l.fwd_flops())
+            .wrapping_add(l.asi_overhead([4, 4, 4, 4]))
+            .wrapping_add(l.asi_dw_flops([4, 4, 4, 4]))
+            .wrapping_add(l.hosvd_overhead());
+    });
+    println!("{}", st.report());
+    assert!(acc > 0);
+}

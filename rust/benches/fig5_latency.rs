@@ -1,0 +1,57 @@
+//! Bench: Fig. 5 — measured per-step training latency of the four
+//! methods on this host (the Raspberry-Pi substitution). Needs
+//! `make artifacts`.
+//!
+//! Run: `cargo bench --bench fig5_latency`
+
+use std::path::Path;
+
+use asi::coordinator::{Session, Trainer, WarmStart};
+use asi::util::timer;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping fig5_latency: run `make artifacts` first");
+        return;
+    }
+    let session = Session::open(artifacts, 42).expect("session");
+    let model = "mcunet";
+    let cnn = session.engine.manifest.cnn(model).expect("cnn").clone();
+
+    let mut rows = Vec::new();
+    for method in ["vanilla", "gf", "asi", "hosvd"] {
+        let exec = match method {
+            "asi" => format!("{model}_asi_d2_r4"),
+            m => format!("{model}_{m}_d2"),
+        };
+        let mut tr = Trainer::new(&session.engine, model, &exec, 0.05,
+                                  WarmStart::Warm, 3)
+            .expect("trainer");
+        let b = session.downstream_ds.batch("train", 0, cnn.batch_size);
+        tr.step_image(&b).expect("warmup");
+        let st = timer::bench(&exec, 2, 10, || {
+            let b = session.downstream_ds.batch("train", 1, cnn.batch_size);
+            tr.step_image(&b).expect("step");
+        });
+        println!("{}", st.report());
+        rows.push((method, st.mean_s));
+    }
+    let vanilla = rows
+        .iter()
+        .find(|(m, _)| *m == "vanilla")
+        .map(|&(_, s)| s)
+        .unwrap();
+    println!("\nratios vs vanilla:");
+    for (m, s) in &rows {
+        println!("  {m:<8} {:.2}x", s / vanilla);
+    }
+    // The paper's core latency claim: HOSVD is dramatically slower.
+    let hosvd = rows.iter().find(|(m, _)| *m == "hosvd").map(|&(_, s)| s);
+    if let Some(h) = hosvd {
+        assert!(
+            h > vanilla,
+            "HOSVD should be slower than vanilla even at this scale"
+        );
+    }
+}

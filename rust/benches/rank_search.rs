@@ -1,0 +1,84 @@
+//! Bench: rank-selection search — the §C ablation. Compares the exact
+//! eq.-9 backtracking against the greedy fallback on synthetic
+//! perplexity tables of growing depth (the paper notes the brute-force
+//! search "becomes highly resource-intensive" as |F| grows — this bench
+//! quantifies exactly that and shows the fallback staying flat).
+//!
+//! Run: `cargo bench --bench rank_search`
+
+use asi::coordinator::rank_selection::{backtracking_select, greedy_select,
+                                       LayerPerplexity, PerplexityTable};
+use asi::util::rng::Rng;
+use asi::util::timer;
+
+fn synth_table(n_layers: usize, n_eps: usize, seed: u64) -> PerplexityTable {
+    let mut rng = Rng::new(seed);
+    let layers = (0..n_layers)
+        .map(|layer| {
+            // Monotone perplexity/memory per threshold, layer-specific
+            // sensitivity — the structure real tables have.
+            let sens = 0.5 + 2.0 * rng.uniform();
+            let base_mem = 1024.0 * (1.0 + 8.0 * rng.uniform());
+            let mut perp = Vec::new();
+            let mut mem = Vec::new();
+            let mut ranks = Vec::new();
+            for j in 0..n_eps {
+                let f = (j + 1) as f32 / n_eps as f32;
+                perp.push(sens * (1.0 - f) + 0.02 * rng.uniform());
+                mem.push((base_mem * (0.3 + 2.0 * f)) as u64);
+                let r = 1 + j;
+                ranks.push([r, r, r, r]);
+            }
+            LayerPerplexity {
+                layer,
+                dims: [32, 32, 16, 16],
+                ranks,
+                perplexity: perp,
+                mem_bytes: mem,
+            }
+        })
+        .collect();
+    PerplexityTable {
+        eps: (0..n_eps).map(|j| 0.4 + 0.1 * j as f32).collect(),
+        layers,
+    }
+}
+
+fn main() {
+    // n = 16 already costs ~1 min/solve on one core (the exponential wall
+    // the paper's §C describes); larger tails are greedy-only territory.
+    for n_layers in [4usize, 8, 12, 14] {
+        let table = synth_table(n_layers, 6, 7);
+        // Budget: 60% of the maximal memory — forces nontrivial choices.
+        let max_mem: u64 = table
+            .layers
+            .iter()
+            .map(|l| l.mem_bytes.iter().max().unwrap())
+            .sum();
+        let budget = max_mem * 6 / 10;
+        let iters = if n_layers >= 12 { 2 } else { 5 };
+
+        let bt = timer::bench(
+            &format!("backtracking n={n_layers}"), 0, iters,
+            || {
+                backtracking_select(&table, budget);
+            },
+        );
+        let gr = timer::bench(
+            &format!("greedy       n={n_layers}"), 1, iters,
+            || {
+                greedy_select(&table, budget);
+            },
+        );
+        println!("{}", bt.report());
+        println!("{}", gr.report());
+        let e = backtracking_select(&table, budget).unwrap();
+        let g = greedy_select(&table, budget).unwrap();
+        println!(
+            "  optimality gap: greedy/exact perplexity = {:.3}\n",
+            g.total_perplexity / e.total_perplexity
+        );
+        assert!(g.total_perplexity >= e.total_perplexity - 1e-6);
+        assert!(e.total_mem_bytes <= budget && g.total_mem_bytes <= budget);
+    }
+}

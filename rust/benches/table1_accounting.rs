@@ -1,0 +1,24 @@
+//! Bench: Tables 1–4 resource columns — regenerates every analytic table
+//! and times the full regeneration (it must stay interactive-fast since
+//! the CLI recomputes it on demand).
+//!
+//! Run: `cargo bench --bench table1_accounting`
+
+use asi::experiments::tables;
+use asi::util::timer;
+
+fn main() {
+    println!("{}", tables::table1().render());
+    println!("{}", tables::table2().render());
+    println!("{}", tables::table3().render());
+    println!("{}", tables::table4_accounting().render());
+
+    let st = timer::bench("regenerate_all_tables", 2, 20, || {
+        let _ = tables::table1();
+        let _ = tables::table2();
+        let _ = tables::table3();
+        let _ = tables::table4_accounting();
+    });
+    println!("{}", st.report());
+    assert!(st.mean_s < 0.5, "table regeneration too slow");
+}

@@ -1,0 +1,117 @@
+//! Gradient filtering (Yang et al., CVPR 2023) — the pooling baseline.
+//!
+//! With patch size R2, activations and output gradients are 2x2 average
+//! pooled before the weight-gradient correlation; the input gradient uses
+//! the patch-constant (pooled-then-replicated) output gradient.
+
+use crate::tensor::{conv2d_dw, ConvGeom, Tensor4};
+
+/// 2x2 average pooling over the spatial dims.
+pub fn avg_pool2(x: &Tensor4) -> Tensor4 {
+    let [b, c, h, w] = x.dims;
+    let (ho, wo) = (h / 2, w / 2);
+    let mut y = Tensor4::zeros([b, c, ho, wo]);
+    for bi in 0..b {
+        for ci in 0..c {
+            for i in 0..ho {
+                for j in 0..wo {
+                    let s = x.at([bi, ci, 2 * i, 2 * j])
+                        + x.at([bi, ci, 2 * i, 2 * j + 1])
+                        + x.at([bi, ci, 2 * i + 1, 2 * j])
+                        + x.at([bi, ci, 2 * i + 1, 2 * j + 1]);
+                    *y.at_mut([bi, ci, i, j]) = 0.25 * s;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Replicate each pooled cell back to a 2x2 patch.
+pub fn upsample2(x: &Tensor4) -> Tensor4 {
+    let [b, c, h, w] = x.dims;
+    let mut y = Tensor4::zeros([b, c, 2 * h, 2 * w]);
+    for bi in 0..b {
+        for ci in 0..c {
+            for i in 0..2 * h {
+                for j in 0..2 * w {
+                    *y.at_mut([bi, ci, i, j]) = x.at([bi, ci, i / 2, j / 2]);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Gradient-filtered weight gradient: correlate pooled activation with
+/// pooled output gradient (x4 energy compensation for the pooling).
+pub fn gf_dw(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4 {
+    let xp = avg_pool2(x);
+    let gyp = avg_pool2(gy);
+    let mut dw = conv2d_dw(&xp, &gyp, g, cout);
+    for v in dw.data.iter_mut() {
+        *v *= 4.0;
+    }
+    dw
+}
+
+/// Memory (elements) kept by gradient filtering for one layer: the pooled
+/// activation, i.e. a quarter of the full map.
+pub fn gf_storage(dims: [usize; 4]) -> usize {
+    dims[0] * dims[1] * (dims[2] / 2) * (dims[3] / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    #[test]
+    fn pool_of_constant_is_constant() {
+        let x = Tensor4::from_vec([1, 1, 4, 4], vec![3.0; 16]);
+        let y = avg_pool2(&x);
+        assert_eq!(y.dims, [1, 1, 2, 2]);
+        assert!(y.data.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pool_then_upsample_preserves_mean() {
+        let x = randt([2, 3, 4, 4], 1);
+        let y = upsample2(&avg_pool2(&x));
+        assert_eq!(y.dims, x.dims);
+        let mx: f32 = x.data.iter().sum::<f32>() / x.numel() as f32;
+        let my: f32 = y.data.iter().sum::<f32>() / y.numel() as f32;
+        assert!((mx - my).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gf_dw_exact_for_patchwise_constant_tensors() {
+        // For a 1x1/stride-1 conv on tensors that are constant within
+        // every 2x2 patch, pooling is lossless: each patch contributes
+        // 4 * (pooled product), so gf's x4-compensated pooled correlation
+        // equals the exact dW exactly.
+        let g = ConvGeom { stride: 1, padding: 0, ksize: 1 };
+        let xp = randt([2, 3, 3, 3], 2);
+        let x = upsample2(&xp);
+        let gyp = randt([2, 4, 3, 3], 3);
+        let gy = upsample2(&gyp);
+        let exact = conv2d_dw(&x, &gy, g, 4);
+        let mut approx = conv2d_dw(&avg_pool2(&x), &avg_pool2(&gy), g, 4);
+        for v in approx.data.iter_mut() {
+            *v *= 4.0;
+        }
+        for (e, a) in exact.data.iter().zip(&approx.data) {
+            assert!((e - a).abs() < 1e-3 * (1.0 + e.abs()), "{e} vs {a}");
+        }
+    }
+
+    #[test]
+    fn gf_storage_quarter() {
+        assert_eq!(gf_storage([8, 16, 32, 32]), 8 * 16 * 16 * 16);
+    }
+}

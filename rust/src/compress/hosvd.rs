@@ -1,0 +1,120 @@
+//! Host HOSVD — the expensive baseline ASI replaces, plus the
+//! explained-variance machinery the perplexity probe and rank selection
+//! use (per-mode spectra via the Gram eigensolver).
+
+use crate::tensor::{left_svd, rank_for_energy, Mat, Tensor4};
+
+use super::tucker::Tucker;
+
+/// Per-mode singular spectra of a tensor (descending).
+pub fn mode_spectra(a: &Tensor4) -> [Vec<f32>; 4] {
+    std::array::from_fn(|m| {
+        let am = a.unfold(m);
+        let (_, sigma) = left_svd(&am, 0);
+        sigma
+    })
+}
+
+/// Ranks selected by the explained-variance threshold `eps` per mode.
+pub fn ranks_for_eps(a: &Tensor4, eps: f32) -> [usize; 4] {
+    let spectra = mode_spectra(a);
+    std::array::from_fn(|m| rank_for_energy(&spectra[m], eps))
+}
+
+/// Truncated HOSVD at fixed per-mode ranks.
+pub fn hosvd_fixed(a: &Tensor4, ranks: [usize; 4]) -> Tucker {
+    let us: [Mat; 4] = std::array::from_fn(|m| {
+        let am = a.unfold(m);
+        let r = ranks[m].min(am.rows);
+        let (u, _) = left_svd(&am, r);
+        u
+    });
+    Tucker::project(a, us)
+}
+
+/// HOSVD_eps: ranks chosen by explained variance, then truncated HOSVD.
+/// Returns the decomposition and the selected ranks.
+pub fn hosvd_eps(a: &Tensor4, eps: f32) -> (Tucker, [usize; 4]) {
+    let ranks = ranks_for_eps(a, eps);
+    (hosvd_fixed(a, ranks), ranks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    #[test]
+    fn full_rank_hosvd_is_lossless() {
+        let a = randt([3, 4, 5, 5], 1);
+        let t = hosvd_fixed(&a, [3, 4, 5, 5]);
+        let rel = a.sub(&t.reconstruct()).frob_norm() / a.frob_norm();
+        assert!(rel < 1e-3, "rel {rel}");
+    }
+
+    #[test]
+    fn eps_one_selects_full_rank_on_noise() {
+        let a = randt([3, 4, 4, 4], 2);
+        let ranks = ranks_for_eps(&a, 0.9999);
+        // Gaussian noise has a flat spectrum; near-1 eps needs near-full
+        // rank in every mode.
+        assert!(ranks[0] >= 3 - 1);
+        assert!(ranks.iter().zip(&a.dims).all(|(r, d)| r <= d));
+    }
+
+    #[test]
+    fn lowrank_structure_detected() {
+        // Rank-1 structure in every mode -> eps=0.9 picks tiny ranks.
+        let mut a = Tensor4::zeros([4, 4, 4, 4]);
+        let mut rng = Rng::new(3);
+        let vs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(4)).collect();
+        for b in 0..4 {
+            for c in 0..4 {
+                for h in 0..4 {
+                    for w in 0..4 {
+                        *a.at_mut([b, c, h, w]) =
+                            vs[0][b] * vs[1][c] * vs[2][h] * vs[3][w];
+                    }
+                }
+            }
+        }
+        let ranks = ranks_for_eps(&a, 0.9);
+        assert_eq!(ranks, [1, 1, 1, 1], "got {ranks:?}");
+        let (t, _) = hosvd_eps(&a, 0.9);
+        let rel = a.sub(&t.reconstruct()).frob_norm() / a.frob_norm();
+        assert!(rel < 1e-2, "rel {rel}");
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let a = randt([4, 5, 6, 6], 4);
+        let mut last = f32::INFINITY;
+        for r in 1..=4 {
+            let t = hosvd_fixed(&a, [r, r, r, r]);
+            let rel = a.sub(&t.reconstruct()).frob_norm() / a.frob_norm();
+            assert!(rel <= last + 1e-4, "rank {r}: {rel} > {last}");
+            last = rel;
+        }
+    }
+
+    #[test]
+    fn hosvd_beats_single_cold_asi_iteration() {
+        // HOSVD is the accuracy gold standard — a single cold subspace
+        // iteration should never beat it (that is the trade ASI makes).
+        use super::super::asi::{asi_compress, AsiState};
+        let a = randt([5, 5, 5, 5], 5);
+        let ranks = [2, 2, 2, 2];
+        let th = hosvd_fixed(&a, ranks);
+        let hosvd_err = a.sub(&th.reconstruct()).frob_norm();
+        let mut st = AsiState::init(a.dims, ranks, &mut Rng::new(6));
+        let ta = asi_compress(&a, &mut st);
+        let asi_err = a.sub(&ta.reconstruct()).frob_norm();
+        assert!(hosvd_err <= asi_err * 1.05,
+                "hosvd {hosvd_err} vs asi {asi_err}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Host implementations of every activation-compression method the paper
+//! evaluates: ASI (the contribution), HOSVD_eps (NeurIPS-24 baseline),
+//! gradient filtering (CVPR-23 baseline). Used by the offline phases
+//! (perplexity, rank selection) and by tests; the hot path runs the
+//! Pallas/XLA versions.
+
+pub mod asi;
+pub mod gf;
+pub mod hosvd;
+pub mod subspace;
+pub mod tucker;
+
+pub use asi::{asi_compress, matrix_asi, si_step, AsiState};
+pub use gf::{avg_pool2, gf_dw, gf_storage, upsample2};
+pub use hosvd::{hosvd_eps, hosvd_fixed, mode_spectra, ranks_for_eps};
+pub use subspace::{chordal_distance, principal_cosines, subspace_alignment};
+pub use tucker::Tucker;

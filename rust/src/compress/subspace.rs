@@ -1,0 +1,115 @@
+//! Subspace-quality metrics: principal angles between the bases ASI
+//! tracks and the optimal (HOSVD) bases. These quantify the paper's
+//! stability argument — after a few warm-started steps the ASI subspace
+//! should align with the top singular subspace of the (slowly drifting)
+//! activation. Used by the warm-start analysis and the ablation report.
+
+use crate::tensor::{sym_eig, Mat};
+
+/// Cosines of the principal angles between the column spaces of two
+/// column-orthonormal matrices `u` (n x p) and `v` (n x q): the singular
+/// values of `U^T V`, descending, length `min(p, q)`.
+pub fn principal_cosines(u: &Mat, v: &Mat) -> Vec<f32> {
+    assert_eq!(u.rows, v.rows, "principal_cosines: row mismatch");
+    let m = u.t_matmul(v); // (p, q)
+    // Singular values of m via the Gram eigenvalues of the smaller side.
+    let gram = if m.rows <= m.cols { m.gram() } else { m.transpose().gram() };
+    let eig = sym_eig(&gram);
+    eig.values
+        .iter()
+        .map(|&l| l.max(0.0).sqrt().min(1.0))
+        .collect()
+}
+
+/// Mean alignment in [0, 1]: 1 = identical subspaces, 0 = orthogonal.
+pub fn subspace_alignment(u: &Mat, v: &Mat) -> f32 {
+    let cos = principal_cosines(u, v);
+    let k = cos.len().min(u.cols).min(v.cols);
+    if k == 0 {
+        return 0.0;
+    }
+    cos[..k].iter().sum::<f32>() / k as f32
+}
+
+/// Projection distance `||U U^T - V V^T||_F / sqrt(2k)` in [0, 1]
+/// (the chordal distance between subspaces, normalized).
+pub fn chordal_distance(u: &Mat, v: &Mat) -> f32 {
+    let k = u.cols.min(v.cols) as f32;
+    let cos = principal_cosines(u, v);
+    let s: f32 = cos
+        .iter()
+        .take(u.cols.min(v.cols))
+        .map(|c| 1.0 - c * c)
+        .sum();
+    (s / k).max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{asi_compress, hosvd_fixed, AsiState};
+    use crate::tensor::Tensor4;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_subspaces_align() {
+        let mut rng = Rng::new(1);
+        let u = Mat::randn(10, 3, &mut rng).mgs();
+        let a = subspace_alignment(&u, &u);
+        assert!((a - 1.0).abs() < 1e-3, "{a}");
+        assert!(chordal_distance(&u, &u) < 1e-2);
+    }
+
+    #[test]
+    fn orthogonal_subspaces_do_not() {
+        // Columns of the identity split into disjoint groups.
+        let mut u = Mat::zeros(6, 2);
+        u[(0, 0)] = 1.0;
+        u[(1, 1)] = 1.0;
+        let mut v = Mat::zeros(6, 2);
+        v[(2, 0)] = 1.0;
+        v[(3, 1)] = 1.0;
+        assert!(subspace_alignment(&u, &v) < 1e-4);
+        assert!((chordal_distance(&u, &v) - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rotation_within_subspace_is_invisible() {
+        // Same span, different basis -> perfect alignment.
+        let mut rng = Rng::new(2);
+        let u = Mat::randn(12, 3, &mut rng).mgs();
+        // Rotate columns by a random orthonormal 3x3.
+        let r = Mat::randn(3, 3, &mut rng).mgs();
+        let v = u.matmul(&r);
+        assert!(subspace_alignment(&u, &v) > 0.999);
+    }
+
+    #[test]
+    fn warm_asi_converges_to_hosvd_subspace() {
+        // The stability argument, measured: repeated warm iterations on a
+        // fixed low-rank tensor drive the mode-m alignment toward 1.
+        let dims = [8usize, 7, 6, 5];
+        let mut rng = Rng::new(3);
+        // Low-rank tensor with decaying mode spectra.
+        let mut core = Tensor4::zeros([2, 2, 2, 2]);
+        core.data = vec![5.0, 1.0, 1.0, 0.3, 1.0, 0.4, 0.2, 0.1,
+                         1.0, 0.3, 0.2, 0.1, 0.2, 0.1, 0.1, 0.05];
+        let mut a = core;
+        for m in 0..4 {
+            let u = Mat::randn(dims[m], a.dims[m], &mut rng).mgs();
+            a = a.mode_product(&u, m);
+        }
+        let gold = hosvd_fixed(&a, [2, 2, 2, 2]);
+        let mut st = AsiState::init(dims, [2, 2, 2, 2], &mut rng);
+        let mut align = vec![0.0f32; 4];
+        for _ in 0..12 {
+            let t = asi_compress(&a, &mut st);
+            for m in 0..4 {
+                align[m] = subspace_alignment(&t.us[m], &gold.us[m]);
+            }
+        }
+        for (m, &al) in align.iter().enumerate() {
+            assert!(al > 0.98, "mode {m}: alignment {al}");
+        }
+    }
+}

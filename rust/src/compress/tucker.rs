@@ -1,0 +1,187 @@
+//! Tucker decompositions of activation tensors + the eq.-15 low-rank
+//! weight gradient, in host form (used by the perplexity probe and by
+//! property tests that cross-check the Pallas kernels' conventions).
+
+use crate::tensor::{conv2d_dw, ConvGeom, Mat, Tensor4};
+
+/// A Tucker decomposition `A ~= S x_1 U1 x_2 U2 x_3 U3 x_4 U4`.
+#[derive(Debug, Clone)]
+pub struct Tucker {
+    pub core: Tensor4,
+    /// Column-orthonormal factors, one per mode: `us[m] in R^{d_m x r_m}`.
+    pub us: [Mat; 4],
+}
+
+impl Tucker {
+    pub fn ranks(&self) -> [usize; 4] {
+        self.core.dims
+    }
+
+    /// Element count of the compressed representation (eq. 5).
+    pub fn storage(&self) -> usize {
+        self.core.numel()
+            + self.us.iter().map(|u| u.rows * u.cols).sum::<usize>()
+    }
+
+    /// `A~ = S x_1 U1 ... x_4 U4`.
+    pub fn reconstruct(&self) -> Tensor4 {
+        let mut out = self.core.clone();
+        for (m, u) in self.us.iter().enumerate() {
+            out = out.mode_product(u, m);
+        }
+        out
+    }
+
+    /// Project a full tensor onto the factors: `S = A x_m U_m^T`.
+    pub fn project(a: &Tensor4, us: [Mat; 4]) -> Tucker {
+        let mut core = a.clone();
+        for (m, u) in us.iter().enumerate() {
+            core = core.mode_product(&u.transpose(), m);
+        }
+        Tucker { core, us }
+    }
+
+    /// Eq. 15 — weight gradient directly on the factors.
+    ///
+    /// Same staging as the Pallas kernel (`lowrank_grad.py`):
+    /// batch + channel modes stay compressed, spatial modes expand.
+    pub fn lowrank_dw(&self, gy: &Tensor4, g: ConvGeom) -> Tensor4 {
+        let [_r1, r2, _r3, _r4] = self.core.dims;
+        let [bsz, cout, ho, wo] = gy.dims;
+        let u1 = &self.us[0];
+        let u2 = &self.us[1];
+        let r1 = u1.cols;
+        assert_eq!(u1.rows, bsz, "U1 batch dim mismatch");
+
+        // (1) gy1[r, o, i, j] = sum_b U1[b, r] gy[b, o, i, j]
+        let mut gy1 = Tensor4::zeros([r1, cout, ho, wo]);
+        for b in 0..bsz {
+            for r in 0..r1 {
+                let u = u1.at(b, r);
+                if u == 0.0 {
+                    continue;
+                }
+                for o in 0..cout {
+                    for i in 0..ho {
+                        for j in 0..wo {
+                            *gy1.at_mut([r, o, i, j]) += u * gy.at([b, o, i, j]);
+                        }
+                    }
+                }
+            }
+        }
+
+        // (2) expand spatial modes: (r1, r2, H, W)
+        let at = self
+            .core
+            .mode_product(&self.us[2], 2)
+            .mode_product(&self.us[3], 3);
+
+        // (3) correlation conv in rank space: (C', r2, D, D)
+        let dw_r = conv2d_dw(&at, &gy1, g, cout);
+
+        // (4) expand channels through U2: (C', C, D, D)
+        let cin = u2.rows;
+        let mut dw = Tensor4::zeros([cout, cin, g.ksize, g.ksize]);
+        for o in 0..cout {
+            for r in 0..r2 {
+                for c in 0..cin {
+                    let u = u2.at(c, r);
+                    if u == 0.0 {
+                        continue;
+                    }
+                    for p in 0..g.ksize {
+                        for q in 0..g.ksize {
+                            *dw.at_mut([o, c, p, q]) += dw_r.at([o, r, p, q]) * u;
+                        }
+                    }
+                }
+            }
+        }
+        dw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::conv2d_dw as exact_dw;
+    use crate::util::rng::Rng;
+
+    fn randt(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    #[test]
+    fn full_rank_projection_is_exact() {
+        let a = randt([3, 4, 5, 5], 1);
+        let mut rng = Rng::new(2);
+        // Random orthonormal square factors: projection is lossless.
+        let us = [
+            Mat::randn(3, 3, &mut rng).mgs(),
+            Mat::randn(4, 4, &mut rng).mgs(),
+            Mat::randn(5, 5, &mut rng).mgs(),
+            Mat::randn(5, 5, &mut rng).mgs(),
+        ];
+        let t = Tucker::project(&a, us);
+        let rec = t.reconstruct();
+        let rel = a.sub(&rec).frob_norm() / a.frob_norm();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn storage_formula() {
+        let a = randt([4, 4, 4, 4], 3);
+        let mut rng = Rng::new(4);
+        let us = [
+            Mat::randn(4, 2, &mut rng).mgs(),
+            Mat::randn(4, 2, &mut rng).mgs(),
+            Mat::randn(4, 2, &mut rng).mgs(),
+            Mat::randn(4, 2, &mut rng).mgs(),
+        ];
+        let t = Tucker::project(&a, us);
+        // eq. 5: prod r + sum d*r = 16 + 4*8 = 48
+        assert_eq!(t.storage(), 48);
+    }
+
+    #[test]
+    fn lowrank_dw_matches_exact_at_full_rank() {
+        let g = ConvGeom { stride: 1, padding: 1, ksize: 3 };
+        let a = randt([2, 3, 4, 4], 5);
+        let gy = randt([2, 4, 4, 4], 6);
+        let mut rng = Rng::new(7);
+        let us = [
+            Mat::randn(2, 2, &mut rng).mgs(),
+            Mat::randn(3, 3, &mut rng).mgs(),
+            Mat::randn(4, 4, &mut rng).mgs(),
+            Mat::randn(4, 4, &mut rng).mgs(),
+        ];
+        let t = Tucker::project(&a, us);
+        let lr = t.lowrank_dw(&gy, g);
+        let ex = exact_dw(&a, &gy, g, 4);
+        let rel = lr.sub(&ex).frob_norm() / ex.frob_norm();
+        assert!(rel < 1e-3, "rel {rel}");
+    }
+
+    #[test]
+    fn lowrank_dw_equals_exact_dw_of_reconstruction() {
+        // At reduced rank, eq. 15 must equal the exact dW computed on the
+        // reconstructed activation — the identity the paper relies on.
+        let g = ConvGeom { stride: 2, padding: 1, ksize: 3 };
+        let a = randt([3, 4, 6, 6], 8);
+        let gy = randt([3, 2, 3, 3], 9);
+        let mut rng = Rng::new(10);
+        let us = [
+            Mat::randn(3, 2, &mut rng).mgs(),
+            Mat::randn(4, 2, &mut rng).mgs(),
+            Mat::randn(6, 3, &mut rng).mgs(),
+            Mat::randn(6, 3, &mut rng).mgs(),
+        ];
+        let t = Tucker::project(&a, us);
+        let lr = t.lowrank_dw(&gy, g);
+        let ex = exact_dw(&t.reconstruct(), &gy, g, 2);
+        let rel = lr.sub(&ex).frob_norm() / ex.frob_norm().max(1e-9);
+        assert!(rel < 1e-3, "rel {rel}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Checkpointing: persist/restore a training session's state (parameters,
+//! ASI warm-start factors, step counter) in the same raw-f32 + JSON-sidecar
+//! format the AOT pipeline uses for initial parameters.
+//!
+//! Layout: `<stem>.bin` (concatenated little-endian f32 tensors) +
+//! `<stem>.json` (shape/role sidecar + step counter + executable name).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::trainer::Trainer;
+
+/// Serializable snapshot of a trainer's mutable state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub exec_name: String,
+    pub step_idx: i32,
+    pub frozen: Vec<HostTensor>,
+    pub trained: Vec<HostTensor>,
+    pub us: Vec<HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn of(tr: &Trainer<'_>) -> Checkpoint {
+        Checkpoint {
+            exec_name: tr.exec_name.clone(),
+            step_idx: tr.step_idx,
+            frozen: tr.frozen.clone(),
+            trained: tr.trained.clone(),
+            us: tr.us.clone(),
+        }
+    }
+
+    /// Restore into a compatible trainer (same executable signature).
+    pub fn restore(&self, tr: &mut Trainer<'_>) -> Result<()> {
+        if tr.exec_name != self.exec_name {
+            bail!(
+                "checkpoint is for '{}', trainer runs '{}'",
+                self.exec_name,
+                tr.exec_name
+            );
+        }
+        let check = |name: &str, a: &[HostTensor], b: &[HostTensor]| -> Result<()> {
+            if a.len() != b.len() {
+                bail!("checkpoint {name} arity {} != trainer {}", a.len(),
+                      b.len());
+            }
+            for (x, y) in a.iter().zip(b) {
+                if x.shape() != y.shape() {
+                    bail!("checkpoint {name} shape {:?} != trainer {:?}",
+                          x.shape(), y.shape());
+                }
+            }
+            Ok(())
+        };
+        check("frozen", &self.frozen, &tr.frozen)?;
+        check("trained", &self.trained, &tr.trained)?;
+        check("us", &self.us, &tr.us)?;
+        tr.frozen = self.frozen.clone();
+        tr.trained = self.trained.clone();
+        tr.us = self.us.clone();
+        tr.step_idx = self.step_idx;
+        Ok(())
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut blob: Vec<u8> = Vec::new();
+        let mut sections = Vec::new();
+        for (role, tensors) in [
+            ("frozen", &self.frozen),
+            ("trained", &self.trained),
+            ("us", &self.us),
+        ] {
+            let shapes: Vec<Json> = tensors
+                .iter()
+                .map(|t| {
+                    arr(t.shape().iter().map(|&d| num(d as f64)))
+                })
+                .collect();
+            sections.push((role, Json::Arr(shapes)));
+            for t in tensors.iter() {
+                for v in t.as_f32()? {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let meta = obj(vec![
+            ("exec", s(&self.exec_name)),
+            ("step", num(self.step_idx as f64)),
+            ("frozen", sections[0].1.clone()),
+            ("trained", sections[1].1.clone()),
+            ("us", sections[2].1.clone()),
+        ]);
+        std::fs::write(dir.join(format!("{stem}.bin")), blob)?;
+        std::fs::write(dir.join(format!("{stem}.json")), meta.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path, stem: &str) -> Result<Checkpoint> {
+        let meta_text = std::fs::read_to_string(dir.join(format!("{stem}.json")))
+            .with_context(|| format!("reading checkpoint {stem}.json"))?;
+        let meta = Json::parse(&meta_text)?;
+        let blob = std::fs::read(dir.join(format!("{stem}.bin")))
+            .with_context(|| format!("reading checkpoint {stem}.bin"))?;
+        let mut off = 0usize;
+        let mut read_group = |key: &str| -> Result<Vec<HostTensor>> {
+            let mut out = Vec::new();
+            for shape in meta.get(key).as_arr().unwrap_or(&[]) {
+                let dims = shape.usize_vec();
+                let n: usize = dims.iter().product();
+                if off + 4 * n > blob.len() {
+                    bail!("checkpoint blob truncated in section '{key}'");
+                }
+                let data: Vec<f32> = blob[off..off + 4 * n]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                out.push(HostTensor::f32(dims, data));
+                off += 4 * n;
+            }
+            Ok(out)
+        };
+        let frozen = read_group("frozen")?;
+        let trained = read_group("trained")?;
+        let us = read_group("us")?;
+        if off != blob.len() {
+            bail!("checkpoint blob has {} trailing bytes", blob.len() - off);
+        }
+        Ok(Checkpoint {
+            exec_name: meta.get("exec").as_str().unwrap_or("").to_string(),
+            step_idx: meta.get("step").as_i64().unwrap_or(0) as i32,
+            frozen,
+            trained,
+            us,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            exec_name: "m_asi_d2_r4".into(),
+            step_idx: 17,
+            frozen: vec![HostTensor::f32(vec![2, 3], (0..6)
+                .map(|i| i as f32).collect())],
+            trained: vec![
+                HostTensor::f32(vec![4], vec![1.5, -2.0, 0.0, 3.25]),
+                HostTensor::f32(vec![1, 2], vec![9.0, -9.0]),
+            ],
+            us: vec![HostTensor::f32(vec![3, 1], vec![0.1, 0.2, 0.3])],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("asi_ckpt_test");
+        let c = sample();
+        c.save(&dir, "t").unwrap();
+        let back = Checkpoint::load(&dir, "t").unwrap();
+        assert_eq!(back.exec_name, c.exec_name);
+        assert_eq!(back.step_idx, 17);
+        assert_eq!(back.trained.len(), 2);
+        assert_eq!(back.trained[0].as_f32().unwrap(),
+                   c.trained[0].as_f32().unwrap());
+        assert_eq!(back.us[0].shape(), &[3, 1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let dir = std::env::temp_dir().join("asi_ckpt_trunc");
+        let c = sample();
+        c.save(&dir, "t").unwrap();
+        let p = dir.join("t.bin");
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.truncate(bytes.len() - 4);
+        std::fs::write(&p, bytes).unwrap();
+        assert!(Checkpoint::load(&dir, "t").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_files_error() {
+        let dir = std::env::temp_dir().join("asi_ckpt_missing");
+        assert!(Checkpoint::load(&dir, "nope").is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator — the paper's training system.
+//!
+//! * `trainer` — the per-step orchestrator (state threading, warm start).
+//! * `probe` — host forward/backward for the offline perplexity phase.
+//! * `rank_selection` — eq. 9 backtracking + greedy fallback.
+//! * `session` — end-to-end fine-tuning runs (pretrain → finetune → eval)
+//!   used by the CLI and the experiment drivers.
+
+pub mod checkpoint;
+pub mod schedule;
+pub mod probe;
+pub mod rank_selection;
+pub mod session;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use schedule::LrSchedule;
+
+pub use probe::{probe, HostEdgeNet, ProbeCapture};
+pub use rank_selection::{backtracking_select, greedy_select,
+                         measure_perplexity, PerplexityTable, Selection,
+                         DEFAULT_EPS};
+pub use session::{FinetuneReport, Session};
+pub use trainer::{Trainer, WarmStart};

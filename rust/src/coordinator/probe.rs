@@ -1,0 +1,284 @@
+//! Host-side EdgeNet forward/backward — the offline perplexity probe.
+//!
+//! Rank selection (Sec. 3.3) needs, per fine-tuned layer: the input
+//! activation `A_i` and the exact weight gradient `dL/dW_i` for a probe
+//! batch, so it can compare against the low-rank gradient at every
+//! explained-variance threshold (eq. 7). The training hot path never runs
+//! this code; it executes once before training, exactly as the paper
+//! prescribes ("perplexity search and rank selection are performed
+//! offline and only once").
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{CnnModel, HostTensor};
+use crate::tensor::{conv2d, conv2d_dw, conv2d_dx, ConvGeom, Mat, Tensor4};
+
+/// Host mirror of an EdgeNet parameterization.
+pub struct HostEdgeNet {
+    pub convs: Vec<(Tensor4, Vec<f32>, ConvGeom)>,
+    pub fc_w: Mat,
+    pub fc_b: Vec<f32>,
+    pub num_classes: usize,
+}
+
+impl HostEdgeNet {
+    /// Build from the flat (frozen ++ trained) parameter list produced by
+    /// `<model>_init` — pairs (w, b) per conv, then (w_fc, b_fc).
+    pub fn from_params(model: &CnnModel, params: &[HostTensor]) -> Result<HostEdgeNet> {
+        let n = model.convs.len();
+        if params.len() != 2 * n + 2 {
+            bail!("expected {} param tensors, got {}", 2 * n + 2, params.len());
+        }
+        let mut convs = Vec::with_capacity(n);
+        for i in 0..n {
+            let w = &params[2 * i];
+            let b = &params[2 * i + 1];
+            let ws = w.shape();
+            convs.push((
+                Tensor4::from_vec(
+                    [ws[0], ws[1], ws[2], ws[3]],
+                    w.as_f32()?.to_vec(),
+                ),
+                b.as_f32()?.to_vec(),
+                ConvGeom {
+                    stride: model.convs[i].1,
+                    padding: model.padding,
+                    ksize: model.ksize,
+                },
+            ));
+        }
+        let wfc = &params[2 * n];
+        let fc_shape = wfc.shape();
+        Ok(HostEdgeNet {
+            convs,
+            fc_w: Mat::from_vec(fc_shape[0], fc_shape[1],
+                                wfc.as_f32()?.to_vec()),
+            fc_b: params[2 * n + 1].as_f32()?.to_vec(),
+            num_classes: model.num_classes,
+        })
+    }
+}
+
+/// Everything the probe captures for one batch.
+pub struct ProbeCapture {
+    /// Input activation of every conv layer.
+    pub acts: Vec<Tensor4>,
+    /// Output gradient (pre-ReLU, i.e. w.r.t. conv output) per layer.
+    pub gys: Vec<Tensor4>,
+    /// Exact weight gradient per layer (eq. 1).
+    pub dws: Vec<Tensor4>,
+    pub loss: f32,
+}
+
+fn relu(t: &mut Tensor4) {
+    for v in t.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Forward + full backward on the host; captures activations and exact
+/// gradients for every conv layer.
+pub fn probe(net: &HostEdgeNet, x: &Tensor4, labels: &[i32]) -> ProbeCapture {
+    let bsz = x.dims[0];
+    assert_eq!(labels.len(), bsz);
+
+    // ---- forward, stashing inputs and post-conv pre-relu outputs
+    let mut acts: Vec<Tensor4> = Vec::with_capacity(net.convs.len());
+    let mut preacts: Vec<Tensor4> = Vec::with_capacity(net.convs.len());
+    let mut h = x.clone();
+    for (w, b, g) in &net.convs {
+        acts.push(h.clone());
+        let mut y = conv2d(&h, w, *g);
+        let [_, co, ho, wo] = y.dims;
+        for bi in 0..y.dims[0] {
+            for o in 0..co {
+                for i in 0..ho {
+                    for j in 0..wo {
+                        *y.at_mut([bi, o, i, j]) += b[o];
+                    }
+                }
+            }
+        }
+        preacts.push(y.clone());
+        relu(&mut y);
+        h = y;
+    }
+    // GAP + FC
+    let [_, c, hh, ww] = h.dims;
+    let mut gap = Mat::zeros(bsz, c);
+    for bi in 0..bsz {
+        for ci in 0..c {
+            let mut s = 0.0;
+            for i in 0..hh {
+                for j in 0..ww {
+                    s += h.at([bi, ci, i, j]);
+                }
+            }
+            gap[(bi, ci)] = s / (hh * ww) as f32;
+        }
+    }
+    let mut logits = gap.matmul(&net.fc_w);
+    for bi in 0..bsz {
+        for k in 0..net.num_classes {
+            logits[(bi, k)] += net.fc_b[k];
+        }
+    }
+
+    // ---- cross-entropy + dlogits = (softmax - onehot)/B
+    let mut loss = 0.0f32;
+    let mut dlogits = Mat::zeros(bsz, net.num_classes);
+    for bi in 0..bsz {
+        let row = logits.row(bi);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let label = labels[bi] as usize;
+        loss += z.ln() + mx - row[label];
+        for k in 0..net.num_classes {
+            let p = exps[k] / z;
+            dlogits[(bi, k)] =
+                (p - if k == label { 1.0 } else { 0.0 }) / bsz as f32;
+        }
+    }
+    loss /= bsz as f32;
+
+    // ---- backward
+    // d gap = dlogits @ fc_w^T
+    let dgap = dlogits.matmul(&net.fc_w.transpose()); // (B, C)
+    // GAP backward + relu mask of the last preact
+    let n = net.convs.len();
+    let mut gys: Vec<Tensor4> = vec![Tensor4::zeros([1, 1, 1, 1]); n];
+    let mut dws: Vec<Tensor4> = vec![Tensor4::zeros([1, 1, 1, 1]); n];
+
+    let mut dh = Tensor4::zeros(preacts[n - 1].dims);
+    let [_, cc, hh2, ww2] = dh.dims;
+    for bi in 0..bsz {
+        for ci in 0..cc {
+            let v = dgap[(bi, ci)] / (hh2 * ww2) as f32;
+            for i in 0..hh2 {
+                for j in 0..ww2 {
+                    *dh.at_mut([bi, ci, i, j]) = v;
+                }
+            }
+        }
+    }
+    for li in (0..n).rev() {
+        // relu backward through this layer's output
+        let mut gy = dh.clone();
+        for (g, p) in gy.data.iter_mut().zip(&preacts[li].data) {
+            if *p <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        let (w, _, geom) = &net.convs[li];
+        dws[li] = conv2d_dw(&acts[li], &gy, *geom, w.dims[0]);
+        gys[li] = gy.clone();
+        if li > 0 {
+            dh = conv2d_dx(&gy, w, *geom, acts[li].dims);
+        }
+    }
+
+    ProbeCapture { acts, gys, dws, loss }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_net(seed: u64) -> (HostEdgeNet, CnnModel) {
+        let model = CnnModel {
+            name: "tiny".into(),
+            convs: vec![(4, 2), (6, 1)],
+            num_classes: 3,
+            in_channels: 2,
+            image_size: 8,
+            batch_size: 4,
+            ksize: 3,
+            padding: 1,
+            activation_shapes: vec![[4, 2, 8, 8], [4, 4, 4, 4]],
+            output_shapes: vec![[4, 4, 4, 4], [4, 6, 4, 4]],
+        };
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        let mut cin = model.in_channels;
+        for &(cout, _) in &model.convs {
+            let wn = cout * cin * 9;
+            params.push(HostTensor::f32(
+                vec![cout, cin, 3, 3],
+                rng.normal_vec(wn).iter().map(|v| v * 0.2).collect(),
+            ));
+            params.push(HostTensor::f32(vec![cout], vec![0.01; cout]));
+            cin = cout;
+        }
+        params.push(HostTensor::f32(
+            vec![cin, 3],
+            rng.normal_vec(cin * 3).iter().map(|v| v * 0.2).collect(),
+        ));
+        params.push(HostTensor::f32(vec![3], vec![0.0; 3]));
+        (HostEdgeNet::from_params(&model, &params).unwrap(), model)
+    }
+
+    #[test]
+    fn probe_shapes() {
+        let (net, model) = tiny_net(1);
+        let mut rng = Rng::new(2);
+        let x = Tensor4::from_vec([4, 2, 8, 8], rng.normal_vec(4 * 2 * 64));
+        let cap = probe(&net, &x, &[0, 1, 2, 0]);
+        assert_eq!(cap.acts.len(), 2);
+        assert_eq!(cap.acts[0].dims, model.activation_shapes[0]);
+        assert_eq!(cap.dws[1].dims, [6, 4, 3, 3]);
+        assert!(cap.loss.is_finite() && cap.loss > 0.0);
+    }
+
+    #[test]
+    fn dw_finite_difference_last_layer() {
+        let (mut net, _) = tiny_net(3);
+        let mut rng = Rng::new(4);
+        let x = Tensor4::from_vec([4, 2, 8, 8], rng.normal_vec(4 * 2 * 64));
+        let labels = [1, 0, 2, 1];
+        let cap = probe(&net, &x, &labels);
+        let eps = 5e-3;
+        for k in [0usize, 11, 40] {
+            let orig = net.convs[1].0.data[k];
+            net.convs[1].0.data[k] = orig + eps;
+            let lp = probe(&net, &x, &labels).loss;
+            net.convs[1].0.data[k] = orig - eps;
+            let lm = probe(&net, &x, &labels).loss;
+            net.convs[1].0.data[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = cap.dws[1].data[k];
+            assert!(
+                (fd - an).abs() < 3e-2 * (1.0 + fd.abs()),
+                "k={k}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn dw_finite_difference_first_layer() {
+        // Exercises conv2d_dx + relu backprop through the stride-2 layer.
+        let (mut net, _) = tiny_net(5);
+        let mut rng = Rng::new(6);
+        let x = Tensor4::from_vec([4, 2, 8, 8], rng.normal_vec(4 * 2 * 64));
+        let labels = [2, 2, 0, 1];
+        let cap = probe(&net, &x, &labels);
+        let eps = 5e-3;
+        for k in [3usize, 17, 50] {
+            let orig = net.convs[0].0.data[k];
+            net.convs[0].0.data[k] = orig + eps;
+            let lp = probe(&net, &x, &labels).loss;
+            net.convs[0].0.data[k] = orig - eps;
+            let lm = probe(&net, &x, &labels).loss;
+            net.convs[0].0.data[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = cap.dws[0].data[k];
+            assert!(
+                (fd - an).abs() < 3e-2 * (1.0 + fd.abs()),
+                "k={k}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+}

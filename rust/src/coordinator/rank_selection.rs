@@ -1,0 +1,334 @@
+//! Sec. 3.3 — activation perplexity and budget-constrained rank selection.
+//!
+//! For every fine-tuned layer `i` and explained-variance threshold
+//! `eps_j`, the probe computes the Frobenius distance between the exact
+//! and low-rank weight gradients (eq. 7) plus the resulting ranks and
+//! memory (eq. 5). The selection step then picks one threshold index per
+//! layer minimizing total perplexity under the activation-memory budget
+//! (eqs. 8–9) — exact recursive backtracking with branch-and-bound
+//! pruning, plus a greedy fallback for deep tails (the paper's §C
+//! limitation calls for exactly this).
+
+use anyhow::Result;
+
+use crate::compress::{hosvd_eps, Tucker};
+use crate::tensor::{ConvGeom, Tensor4};
+
+use super::probe::ProbeCapture;
+
+/// The paper's threshold grid (Sec. 4.1).
+pub const DEFAULT_EPS: [f32; 6] = [0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// Perplexity data for one fine-tuned layer across the threshold grid.
+#[derive(Debug, Clone)]
+pub struct LayerPerplexity {
+    /// Layer index within the fine-tuned tail (0 = deepest fine-tuned).
+    pub layer: usize,
+    pub dims: [usize; 4],
+    /// Per-threshold: selected ranks, perplexity (eq. 7), memory (eq. 5).
+    pub ranks: Vec<[usize; 4]>,
+    pub perplexity: Vec<f32>,
+    pub mem_bytes: Vec<u64>,
+}
+
+/// The full perplexity matrix `P in R^{N x E}` + rank tensor.
+#[derive(Debug, Clone)]
+pub struct PerplexityTable {
+    pub eps: Vec<f32>,
+    pub layers: Vec<LayerPerplexity>,
+}
+
+/// Build the table from a probe capture over the fine-tuned tail
+/// (`tail_start` = index of the first fine-tuned conv layer).
+pub fn measure_perplexity(
+    cap: &ProbeCapture,
+    geoms: &[ConvGeom],
+    tail_start: usize,
+    eps_grid: &[f32],
+) -> Result<PerplexityTable> {
+    let mut layers = Vec::new();
+    for li in tail_start..cap.acts.len() {
+        let a: &Tensor4 = &cap.acts[li];
+        let gy = &cap.gys[li];
+        let exact = &cap.dws[li];
+        let mut ranks = Vec::with_capacity(eps_grid.len());
+        let mut perp = Vec::with_capacity(eps_grid.len());
+        let mut mem = Vec::with_capacity(eps_grid.len());
+        for &eps in eps_grid {
+            let (t, r): (Tucker, [usize; 4]) = hosvd_eps(a, eps);
+            let approx = t.lowrank_dw(gy, geoms[li]);
+            perp.push(exact.sub(&approx).frob_norm());
+            mem.push(4 * t.storage() as u64);
+            ranks.push(r);
+        }
+        layers.push(LayerPerplexity {
+            layer: li - tail_start,
+            dims: a.dims,
+            ranks,
+            perplexity: perp,
+            mem_bytes: mem,
+        });
+    }
+    Ok(PerplexityTable { eps: eps_grid.to_vec(), layers })
+}
+
+/// Result of rank selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    /// Chosen threshold index per layer.
+    pub choice: Vec<usize>,
+    pub total_perplexity: f32,
+    pub total_mem_bytes: u64,
+}
+
+impl Selection {
+    pub fn ranks(&self, table: &PerplexityTable) -> Vec<[usize; 4]> {
+        self.choice
+            .iter()
+            .zip(&table.layers)
+            .map(|(&j, l)| l.ranks[j])
+            .collect()
+    }
+}
+
+/// Exact search (eq. 9): recursive backtracking over threshold indices
+/// with branch-and-bound pruning. Returns `None` when even the cheapest
+/// per-layer choices exceed the budget.
+pub fn backtracking_select(table: &PerplexityTable, budget_bytes: u64)
+    -> Option<Selection> {
+    let n = table.layers.len();
+    if n == 0 {
+        return Some(Selection {
+            choice: vec![],
+            total_perplexity: 0.0,
+            total_mem_bytes: 0,
+        });
+    }
+    // Per-layer cheapest memory and lowest perplexity (for pruning).
+    let min_mem: Vec<u64> = table
+        .layers
+        .iter()
+        .map(|l| *l.mem_bytes.iter().min().unwrap())
+        .collect();
+    let min_perp: Vec<f32> = table
+        .layers
+        .iter()
+        .map(|l| {
+            l.perplexity.iter().cloned().fold(f32::INFINITY, f32::min)
+        })
+        .collect();
+    // Suffix sums for lower bounds.
+    let mut suffix_mem = vec![0u64; n + 1];
+    let mut suffix_perp = vec![0f32; n + 1];
+    for i in (0..n).rev() {
+        suffix_mem[i] = suffix_mem[i + 1] + min_mem[i];
+        suffix_perp[i] = suffix_perp[i + 1] + min_perp[i];
+    }
+
+    struct Ctx<'t> {
+        table: &'t PerplexityTable,
+        budget: u64,
+        suffix_mem: Vec<u64>,
+        suffix_perp: Vec<f32>,
+        best: Option<Selection>,
+        choice: Vec<usize>,
+    }
+
+    fn dfs(ctx: &mut Ctx, layer: usize, mem: u64, perp: f32) {
+        let n = ctx.table.layers.len();
+        if layer == n {
+            if ctx
+                .best
+                .as_ref()
+                .map(|b| perp < b.total_perplexity)
+                .unwrap_or(true)
+            {
+                ctx.best = Some(Selection {
+                    choice: ctx.choice.clone(),
+                    total_perplexity: perp,
+                    total_mem_bytes: mem,
+                });
+            }
+            return;
+        }
+        // Prune: even the cheapest remaining choices blow the budget or
+        // cannot beat the best perplexity.
+        if mem + ctx.suffix_mem[layer] > ctx.budget {
+            return;
+        }
+        if let Some(b) = &ctx.best {
+            if perp + ctx.suffix_perp[layer] >= b.total_perplexity {
+                return;
+            }
+        }
+        let l = &ctx.table.layers[layer];
+        // Visit lowest-perplexity choices first to tighten the bound.
+        let mut order: Vec<usize> = (0..l.perplexity.len()).collect();
+        order.sort_by(|&a, &b| {
+            l.perplexity[a].partial_cmp(&l.perplexity[b]).unwrap()
+        });
+        for j in order {
+            // Feasibility: this choice plus the cheapest completion of the
+            // remaining layers must fit the budget.
+            if mem + l.mem_bytes[j] + ctx.suffix_mem[layer + 1] > ctx.budget {
+                continue;
+            }
+            ctx.choice.push(j);
+            dfs(ctx, layer + 1, mem + l.mem_bytes[j], perp + l.perplexity[j]);
+            ctx.choice.pop();
+        }
+    }
+
+    let mut ctx = Ctx {
+        table,
+        budget: budget_bytes,
+        suffix_mem,
+        suffix_perp,
+        best: None,
+        choice: Vec::with_capacity(n),
+    };
+    dfs(&mut ctx, 0, 0, 0.0);
+    ctx.best
+}
+
+/// Greedy fallback: start from each layer's lowest-memory choice, then
+/// repeatedly take the upgrade with the best perplexity-drop per byte
+/// that still fits. O(N*E^2) — the §C answer for deep tails.
+pub fn greedy_select(table: &PerplexityTable, budget_bytes: u64)
+    -> Option<Selection> {
+    let _n = table.layers.len();
+    let mut choice: Vec<usize> = table
+        .layers
+        .iter()
+        .map(|l| {
+            (0..l.mem_bytes.len())
+                .min_by_key(|&j| l.mem_bytes[j])
+                .unwrap()
+        })
+        .collect();
+    let mem = |choice: &[usize]| -> u64 {
+        choice
+            .iter()
+            .zip(&table.layers)
+            .map(|(&j, l)| l.mem_bytes[j])
+            .sum()
+    };
+    if mem(&choice) > budget_bytes {
+        return None;
+    }
+    loop {
+        let cur_mem = mem(&choice);
+        let mut best: Option<(usize, usize, f32)> = None; // (layer, j, score)
+        for (li, l) in table.layers.iter().enumerate() {
+            let cj = choice[li];
+            for j in 0..l.perplexity.len() {
+                if l.perplexity[j] >= l.perplexity[cj]
+                    || l.mem_bytes[j] <= l.mem_bytes[cj]
+                {
+                    continue;
+                }
+                let extra = l.mem_bytes[j] - l.mem_bytes[cj];
+                if cur_mem + extra > budget_bytes {
+                    continue;
+                }
+                let gain = (l.perplexity[cj] - l.perplexity[j])
+                    / extra.max(1) as f32;
+                if best.map(|(_, _, g)| gain > g).unwrap_or(true) {
+                    best = Some((li, j, gain));
+                }
+            }
+        }
+        match best {
+            Some((li, j, _)) => choice[li] = j,
+            None => break,
+        }
+    }
+    let total_perp = choice
+        .iter()
+        .zip(&table.layers)
+        .map(|(&j, l)| l.perplexity[j])
+        .sum();
+    let total_mem = mem(&choice);
+    Some(Selection {
+        choice,
+        total_perplexity: total_perp,
+        total_mem_bytes: total_mem,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table2() -> PerplexityTable {
+        // Two layers x three thresholds with a known optimum.
+        PerplexityTable {
+            eps: vec![0.4, 0.6, 0.9],
+            layers: vec![
+                LayerPerplexity {
+                    layer: 0,
+                    dims: [2, 2, 2, 2],
+                    ranks: vec![[1; 4], [2; 4], [2; 4]],
+                    perplexity: vec![5.0, 2.0, 1.0],
+                    mem_bytes: vec![10, 20, 40],
+                },
+                LayerPerplexity {
+                    layer: 1,
+                    dims: [2, 2, 2, 2],
+                    ranks: vec![[1; 4], [1; 4], [2; 4]],
+                    perplexity: vec![4.0, 3.0, 0.5],
+                    mem_bytes: vec![10, 15, 50],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn backtracking_finds_optimum() {
+        let t = table2();
+        // Budget 60: best is (j=2, j=1): perp 1.0 + 3.0 = 4.0, mem 55.
+        let s = backtracking_select(&t, 60).unwrap();
+        assert_eq!(s.choice, vec![2, 1]);
+        assert!((s.total_perplexity - 4.0).abs() < 1e-6);
+        assert_eq!(s.total_mem_bytes, 55);
+    }
+
+    #[test]
+    fn backtracking_infeasible() {
+        let t = table2();
+        assert!(backtracking_select(&t, 15).is_none());
+    }
+
+    #[test]
+    fn backtracking_large_budget_picks_best_perplexity() {
+        let t = table2();
+        let s = backtracking_select(&t, 10_000).unwrap();
+        assert_eq!(s.choice, vec![2, 2]);
+    }
+
+    #[test]
+    fn greedy_respects_budget_and_is_reasonable() {
+        let t = table2();
+        let g = greedy_select(&t, 60).unwrap();
+        assert!(g.total_mem_bytes <= 60);
+        let b = backtracking_select(&t, 60).unwrap();
+        // Greedy never beats exact, and should be within 2x here.
+        assert!(g.total_perplexity >= b.total_perplexity - 1e-6);
+        assert!(g.total_perplexity <= b.total_perplexity * 2.0);
+    }
+
+    #[test]
+    fn greedy_infeasible() {
+        let t = table2();
+        assert!(greedy_select(&t, 15).is_none());
+    }
+
+    #[test]
+    fn selection_maps_ranks() {
+        let t = table2();
+        let s = backtracking_select(&t, 60).unwrap();
+        let ranks = s.ranks(&t);
+        assert_eq!(ranks[0], [2; 4]);
+        assert_eq!(ranks[1], [1; 4]);
+    }
+}

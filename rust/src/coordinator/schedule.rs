@@ -1,0 +1,159 @@
+//! Learning-rate schedules — the paper's training recipes.
+//!
+//! ImageNet fine-tuning uses a linear warm-up to the peak LR followed by
+//! cosine annealing (Appendix B.1); the other datasets use cosine decay
+//! from the initial LR. Both are provided, plus constant and step decay
+//! for ablations.
+
+/// A learning-rate schedule: step index -> learning rate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    Constant {
+        lr: f32,
+    },
+    /// Linear warm-up over `warmup_steps` to `peak`, then cosine decay to
+    /// `final_lr` at `total_steps` (the paper's ImageNet recipe).
+    WarmupCosine {
+        peak: f32,
+        final_lr: f32,
+        warmup_steps: u64,
+        total_steps: u64,
+    },
+    /// Plain cosine annealing from `initial` to `final_lr`.
+    Cosine {
+        initial: f32,
+        final_lr: f32,
+        total_steps: u64,
+    },
+    /// Multiply by `gamma` every `every` steps.
+    StepDecay {
+        initial: f32,
+        gamma: f32,
+        every: u64,
+    },
+}
+
+impl LrSchedule {
+    /// The paper's ImageNet recipe: 4 warm-up epochs to 0.005, cosine.
+    pub fn paper_imagenet(steps_per_epoch: u64, epochs: u64) -> LrSchedule {
+        LrSchedule::WarmupCosine {
+            peak: 0.005,
+            final_lr: 0.0,
+            warmup_steps: 4 * steps_per_epoch,
+            total_steps: epochs * steps_per_epoch,
+        }
+    }
+
+    /// The paper's downstream recipe: lr 0.05, cosine annealing.
+    pub fn paper_downstream(total_steps: u64) -> LrSchedule {
+        LrSchedule::Cosine { initial: 0.05, final_lr: 0.0, total_steps }
+    }
+
+    /// Learning rate at `step` (0-based).
+    pub fn at(&self, step: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::WarmupCosine {
+                peak,
+                final_lr,
+                warmup_steps,
+                total_steps,
+            } => {
+                if warmup_steps > 0 && step < warmup_steps {
+                    peak * (step + 1) as f32 / warmup_steps as f32
+                } else {
+                    cosine(
+                        peak,
+                        final_lr,
+                        step.saturating_sub(warmup_steps),
+                        total_steps.saturating_sub(warmup_steps).max(1),
+                    )
+                }
+            }
+            LrSchedule::Cosine { initial, final_lr, total_steps } => {
+                cosine(initial, final_lr, step, total_steps.max(1))
+            }
+            LrSchedule::StepDecay { initial, gamma, every } => {
+                initial * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+fn cosine(hi: f32, lo: f32, step: u64, total: u64) -> f32 {
+    let t = (step.min(total)) as f32 / total as f32;
+    lo + 0.5 * (hi - lo) * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::WarmupCosine {
+            peak: 0.005,
+            final_lr: 0.0,
+            warmup_steps: 100,
+            total_steps: 1000,
+        };
+        assert!(s.at(0) < s.at(50));
+        assert!(s.at(50) < s.at(99));
+        assert!((s.at(99) - 0.005).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cosine_monotone_decay_after_warmup() {
+        let s = LrSchedule::WarmupCosine {
+            peak: 0.005,
+            final_lr: 0.0,
+            warmup_steps: 10,
+            total_steps: 110,
+        };
+        let mut last = f32::INFINITY;
+        for step in 10..110 {
+            let lr = s.at(step);
+            assert!(lr <= last + 1e-9, "step {step}: {lr} > {last}");
+            last = lr;
+        }
+        assert!(s.at(109) < 1e-5);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = LrSchedule::Cosine {
+            initial: 0.05,
+            final_lr: 0.001,
+            total_steps: 200,
+        };
+        assert!((s.at(0) - 0.05).abs() < 1e-6);
+        assert!((s.at(200) - 0.001).abs() < 1e-6);
+        // Past the horizon it clamps.
+        assert!((s.at(10_000) - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { initial: 1.0, gamma: 0.5, every: 10 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(25), 0.25);
+    }
+
+    #[test]
+    fn paper_recipes_shape() {
+        let im = LrSchedule::paper_imagenet(100, 90);
+        assert!(im.at(399) > im.at(0)); // warm-up region
+        assert!(im.at(400) > im.at(8999)); // decay region
+        let dw = LrSchedule::paper_downstream(300);
+        assert!((dw.at(0) - 0.05).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,112 @@
+//! End-to-end fine-tuning sessions: (optional) in-repo pre-training on
+//! the synthetic pretrain split, then fine-tuning with the selected
+//! method on a shifted downstream split, with accuracy/loss logging —
+//! the workflow every experiment driver and the CLI share.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::{ImageDataset, ImageSpec};
+use crate::metrics::Series;
+use crate::runtime::Engine;
+
+use super::trainer::{Trainer, WarmStart};
+
+/// Outcome of one fine-tuning run.
+#[derive(Debug, Clone)]
+pub struct FinetuneReport {
+    pub exec: String,
+    pub steps: u64,
+    pub loss: Series,
+    pub final_loss: f32,
+    pub accuracy: f32,
+    pub wall_s: f64,
+    pub state_bytes: u64,
+}
+
+/// A session owns the engine plus the dataset pair (pretrain/downstream).
+pub struct Session {
+    pub engine: Engine,
+    pub pretrain_ds: ImageDataset,
+    pub downstream_ds: ImageDataset,
+}
+
+impl Session {
+    pub fn open(artifacts: &Path, seed: u64) -> Result<Session> {
+        let engine = Engine::load(artifacts).context("loading engine")?;
+        Ok(Session {
+            engine,
+            // Pretrain and downstream use different prototype seeds —
+            // the "pretrain on ImageNet, fine-tune elsewhere" shift.
+            pretrain_ds: ImageDataset::new(ImageSpec::cifar_like(10, seed)),
+            downstream_ds: ImageDataset::new(ImageSpec::cifar_like(
+                10,
+                seed ^ 0xDEAD,
+            )),
+        })
+    }
+
+    /// In-repo pre-training with the full vanilla step.
+    pub fn pretrain(&self, model: &str, steps: u64, lr: f32, seed: u64)
+        -> Result<Trainer<'_>> {
+        let exec = format!("{model}_train_full");
+        let mut tr = Trainer::new(&self.engine, model, &exec, lr,
+                                  WarmStart::Warm, seed)?;
+        let batch = self.batch_size(model)?;
+        for i in 0..steps {
+            let b = self.pretrain_ds.batch("train", i, batch);
+            tr.step_image(&b)?;
+        }
+        Ok(tr)
+    }
+
+    fn batch_size(&self, model: &str) -> Result<usize> {
+        Ok(self.engine.manifest.cnn(model)?.batch_size)
+    }
+
+    /// Fine-tune with `exec_name`, starting from `pretrained` parameters
+    /// (pass `None` to start from the deterministic init).
+    #[allow(clippy::too_many_arguments)]
+    pub fn finetune(
+        &self,
+        model: &str,
+        exec_name: &str,
+        pretrained: Option<&Trainer<'_>>,
+        steps: u64,
+        lr: f32,
+        warm: WarmStart,
+        eval_batches: u64,
+        seed: u64,
+    ) -> Result<FinetuneReport> {
+        let mut tr = Trainer::new(&self.engine, model, exec_name, lr, warm,
+                                  seed)?;
+        if let Some(src) = pretrained {
+            // Transplant the pretrained parameters into the new split.
+            tr.load_full_params(&src.full_params())?;
+        }
+        let batch = self.batch_size(model)?;
+        let mut loss = Series::new("loss");
+        let t0 = std::time::Instant::now();
+        let mut last = f32::NAN;
+        for i in 0..steps {
+            let b = self.downstream_ds.batch("train", i, batch);
+            last = tr.step_image(&b)?;
+            if i % 5 == 0 || i + 1 == steps {
+                loss.push(i, last as f64);
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let accuracy = tr.eval_accuracy(&self.downstream_ds, batch,
+                                        eval_batches)?;
+        Ok(FinetuneReport {
+            exec: exec_name.to_string(),
+            steps,
+            loss,
+            final_loss: last,
+            accuracy,
+            wall_s,
+            state_bytes: tr.state_bytes(),
+        })
+    }
+}

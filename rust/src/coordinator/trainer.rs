@@ -1,0 +1,344 @@
+//! The on-device training orchestrator.
+//!
+//! Owns all run-time training state (parameters, ASI warm-start factors,
+//! step counter), assembles executable inputs from the manifest's role
+//! signature, and threads the returned state into the next step. The
+//! compute itself is one PJRT executable call per step — Python never
+//! runs here.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{ImageBatch, ImageDataset};
+use crate::runtime::{Engine, ExecArg, HostTensor};
+use crate::util::rng::Rng;
+
+/// How ASI warm-start state is handled across steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmStart {
+    /// Thread the returned factors into the next step (Algorithm 1).
+    Warm,
+    /// Feed fresh random factors every step (the Fig. 3 ablation).
+    Cold,
+}
+
+/// A training session bound to one train executable.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub exec_name: String,
+    pub infer_name: String,
+    /// Parameters below the fine-tuned tail (manifest role `frozen`/`rest`).
+    pub frozen: Vec<HostTensor>,
+    /// Fine-tuned parameters (role `trained`).
+    pub trained: Vec<HostTensor>,
+    /// ASI warm-start factors (role `us`).
+    pub us: Vec<HostTensor>,
+    pub lr: f32,
+    pub step_idx: i32,
+    pub warm: WarmStart,
+    /// Position of the trained run inside the init-order parameter list
+    /// (CNNs: == frozen.len(); LM: before the non-block params).
+    trained_start: usize,
+    /// Device-resident copies of the frozen parameters (uploaded once —
+    /// the static weights never cross the host-device boundary again).
+    frozen_dev: Vec<xla::PjRtBuffer>,
+    rng: Rng,
+}
+
+impl<'e> Trainer<'e> {
+    /// Create a session: runs `<model>_init`, splits the parameter list
+    /// according to the train executable's signature, initializes factors.
+    pub fn new(
+        engine: &'e Engine,
+        model: &str,
+        exec_name: &str,
+        lr: f32,
+        warm: WarmStart,
+        seed: u64,
+    ) -> Result<Trainer<'e>> {
+        let params = engine
+            .load_params(model)
+            .with_context(|| format!("loading {model} params"))?;
+
+        let entry = engine.manifest.exec(exec_name)?.clone();
+        let n_trained = entry.input_indices("trained").len();
+        let n_frozen = entry.input_indices("frozen").len()
+            + entry.input_indices("rest").len();
+        if n_trained + n_frozen != params.len() {
+            bail!(
+                "{exec_name}: trained({n_trained}) + frozen({n_frozen}) != \
+                 init params ({})",
+                params.len()
+            );
+        }
+        // The AOT convention: full param list = frozen ++ trained for CNNs
+        // and rest ++ trained for the LM (blocks are tail-split); in both
+        // cases the trained tensors are the *last* n_trained of init's
+        // output only for CNNs. For the LM, `rest` itself contains
+        // non-block params (embed, ln_f, pos) that flatten *before and
+        // after* blocks; we recover the split by matching shapes.
+        let (frozen, trained, trained_start) =
+            split_params(params, &entry, n_frozen, n_trained)?;
+
+        // Initialize warm-start factors from i.i.d. normals (Alg. 1 t=0).
+        let rng = Rng::new(seed);
+        let us = entry
+            .input_indices("us")
+            .into_iter()
+            .map(|i| {
+                let sig = &entry.inputs[i];
+                HostTensor::f32(
+                    sig.shape.clone(),
+                    rng.fold(i as u64).normal_vec(sig.elements()),
+                )
+            })
+            .collect();
+
+        Ok(Trainer {
+            engine,
+            exec_name: exec_name.to_string(),
+            infer_name: format!("{model}_infer"),
+            frozen,
+            trained,
+            us,
+            lr,
+            step_idx: 0,
+            warm,
+            trained_start,
+            frozen_dev: Vec::new(),
+            rng,
+        })
+    }
+
+    /// One training step; returns the loss.
+    ///
+    /// Hot-path layout: frozen parameters are device-resident buffers
+    /// (uploaded once), only the batch, hyper-scalars, trained tensors
+    /// and warm-start factors are uploaded per step.
+    pub fn step(&mut self, x: HostTensor, y: Option<HostTensor>) -> Result<f32> {
+        if self.frozen_dev.len() != self.frozen.len() {
+            self.frozen_dev = self
+                .frozen
+                .iter()
+                .map(|t| self.engine.upload(t))
+                .collect::<Result<_>>()?;
+        }
+        let entry = self.engine.manifest.exec(&self.exec_name)?.clone();
+        let lr_t = HostTensor::scalar_f32(self.lr);
+        let step_t = HostTensor::scalar_s32(self.step_idx);
+        // Cold-start ablation: pre-generate this step's random factors.
+        let cold_tmp: Vec<HostTensor> = if self.warm == WarmStart::Cold {
+            entry
+                .input_indices("us")
+                .into_iter()
+                .map(|i| {
+                    let sig = &entry.inputs[i];
+                    HostTensor::f32(
+                        sig.shape.clone(),
+                        self.rng.normal_vec(sig.elements()),
+                    )
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        let outs = {
+            let mut trained_it = self.trained.iter();
+            let mut frozen_it = self.frozen_dev.iter();
+            let mut us_it = self.us.iter();
+            let mut cold_it = cold_tmp.iter();
+            let mut args: Vec<ExecArg<'_>> =
+                Vec::with_capacity(entry.inputs.len());
+            for sig in &entry.inputs {
+                let a = match sig.role.as_str() {
+                    "trained" => ExecArg::Host(
+                        trained_it.next().context("trained underflow")?),
+                    "frozen" | "rest" => ExecArg::Buf(
+                        frozen_it.next().context("frozen underflow")?),
+                    "x" => ExecArg::Host(&x),
+                    "y" => ExecArg::Host(
+                        y.as_ref().context("labels required")?),
+                    "lr" => ExecArg::Host(&lr_t),
+                    "step" => ExecArg::Host(&step_t),
+                    "us" => match self.warm {
+                        WarmStart::Warm => ExecArg::Host(
+                            us_it.next().context("us underflow")?),
+                        WarmStart::Cold => ExecArg::Host(
+                            cold_it.next().context("cold underflow")?),
+                    },
+                    other => bail!("unhandled input role '{other}' in {}",
+                                   self.exec_name),
+                };
+                args.push(a);
+            }
+            self.engine.run_mixed(&self.exec_name, &args)?
+        };
+
+        let mut loss = f32::NAN;
+        let mut new_trained = Vec::with_capacity(self.trained.len());
+        let mut new_us = Vec::with_capacity(self.us.len());
+        for (sig, t) in entry.outputs.iter().zip(outs) {
+            match sig.role.as_str() {
+                "loss" => loss = t.scalar()?,
+                "trained" => new_trained.push(t),
+                "us" => new_us.push(t),
+                _ => {}
+            }
+        }
+        if new_trained.len() != self.trained.len() {
+            bail!("{}: trained arity changed across step", self.exec_name);
+        }
+        self.trained = new_trained;
+        if !new_us.is_empty() {
+            self.us = new_us;
+        }
+        self.step_idx += 1;
+        Ok(loss)
+    }
+
+    /// One image-classification step straight from a dataset batch.
+    pub fn step_image(&mut self, b: &ImageBatch) -> Result<f32> {
+        let x = HostTensor::f32(b.dims.to_vec(), b.x.clone());
+        let y = HostTensor::s32(vec![b.batch], b.y.clone());
+        self.step(x, Some(y))
+    }
+
+    /// Full parameter list in `<model>_init` / `<model>_infer` order —
+    /// the trained run is re-inserted at its original flatten position.
+    pub fn full_params(&self) -> Vec<HostTensor> {
+        let mut v: Vec<HostTensor> =
+            self.frozen[..self.trained_start].to_vec();
+        v.extend(self.trained.iter().cloned());
+        v.extend(self.frozen[self.trained_start..].iter().cloned());
+        v
+    }
+
+    /// Replace all parameters from an init-order list (e.g. a pretrained
+    /// sibling trainer's `full_params`).
+    pub fn load_full_params(&mut self, full: &[HostTensor]) -> Result<()> {
+        let nt = self.trained.len();
+        if full.len() != self.frozen.len() + nt {
+            bail!("param count mismatch in load_full_params");
+        }
+        let s = self.trained_start;
+        self.frozen = full[..s]
+            .iter()
+            .chain(full[s + nt..].iter())
+            .cloned()
+            .collect();
+        self.trained = full[s..s + nt].to_vec();
+        // Frozen weights changed: drop the device-resident copies so the
+        // next step re-uploads them.
+        self.frozen_dev.clear();
+        Ok(())
+    }
+
+    /// Classification accuracy over `n_batches` validation batches.
+    pub fn eval_accuracy(&self, ds: &ImageDataset, batch: usize,
+                         n_batches: u64) -> Result<f32> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..n_batches {
+            let b = ds.batch("val", i, batch);
+            let mut inputs = self.full_params();
+            inputs.push(HostTensor::f32(b.dims.to_vec(), b.x.clone()));
+            let outs = self.engine.run(&self.infer_name, &inputs)?;
+            let logits = outs[0].as_f32()?;
+            let classes = outs[0].shape()[1];
+            for (bi, &label) in b.y.iter().enumerate() {
+                let row = &logits[bi * classes..(bi + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(-1);
+                if pred == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total.max(1) as f32)
+    }
+
+    /// Activation-memory actually threaded between steps for ASI: the
+    /// warm-start factors (what Rust must keep resident).
+    pub fn state_bytes(&self) -> u64 {
+        self.us.iter().map(|u| 4 * u.len() as u64).sum()
+    }
+}
+
+/// Recover the (frozen, trained) split of the init-param list by matching
+/// shapes against the train executable's signature. The init list and the
+/// signature contain exactly the same multiset of tensors; we match
+/// role-tagged slots greedily in order, which is unambiguous because the
+/// AOT pipeline flattens both from the same pytrees.
+fn split_params(
+    params: Vec<HostTensor>,
+    entry: &crate::runtime::ExecEntry,
+    n_frozen: usize,
+    n_trained: usize,
+) -> Result<(Vec<HostTensor>, Vec<HostTensor>, usize)> {
+    // CNN convention: frozen tensors flatten first, then trained.
+    let frozen_shapes: Vec<&[usize]> = entry
+        .inputs
+        .iter()
+        .filter(|s| s.role == "frozen" || s.role == "rest")
+        .map(|s| s.shape.as_slice())
+        .collect();
+    let trained_shapes: Vec<&[usize]> = entry
+        .inputs
+        .iter()
+        .filter(|s| s.role == "trained")
+        .map(|s| s.shape.as_slice())
+        .collect();
+
+    // Try the simple prefix split first (CNN layout).
+    let prefix_ok = params.len() == n_frozen + n_trained
+        && params[..n_frozen]
+            .iter()
+            .zip(&frozen_shapes)
+            .all(|(p, s)| p.shape() == *s)
+        && params[n_frozen..]
+            .iter()
+            .zip(&trained_shapes)
+            .all(|(p, s)| p.shape() == *s);
+    if prefix_ok {
+        let mut params = params;
+        let trained = params.split_off(n_frozen);
+        return Ok((params, trained, n_frozen));
+    }
+
+    // General case (LM): greedy in-order matching. Trained slots are the
+    // tail blocks, whose tensors appear as a contiguous run inside the
+    // init flattening; scan for the run that matches all trained shapes.
+    // Blocks are shape-homogeneous, so scan from the END: the trained
+    // blocks are the *last* matching run (the model fine-tunes the tail).
+    let n = params.len();
+    'start: for start in (0..=(n - n_trained)).rev() {
+        for (k, want) in trained_shapes.iter().enumerate() {
+            if params[start + k].shape() != *want {
+                continue 'start;
+            }
+        }
+        // Check the remainder matches the frozen shapes in order.
+        let rest: Vec<&HostTensor> = params[..start]
+            .iter()
+            .chain(params[start + n_trained..].iter())
+            .collect();
+        if rest.len() == n_frozen
+            && rest.iter().zip(&frozen_shapes).all(|(p, s)| p.shape() == *s)
+        {
+            let trained =
+                params[start..start + n_trained].to_vec();
+            let frozen: Vec<HostTensor> = params[..start]
+                .iter()
+                .chain(params[start + n_trained..].iter())
+                .cloned()
+                .collect();
+            return Ok((frozen, trained, start));
+        }
+    }
+    bail!("could not align init params with executable signature");
+}

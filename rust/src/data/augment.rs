@@ -1,0 +1,162 @@
+//! Host-side data augmentation (the paper's recipe uses random resizing,
+//! flipping and normalization). Runs in the coordinator before upload —
+//! NCHW f32 in, NCHW f32 out, fully deterministic given a seed.
+
+use crate::util::rng::Rng;
+
+use super::synthetic::ImageBatch;
+
+/// Augmentation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AugmentCfg {
+    pub hflip_prob: f32,
+    /// Zero-padding for random crop (0 disables).
+    pub crop_pad: usize,
+    pub normalize: bool,
+}
+
+impl Default for AugmentCfg {
+    fn default() -> Self {
+        AugmentCfg { hflip_prob: 0.5, crop_pad: 2, normalize: true }
+    }
+}
+
+/// Apply the augmentation pipeline in place.
+pub fn augment(batch: &mut ImageBatch, cfg: &AugmentCfg, rng: &mut Rng) {
+    let [b, c, h, w] = batch.dims;
+    for bi in 0..b {
+        let img = &mut batch.x[bi * c * h * w..(bi + 1) * c * h * w];
+        if cfg.hflip_prob > 0.0 && rng.uniform() < cfg.hflip_prob {
+            hflip(img, c, h, w);
+        }
+        if cfg.crop_pad > 0 {
+            let dy = rng.below(2 * cfg.crop_pad + 1) as isize
+                - cfg.crop_pad as isize;
+            let dx = rng.below(2 * cfg.crop_pad + 1) as isize
+                - cfg.crop_pad as isize;
+            shift(img, c, h, w, dy, dx);
+        }
+    }
+    if cfg.normalize {
+        normalize(&mut batch.x);
+    }
+}
+
+fn hflip(img: &mut [f32], c: usize, h: usize, w: usize) {
+    for ci in 0..c {
+        for i in 0..h {
+            let row = &mut img[(ci * h + i) * w..(ci * h + i + 1) * w];
+            row.reverse();
+        }
+    }
+}
+
+/// Shift by (dy, dx) with zero fill — equivalent to pad-then-crop.
+fn shift(img: &mut [f32], c: usize, h: usize, w: usize, dy: isize, dx: isize) {
+    if dy == 0 && dx == 0 {
+        return;
+    }
+    let mut out = vec![0.0f32; img.len()];
+    for ci in 0..c {
+        for i in 0..h {
+            let si = i as isize - dy;
+            if si < 0 || si as usize >= h {
+                continue;
+            }
+            for j in 0..w {
+                let sj = j as isize - dx;
+                if sj < 0 || sj as usize >= w {
+                    continue;
+                }
+                out[(ci * h + i) * w + j] =
+                    img[(ci * h + si as usize) * w + sj as usize];
+            }
+        }
+    }
+    img.copy_from_slice(&out);
+}
+
+/// Batch-wise standardization to zero mean / unit variance.
+fn normalize(x: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean: f32 = x.iter().sum::<f32>() / n;
+    let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / var.sqrt().max(1e-6);
+    for v in x.iter_mut() {
+        *v = (*v - mean) * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ImageDataset, ImageSpec};
+
+    fn batch() -> ImageBatch {
+        ImageDataset::new(ImageSpec::cifar_like(4, 1)).batch("train", 0, 4)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = batch();
+        let mut b = batch();
+        let cfg = AugmentCfg::default();
+        augment(&mut a, &cfg, &mut Rng::new(7));
+        augment(&mut b, &cfg, &mut Rng::new(7));
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn double_hflip_is_identity() {
+        let mut a = batch();
+        let orig = a.x.clone();
+        let [b, c, h, w] = a.dims;
+        for bi in 0..b {
+            let img = &mut a.x[bi * c * h * w..(bi + 1) * c * h * w];
+            hflip(img, c, h, w);
+            hflip(img, c, h, w);
+        }
+        assert_eq!(a.x, orig);
+    }
+
+    #[test]
+    fn shift_preserves_interior() {
+        let mut a = batch();
+        let [_, c, h, w] = a.dims;
+        let orig = a.x.clone();
+        let img = &mut a.x[..c * h * w];
+        shift(img, c, h, w, 1, 0);
+        // Row i of shifted == row i-1 of original, for interior rows.
+        for ci in 0..c {
+            for i in 1..h {
+                for j in 0..w {
+                    assert_eq!(
+                        img[(ci * h + i) * w + j],
+                        orig[(ci * h + i - 1) * w + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_standardizes() {
+        let mut a = batch();
+        let cfg = AugmentCfg { hflip_prob: 0.0, crop_pad: 0, normalize: true };
+        augment(&mut a, &cfg, &mut Rng::new(1));
+        let n = a.x.len() as f32;
+        let mean: f32 = a.x.iter().sum::<f32>() / n;
+        let var: f32 = a.x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+            / n;
+        assert!(mean.abs() < 1e-3);
+        assert!((var - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn labels_untouched() {
+        let mut a = batch();
+        let y = a.y.clone();
+        augment(&mut a, &AugmentCfg::default(), &mut Rng::new(2));
+        assert_eq!(a.y, y);
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic dataset substrate (vision + tokens), deterministic from a
+//! seed. See DESIGN.md §Substitutions for why these replace the paper's
+//! CIFAR / Pets / ImageNet / BoolQ workloads.
+
+pub mod augment;
+pub mod synthetic;
+
+pub use augment::{augment, AugmentCfg};
+pub use synthetic::{ImageBatch, ImageDataset, ImageSpec, TokenDataset};

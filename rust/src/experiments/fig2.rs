@@ -1,0 +1,90 @@
+//! Fig. 2 — analytic FLOPs/compression curves.
+//!
+//! (a) forward-pass FLOPs, HOSVD_eps vs vanilla, growing map size
+//! (b) backward-pass FLOPs, HOSVD_eps vs vanilla
+//! (c) compression ratio R_C vs per-mode rank (eq. 19)
+//! (d) speedup ratio R_S vs per-mode rank (eq. 18)
+//!
+//! All four panels are pure shape functions of `metrics::flops`; batch
+//! 128 and rank 1 for (a)/(b) as in the paper.
+
+use crate::metrics::flops::LayerDims;
+use crate::metrics::Table;
+
+/// Panels (a) + (b): sweep the spatial size of a square activation map.
+pub fn flops_vs_map_size() -> Table {
+    let mut t = Table::new(
+        "Fig 2a/2b: fwd/bwd FLOPs vs activation size (B=128, C=32, rank 1)",
+        &["H=W", "fwd_vanilla", "fwd_hosvd", "bwd_vanilla", "bwd_asi_r1",
+          "fwd_ratio", "bwd_ratio"],
+    );
+    for h in [4usize, 8, 16, 32, 64] {
+        let l = LayerDims::new(128, 32, h, h, 32, 1, 3);
+        let r = [1, 1, 1, 1];
+        let fwd_v = l.fwd_flops();
+        // HOSVD pays the per-step decomposition in the forward pass.
+        let fwd_h = l.fwd_flops() + l.hosvd_overhead();
+        let bwd_v = l.dw_flops_vanilla();
+        let bwd_a = l.asi_dw_flops(r);
+        t.row(vec![
+            h.to_string(),
+            fwd_v.to_string(),
+            fwd_h.to_string(),
+            bwd_v.to_string(),
+            bwd_a.to_string(),
+            format!("{:.2}", fwd_h as f64 / fwd_v as f64),
+            format!("{:.2}", bwd_v as f64 / bwd_a.max(1) as f64),
+        ]);
+    }
+    t
+}
+
+/// Panels (c) + (d): sweep the per-mode rank at fixed geometry.
+pub fn ratios_vs_rank() -> Table {
+    let mut t = Table::new(
+        "Fig 2c/2d: R_C and R_S vs per-mode rank (B=128, C=32, 32x32)",
+        &["rank", "R_C", "R_S"],
+    );
+    let l = LayerDims::new(128, 32, 32, 32, 32, 1, 3);
+    for r in [1usize, 2, 4, 8, 16, 32] {
+        let rr = [r, r, r, r];
+        t.row(vec![
+            r.to_string(),
+            format!("{:.2}", l.rc(rr)),
+            format!("{:.3}", l.rs(rr)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hosvd_forward_blowup_grows_with_size() {
+        let t = flops_vs_map_size();
+        let ratios: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[5].parse::<f64>().unwrap())
+            .collect();
+        // Fig 2a: HOSVD's forward overhead factor grows with the map.
+        assert!(ratios.windows(2).all(|w| w[1] >= w[0] * 0.99),
+                "{ratios:?}");
+        assert!(*ratios.last().unwrap() > 10.0);
+    }
+
+    #[test]
+    fn rc_and_rs_decrease_with_rank() {
+        let t = ratios_vs_rank();
+        let rc: Vec<f64> = t.rows.iter()
+            .map(|r| r[1].parse::<f64>().unwrap()).collect();
+        let rs: Vec<f64> = t.rows.iter()
+            .map(|r| r[2].parse::<f64>().unwrap()).collect();
+        assert!(rc.windows(2).all(|w| w[1] < w[0]));
+        assert!(rs.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+        // Fig 2d: at rank 1 ASI beats vanilla per-step FLOPs.
+        assert!(rs[0] > 1.0, "R_S at rank 1 = {}", rs[0]);
+    }
+}

@@ -1,0 +1,47 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §5).
+//!
+//! Analytic drivers (fig2, tables' resource columns) run without
+//! artifacts; training drivers (fig3, fig4, fig5, fig6, accuracy columns)
+//! need `make artifacts` and a `Session`.
+
+pub mod fig2;
+pub mod tables;
+pub mod training;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Table;
+
+/// Run an analytic experiment by id; training experiments are dispatched
+/// by the CLI through `training::*` (they need engine + step budgets).
+pub fn run_analytic(id: &str) -> Result<Vec<Table>> {
+    Ok(match id {
+        "fig2" => vec![fig2::flops_vs_map_size(), fig2::ratios_vs_rank()],
+        "table1" => vec![tables::table1()],
+        "table2" => vec![tables::table2()],
+        "table3" => vec![tables::table3()],
+        "table4" => vec![tables::table4_accounting()],
+        other => bail!(
+            "unknown analytic experiment '{other}' \
+             (training experiments: fig3, fig4, fig5, fig6, table4-train)"
+        ),
+    })
+}
+
+/// Persist a batch of tables under `out/` and print them.
+pub fn emit(tables: &[Table], out: &Path) -> Result<()> {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        let stem: String = t
+            .title
+            .chars()
+            .take_while(|c| *c != ':')
+            .filter(|c| c.is_alphanumeric())
+            .collect::<String>()
+            .to_lowercase();
+        t.save(out, &format!("{stem}_{i}"))?;
+    }
+    Ok(())
+}

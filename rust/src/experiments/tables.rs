@@ -1,0 +1,218 @@
+//! Analytic reproduction of the resource columns of Tables 1–4.
+//!
+//! The paper's Mem (MB) and GFLOPs/TFLOPs columns are pure shape
+//! functions (eqs. 5, 11–19) evaluated on the real architectures; the
+//! accuracy columns come from training runs (see the fig3/fig4/table
+//! drivers that exercise the compact trainable variants). This module
+//! regenerates the resource columns on the real ImageNet-geometry
+//! schedules in `models::zoo`.
+
+use crate::metrics::flops::{train_cost, LayerDims, Method};
+use crate::metrics::{gflops, mb, Table};
+use crate::models::zoo;
+
+/// ASI/HOSVD per-layer ranks used by the accounting: the paper reports
+/// eps=0.8-selected ranks; on natural activations those are tiny. We use
+/// a per-mode heuristic matching the paper's regime: rank 4 on batch and
+/// channel (capped), rank 2 on spatial modes.
+pub fn default_ranks(l: &LayerDims) -> [usize; 4] {
+    [
+        4.min(l.b),
+        4.min(l.c),
+        2.min(l.h),
+        2.min(l.w),
+    ]
+}
+
+fn ranks_for(layers: &[LayerDims]) -> Vec<[usize; 4]> {
+    layers.iter().map(default_ranks).collect()
+}
+
+/// One model's rows of Table 1/2/3 (four methods x depths + vanilla-all).
+pub fn model_rows(t: &mut Table, arch_name: &str, batch: usize,
+                  depths: &[usize], tera: bool) {
+    let arch = zoo::by_name(arch_name, batch).expect("unknown arch");
+    let n = arch.layers.len();
+    let fmt_flops = |f: u64| {
+        if tera {
+            format!("{:.2}", f as f64 / 1e12)
+        } else {
+            gflops(f)
+        }
+    };
+    // Vanilla over all layers.
+    let all = train_cost(&arch.layers, n, &Method::Vanilla);
+    t.row(vec![
+        arch_name.into(), "vanilla".into(), "All".into(),
+        mb(all.act_bytes), fmt_flops(all.flops),
+    ]);
+    for &d in depths {
+        let tail = &arch.layers[n - d..];
+        let ranks = ranks_for(tail);
+        for (name, m) in [
+            ("vanilla", Method::Vanilla),
+            ("gf_r2", Method::GradientFilter),
+            ("hosvd_e0.8", Method::Hosvd(ranks.clone())),
+            ("asi", Method::Asi(ranks.clone())),
+        ] {
+            let c = train_cost(&arch.layers, d, &m);
+            t.row(vec![
+                arch_name.into(), name.into(), d.to_string(),
+                mb(c.act_bytes), fmt_flops(c.flops),
+            ]);
+        }
+    }
+}
+
+/// Table 1 — ImageNet resource columns, 4 architectures, depths {2, 4}.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 (resource columns): ImageNet, batch 64",
+        &["model", "method", "#layers", "mem_mb", "gflops"],
+    );
+    for m in ["mobilenetv2", "resnet18", "mcunet", "resnet34"] {
+        model_rows(&mut t, m, 64, &[2, 4], false);
+    }
+    t
+}
+
+/// Table 2 — same accounting at the downstream-task batch size (128).
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table 2 (resource columns): downstream tasks, batch 128",
+        &["model", "method", "#layers", "mem_mb", "tflops"],
+    );
+    for m in ["mobilenetv2", "mcunet", "resnet18", "resnet34"] {
+        model_rows(&mut t, m, 128, &[2, 4], true);
+    }
+    t
+}
+
+/// Table 3 — segmentation accounting, depths {5, 10}, batch 8.
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table 3 (resource columns): semantic segmentation, batch 8",
+        &["model", "method", "#layers", "mem_mb", "tflops"],
+    );
+    for m in ["pspnet", "pspnet-m", "dlv3", "dlv3-m", "fcn", "upernet"] {
+        model_rows(&mut t, m, 8, &[5, 10], true);
+    }
+    t
+}
+
+/// Table 4 — TinyLlama linear-layer accounting at rank 20, depths 1..5.
+pub fn table4_accounting() -> Table {
+    let mut t = Table::new(
+        "Table 4 (resource columns): TinyLlama-1.1B, BoolQ geometry, rank 20",
+        &["#blocks", "vanilla_mem_mb", "asi_mem_mb", "mem_ratio",
+          "vanilla_tflops", "asi_tflops"],
+    );
+    let rank = 20;
+    for depth in 1..=5usize {
+        let mut v_mem = 0u64;
+        let mut a_mem = 0u64;
+        let mut v_fl = 0u64;
+        let mut a_fl = 0u64;
+        for _ in 0..depth {
+            for l in zoo::tinyllama_block_linears(8, 512) {
+                v_mem += 4 * l.act_elems();
+                a_mem += 4 * l.asi_storage(rank);
+                // fwd + dW (+dx in both)
+                v_fl += l.fwd_flops() + l.dw_flops_vanilla() + l.dx_flops();
+                a_fl += l.fwd_flops()
+                    + l.asi_overhead(rank)
+                    + l.asi_dw_flops(rank)
+                    + l.dx_flops();
+            }
+        }
+        t.row(vec![
+            depth.to_string(),
+            mb(v_mem),
+            mb(a_mem),
+            format!("{:.0}x", v_mem as f64 / a_mem as f64),
+            format!("{:.2}", v_fl as f64 / 1e12),
+            format!("{:.2}", a_fl as f64 / 1e12),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(t: &Table, model: &str, method: &str, layers: &str, idx: usize)
+        -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0] == model && r[1] == method && r[2] == layers)
+            .unwrap_or_else(|| panic!("row {model}/{method}/{layers}"))[idx]
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn table1_resnet18_vanilla_d2_matches_paper() {
+        // Paper: 12.25 MB for ResNet18 vanilla depth-2.
+        let t = table1();
+        let m = col(&t, "resnet18", "vanilla", "2", 3);
+        assert!((m - 12.25).abs() < 0.05, "got {m}");
+    }
+
+    #[test]
+    fn table1_orderings_hold_everywhere() {
+        // For every (model, depth): mem asi < gf < vanilla and
+        // flops hosvd > vanilla >= asi — the paper's qualitative claims.
+        let t = table1();
+        for model in ["mobilenetv2", "resnet18", "mcunet", "resnet34"] {
+            for d in ["2", "4"] {
+                let mv = col(&t, model, "vanilla", d, 3);
+                let mg = col(&t, model, "gf_r2", d, 3);
+                let ma = col(&t, model, "asi", d, 3);
+                assert!(ma < mg && mg < mv, "{model} d{d} mem: {ma} {mg} {mv}");
+                let fv = col(&t, model, "vanilla", d, 4);
+                let fh = col(&t, model, "hosvd_e0.8", d, 4);
+                let fa = col(&t, model, "asi", d, 4);
+                assert!(fh > fv, "{model} d{d} hosvd flops");
+                assert!(fa <= fv * 1.01, "{model} d{d} asi flops {fa} vs {fv}");
+            }
+        }
+    }
+
+    #[test]
+    fn table1_memory_reduction_two_orders_of_magnitude() {
+        // Paper headline: up to 120x activation-memory reduction.
+        let t = table1();
+        for model in ["resnet18", "resnet34"] {
+            let mv = col(&t, model, "vanilla", "2", 3);
+            let ma = col(&t, model, "asi", "2", 3);
+            assert!(mv / ma > 10.0, "{model}: only {}x", mv / ma);
+        }
+    }
+
+    #[test]
+    fn table4_ratio_grows_with_depth() {
+        let t = table4_accounting();
+        let ratios: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[3].trim_end_matches('x').parse::<f64>().unwrap())
+            .collect();
+        // (The paper reports up to 2760x because its vanilla bookkeeping
+        //  counts every autograd residual, incl. attention maps; ours
+        //  counts linear inputs only, so the ratio is conservative.)
+        assert!(ratios[0] > 50.0, "depth-1 ratio {}", ratios[0]);
+        assert!(ratios.windows(2).all(|w| w[1] >= w[0] * 0.99),
+                "{ratios:?}");
+        // FLOPs saving roughly ~1.9x as the paper reports.
+        let v: f64 = t.rows[4][4].parse().unwrap();
+        let a: f64 = t.rows[4][5].parse().unwrap();
+        assert!(v / a > 1.3 && v / a < 3.0, "flops ratio {}", v / a);
+    }
+
+    #[test]
+    fn table3_renders_all_models() {
+        let t = table3();
+        assert_eq!(t.rows.len(), 6 * (1 + 2 * 4));
+    }
+}

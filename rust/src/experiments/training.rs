@@ -1,0 +1,298 @@
+//! Training experiments (the accuracy / latency / perplexity panels).
+//!
+//! These run the compact trainable variants on the synthetic datasets —
+//! see DESIGN.md §Substitutions. Absolute accuracies differ from the
+//! paper (different data); the claims under reproduction are the
+//! *method orderings, ratios and trends*.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{measure_perplexity, probe, HostEdgeNet, Session,
+                         WarmStart, DEFAULT_EPS};
+use crate::data::TokenDataset;
+use crate::metrics::flops::{train_cost, LayerDims, Method};
+use crate::metrics::{mb, Table};
+use crate::runtime::HostTensor;
+use crate::tensor::{ConvGeom, Tensor4};
+use crate::util::timer;
+
+/// Step budgets for one experiment run.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub pretrain_steps: u64,
+    pub finetune_steps: u64,
+    pub eval_batches: u64,
+}
+
+impl Budget {
+    pub fn quick() -> Budget {
+        Budget { pretrain_steps: 40, finetune_steps: 60, eval_batches: 4 }
+    }
+
+    pub fn full() -> Budget {
+        Budget { pretrain_steps: 300, finetune_steps: 300, eval_batches: 16 }
+    }
+}
+
+/// Compact-model layer dims from the manifest (for per-run accounting).
+fn compact_layers(session: &Session, model: &str) -> Result<Vec<LayerDims>> {
+    let cnn = session.engine.manifest.cnn(model)?;
+    Ok(cnn
+        .activation_shapes
+        .iter()
+        .zip(&cnn.convs)
+        .map(|(&[b, c, h, w], &(cout, stride))| {
+            LayerDims::new(b, c, h, w, cout, stride, cnn.ksize)
+        })
+        .collect())
+}
+
+/// Fig. 3 — warm-start ablation: ASI warm vs cold across depths.
+pub fn fig3(session: &Session, model: &str, budget: Budget) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 3: warm-start ablation (ASI, synthetic downstream)",
+        &["depth", "rank", "variant", "final_loss", "accuracy"],
+    );
+    let pre = session.pretrain(model, budget.pretrain_steps, 0.05, 1)?;
+    // Depth sweep at the default rank, plus a rank sweep at depth 2:
+    // the warm start matters most when the rank is tight relative to the
+    // activation's spectrum (a single cold iteration then misses the
+    // dominant subspace).
+    let mut configs: Vec<(usize, usize)> =
+        [1usize, 2, 4].iter().map(|&d| (d, 4)).collect();
+    for r in [1usize, 2] {
+        configs.push((2, r));
+    }
+    for (depth, rank) in configs {
+        let exec = format!("{model}_asi_d{depth}_r{rank}");
+        if session.engine.manifest.exec(&exec).is_err() {
+            continue;
+        }
+        for (name, warm) in [("warm", WarmStart::Warm),
+                             ("cold", WarmStart::Cold)] {
+            let rep = session.finetune(
+                model, &exec, Some(&pre), budget.finetune_steps, 0.05, warm,
+                budget.eval_batches, 7,
+            )?;
+            println!("  fig3 {exec} {name}: loss {:.3} acc {:.3}  {}",
+                     rep.final_loss, rep.accuracy, rep.loss.sparkline(40));
+            t.row(vec![
+                depth.to_string(),
+                rank.to_string(),
+                name.into(),
+                format!("{:.4}", rep.final_loss),
+                format!("{:.4}", rep.accuracy),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 4 — ASI vs HOSVD vs vanilla vs GF: accuracy + resource columns.
+pub fn fig4(session: &Session, model: &str, budget: Budget) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 4 / Tables (accuracy): methods across depths (synthetic Pets)",
+        &["depth", "method", "accuracy", "final_loss", "mem_mb", "gflops",
+          "s_per_step"],
+    );
+    let layers = compact_layers(session, model)?;
+    let pre = session.pretrain(model, budget.pretrain_steps, 0.05, 1)?;
+    for depth in [1usize, 2, 4] {
+        for method in ["vanilla", "gf", "asi", "hosvd"] {
+            let exec = match method {
+                "asi" => format!("{model}_asi_d{depth}_r4"),
+                m => format!("{model}_{m}_d{depth}"),
+            };
+            if session.engine.manifest.exec(&exec).is_err() {
+                continue;
+            }
+            let rep = session.finetune(
+                model, &exec, Some(&pre), budget.finetune_steps, 0.05,
+                WarmStart::Warm, budget.eval_batches, 7,
+            )?;
+            // Analytic accounting on the compact geometry.
+            let entry = session.engine.manifest.exec(&exec)?;
+            let ranks: Vec<[usize; 4]> = entry
+                .ranks
+                .iter()
+                .map(|r| [r[0], r[1], r[2], r[3]])
+                .collect();
+            let m = match method {
+                "vanilla" => Method::Vanilla,
+                "gf" => Method::GradientFilter,
+                "hosvd" => Method::Hosvd(ranks.clone()),
+                _ => Method::Asi(ranks.clone()),
+            };
+            let cost = train_cost(&layers, depth, &m);
+            println!("  fig4 {exec}: acc {:.3} loss {:.3}  {}",
+                     rep.accuracy, rep.final_loss, rep.loss.sparkline(40));
+            t.row(vec![
+                depth.to_string(),
+                method.into(),
+                format!("{:.4}", rep.accuracy),
+                format!("{:.4}", rep.final_loss),
+                mb(cost.act_bytes),
+                format!("{:.3}", cost.flops as f64 / 1e9),
+                format!("{:.4}", rep.wall_s / rep.steps.max(1) as f64),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 5 — measured per-step wall-clock of the four methods (the
+/// Raspberry-Pi substitution: same-CPU ratios).
+pub fn fig5(session: &Session, model: &str, iters: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 5: measured training-step latency (this host, depth 2)",
+        &["method", "ms_per_step", "vs_vanilla"],
+    );
+    let mut vanilla_ms = f64::NAN;
+    for method in ["vanilla", "gf", "asi", "hosvd"] {
+        let exec = match method {
+            "asi" => format!("{model}_asi_d2_r4"),
+            m => format!("{model}_{m}_d2"),
+        };
+        if session.engine.manifest.exec(&exec).is_err() {
+            continue;
+        }
+        let mut tr = crate::coordinator::Trainer::new(
+            &session.engine, model, &exec, 0.05, WarmStart::Warm, 3)?;
+        let batch = session.engine.manifest.cnn(model)?.batch_size;
+        let b0 = session.downstream_ds.batch("train", 0, batch);
+        tr.step_image(&b0)?; // compile + warm
+        let stats = timer::bench(&exec, 1, iters, || {
+            let b = session.downstream_ds.batch("train", 1, batch);
+            tr.step_image(&b).expect("step");
+        });
+        if method == "vanilla" {
+            vanilla_ms = stats.mean_s * 1e3;
+        }
+        println!("  fig5 {}", stats.report());
+        t.row(vec![
+            method.into(),
+            format!("{:.2}", stats.mean_s * 1e3),
+            format!("{:.2}x", stats.mean_s * 1e3 / vanilla_ms),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig. 6 — perplexity vs explained-variance threshold for the last
+/// four conv layers (host probe + HOSVD_eps).
+pub fn fig6(session: &Session, model: &str) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 6: activation perplexity vs eps (last 4 layers)",
+        &["layer", "eps", "perplexity", "ranks", "mem_kb"],
+    );
+    let cnn = session.engine.manifest.cnn(model)?.clone();
+    let params = session.engine.load_params(model)?;
+    let net = HostEdgeNet::from_params(&cnn, &params)?;
+    // Probe batch (smaller than training batch to keep the host SVDs fast).
+    let pb = 8;
+    let b = session.downstream_ds.batch("train", 0, pb);
+    let x = Tensor4::from_vec(
+        [pb, cnn.in_channels, cnn.image_size, cnn.image_size],
+        b.x[..pb * cnn.in_channels * cnn.image_size * cnn.image_size]
+            .to_vec(),
+    );
+    let cap = probe(&net, &x, &b.y[..pb]);
+    let geoms: Vec<ConvGeom> = cnn
+        .convs
+        .iter()
+        .map(|&(_, s)| ConvGeom {
+            stride: s,
+            padding: cnn.padding,
+            ksize: cnn.ksize,
+        })
+        .collect();
+    let tail_start = cnn.convs.len().saturating_sub(4);
+    let table = measure_perplexity(&cap, &geoms, tail_start, &DEFAULT_EPS)?;
+    for l in &table.layers {
+        for (j, &eps) in table.eps.iter().enumerate() {
+            t.row(vec![
+                (tail_start + l.layer).to_string(),
+                format!("{eps}"),
+                format!("{:.5}", l.perplexity[j]),
+                format!("{:?}", l.ranks[j]),
+                format!("{:.1}", l.mem_bytes[j] as f64 / 1024.0),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Table 4 (training) — TinyLM vanilla vs ASI across depths.
+pub fn table4_train(session: &Session, budget: Budget) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4 (training): TinyLM on synthetic BoolQ, rank 20",
+        &["depth", "method", "final_loss", "answer_acc"],
+    );
+    let lm = session.engine.manifest.lm("tinylm")?.clone();
+    let ds = TokenDataset::new(lm.vocab, lm.seq_len, 11);
+    for depth in [1usize, 3, 5] {
+        for method in ["vanilla", "asi"] {
+            let exec = format!("tinylm_{method}_d{depth}");
+            if session.engine.manifest.exec(&exec).is_err() {
+                continue;
+            }
+            let mut tr = crate::coordinator::Trainer::new(
+                &session.engine, "tinylm", &exec, 0.05, WarmStart::Warm, 5)?;
+            let mut last = f32::NAN;
+            for i in 0..budget.finetune_steps {
+                let (toks, _, _) = ds.batch("train", i, lm.batch_size);
+                let x = HostTensor::s32(
+                    vec![lm.batch_size, lm.seq_len], toks);
+                last = tr.step(x, None)?;
+            }
+            let acc = lm_answer_accuracy(session, &tr, &ds, &lm,
+                                         budget.eval_batches)?;
+            println!("  table4 {exec}: loss {last:.3} answer-acc {acc:.3}");
+            t.row(vec![
+                depth.to_string(),
+                method.into(),
+                format!("{last:.4}"),
+                format!("{acc:.4}"),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Probe accuracy: does the model put more mass on the correct yes/no
+/// token at the answer position?
+fn lm_answer_accuracy(
+    session: &Session,
+    tr: &crate::coordinator::Trainer<'_>,
+    ds: &TokenDataset,
+    lm: &crate::runtime::LmModel,
+    batches: u64,
+) -> Result<f32> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..batches {
+        let (toks, pos, ans) = ds.batch("val", i, lm.batch_size);
+        let mut inputs = tr.full_params();
+        inputs.push(HostTensor::s32(vec![lm.batch_size, lm.seq_len],
+                                    toks.clone()));
+        let outs = session
+            .engine
+            .run("tinylm_infer", &inputs)
+            .context("tinylm_infer")?;
+        let logits = outs[1].as_f32()?;
+        let v = lm.vocab;
+        for b in 0..lm.batch_size {
+            // Next-token logits at the position before the answer.
+            let p = pos[b] - 1;
+            let row = &logits[(b * lm.seq_len + p) * v..(b * lm.seq_len + p + 1) * v];
+            let yes = row[(v - 2) as usize];
+            let no = row[(v - 3) as usize];
+            let pred = if yes >= no { (v - 2) as i32 } else { (v - 3) as i32 };
+            if pred == ans[b] {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f32 / total.max(1) as f32)
+}

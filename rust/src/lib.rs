@@ -1,0 +1,20 @@
+//! # ASI — Activation Subspace Iteration for Efficient On-Device Learning
+//!
+//! A full-system reproduction of *"Beyond Low-rank Decomposition: A
+//! Shortcut Approach for Efficient On-Device Learning"* (ICML 2025):
+//! a Rust on-device training coordinator executing AOT-compiled JAX/Pallas
+//! computations through PJRT, plus host-side implementations of every
+//! substrate the paper depends on (tensor algebra, compression methods,
+//! rank selection, analytic cost models, synthetic datasets).
+//!
+//! See `DESIGN.md` for the architecture and the experiment index.
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

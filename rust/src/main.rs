@@ -1,0 +1,377 @@
+//! `asi` — CLI entrypoint for the ASI on-device-learning system.
+//!
+//! Commands (std-only arg parsing; the build is offline):
+//!
+//! ```text
+//! asi experiment <id> [--quick|--full] [--out DIR] [--artifacts DIR]
+//!     ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 table4
+//!          table4-train rank-select all-analytic
+//! asi train --model mcunet --method asi --depth 2 [--steps N] [--lr F]
+//! asi rank-select --model mcunet --budget-kb N [--greedy]
+//! asi engine-stats
+//! asi list
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use asi::coordinator::{backtracking_select, greedy_select,
+                       measure_perplexity, probe, HostEdgeNet, Session,
+                       WarmStart, DEFAULT_EPS};
+use asi::experiments::{self, training::Budget};
+use asi::metrics::Table;
+use asi::runtime::Engine;
+use asi::tensor::{ConvGeom, Tensor4};
+
+/// Tiny flag parser: positional args + `--key value` / `--flag` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("out", "results"))
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "experiment" => cmd_experiment(&args),
+        "train" => cmd_train(&args),
+        "rank-select" => cmd_rank_select(&args),
+        "engine-stats" => cmd_engine_stats(&args),
+        "bench-ab" => cmd_bench_ab(&args),
+        "audit" => cmd_audit(&args),
+        "list" => cmd_list(&args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+asi — Activation Subspace Iteration on-device learning system
+
+USAGE:
+  asi experiment <id> [--quick|--full] [--out DIR] [--artifacts DIR]
+      ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 table4
+           table4-train all-analytic
+  asi train --model mcunet --method asi --depth 2 [--steps N] [--lr F]
+            [--cold] [--pretrain N]
+  asi rank-select --model mcunet --budget-kb N [--greedy]
+  asi audit <exec>        per-opcode HLO audit of one artifact
+  asi engine-stats        compile/run statistics after a smoke run
+  asi list                list AOT executables in the manifest
+";
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    println!("platform: {}", engine.platform());
+    let mut t = Table::new(
+        "AOT executables",
+        &["name", "model", "kind", "method", "depth", "inputs", "outputs"],
+    );
+    for (name, e) in &engine.manifest.executables {
+        t.row(vec![
+            name.clone(),
+            e.model.clone(),
+            e.kind.clone(),
+            e.method.clone(),
+            e.depth.to_string(),
+            e.inputs.len().to_string(),
+            e.outputs.len().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .context("experiment id required (see `asi help`)")?
+        .as_str();
+    let out = out_dir(args);
+    let budget = if args.has("full") { Budget::full() } else { Budget::quick() };
+
+    // Analytic experiments need no artifacts.
+    match id {
+        "fig2" | "table1" | "table2" | "table3" | "table4" => {
+            let tables = experiments::run_analytic(id)?;
+            return experiments::emit(&tables, &out);
+        }
+        "all-analytic" => {
+            for i in ["fig2", "table1", "table2", "table3", "table4"] {
+                let tables = experiments::run_analytic(i)?;
+                experiments::emit(&tables, &out)?;
+            }
+            return Ok(());
+        }
+        _ => {}
+    }
+
+    let session = Session::open(&artifacts_dir(args), 42)?;
+    let model = args.get("model", "mcunet");
+    let tables = match id {
+        "fig3" => vec![experiments::training::fig3(&session, &model, budget)?],
+        "fig4" => vec![experiments::training::fig4(&session, &model, budget)?],
+        "fig5" => {
+            let iters = args.get("iters", "5").parse().unwrap_or(5);
+            vec![experiments::training::fig5(&session, &model, iters)?]
+        }
+        "fig6" => vec![experiments::training::fig6(&session, &model)?],
+        "table4-train" => {
+            vec![experiments::training::table4_train(&session, budget)?]
+        }
+        other => bail!("unknown experiment '{other}'"),
+    };
+    experiments::emit(&tables, &out)?;
+    let st = session.engine.stats();
+    println!(
+        "[engine] compiles {} ({:.2}s), runs {} ({:.2}s)",
+        st.compiles, st.compile_s, st.runs, st.run_s
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get("model", "mcunet");
+    let method = args.get("method", "asi");
+    let depth: usize = args.get("depth", "2").parse()?;
+    let steps: u64 = args.get("steps", "100").parse()?;
+    let pretrain: u64 = args.get("pretrain", "50").parse()?;
+    let lr: f32 = args.get("lr", "0.05").parse()?;
+    let warm = if args.has("cold") { WarmStart::Cold } else { WarmStart::Warm };
+
+    let session = Session::open(&artifacts_dir(args), 42)?;
+    let exec = match method.as_str() {
+        "asi" => format!("{model}_asi_d{depth}_r{}", args.get("rank", "4")),
+        "full" => format!("{model}_train_full"),
+        m => format!("{model}_{m}_d{depth}"),
+    };
+    println!("pretraining {model} for {pretrain} steps...");
+    let pre = session.pretrain(&model, pretrain, lr, 1)?;
+    println!("fine-tuning with {exec} for {steps} steps...");
+    let rep = session.finetune(&model, &exec, Some(&pre), steps, lr, warm,
+                               8, 7)?;
+    println!("loss curve: {}", rep.loss.sparkline(60));
+    println!(
+        "final loss {:.4}, accuracy {:.4}, {:.1} ms/step, state {} bytes",
+        rep.final_loss,
+        rep.accuracy,
+        1e3 * rep.wall_s / rep.steps.max(1) as f64,
+        rep.state_bytes
+    );
+    Ok(())
+}
+
+fn cmd_rank_select(args: &Args) -> Result<()> {
+    let model = args.get("model", "mcunet");
+    let budget_kb: u64 = args.get("budget-kb", "64").parse()?;
+    let depth: usize = args.get("depth", "4").parse()?;
+
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let cnn = engine.manifest.cnn(&model)?.clone();
+    let params = engine.load_params(&model)?;
+    let net = HostEdgeNet::from_params(&cnn, &params)?;
+
+    let session_ds = asi::data::ImageDataset::new(
+        asi::data::ImageSpec::cifar_like(cnn.num_classes, 42));
+    let pb = 8usize;
+    let b = session_ds.batch("train", 0, pb);
+    let x = Tensor4::from_vec(
+        [pb, cnn.in_channels, cnn.image_size, cnn.image_size],
+        b.x[..pb * cnn.in_channels * cnn.image_size * cnn.image_size]
+            .to_vec(),
+    );
+    let cap = probe(&net, &x, &b.y[..pb]);
+    let geoms: Vec<ConvGeom> = cnn
+        .convs
+        .iter()
+        .map(|&(_, s)| ConvGeom { stride: s, padding: cnn.padding,
+                                  ksize: cnn.ksize })
+        .collect();
+    let tail_start = cnn.convs.len().saturating_sub(depth);
+    let table = measure_perplexity(&cap, &geoms, tail_start, &DEFAULT_EPS)?;
+
+    let budget = budget_kb * 1024;
+    let sel = if args.has("greedy") {
+        greedy_select(&table, budget)
+    } else {
+        backtracking_select(&table, budget)
+    };
+    match sel {
+        Some(s) => {
+            let mut t = Table::new(
+                &format!("Rank selection for {model} (budget {budget_kb} KiB)"),
+                &["layer", "eps", "ranks", "perplexity", "mem_kb"],
+            );
+            for (li, (&j, l)) in
+                s.choice.iter().zip(&table.layers).enumerate() {
+                t.row(vec![
+                    (tail_start + li).to_string(),
+                    format!("{}", table.eps[j]),
+                    format!("{:?}", l.ranks[j]),
+                    format!("{:.5}", l.perplexity[j]),
+                    format!("{:.1}", l.mem_bytes[j] as f64 / 1024.0),
+                ]);
+            }
+            print!("{}", t.render());
+            println!(
+                "total perplexity {:.5}, total memory {:.1} KiB",
+                s.total_perplexity,
+                s.total_mem_bytes as f64 / 1024.0
+            );
+        }
+        None => println!("budget infeasible at every threshold"),
+    }
+    Ok(())
+}
+
+/// A/B the two execution paths on one training executable: the literal
+/// path (`Engine::run`, everything re-uploaded per call through Literal
+/// conversion) vs the mixed-buffer path used by the Trainer. §Perf L3.
+fn cmd_bench_ab(args: &Args) -> Result<()> {
+    let exec = args.get("exec", "mcunet_asi_d2_r4");
+    let iters: usize = args.get("iters", "10").parse()?;
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let inputs = engine.zero_inputs(&exec)?;
+    engine.run(&exec, &inputs)?; // compile + warm
+    let lit = asi::util::timer::bench("literal path", 2, iters, || {
+        engine.run(&exec, &inputs).expect("run");
+    });
+    println!("{}", lit.report());
+    // Mixed path: frozen role as resident buffers, the rest as host.
+    let entry = engine.manifest.exec(&exec)?.clone();
+    let frozen_dev: Vec<xla::PjRtBuffer> = entry
+        .inputs
+        .iter()
+        .zip(&inputs)
+        .filter(|(sig, _)| sig.role == "frozen" || sig.role == "rest")
+        .map(|(_, t)| engine.upload(t))
+        .collect::<Result<_>>()?;
+    let mixed = asi::util::timer::bench("mixed-buffer path", 2, iters, || {
+        let mut fi = frozen_dev.iter();
+        let a: Vec<asi::runtime::ExecArg<'_>> = entry
+            .inputs
+            .iter()
+            .zip(&inputs)
+            .map(|(sig, t)| match sig.role.as_str() {
+                "frozen" | "rest" => {
+                    asi::runtime::ExecArg::Buf(fi.next().unwrap())
+                }
+                _ => asi::runtime::ExecArg::Host(t),
+            })
+            .collect();
+        engine.run_mixed(&exec, &a).expect("run_mixed");
+    });
+    println!("{}", mixed.report());
+    println!("speedup: {:.2}x", lit.mean_s / mixed.mean_s);
+    Ok(())
+}
+
+/// Per-opcode HLO audit of one artifact (the L2 profiling view).
+fn cmd_audit(args: &Args) -> Result<()> {
+    let exec = args
+        .positional
+        .get(1)
+        .context("usage: asi audit <executable-name>")?;
+    let engine = Engine::load(&artifacts_dir(args))?;
+    let entry = engine.manifest.exec(exec)?;
+    let text = std::fs::read_to_string(artifacts_dir(args).join(&entry.file))?;
+    let a = asi::metrics::audit_hlo(&text)?;
+    println!("{exec}: {} instructions, {} computations", a.instructions,
+             a.computations);
+    println!("result bytes: {} (largest single: {})", a.result_bytes,
+             a.largest_result);
+    println!("data-movement ops: {} ({:.1}%)", a.data_movement(),
+             100.0 * a.data_movement() as f64 / a.instructions as f64);
+    let mut t = Table::new("top opcodes", &["opcode", "count"]);
+    for (op, n) in a.top(15) {
+        t.row(vec![op, n.to_string()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_engine_stats(args: &Args) -> Result<()> {
+    let engine = Engine::load(&artifacts_dir(args))?;
+    // Smoke: run every model's infer executable on its init params.
+    let names: Vec<(String, String)> = engine
+        .manifest
+        .executables
+        .iter()
+        .filter(|(_, e)| e.kind == "infer")
+        .map(|(n, e)| (n.clone(), e.model.clone()))
+        .collect();
+    for (n, model) in &names {
+        let mut inputs = engine.load_params(model)?;
+        let entry = engine.manifest.exec(n)?;
+        // Append the data input (x / tokens) as zeros.
+        for sig in entry.inputs.iter().skip(inputs.len()) {
+            inputs.push(match sig.dtype {
+                asi::runtime::DType::F32 => asi::runtime::HostTensor::f32(
+                    sig.shape.clone(), vec![0.0; sig.elements()]),
+                asi::runtime::DType::S32 => asi::runtime::HostTensor::s32(
+                    sig.shape.clone(), vec![0; sig.elements()]),
+            });
+        }
+        let outs = engine.run(n, &inputs)?;
+        println!("{n}: {} outputs", outs.len());
+    }
+    let st = engine.stats();
+    println!(
+        "compiles {} ({:.2}s total), runs {} ({:.3}s), h2d {} B, d2h {} B",
+        st.compiles, st.compile_s, st.runs, st.run_s, st.h2d_bytes,
+        st.d2h_bytes
+    );
+    Ok(())
+}

@@ -1,0 +1,365 @@
+//! The paper's analytic cost model (eqs. 5, 11–19) — FLOPs and activation
+//! memory for vanilla training, HOSVD_eps, gradient filtering, and ASI.
+//!
+//! These formulas regenerate every Mem/GFLOPs column of Tables 1–4 and
+//! all four panels of Fig. 2. They are *shape functions*: the paper's own
+//! reported numbers come from the same algebra, so this module reproduces
+//! those columns exactly given the same layer shapes.
+
+/// Geometry of one convolution layer (supports grouped convs so the real
+/// MobileNetV2 depthwise schedule can be modelled).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerDims {
+    pub b: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cout: usize,
+    pub hout: usize,
+    pub wout: usize,
+    pub ksize: usize,
+    pub groups: usize,
+}
+
+impl LayerDims {
+    pub fn new(b: usize, c: usize, h: usize, w: usize, cout: usize,
+               stride: usize, ksize: usize) -> LayerDims {
+        LayerDims {
+            b,
+            c,
+            h,
+            w,
+            cout,
+            hout: h.div_ceil(stride),
+            wout: w.div_ceil(stride),
+            ksize,
+            groups: 1,
+        }
+    }
+
+    pub fn grouped(mut self, groups: usize) -> LayerDims {
+        self.groups = groups;
+        self
+    }
+
+    /// Activation tensor dims (B, C, H, W).
+    pub fn act_dims(&self) -> [usize; 4] {
+        [self.b, self.c, self.h, self.w]
+    }
+
+    /// Elements of the full activation map.
+    pub fn act_elems(&self) -> u64 {
+        (self.b * self.c * self.h * self.w) as u64
+    }
+
+    /// eq. 17 — forward FLOPs (the paper counts input spatial support).
+    pub fn fwd_flops(&self) -> u64 {
+        (self.ksize * self.ksize * self.c / self.groups) as u64
+            * (self.cout * self.b * self.h * self.w) as u64
+    }
+
+    /// eq. 16 — vanilla weight-gradient FLOPs.
+    pub fn dw_flops_vanilla(&self) -> u64 {
+        (self.ksize * self.ksize * self.c / self.groups) as u64
+            * (self.cout * self.b * self.hout * self.wout) as u64
+    }
+
+    /// eq. 2 — input-gradient FLOPs (common to all methods).
+    pub fn dx_flops(&self) -> u64 {
+        self.dw_flops_vanilla()
+    }
+
+    /// eq. 14 — ASI compression overhead for per-mode ranks `r`.
+    pub fn asi_overhead(&self, r: [usize; 4]) -> u64 {
+        let d = [self.b, self.c, self.h, self.w];
+        let total: usize = d.iter().product();
+        let mut o = 0u64;
+        for m in 0..4 {
+            let dm = d[m] as u64;
+            let dp = (total / d[m]) as u64;
+            let rm = r[m] as u64;
+            o += 2 * dm * dp * rm + rm * rm * rm;
+        }
+        o
+    }
+
+    /// eq. 11/13 — HOSVD overhead (full SVD of each unfolding, per step).
+    pub fn hosvd_overhead(&self) -> u64 {
+        let d = [self.b, self.c, self.h, self.w];
+        let total: usize = d.iter().product();
+        let mut o = 0u64;
+        for m in 0..4 {
+            let dm = d[m] as u64;
+            let pd = (total / d[m]) as u64;
+            o += dm.max(pd).pow(2) * dm.min(pd);
+        }
+        o
+    }
+
+    /// eq. 15 — ASI low-rank weight-gradient FLOPs.
+    pub fn asi_dw_flops(&self, r: [usize; 4]) -> u64 {
+        let [r1, r2, r3, r4] = r.map(|v| v as u64);
+        let (b, c, h, w) = (self.b as u64, self.c as u64, self.h as u64,
+                            self.w as u64);
+        let (co, ho, wo) = (self.cout as u64, self.hout as u64,
+                            self.wout as u64);
+        let d2 = (self.ksize * self.ksize) as u64;
+        r1 * b * co * ho * wo
+            + r1 * r2 * r3 * r4 * h
+            + r1 * r2 * r4 * h * w
+            + r1 * r2 * co * ho * wo * d2
+            + r2 * co * c * d2
+    }
+
+    /// eq. 5 — Tucker storage in elements.
+    pub fn tucker_storage(&self, r: [usize; 4]) -> u64 {
+        let d = [self.b, self.c, self.h, self.w];
+        r.iter().map(|&x| x as u64).product::<u64>()
+            + d.iter().zip(&r).map(|(&dm, &rm)| (dm * rm) as u64).sum::<u64>()
+    }
+
+    /// eq. 19 — compression ratio vanilla / ASI.
+    pub fn rc(&self, r: [usize; 4]) -> f64 {
+        self.act_elems() as f64 / self.tucker_storage(r) as f64
+    }
+
+    /// eq. 18 — per-layer training-step speedup vanilla / ASI.
+    pub fn rs(&self, r: [usize; 4]) -> f64 {
+        let vanilla = (self.fwd_flops() + self.dw_flops_vanilla()) as f64;
+        let asi = (self.fwd_flops() + self.asi_overhead(r)
+            + self.asi_dw_flops(r)) as f64;
+        vanilla / asi
+    }
+
+    /// Gradient filtering (R2): stored elements (pooled activation).
+    pub fn gf_storage(&self) -> u64 {
+        (self.b * self.c * (self.h / 2).max(1) * (self.w / 2).max(1)) as u64
+    }
+
+    /// Gradient filtering dW FLOPs: correlation on 2x2-pooled tensors.
+    pub fn gf_dw_flops(&self) -> u64 {
+        (self.ksize * self.ksize * self.c / self.groups) as u64
+            * (self.cout * self.b) as u64
+            * ((self.hout / 2).max(1) * (self.wout / 2).max(1)) as u64
+    }
+}
+
+/// Which activation-handling method a fine-tuned tail uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    Vanilla,
+    GradientFilter,
+    /// Per-layer per-mode ranks.
+    Hosvd(Vec<[usize; 4]>),
+    Asi(Vec<[usize; 4]>),
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Vanilla => "vanilla",
+            Method::GradientFilter => "gf",
+            Method::Hosvd(_) => "hosvd",
+            Method::Asi(_) => "asi",
+        }
+    }
+}
+
+/// Aggregate per-step cost of fine-tuning the last `tail.len()` conv
+/// layers of a model whose full conv stack is `all_layers`.
+#[derive(Debug, Clone)]
+pub struct TrainCost {
+    /// Total training FLOPs for one step (fwd whole net + bwd tail +
+    /// compression overhead).
+    pub flops: u64,
+    /// Peak activation memory in bytes (f32) across the tail.
+    pub act_bytes: u64,
+}
+
+pub fn train_cost(all_layers: &[LayerDims], depth: usize, method: &Method) -> TrainCost {
+    let n = all_layers.len();
+    let depth = depth.min(n);
+    let tail = &all_layers[n - depth..];
+
+    // Forward pass over the entire network (frozen layers included).
+    let mut flops: u64 = all_layers.iter().map(|l| l.fwd_flops()).sum();
+    let mut act: u64 = 0;
+
+    for (i, l) in tail.iter().enumerate() {
+        // dx is needed to propagate to every trained layer except the
+        // deepest one.
+        if i > 0 || depth < n {
+            // (the deepest trained layer still computes dx only if there
+            //  is a trained layer below it — there is not, so skip i==0)
+        }
+        if i > 0 {
+            flops += l.dx_flops();
+        }
+        match method {
+            Method::Vanilla => {
+                flops += l.dw_flops_vanilla();
+                act += 4 * l.act_elems();
+            }
+            Method::GradientFilter => {
+                flops += l.gf_dw_flops();
+                act += 4 * l.gf_storage();
+            }
+            Method::Hosvd(ranks) => {
+                let r = ranks[i];
+                flops += l.hosvd_overhead() + l.asi_dw_flops(r);
+                act += 4 * l.tucker_storage(r);
+            }
+            Method::Asi(ranks) => {
+                let r = ranks[i];
+                flops += l.asi_overhead(r) + l.asi_dw_flops(r);
+                act += 4 * l.tucker_storage(r);
+            }
+        }
+    }
+    TrainCost { flops, act_bytes: act }
+}
+
+/// Linear-layer cost model for the LM experiment (Table 4).
+#[derive(Debug, Clone, Copy)]
+pub struct LinearDims {
+    /// Flattened token count (B*T).
+    pub n: usize,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl LinearDims {
+    pub fn fwd_flops(&self) -> u64 {
+        (self.n * self.din * self.dout) as u64
+    }
+
+    pub fn dw_flops_vanilla(&self) -> u64 {
+        self.fwd_flops()
+    }
+
+    pub fn dx_flops(&self) -> u64 {
+        self.fwd_flops()
+    }
+
+    pub fn act_elems(&self) -> u64 {
+        (self.n * self.din) as u64
+    }
+
+    /// Matrix-ASI overhead: 2nd-order subspace iteration + re-projection.
+    pub fn asi_overhead(&self, r: usize) -> u64 {
+        let (n, d, r) = (self.n as u64, self.din as u64, r as u64);
+        // si_step (2ndr + r^3) + V recompute (ndr)
+        3 * n * d * r + r * r * r
+    }
+
+    /// Low-rank dW: `v (u^T gy)`.
+    pub fn asi_dw_flops(&self, r: usize) -> u64 {
+        let (n, d, o, r) = (self.n as u64, self.din as u64,
+                            self.dout as u64, r as u64);
+        n * r * o + d * r * o
+    }
+
+    /// Stored elements: U (n x r) + V (d x r).
+    pub fn asi_storage(&self, r: usize) -> u64 {
+        ((self.n + self.din) * r) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> LayerDims {
+        LayerDims::new(128, 32, 16, 16, 64, 1, 3)
+    }
+
+    #[test]
+    fn vanilla_formulas() {
+        let l = layer();
+        // eq 17: D^2 C C' B H W = 9*32*64*128*16*16
+        assert_eq!(l.fwd_flops(), 9 * 32 * 64 * 128 * 256);
+        assert_eq!(l.dw_flops_vanilla(), 9 * 32 * 64 * 128 * 256);
+        assert_eq!(l.act_elems(), 128 * 32 * 256);
+    }
+
+    #[test]
+    fn asi_overhead_matches_eq14() {
+        let l = LayerDims::new(2, 3, 4, 5, 8, 1, 3);
+        let r = [1, 1, 1, 1];
+        let total = 2 * 3 * 4 * 5;
+        let want: u64 = [2usize, 3, 4, 5]
+            .iter()
+            .map(|&d| 2 * (d as u64) * ((total / d) as u64) + 1)
+            .sum();
+        assert_eq!(l.asi_overhead(r), want);
+    }
+
+    #[test]
+    fn tucker_storage_matches_eq5() {
+        let l = LayerDims::new(8, 4, 6, 6, 8, 1, 3);
+        let r = [2, 2, 2, 2];
+        assert_eq!(l.tucker_storage(r), 16 + 2 * (8 + 4 + 6 + 6));
+    }
+
+    #[test]
+    fn asi_cheaper_than_hosvd_always() {
+        // The core claim behind Fig. 2: ASI overhead << HOSVD overhead.
+        for (b, c, h) in [(32, 16, 32), (64, 64, 16), (128, 96, 8)] {
+            let l = LayerDims::new(b, c, h, h, c, 1, 3);
+            assert!(l.asi_overhead([4, 4, 4, 4]) * 10 < l.hosvd_overhead(),
+                    "asi {} vs hosvd {}", l.asi_overhead([4, 4, 4, 4]),
+                    l.hosvd_overhead());
+        }
+    }
+
+    #[test]
+    fn rs_grows_with_map_size_at_rank1() {
+        // Fig. 2d: speedup grows with activation size at small rank.
+        let small = LayerDims::new(16, 8, 8, 8, 8, 1, 3);
+        let large = LayerDims::new(16, 8, 64, 64, 8, 1, 3);
+        let r = [1, 1, 1, 1];
+        assert!(large.rs(r) > small.rs(r));
+    }
+
+    #[test]
+    fn rc_decreases_with_rank() {
+        let l = layer();
+        assert!(l.rc([1, 1, 1, 1]) > l.rc([4, 4, 4, 4]));
+        assert!(l.rc([4, 4, 4, 4]) > 1.0);
+    }
+
+    #[test]
+    fn train_cost_ordering_matches_paper() {
+        // Per-step FLOPs: HOSVD >> vanilla >= ASI; memory:
+        // ASI ~ HOSVD << GF < vanilla. This is Table 1's shape.
+        let layers: Vec<LayerDims> = (0..6)
+            .map(|i| LayerDims::new(64, 16 << (i / 2), 32 >> (i / 2),
+                                    32 >> (i / 2), 16 << (i / 2), 1, 3))
+            .collect();
+        let ranks = vec![[4, 4, 4, 4]; 2];
+        let v = train_cost(&layers, 2, &Method::Vanilla);
+        let a = train_cost(&layers, 2, &Method::Asi(ranks.clone()));
+        let h = train_cost(&layers, 2, &Method::Hosvd(ranks));
+        let g = train_cost(&layers, 2, &Method::GradientFilter);
+        assert!(h.flops > v.flops, "hosvd {} !> vanilla {}", h.flops, v.flops);
+        assert!(a.flops < v.flops, "asi {} !< vanilla {}", a.flops, v.flops);
+        assert!(a.act_bytes < g.act_bytes);
+        assert!(g.act_bytes < v.act_bytes);
+    }
+
+    #[test]
+    fn grouped_conv_divides_flops() {
+        let dense = LayerDims::new(8, 32, 16, 16, 32, 1, 3);
+        let dw = dense.grouped(32);
+        assert_eq!(dense.fwd_flops() / 32, dw.fwd_flops());
+    }
+
+    #[test]
+    fn linear_dims_table4_shape() {
+        // Memory ratio at rank 20 should be enormous (paper: up to 2500x).
+        let l = LinearDims { n: 8 * 512, din: 2048, dout: 2048 };
+        let ratio = l.act_elems() as f64 / l.asi_storage(20) as f64;
+        assert!(ratio > 60.0, "ratio {ratio}");
+        assert!(l.asi_dw_flops(20) < l.dw_flops_vanilla());
+    }
+}

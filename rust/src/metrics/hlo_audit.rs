@@ -1,0 +1,179 @@
+//! HLO text auditing — the L2 profiling tool of the §Perf pass.
+//!
+//! Parses the `artifacts/*.hlo.txt` interchange format (structurally, not
+//! semantically) and reports per-opcode instruction counts, parameter /
+//! output byte totals, and fusion-relevant statistics. Used by
+//! `asi audit <exec>` and by the perf log to show why a graph is
+//! dispatch-bound (e.g. ASI r4: 1728 instructions vs vanilla's 273).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+/// Aggregate statistics of one HLO module.
+#[derive(Debug, Clone, Default)]
+pub struct HloAudit {
+    pub instructions: usize,
+    pub computations: usize,
+    /// opcode -> count, descending by count when reported.
+    pub by_opcode: BTreeMap<String, usize>,
+    /// Total bytes of f32/s32 tensor results (a proxy for live memory).
+    pub result_bytes: u64,
+    /// Largest single instruction result, bytes.
+    pub largest_result: u64,
+}
+
+impl HloAudit {
+    /// Instructions that move data without computing (fusion targets).
+    pub fn data_movement(&self) -> usize {
+        ["transpose", "reshape", "copy", "broadcast", "concatenate",
+         "slice", "bitcast"]
+            .iter()
+            .filter_map(|k| self.by_opcode.get(*k))
+            .sum()
+    }
+
+    /// Dominant opcodes, descending.
+    pub fn top(&self, n: usize) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> = self
+            .by_opcode
+            .iter()
+            .map(|(k, &c)| (k.clone(), c))
+            .collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(n);
+        v
+    }
+}
+
+/// Parse the audit out of HLO text.
+pub fn audit_hlo(text: &str) -> Result<HloAudit> {
+    let mut a = HloAudit::default();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if t.starts_with("ENTRY ") || (t.starts_with('%') && t.ends_with('{'))
+        {
+            a.computations += 1;
+            continue;
+        }
+        // Instruction lines look like:  `name = type[dims]{layout} opcode(...)`
+        let Some(eq) = t.find(" = ") else { continue };
+        let rhs = &t[eq + 3..];
+        // result type: up to the first space
+        let Some(sp) = rhs.find(' ') else { continue };
+        let ty = &rhs[..sp];
+        let rest = rhs[sp + 1..].trim_start();
+        let opcode: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        a.instructions += 1;
+        *a.by_opcode.entry(opcode).or_insert(0) += 1;
+        if let Some(bytes) = type_bytes(ty) {
+            a.result_bytes += bytes;
+            a.largest_result = a.largest_result.max(bytes);
+        }
+    }
+    if a.instructions == 0 {
+        anyhow::bail!("no HLO instructions found — not an HLO text file?");
+    }
+    Ok(a)
+}
+
+/// Byte size of an HLO result type like `f32[32,16,8,8]{3,2,1,0}`.
+/// Tuples and tokens return None (their elements are counted separately
+/// when materialized).
+fn type_bytes(ty: &str) -> Option<u64> {
+    let (elem, rest) = ty.split_once('[')?;
+    let width: u64 = match elem {
+        "f32" | "s32" | "u32" => 4,
+        "f64" | "s64" | "u64" => 8,
+        "f16" | "bf16" | "s16" | "u16" => 2,
+        "pred" | "s8" | "u8" => 1,
+        _ => return None,
+    };
+    let dims = rest.split(']').next()?;
+    if dims.is_empty() {
+        return Some(width);
+    }
+    let mut n: u64 = 1;
+    for d in dims.split(',') {
+        n = n.checked_mul(d.trim().parse::<u64>().ok()?)?;
+    }
+    Some(n * width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_step
+
+%fused (p: f32[4,4]) -> f32[4,4] {
+  %p = f32[4,4]{1,0} parameter(0)
+  ROOT %m = f32[4,4]{1,0} multiply(%p, %p)
+}
+
+ENTRY %main (a: f32[4,4], b: f32[4,4]) -> (f32[4,4]) {
+  %a = f32[4,4]{1,0} parameter(0)
+  %b = f32[4,4]{1,0} parameter(1)
+  %d = f32[4,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %t = f32[4,4]{1,0} transpose(%d), dimensions={1,0}
+  %f = f32[4,4]{1,0} fusion(%t), kind=kLoop, calls=%fused
+  ROOT %r = (f32[4,4]{1,0}) tuple(%f)
+}
+"#;
+
+    #[test]
+    fn counts_instructions_and_opcodes() {
+        let a = audit_hlo(SAMPLE).unwrap();
+        assert_eq!(a.by_opcode.get("dot"), Some(&1));
+        assert_eq!(a.by_opcode.get("transpose"), Some(&1));
+        assert_eq!(a.by_opcode.get("parameter"), Some(&3));
+        assert!(a.instructions >= 7);
+        assert_eq!(a.data_movement(), 1);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(type_bytes("f32[4,4]{1,0}"), Some(64));
+        assert_eq!(type_bytes("s32[]"), Some(4));
+        assert_eq!(type_bytes("bf16[2,3]"), Some(12));
+        assert_eq!(type_bytes("(f32[4],f32[4])"), None);
+        let a = audit_hlo(SAMPLE).unwrap();
+        assert_eq!(a.largest_result, 64);
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(audit_hlo("{\"not\": \"hlo\"}").is_err());
+    }
+
+    #[test]
+    fn top_sorted() {
+        let a = audit_hlo(SAMPLE).unwrap();
+        let top = a.top(2);
+        assert_eq!(top[0].0, "parameter");
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        let van = dir.join("mcunet_vanilla_d2.hlo.txt");
+        let asi = dir.join("mcunet_asi_d2_r4.hlo.txt");
+        if van.exists() && asi.exists() {
+            let av = audit_hlo(&std::fs::read_to_string(van).unwrap())
+                .unwrap();
+            let aa = audit_hlo(&std::fs::read_to_string(asi).unwrap())
+                .unwrap();
+            // The §Perf observation: the ASI graph is several times
+            // larger — dispatch-bound at compact geometry.
+            assert!(aa.instructions > 3 * av.instructions);
+            assert!(aa.by_opcode.contains_key("dot"));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Cost accounting (the paper's analytic FLOPs/memory model) + reporting.
+
+pub mod flops;
+pub mod hlo_audit;
+pub mod report;
+
+pub use flops::{train_cost, LayerDims, LinearDims, Method, TrainCost};
+pub use hlo_audit::{audit_hlo, HloAudit};
+pub use report::{gflops, mb, ratio, tflops, Series, Table};

@@ -1,0 +1,220 @@
+//! Report formatting: fixed-width terminal tables + CSV + JSON export for
+//! the experiment drivers (each table/figure prints the same row schema
+//! the paper reports).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, obj, s, Json};
+
+/// A simple column-typed table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned terminal table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}  ", c, w = widths[i]);
+            }
+            let _ = writeln!(out);
+        };
+        line(&mut out, &self.columns);
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("columns", arr(self.columns.iter().map(|c| s(c)))),
+            (
+                "rows",
+                arr(self.rows.iter().map(|r| arr(r.iter().map(|c| s(c))))),
+            ),
+        ])
+    }
+
+    /// Write CSV + JSON artifacts under `dir` (created if missing).
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(
+            dir.join(format!("{stem}.json")),
+            self.to_json().to_string(),
+        )?;
+        Ok(())
+    }
+}
+
+/// Numeric formatting helpers shared by the experiment drivers.
+pub fn mb(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+pub fn gflops(flops: u64) -> String {
+    format!("{:.2}", flops as f64 / 1e9)
+}
+
+pub fn tflops(flops: u64) -> String {
+    format!("{:.3}", flops as f64 / 1e12)
+}
+
+pub fn ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+/// Loss-curve logger: records (step, value) series and renders a compact
+/// ASCII sparkline for terminal output plus CSV for EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let vals: Vec<f64> = self.points.iter().map(|&(_, v)| v).collect();
+        let (lo, hi) = vals.iter().fold((f64::INFINITY, f64::NEG_INFINITY),
+            |(l, h), &v| (l.min(v), h.max(v)));
+        let span = (hi - lo).max(1e-12);
+        let stride = (vals.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < vals.len() && out.chars().count() < width {
+            let v = vals[i as usize];
+            let k = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(BARS[k.min(7)]);
+            i += stride;
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("step,{}\n", self.name);
+        for (s, v) in &self.points {
+            let _ = writeln!(out, "{s},{v}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long_column"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("long_column"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn series_sparkline() {
+        let mut s = Series::new("loss");
+        for i in 0..20 {
+            s.push(i, 10.0 - i as f64 * 0.5);
+        }
+        let sp = s.sparkline(10);
+        assert_eq!(sp.chars().count(), 10);
+        assert_eq!(s.last(), Some(0.5));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(mb(1024 * 1024), "1.00");
+        assert_eq!(gflops(2_500_000_000), "2.50");
+        assert_eq!(ratio(1.5), "1.50x");
+    }
+}

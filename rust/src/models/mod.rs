@@ -1,0 +1,8 @@
+//! Model-zoo metadata: real-architecture shape schedules for the paper's
+//! analytic accounting (Tables 1–3, Fig. 2) — the trainable compact
+//! variants are described by the AOT manifest instead.
+
+pub mod zoo;
+
+pub use zoo::{by_name, mcunet, mobilenetv2, resnet18, resnet34,
+              segmentation, tinyllama_block_linears, Arch};

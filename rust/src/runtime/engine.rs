@@ -1,0 +1,304 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once
+//! on the CPU client, caches the executables, and runs them on host
+//! tensors. This is the only place the `xla` crate is touched.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::value::{DType, HostTensor};
+
+/// Compile/run statistics, surfaced in `asi engine-stats` and the benches.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_s: f64,
+    pub runs: usize,
+    pub run_s: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+/// One argument of a mixed (buffers + host tensors) execution.
+pub enum ExecArg<'a> {
+    /// A device-resident buffer (uploaded earlier via `Engine::upload`).
+    Buf(&'a xla::PjRtBuffer),
+    /// A host tensor uploaded for this call only.
+    Host(&'a HostTensor),
+}
+
+/// The engine owns the PJRT client, the manifest, and the executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and connect the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) the named executable.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.exec(name)?;
+        let path = self.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_s += dt;
+        }
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of executables (amortize XLA compile up front).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Validate `inputs` against the manifest signature of `name`.
+    fn validate(&self, name: &str, inputs: &[HostTensor]) -> Result<()> {
+        let entry = self.manifest.exec(name)?;
+        if entry.inputs.len() != inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (sig, t)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if sig.shape != t.shape() {
+                bail!(
+                    "{name}: input {i} ('{}') shape mismatch: manifest {:?} vs \
+                     provided {:?}",
+                    sig.name,
+                    sig.shape,
+                    t.shape()
+                );
+            }
+            let want = sig.dtype;
+            let got = t.dtype();
+            if want != got {
+                bail!(
+                    "{name}: input {i} ('{}') dtype mismatch: manifest {:?} vs \
+                     provided {:?}",
+                    sig.name,
+                    want,
+                    got
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute `name` on `inputs`; returns the flat output tuple.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        self.validate(name, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("ensured above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        let outs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.runs += 1;
+            st.run_s += dt;
+            st.h2d_bytes += inputs.iter().map(|t| 4 * t.len() as u64).sum::<u64>();
+            st.d2h_bytes += outs.iter().map(|t| 4 * t.len() as u64).sum::<u64>();
+        }
+        // Sanity: output arity should match the manifest.
+        let entry = self.manifest.exec(name)?;
+        if entry.outputs.len() != outs.len() {
+            bail!(
+                "{name}: manifest declares {} outputs, runtime produced {}",
+                entry.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Upload a host tensor to the device once; the returned buffer can
+    /// be reused across many `run_mixed` calls (the frozen-parameter
+    /// optimization: static weights cross the host-device boundary once
+    /// per session instead of once per step).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer::<f32>(data, shape, None),
+            HostTensor::S32 { shape, data } => self
+                .client
+                .buffer_from_host_buffer::<i32>(data, shape, None),
+        }
+        .context("uploading host tensor")?;
+        self.stats.borrow_mut().h2d_bytes += 4 * t.len() as u64;
+        Ok(buf)
+    }
+
+    /// Execute with a mix of resident device buffers and host tensors.
+    /// Host arguments are uploaded on the fly; buffer arguments are
+    /// passed through without any copy.
+    pub fn run_mixed(&self, name: &str, args: &[ExecArg<'_>])
+        -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.exec(name)?;
+        if entry.inputs.len() != args.len() {
+            bail!("{name}: expected {} inputs, got {}", entry.inputs.len(),
+                  args.len());
+        }
+        // Phase 1: validate + upload every host arg (indexed); phase 2:
+        // assemble the borrow list only once `owned` has stopped growing
+        // (references into a growing Vec would dangle on reallocation).
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut slots: Vec<Result<&xla::PjRtBuffer, usize>> =
+            Vec::with_capacity(args.len());
+        for (i, (sig, a)) in entry.inputs.iter().zip(args).enumerate() {
+            match a {
+                ExecArg::Buf(b) => slots.push(Ok(*b)),
+                ExecArg::Host(t) => {
+                    if sig.shape != t.shape() || sig.dtype != t.dtype() {
+                        bail!(
+                            "{name}: input {i} ('{}') expects {:?} {:?}",
+                            sig.name, sig.dtype, sig.shape
+                        );
+                    }
+                    slots.push(Err(owned.len()));
+                    owned.push(self.upload(t)?);
+                }
+            }
+        }
+        let bufs: Vec<&xla::PjRtBuffer> = slots
+            .into_iter()
+            .map(|s| match s {
+                Ok(b) => b,
+                Err(idx) => &owned[idx],
+            })
+            .collect();
+        let t0 = Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("ensured above");
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {name} (buffers)"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        let outs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.runs += 1;
+            st.run_s += dt;
+            st.d2h_bytes += outs.iter().map(|t| 4 * t.len() as u64).sum::<u64>();
+        }
+        Ok(outs)
+    }
+
+    /// Load a model's initial parameters from its data blob.
+    pub fn load_params(&self, model: &str) -> Result<Vec<HostTensor>> {
+        let pf = self.manifest.params_of(model)?;
+        let path = self.dir.join(&pf.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let total: usize = pf.tensors.iter().map(|t| t.elements()).sum();
+        if bytes.len() != 4 * total {
+            bail!(
+                "{}: expected {} bytes ({} f32), found {}",
+                pf.file, 4 * total, total, bytes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(pf.tensors.len());
+        let mut off = 0usize;
+        for sig in &pf.tensors {
+            let n = sig.elements();
+            let data: Vec<f32> = bytes[off..off + 4 * n]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            out.push(HostTensor::f32(sig.shape.clone(), data));
+            off += 4 * n;
+        }
+        Ok(out)
+    }
+
+    /// Build zero-filled inputs matching an executable's signature —
+    /// useful for smoke tests and latency benches.
+    pub fn zero_inputs(&self, name: &str) -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.exec(name)?;
+        Ok(entry
+            .inputs
+            .iter()
+            .map(|sig| match sig.dtype {
+                DType::F32 => HostTensor::f32(
+                    sig.shape.clone(),
+                    vec![0.0; sig.elements()],
+                ),
+                DType::S32 => HostTensor::s32(
+                    sig.shape.clone(),
+                    vec![0; sig.elements()],
+                ),
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,347 @@
+//! Parsing of `artifacts/manifest.json` — the contract between the AOT
+//! pipeline (`python/compile/aot.py`) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::value::DType;
+
+/// One input/output slot of an executable.
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    /// Semantic group: trained / frozen / x / y / lr / us / step / params /
+    /// loss / logits / rest / tokens — "" when untagged.
+    pub role: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    fn parse(v: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: v.get("name").as_str().unwrap_or("").to_string(),
+            role: v.get("role").as_str().unwrap_or("").to_string(),
+            shape: v.get("shape").usize_vec(),
+            dtype: DType::parse(v.get("dtype").as_str().unwrap_or("f32"))?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ExecEntry {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    /// init | infer | train
+    pub kind: String,
+    /// vanilla | asi | hosvd | gf ("" for init/infer)
+    pub method: String,
+    pub depth: usize,
+    /// Per-layer per-mode ranks (CNN ASI/HOSVD entries).
+    pub ranks: Vec<Vec<usize>>,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl ExecEntry {
+    /// Indices of inputs with the given role, in signature order.
+    pub fn input_indices(&self, role: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of outputs with the given role, in signature order.
+    pub fn output_indices(&self, role: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// CNN architecture description (mirrors `configs.EdgeNetConfig`).
+#[derive(Debug, Clone)]
+pub struct CnnModel {
+    pub name: String,
+    pub convs: Vec<(usize, usize)>, // (cout, stride)
+    pub num_classes: usize,
+    pub in_channels: usize,
+    pub image_size: usize,
+    pub batch_size: usize,
+    pub ksize: usize,
+    pub padding: usize,
+    /// Input activation shape (B, C, H, W) of each conv layer.
+    pub activation_shapes: Vec<[usize; 4]>,
+    /// Output shape (B, C', H', W') of each conv layer.
+    pub output_shapes: Vec<[usize; 4]>,
+}
+
+/// LM architecture description (mirrors `configs.TinyLMConfig`).
+#[derive(Debug, Clone)]
+pub struct LmModel {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub rank: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum ModelInfo {
+    Cnn(CnnModel),
+    Lm(LmModel),
+}
+
+/// Initial-parameter blob description for one model.
+#[derive(Debug, Clone)]
+pub struct ParamsFile {
+    pub file: String,
+    pub tensors: Vec<TensorSig>,
+}
+
+/// The whole manifest: models + parameter blobs + executables.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelInfo>,
+    pub params: BTreeMap<String, ParamsFile>,
+    pub executables: BTreeMap<String, ExecEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest json")?;
+        let mut models = BTreeMap::new();
+        let mut params = BTreeMap::new();
+        if let Some(ms) = root.get("models").as_obj() {
+            for (name, m) in ms {
+                models.insert(name.clone(), parse_model(name, m)?);
+                if let Some(file) = m.get("params_file").as_str() {
+                    let tensors = m
+                        .get("params")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSig::parse)
+                        .collect::<Result<Vec<_>>>()?;
+                    params.insert(
+                        name.clone(),
+                        ParamsFile { file: file.to_string(), tensors },
+                    );
+                }
+            }
+        }
+        let mut executables = BTreeMap::new();
+        if let Some(es) = root.get("executables").as_obj() {
+            for (name, e) in es {
+                executables.insert(name.clone(), parse_exec(name, e)?);
+            }
+        }
+        if executables.is_empty() {
+            bail!("manifest has no executables — run `make artifacts`");
+        }
+        Ok(Manifest { models, params, executables })
+    }
+
+    pub fn params_of(&self, model: &str) -> Result<&ParamsFile> {
+        self.params
+            .get(model)
+            .with_context(|| format!("no params blob for model '{model}'"))
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecEntry> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("executable '{name}' not in manifest"))
+    }
+
+    pub fn cnn(&self, name: &str) -> Result<&CnnModel> {
+        match self.models.get(name) {
+            Some(ModelInfo::Cnn(c)) => Ok(c),
+            _ => bail!("model '{name}' is not a CNN in the manifest"),
+        }
+    }
+
+    pub fn lm(&self, name: &str) -> Result<&LmModel> {
+        match self.models.get(name) {
+            Some(ModelInfo::Lm(l)) => Ok(l),
+            _ => bail!("model '{name}' is not an LM in the manifest"),
+        }
+    }
+
+    /// Training executable names for (model, method, depth).
+    pub fn find_train(&self, model: &str, method: &str, depth: usize) -> Vec<&ExecEntry> {
+        self.executables
+            .values()
+            .filter(|e| {
+                e.model == model && e.kind == "train" && e.method == method
+                    && e.depth == depth
+            })
+            .collect()
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    match m.get("kind").as_str() {
+        Some("cnn") => {
+            let convs = m
+                .get("convs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|c| {
+                    (
+                        c.get("cout").as_usize().unwrap_or(0),
+                        c.get("stride").as_usize().unwrap_or(1),
+                    )
+                })
+                .collect();
+            let to4 = |v: &Json| -> Vec<[usize; 4]> {
+                v.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| {
+                        let u = s.usize_vec();
+                        [u[0], u[1], u[2], u[3]]
+                    })
+                    .collect()
+            };
+            Ok(ModelInfo::Cnn(CnnModel {
+                name: name.to_string(),
+                convs,
+                num_classes: m.get("num_classes").as_usize().unwrap_or(10),
+                in_channels: m.get("in_channels").as_usize().unwrap_or(3),
+                image_size: m.get("image_size").as_usize().unwrap_or(32),
+                batch_size: m.get("batch_size").as_usize().unwrap_or(32),
+                ksize: m.get("ksize").as_usize().unwrap_or(3),
+                padding: m.get("padding").as_usize().unwrap_or(1),
+                activation_shapes: to4(m.get("activation_shapes")),
+                output_shapes: to4(m.get("output_shapes")),
+            }))
+        }
+        Some("lm") => Ok(ModelInfo::Lm(LmModel {
+            name: name.to_string(),
+            vocab: m.get("vocab").as_usize().unwrap_or(256),
+            d_model: m.get("d_model").as_usize().unwrap_or(128),
+            n_heads: m.get("n_heads").as_usize().unwrap_or(4),
+            n_blocks: m.get("n_blocks").as_usize().unwrap_or(5),
+            d_ff: m.get("d_ff").as_usize().unwrap_or(256),
+            seq_len: m.get("seq_len").as_usize().unwrap_or(64),
+            batch_size: m.get("batch_size").as_usize().unwrap_or(8),
+            rank: m.get("rank").as_usize().unwrap_or(20),
+        })),
+        other => bail!("unknown model kind {other:?} for '{name}'"),
+    }
+}
+
+fn parse_exec(name: &str, e: &Json) -> Result<ExecEntry> {
+    let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+        e.get(key)
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSig::parse)
+            .collect()
+    };
+    Ok(ExecEntry {
+        name: name.to_string(),
+        file: e.get("file").as_str().unwrap_or("").to_string(),
+        model: e.get("model").as_str().unwrap_or("").to_string(),
+        kind: e.get("kind").as_str().unwrap_or("").to_string(),
+        method: e.get("method").as_str().unwrap_or("").to_string(),
+        depth: e.get("depth").as_usize().unwrap_or(0),
+        ranks: e
+            .get("ranks")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|r| r.usize_vec())
+            .collect(),
+        inputs: sigs("inputs")?,
+        outputs: sigs("outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m": {"kind": "cnn", "convs": [{"cout": 8, "stride": 2}],
+               "num_classes": 4, "in_channels": 3, "image_size": 8,
+               "batch_size": 2, "ksize": 3, "padding": 1,
+               "activation_shapes": [[2,3,8,8]], "output_shapes": [[2,8,4,4]]}
+      },
+      "executables": {
+        "m_vanilla_d1": {
+          "file": "m_vanilla_d1.hlo.txt", "model": "m", "kind": "train",
+          "method": "vanilla", "depth": 1,
+          "inputs": [
+            {"name": "x", "role": "x", "shape": [2,3,8,8], "dtype": "f32"},
+            {"name": "y", "role": "y", "shape": [2], "dtype": "s32"}
+          ],
+          "outputs": [
+            {"name": "loss", "role": "loss", "shape": [], "dtype": "f32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.exec("m_vanilla_d1").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].dtype, DType::S32);
+        assert_eq!(e.input_indices("x"), vec![0]);
+        let cnn = m.cnn("m").unwrap();
+        assert_eq!(cnn.activation_shapes[0], [2, 3, 8, 8]);
+        assert_eq!(m.find_train("m", "vanilla", 1).len(), 1);
+    }
+
+    #[test]
+    fn missing_exec_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.exec("nope").is_err());
+        assert!(m.lm("m").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.executables.len() >= 10);
+            assert!(m.cnn("mcunet").is_ok());
+            assert!(m.lm("tinylm").is_ok());
+        }
+    }
+}

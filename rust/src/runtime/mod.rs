@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper + AOT artifact manifest.
+//!
+//! `Engine` loads `artifacts/*.hlo.txt` (HLO text produced by
+//! `python/compile/aot.py`), compiles each once on the PJRT CPU client and
+//! executes it from the L3 hot path. Python never runs here.
+
+pub mod engine;
+pub mod manifest;
+pub mod value;
+
+pub use engine::{Engine, EngineStats, ExecArg};
+pub use manifest::{CnnModel, ExecEntry, LmModel, Manifest, ModelInfo,
+                   ParamsFile, TensorSig};
+pub use value::{DType, HostTensor};

@@ -1,0 +1,170 @@
+//! Host-side tensor values exchanged with PJRT executables.
+
+use anyhow::{bail, Context, Result};
+
+/// Element dtype of an executable input/output (matches the manifest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+}
+
+/// A host tensor: shape + typed data. The lingua franca between the
+/// coordinator (which owns training state) and the PJRT engine.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn s32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::S32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_s32(v: i32) -> Self {
+        HostTensor::S32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::S32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::S32 { .. } => DType::S32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::S32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got s32"),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::S32 { data, .. } => Ok(data),
+            _ => bail!("expected s32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar extraction (loss values etc.).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    // -- PJRT interop -------------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        match self {
+            HostTensor::F32 { shape, data } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .context("reshape f32 literal")
+            }
+            HostTensor::S32 { shape, data } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .context("reshape s32 literal")
+            }
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().context("literal to f32 vec")?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::S32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().context("literal to s32 vec")?,
+            }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_access() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_s32().is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(1.5);
+        assert_eq!(t.scalar().unwrap(), 1.5);
+        assert!(HostTensor::f32(vec![2], vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    fn zeros() {
+        let t = HostTensor::zeros(&[4, 5]);
+        assert_eq!(t.len(), 20);
+        assert!(t.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+}

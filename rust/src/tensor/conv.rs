@@ -1,0 +1,269 @@
+//! Direct 2-D convolution (NCHW x OIHW) with both backward passes.
+//!
+//! Used by the offline perplexity probe (exact vs low-rank weight
+//! gradients, eq. 7) — the training hot path convolves inside XLA, so
+//! these loops favour clarity over peak throughput. Semantics match
+//! `ref.conv2d` / `ref.conv_dw_ref` / `ref.conv_dx_ref`.
+
+use super::tensor4::Tensor4;
+
+/// Convolution geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub stride: usize,
+    pub padding: usize,
+    pub ksize: usize,
+}
+
+impl ConvGeom {
+    pub fn out_size(&self, n: usize) -> usize {
+        (n + 2 * self.padding - self.ksize) / self.stride + 1
+    }
+}
+
+/// Forward: `y[b, o, i, j] = sum_{c,p,q} x[b, c, i*s+p-pad, j*s+q-pad] w[o, c, p, q]`.
+pub fn conv2d(x: &Tensor4, w: &Tensor4, g: ConvGeom) -> Tensor4 {
+    let [bsz, cin, h, wd] = x.dims;
+    let [cout, cin2, kh, kw] = w.dims;
+    assert_eq!(cin, cin2, "conv2d channel mismatch");
+    assert_eq!(kh, g.ksize);
+    assert_eq!(kw, g.ksize);
+    let (ho, wo) = (g.out_size(h), g.out_size(wd));
+    let mut y = Tensor4::zeros([bsz, cout, ho, wo]);
+    for b in 0..bsz {
+        for o in 0..cout {
+            for c in 0..cin {
+                for p in 0..kh {
+                    for q in 0..kw {
+                        let wv = w.at([o, c, p, q]);
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        for i in 0..ho {
+                            let xi = (i * g.stride + p) as isize - g.padding as isize;
+                            if xi < 0 || xi as usize >= h {
+                                continue;
+                            }
+                            for j in 0..wo {
+                                let xj =
+                                    (j * g.stride + q) as isize - g.padding as isize;
+                                if xj < 0 || xj as usize >= wd {
+                                    continue;
+                                }
+                                *y.at_mut([b, o, i, j]) +=
+                                    x.at([b, c, xi as usize, xj as usize]) * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Weight gradient (eq. 1): `dW[o,c,p,q] = sum_{b,i,j} gy[b,o,i,j] * x[b,c,i*s+p-pad,j*s+q-pad]`.
+pub fn conv2d_dw(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4 {
+    let [bsz, cin, h, wd] = x.dims;
+    let [bsz2, cout2, ho, wo] = gy.dims;
+    assert_eq!(bsz, bsz2);
+    assert_eq!(cout, cout2);
+    let mut dw = Tensor4::zeros([cout, cin, g.ksize, g.ksize]);
+    for b in 0..bsz {
+        for o in 0..cout {
+            for i in 0..ho {
+                for j in 0..wo {
+                    let gv = gy.at([b, o, i, j]);
+                    if gv == 0.0 {
+                        continue;
+                    }
+                    for c in 0..cin {
+                        for p in 0..g.ksize {
+                            let xi = (i * g.stride + p) as isize - g.padding as isize;
+                            if xi < 0 || xi as usize >= h {
+                                continue;
+                            }
+                            for q in 0..g.ksize {
+                                let xj =
+                                    (j * g.stride + q) as isize - g.padding as isize;
+                                if xj < 0 || xj as usize >= wd {
+                                    continue;
+                                }
+                                *dw.at_mut([o, c, p, q]) +=
+                                    gv * x.at([b, c, xi as usize, xj as usize]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dw
+}
+
+/// Input gradient (eq. 2): transposed convolution of `gy` with `w`.
+pub fn conv2d_dx(gy: &Tensor4, w: &Tensor4, g: ConvGeom, x_dims: [usize; 4]) -> Tensor4 {
+    let [bsz, cout, ho, wo] = gy.dims;
+    let [cout2, cin, _, _] = w.dims;
+    assert_eq!(cout, cout2);
+    let [_, cin2, h, wd] = x_dims;
+    assert_eq!(cin, cin2);
+    let mut dx = Tensor4::zeros(x_dims);
+    for b in 0..bsz {
+        for o in 0..cout {
+            for i in 0..ho {
+                for j in 0..wo {
+                    let gv = gy.at([b, o, i, j]);
+                    if gv == 0.0 {
+                        continue;
+                    }
+                    for c in 0..cin {
+                        for p in 0..g.ksize {
+                            let xi = (i * g.stride + p) as isize - g.padding as isize;
+                            if xi < 0 || xi as usize >= h {
+                                continue;
+                            }
+                            for q in 0..g.ksize {
+                                let xj =
+                                    (j * g.stride + q) as isize - g.padding as isize;
+                                if xj < 0 || xj as usize >= wd {
+                                    continue;
+                                }
+                                *dx.at_mut([b, c, xi as usize, xj as usize]) +=
+                                    gv * w.at([o, c, p, q]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    const G: ConvGeom = ConvGeom { stride: 1, padding: 1, ksize: 3 };
+
+    #[test]
+    fn identity_kernel() {
+        // 1-channel delta kernel reproduces the input.
+        let x = randt([1, 1, 5, 5], 1);
+        let mut w = Tensor4::zeros([1, 1, 3, 3]);
+        *w.at_mut([0, 0, 1, 1]) = 1.0;
+        let y = conv2d(&x, &w, G);
+        assert_eq!(y.dims, x.dims);
+        for (a, b) in x.data.iter().zip(&y.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stride2_shape() {
+        let x = randt([2, 3, 8, 8], 2);
+        let w = randt([4, 3, 3, 3], 3);
+        let g = ConvGeom { stride: 2, padding: 1, ksize: 3 };
+        let y = conv2d(&x, &w, g);
+        assert_eq!(y.dims, [2, 4, 4, 4]);
+    }
+
+    /// Finite-difference check of dW.
+    #[test]
+    fn dw_finite_difference() {
+        let x = randt([1, 2, 4, 4], 4);
+        let mut w = randt([2, 2, 3, 3], 5);
+        let gy = randt([1, 2, 4, 4], 6);
+        let dw = conv2d_dw(&x, &gy, G, 2);
+        let loss = |w: &Tensor4| -> f32 {
+            conv2d(&x, w, G)
+                .data
+                .iter()
+                .zip(&gy.data)
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-3;
+        for k in [0usize, 7, 17, 35] {
+            let orig = w.data[k];
+            w.data[k] = orig + eps;
+            let lp = loss(&w);
+            w.data[k] = orig - eps;
+            let lm = loss(&w);
+            w.data[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dw.data[k]).abs() < 2e-2,
+                "k={k}: fd {fd} vs dw {}",
+                dw.data[k]
+            );
+        }
+    }
+
+    /// Finite-difference check of dx.
+    #[test]
+    fn dx_finite_difference() {
+        let mut x = randt([1, 2, 4, 4], 7);
+        let w = randt([2, 2, 3, 3], 8);
+        let gy = randt([1, 2, 4, 4], 9);
+        let dx = conv2d_dx(&gy, &w, G, x.dims);
+        let loss = |x: &Tensor4| -> f32 {
+            conv2d(x, &w, G)
+                .data
+                .iter()
+                .zip(&gy.data)
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-3;
+        for k in [0usize, 5, 13, 31] {
+            let orig = x.data[k];
+            x.data[k] = orig + eps;
+            let lp = loss(&x);
+            x.data[k] = orig - eps;
+            let lm = loss(&x);
+            x.data[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx.data[k]).abs() < 2e-2,
+                "k={k}: fd {fd} vs dx {}",
+                dx.data[k]
+            );
+        }
+    }
+
+    #[test]
+    fn stride2_dw_consistent_with_forward_perturbation() {
+        let g = ConvGeom { stride: 2, padding: 1, ksize: 3 };
+        let x = randt([1, 1, 6, 6], 10);
+        let mut w = randt([1, 1, 3, 3], 11);
+        let gy = randt([1, 1, 3, 3], 12);
+        let dw = conv2d_dw(&x, &gy, g, 1);
+        let loss = |w: &Tensor4| -> f32 {
+            conv2d(&x, w, g)
+                .data
+                .iter()
+                .zip(&gy.data)
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-3;
+        for k in 0..9 {
+            let orig = w.data[k];
+            w.data[k] = orig + eps;
+            let lp = loss(&w);
+            w.data[k] = orig - eps;
+            let lm = loss(&w);
+            w.data[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dw.data[k]).abs() < 2e-2);
+        }
+    }
+}

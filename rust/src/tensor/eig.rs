@@ -1,0 +1,199 @@
+//! Symmetric eigensolver (cyclic Jacobi) and Gram-based truncated SVD.
+//!
+//! Rank selection needs per-mode singular spectra of activation
+//! unfoldings `A_m in R^{d x P_d}`. `d` is a mode dimension (B, C, H or W
+//! — at most a few hundred), so we eigendecompose the tiny Gram matrix
+//! `A_m A_m^T in R^{d x d}`: singular values are the square roots of its
+//! eigenvalues and the left singular vectors are its eigenvectors. This
+//! avoids a general SVD entirely and is exactly what HOSVD needs.
+
+use super::mat::Mat;
+
+/// Eigen-decomposition of a symmetric matrix, eigenvalues descending.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    pub values: Vec<f32>,
+    /// Column-eigenvectors: `vectors[(i, k)]` is component i of vector k.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi with threshold sweeping. Converges quadratically; `a`
+/// must be symmetric. O(n^3) per sweep with ~log(n) sweeps — fine for the
+/// n <= 512 matrices rank selection produces.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += (m[(i, j)] as f64) * (m[(i, j)] as f64);
+                }
+            }
+        }
+        s
+    };
+
+    let total: f64 = m.data.iter().map(|x| (*x as f64) * (*x as f64)).sum();
+    let tol = (total * 1e-18).max(1e-30);
+
+    for _sweep in 0..60 {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) as f64 / apq as f64;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                let (c, s) = (c as f32, s as f32);
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Sort descending by eigenvalue.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let evals: Vec<f32> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| evals[b].partial_cmp(&evals[a]).unwrap());
+    let values: Vec<f32> = idx.iter().map(|&i| evals[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newc, &oldc) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, newc)] = v[(r, oldc)];
+        }
+    }
+    SymEig { values, vectors }
+}
+
+/// Truncated left SVD of `a` via the Gram matrix: returns `(U_r, sigma)`
+/// with `U_r` the top-`rank` left singular vectors and `sigma` ALL
+/// singular values (descending) — callers use the full spectrum for
+/// explained-variance thresholds.
+pub fn left_svd(a: &Mat, rank: usize) -> (Mat, Vec<f32>) {
+    let eig = sym_eig(&a.gram());
+    let sigma: Vec<f32> = eig.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    let r = rank.min(a.rows);
+    (eig.vectors.take_cols(r), sigma)
+}
+
+/// Smallest rank whose cumulative squared-singular-value energy reaches
+/// `eps` — the explained-variance criterion of HOSVD_eps.
+pub fn rank_for_energy(sigma: &[f32], eps: f32) -> usize {
+    let total: f64 = sigma.iter().map(|&s| (s as f64) * (s as f64)).sum();
+    if total <= 0.0 {
+        return 1;
+    }
+    let mut acc = 0.0f64;
+    for (i, &s) in sigma.iter().enumerate() {
+        acc += (s as f64) * (s as f64);
+        if acc / total >= eps as f64 {
+            return i + 1;
+        }
+    }
+    sigma.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eig_diagonal() {
+        let mut d = Mat::zeros(3, 3);
+        d[(0, 0)] = 1.0;
+        d[(1, 1)] = 5.0;
+        d[(2, 2)] = 3.0;
+        let e = sym_eig(&d);
+        assert!((e.values[0] - 5.0).abs() < 1e-5);
+        assert!((e.values[1] - 3.0).abs() < 1e-5);
+        assert!((e.values[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        let mut rng = Rng::new(11);
+        let b = Mat::randn(5, 5, &mut rng);
+        let a = b.matmul(&b.transpose()); // symmetric PSD
+        let e = sym_eig(&a);
+        // A == V diag(l) V^T
+        let mut recon = Mat::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut s = 0.0;
+                for k in 0..5 {
+                    s += e.vectors[(i, k)] * e.values[k] * e.vectors[(j, k)];
+                }
+                recon[(i, j)] = s;
+            }
+        }
+        for (x, y) in a.data.iter().zip(&recon.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn svd_matches_known_rank() {
+        // Build a rank-2 matrix; sigma should have exactly 2 nonzeros.
+        let mut rng = Rng::new(12);
+        let u = Mat::randn(6, 2, &mut rng);
+        let v = Mat::randn(2, 9, &mut rng);
+        let a = u.matmul(&v);
+        let (_, sigma) = left_svd(&a, 2);
+        assert!(sigma[1] > 1e-3);
+        assert!(sigma[2] < 1e-2, "sigma2 = {}", sigma[2]);
+        assert_eq!(rank_for_energy(&sigma, 0.999), 2);
+    }
+
+    #[test]
+    fn left_vectors_capture_energy() {
+        let mut rng = Rng::new(13);
+        let u = Mat::randn(6, 1, &mut rng);
+        let v = Mat::randn(1, 14, &mut rng);
+        let a = u.matmul(&v);
+        let (u1, _) = left_svd(&a, 1);
+        // Projecting onto u1 should preserve nearly all of A's energy.
+        let proj = u1.matmul(&u1.t_matmul(&a));
+        let res = a.sub(&proj).frob_norm() / a.frob_norm();
+        assert!(res < 1e-3, "residual {res}");
+    }
+
+    #[test]
+    fn rank_energy_edges() {
+        assert_eq!(rank_for_energy(&[1.0, 0.0, 0.0], 0.5), 1);
+        assert_eq!(rank_for_energy(&[0.0, 0.0], 0.9), 1);
+        let equal = [1.0f32; 4];
+        assert_eq!(rank_for_energy(&equal, 0.75), 3);
+    }
+}

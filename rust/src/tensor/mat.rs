@@ -1,0 +1,280 @@
+//! Dense row-major f32 matrices with the linear algebra the rank-selection
+//! and host-compression paths need: matmul, transpose, Gram matrices,
+//! modified Gram-Schmidt. Deliberately simple and allocation-explicit;
+//! the training hot path runs in XLA, not here.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len(), "Mat::from_vec size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — blocked ikj loop (cache-friendly row-major).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `self @ self^T` (symmetric, rows x rows).
+    pub fn gram(&self) -> Mat {
+        let m = self.rows;
+        let mut out = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in i..m {
+                let mut s = 0.0;
+                for (a, b) in self.row(i).iter().zip(self.row(j)) {
+                    s += a * b;
+                }
+                out.data[i * m + j] = s;
+                out.data[j * m + i] = s;
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    /// Keep the first `r` columns.
+    pub fn take_cols(&self, r: usize) -> Mat {
+        assert!(r <= self.cols);
+        let mut out = Mat::zeros(self.rows, r);
+        for i in 0..self.rows {
+            out.data[i * r..(i + 1) * r]
+                .copy_from_slice(&self.row(i)[..r]);
+        }
+        out
+    }
+
+    /// In-place modified Gram-Schmidt over columns; mirrors the Pallas MGS
+    /// kernel (same eps floor) so host and device agree numerically.
+    pub fn mgs(&self) -> Mat {
+        const EPS: f32 = 1e-8;
+        let (n, r) = (self.rows, self.cols);
+        let mut q = self.clone();
+        for j in 0..r {
+            for k in 0..j {
+                let mut dot = 0.0;
+                for i in 0..n {
+                    dot += q.data[i * r + k] * q.data[i * r + j];
+                }
+                for i in 0..n {
+                    let qk = q.data[i * r + k];
+                    q.data[i * r + j] -= dot * qk;
+                }
+            }
+            let mut norm = 0.0;
+            for i in 0..n {
+                let v = q.data[i * r + j];
+                norm += v * v;
+            }
+            let norm = norm.sqrt().max(EPS);
+            for i in 0..n {
+                q.data[i * r + j] /= norm;
+            }
+        }
+        q
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(4, 6, &mut rng);
+        let i = Mat::eye(6);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(5, 3, &mut rng);
+        let b = Mat::randn(5, 4, &mut rng);
+        let want = a.transpose().matmul(&b);
+        let got = a.t_matmul(&b);
+        for (x, y) in want.data.iter().zip(&got.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_symmetric_psd_diag() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 10, &mut rng);
+        let g = a.gram();
+        for i in 0..4 {
+            assert!(g[(i, i)] >= 0.0);
+            for j in 0..4 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn mgs_orthonormal() {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(20, 5, &mut rng);
+        let q = a.mgs();
+        let qtq = q.t_matmul(&q);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq[(i, j)] - want).abs() < 1e-4,
+                    "qtq[{i},{j}] = {}",
+                    qtq[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mgs_preserves_span() {
+        // For a full-rank square input, Q Q^T should be the identity.
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(4, 4, &mut rng);
+        let q = a.mgs();
+        let qqt = q.matmul(&q.transpose());
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qqt[(i, j)] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn take_cols_and_transpose() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.take_cols(2).data, vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(a.transpose().data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Host tensor-algebra substrate: dense matrices, 4-mode tensors, a
+//! symmetric eigensolver (Jacobi) for Gram-based truncated SVD, and direct
+//! convolutions with both backward passes. All offline-path code — the
+//! training hot path runs inside XLA executables.
+
+pub mod conv;
+pub mod eig;
+pub mod mat;
+pub mod tensor4;
+
+pub use conv::{conv2d, conv2d_dw, conv2d_dx, ConvGeom};
+pub use eig::{left_svd, rank_for_energy, sym_eig, SymEig};
+pub use mat::Mat;
+pub use tensor4::Tensor4;

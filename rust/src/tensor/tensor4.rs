@@ -1,0 +1,207 @@
+//! 4-mode tensors (B, C, H, W) with the Tucker operations ASI needs:
+//! mode unfolding/folding and m-mode products. Layout conventions match
+//! `python/compile/kernels/ref.py` exactly (`moveaxis(m, 0).reshape`),
+//! which pytest cross-checks through the shared test vectors.
+
+use super::mat::Mat;
+
+/// Dense row-major (C-contiguous) 4-D tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor4 {
+    pub dims: [usize; 4],
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(dims: [usize; 4]) -> Tensor4 {
+        Tensor4 { dims, data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn from_vec(dims: [usize; 4], data: Vec<f32>) -> Tensor4 {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor4 { dims, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, i: [usize; 4]) -> usize {
+        let d = self.dims;
+        ((i[0] * d[1] + i[1]) * d[2] + i[2]) * d[3] + i[3]
+    }
+
+    #[inline]
+    pub fn at(&self, i: [usize; 4]) -> f32 {
+        self.data[self.idx(i)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: [usize; 4]) -> &mut f32 {
+        let k = self.idx(i);
+        &mut self.data[k]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Tensor4) -> Tensor4 {
+        assert_eq!(self.dims, other.dims);
+        Tensor4 {
+            dims: self.dims,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// Mode-`m` unfolding: `(dims[m], prod(other dims))` with the
+    /// remaining axes in original order (numpy moveaxis semantics).
+    pub fn unfold(&self, m: usize) -> Mat {
+        let d = self.dims;
+        let rows = d[m];
+        let cols = self.numel() / rows;
+        let mut out = Mat::zeros(rows, cols);
+        // Axis order after moveaxis(m, 0).
+        let order: Vec<usize> =
+            std::iter::once(m).chain((0..4).filter(|&a| a != m)).collect();
+        let od: Vec<usize> = order.iter().map(|&a| d[a]).collect();
+        let mut i = [0usize; 4]; // index in output (moved) order
+        for flat in 0..self.numel() {
+            // Decompose flat into the moved-order index.
+            let mut rem = flat;
+            for a in (0..4).rev() {
+                i[a] = rem % od[a];
+                rem /= od[a];
+            }
+            let mut src = [0usize; 4];
+            for (pos, &axis) in order.iter().enumerate() {
+                src[axis] = i[pos];
+            }
+            out.data[flat] = self.at(src);
+        }
+        out
+    }
+
+    /// Inverse of `unfold` for a tensor of logical shape `dims`.
+    pub fn fold(mat: &Mat, m: usize, dims: [usize; 4]) -> Tensor4 {
+        assert_eq!(mat.rows, dims[m]);
+        let mut out = Tensor4::zeros(dims);
+        let order: Vec<usize> =
+            std::iter::once(m).chain((0..4).filter(|&a| a != m)).collect();
+        let od: Vec<usize> = order.iter().map(|&a| dims[a]).collect();
+        let n = out.numel();
+        let mut i = [0usize; 4];
+        for flat in 0..n {
+            let mut rem = flat;
+            for a in (0..4).rev() {
+                i[a] = rem % od[a];
+                rem /= od[a];
+            }
+            let mut dst = [0usize; 4];
+            for (pos, &axis) in order.iter().enumerate() {
+                dst[axis] = i[pos];
+            }
+            *out.at_mut(dst) = mat.data[flat];
+        }
+        out
+    }
+
+    /// m-mode product `A x_m mat` with `mat in R^{Q x dims[m]}`.
+    pub fn mode_product(&self, mat: &Mat, m: usize) -> Tensor4 {
+        assert_eq!(mat.cols, self.dims[m], "mode_product dim mismatch");
+        let unf = self.unfold(m);
+        let prod = mat.matmul(&unf);
+        let mut dims = self.dims;
+        dims[m] = mat.rows;
+        Tensor4::fold(&prod, m, dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randt(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4 {
+            dims,
+            data: rng.normal_vec(dims.iter().product()),
+        }
+    }
+
+    #[test]
+    fn unfold_mode0_is_reshape() {
+        // moveaxis(0,0) is identity, so mode-0 unfold == plain reshape.
+        let t = randt([2, 3, 4, 5], 1);
+        let u = t.unfold(0);
+        assert_eq!(u.rows, 2);
+        assert_eq!(u.data, t.data);
+    }
+
+    #[test]
+    fn unfold_fold_roundtrip_all_modes() {
+        let t = randt([2, 3, 4, 5], 2);
+        for m in 0..4 {
+            let u = t.unfold(m);
+            let back = Tensor4::fold(&u, m, t.dims);
+            assert_eq!(back, t, "mode {m}");
+        }
+    }
+
+    #[test]
+    fn unfold_mode1_layout() {
+        // Verify the exact column order against the numpy convention:
+        // element (b,c,h,w) of mode-1 unfold is at (c, b*H*W + h*W + w).
+        let t = randt([2, 3, 2, 2], 3);
+        let u = t.unfold(1);
+        for b in 0..2 {
+            for c in 0..3 {
+                for h in 0..2 {
+                    for w in 0..2 {
+                        let col = (b * 2 + h) * 2 + w;
+                        assert_eq!(u.at(c, col), t.at([b, c, h, w]));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_product_identity() {
+        let t = randt([2, 3, 4, 5], 4);
+        for m in 0..4 {
+            let i = Mat::eye(t.dims[m]);
+            assert_eq!(t.mode_product(&i, m), t);
+        }
+    }
+
+    #[test]
+    fn mode_product_shrinks() {
+        let t = randt([2, 3, 4, 5], 5);
+        let mut rng = Rng::new(6);
+        let p = Mat::randn(2, 4, &mut rng);
+        let r = t.mode_product(&p, 2);
+        assert_eq!(r.dims, [2, 3, 2, 5]);
+    }
+
+    #[test]
+    fn mode_products_commute_across_modes() {
+        // (A x_1 P) x_3 Q == (A x_3 Q) x_1 P for distinct modes.
+        let t = randt([3, 4, 5, 2], 7);
+        let mut rng = Rng::new(8);
+        let p = Mat::randn(2, 4, &mut rng);
+        let q = Mat::randn(3, 2, &mut rng);
+        let a = t.mode_product(&p, 1).mode_product(&q, 3);
+        let b = t.mode_product(&q, 3).mode_product(&p, 1);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Offline substrates: JSON, deterministic RNG, timing, property testing.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

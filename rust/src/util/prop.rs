@@ -1,0 +1,99 @@
+//! A miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `cases(seed, n, |g| ...)` runs a property over `n` generated cases; on
+//! failure it reports the case index and the generator seed so the case is
+//! exactly reproducible. Shrinking is deliberately omitted — generators
+//! here are small and parametric, so reporting the seed is enough.
+
+use super::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f32 uniform in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    /// Vec of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `n` cases of `prop`; panics with a reproducible report on failure.
+pub fn cases<F>(seed: u64, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..n {
+        let mut g = Gen { rng: Rng::new(seed).fold(case as u64), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are close (atol + rtol), with context on failure.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "mismatch at {i}: {x} vs {y} (|diff|={} > tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_run_all() {
+        let mut count = 0;
+        cases(1, 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case 3")]
+    fn failure_reports_case() {
+        cases(1, 10, |g| {
+            if g.case == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.000001], 1e-5, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Wall-clock timing + a tiny bench harness (criterion is unavailable in
+//! this offline build, so `cargo bench` targets use this instead).
+
+use std::time::Instant;
+
+/// Measure one closure invocation in seconds.
+pub fn time_once<F: FnOnce() -> R, R>(f: F) -> (f64, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Simple statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter (min {:.3}, max {:.3}, sd {:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured invocations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters.max(1) as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / iters.max(1) as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let mut n = 0u64;
+        let st = bench("noop", 1, 5, || n += 1);
+        assert_eq!(st.iters, 5);
+        assert_eq!(n, 6);
+        assert!(st.min_s <= st.mean_s && st.mean_s <= st.max_s);
+    }
+}

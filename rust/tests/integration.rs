@@ -1,0 +1,184 @@
+//! Cross-module integration tests (no artifacts required): the host
+//! compression stack, the probe, rank selection, the cost model and the
+//! synthetic data pipeline working together.
+
+use asi::compress::{asi_compress, hosvd_eps, hosvd_fixed, AsiState};
+use asi::coordinator::{backtracking_select, greedy_select,
+                       measure_perplexity, probe, HostEdgeNet};
+use asi::data::{ImageDataset, ImageSpec};
+use asi::metrics::flops::LayerDims;
+use asi::runtime::{CnnModel, HostTensor};
+use asi::tensor::{ConvGeom, Tensor4};
+use asi::util::rng::Rng;
+
+fn tiny_model() -> CnnModel {
+    CnnModel {
+        name: "tiny".into(),
+        convs: vec![(8, 2), (12, 1), (16, 1)],
+        num_classes: 4,
+        in_channels: 3,
+        image_size: 16,
+        batch_size: 8,
+        ksize: 3,
+        padding: 1,
+        activation_shapes: vec![
+            [8, 3, 16, 16],
+            [8, 8, 8, 8],
+            [8, 12, 8, 8],
+        ],
+        output_shapes: vec![[8, 8, 8, 8], [8, 12, 8, 8], [8, 16, 8, 8]],
+    }
+}
+
+fn tiny_params(model: &CnnModel, seed: u64) -> Vec<HostTensor> {
+    let mut rng = Rng::new(seed);
+    let mut params = Vec::new();
+    let mut cin = model.in_channels;
+    for &(cout, _) in &model.convs {
+        let n = cout * cin * model.ksize * model.ksize;
+        let scale = (2.0 / (cin * model.ksize * model.ksize) as f32).sqrt();
+        params.push(HostTensor::f32(
+            vec![cout, cin, model.ksize, model.ksize],
+            rng.normal_vec(n).iter().map(|v| v * scale).collect(),
+        ));
+        params.push(HostTensor::f32(vec![cout], vec![0.0; cout]));
+        cin = cout;
+    }
+    params.push(HostTensor::f32(
+        vec![cin, model.num_classes],
+        rng.normal_vec(cin * model.num_classes)
+            .iter()
+            .map(|v| v * 0.1)
+            .collect(),
+    ));
+    params.push(HostTensor::f32(
+        vec![model.num_classes],
+        vec![0.0; model.num_classes],
+    ));
+    params
+}
+
+fn probe_capture(seed: u64) -> (CnnModel, asi::coordinator::ProbeCapture) {
+    let model = tiny_model();
+    let net = HostEdgeNet::from_params(&model, &tiny_params(&model, seed))
+        .unwrap();
+    let ds = ImageDataset::new(ImageSpec {
+        classes: 4,
+        channels: 3,
+        size: 16,
+        noise: 0.3,
+        seed: 9,
+    });
+    let b = ds.batch("train", 0, 8);
+    let x = Tensor4::from_vec([8, 3, 16, 16], b.x.clone());
+    let cap = probe(&net, &x, &b.y);
+    (model, cap)
+}
+
+#[test]
+fn perplexity_pipeline_end_to_end() {
+    let (model, cap) = probe_capture(1);
+    let geoms: Vec<ConvGeom> = model
+        .convs
+        .iter()
+        .map(|&(_, s)| ConvGeom { stride: s, padding: 1, ksize: 3 })
+        .collect();
+    let table = measure_perplexity(&cap, &geoms, 1, &[0.5, 0.7, 0.9])
+        .unwrap();
+    assert_eq!(table.layers.len(), 2);
+    for l in &table.layers {
+        // Higher eps -> higher rank -> lower (or equal) perplexity,
+        // higher memory (Fig. 6's monotonicity).
+        for j in 1..l.perplexity.len() {
+            assert!(
+                l.perplexity[j] <= l.perplexity[j - 1] * 1.05 + 1e-5,
+                "layer {} perp not monotone: {:?}",
+                l.layer,
+                l.perplexity
+            );
+            assert!(l.mem_bytes[j] >= l.mem_bytes[j - 1]);
+        }
+    }
+    // Selection respects the budget and is monotone in it.
+    let budgets = [4u64 * 1024, 16 * 1024, 128 * 1024];
+    let mut last_perp = f32::INFINITY;
+    for &budget in &budgets {
+        if let Some(sel) = backtracking_select(&table, budget) {
+            assert!(sel.total_mem_bytes <= budget);
+            assert!(sel.total_perplexity <= last_perp + 1e-5);
+            last_perp = sel.total_perplexity;
+            // Greedy also fits the budget and never beats exact.
+            let g = greedy_select(&table, budget).unwrap();
+            assert!(g.total_mem_bytes <= budget);
+            assert!(g.total_perplexity >= sel.total_perplexity - 1e-5);
+        }
+    }
+}
+
+#[test]
+fn lowrank_gradient_error_shrinks_with_eps() {
+    // The premise of the perplexity metric: more explained variance ->
+    // smaller eq.-7 distance to the exact gradient.
+    let (model, cap) = probe_capture(2);
+    let li = 2; // last layer
+    let g = ConvGeom { stride: model.convs[li].1, padding: 1, ksize: 3 };
+    let exact = &cap.dws[li];
+    let mut last = f32::INFINITY;
+    for eps in [0.4f32, 0.7, 0.95] {
+        let (t, _) = hosvd_eps(&cap.acts[li], eps);
+        let err = exact.sub(&t.lowrank_dw(&cap.gys[li], g)).frob_norm();
+        assert!(err <= last * 1.05 + 1e-6, "eps {eps}: {err} > {last}");
+        last = err;
+    }
+}
+
+#[test]
+fn warm_asi_approaches_hosvd_quality() {
+    // After a few warm iterations on a stable tensor, ASI's subspaces
+    // should approach HOSVD's reconstruction quality (the paper's core
+    // accuracy claim for stable activations).
+    let (_, cap) = probe_capture(3);
+    let a = &cap.acts[2];
+    let ranks = [4usize, 4, 4, 4].map(|r| r.min(a.dims[0]).min(a.dims[1])
+        .min(a.dims[2]).min(a.dims[3]));
+    let h = hosvd_fixed(a, ranks);
+    let h_err = a.sub(&h.reconstruct()).frob_norm();
+    let mut st = AsiState::init(a.dims, ranks, &mut Rng::new(4));
+    let mut asi_err = f32::INFINITY;
+    for _ in 0..10 {
+        let t = asi_compress(a, &mut st);
+        asi_err = a.sub(&t.reconstruct()).frob_norm();
+    }
+    assert!(
+        asi_err <= h_err * 1.10,
+        "warm ASI err {asi_err} vs HOSVD err {h_err}"
+    );
+}
+
+#[test]
+fn analytic_storage_matches_actual_tucker() {
+    // metrics::tucker_storage (eq. 5) must equal the element count of an
+    // actual decomposition with the same ranks.
+    let dims = [8usize, 12, 8, 8];
+    let mut rng = Rng::new(5);
+    let a = Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()));
+    let ranks = [2usize, 3, 2, 2];
+    let t = hosvd_fixed(&a, ranks);
+    let l = LayerDims::new(dims[0], dims[1], dims[2], dims[3], 16, 1, 3);
+    assert_eq!(l.tucker_storage(ranks) as usize, t.storage());
+}
+
+#[test]
+fn dataset_learnable_by_probe_gradients() {
+    // Gradients on class-structured data should differ from gradients on
+    // pure noise (sanity that the synthetic task carries signal).
+    let (model, cap) = probe_capture(6);
+    let net = HostEdgeNet::from_params(&model, &tiny_params(&model, 6))
+        .unwrap();
+    let mut rng = Rng::new(7);
+    let noise = Tensor4::from_vec([8, 3, 16, 16],
+                                  rng.normal_vec(8 * 3 * 256));
+    let cap_noise = probe(&net, &noise, &[0, 1, 2, 3, 0, 1, 2, 3]);
+    let d = cap.dws[2].sub(&cap_noise.dws[2]).frob_norm();
+    assert!(d > 1e-4, "gradients identical on data vs noise");
+}

@@ -1,0 +1,293 @@
+//! Property-based tests over the coordinator's invariants and the tensor
+//! substrate, using the in-repo deterministic harness (`util::prop`).
+
+use asi::compress::{asi_compress, hosvd_fixed, AsiState, Tucker};
+use asi::coordinator::rank_selection::{backtracking_select, greedy_select,
+                                       LayerPerplexity, PerplexityTable};
+use asi::metrics::flops::LayerDims;
+use asi::tensor::{conv2d, conv2d_dw, ConvGeom, Mat, Tensor4};
+use asi::util::json::Json;
+use asi::util::prop::{assert_close, cases, Gen};
+use asi::util::rng::Rng;
+
+fn rand_tensor(g: &mut Gen, dims: [usize; 4]) -> Tensor4 {
+    Tensor4::from_vec(dims, g.normals(dims.iter().product()))
+}
+
+#[test]
+fn prop_unfold_fold_roundtrip() {
+    cases(101, 40, |g| {
+        let dims = [
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+        ];
+        let t = rand_tensor(g, dims);
+        let m = g.usize_in(0, 3);
+        let back = Tensor4::fold(&t.unfold(m), m, dims);
+        assert_close(&t.data, &back.data, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_mgs_orthonormal_columns() {
+    cases(102, 40, |g| {
+        let n = g.usize_in(3, 24);
+        let r = g.usize_in(1, n.min(6));
+        let p = Mat::from_vec(n, r, g.normals(n * r));
+        let q = p.mgs();
+        let qtq = q.t_matmul(&q);
+        for i in 0..r {
+            for j in 0..r {
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (qtq.at(i, j) - want).abs() > 2e-3 {
+                    return Err(format!("qtq[{i},{j}]={}", qtq.at(i, j)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tucker_projection_never_increases_energy() {
+    // ||S|| <= ||A|| for orthonormal projections — a numerical-safety
+    // invariant the memory accounting relies on.
+    cases(103, 25, |g| {
+        let dims = [
+            g.usize_in(2, 5),
+            g.usize_in(2, 5),
+            g.usize_in(2, 5),
+            g.usize_in(2, 5),
+        ];
+        let a = rand_tensor(g, dims);
+        let r = g.usize_in(1, 2);
+        let mut st = AsiState::init(
+            dims,
+            [r, r, r, r],
+            &mut Rng::new(g.case as u64),
+        );
+        let t = asi_compress(&a, &mut st);
+        let (na, ns) = (a.frob_norm(), t.core.frob_norm());
+        if ns > na * 1.001 {
+            return Err(format!("core norm {ns} > tensor norm {na}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq15_equals_dw_of_reconstruction() {
+    // The identity that makes low-rank gradients valid: eq. 15 on the
+    // factors == exact dW on the reconstructed activation.
+    cases(104, 15, |g| {
+        let b = g.usize_in(2, 4);
+        let c = g.usize_in(2, 4);
+        let h = 2 * g.usize_in(2, 3); // even
+        let cout = g.usize_in(2, 4);
+        let stride = *g.choose(&[1usize, 2]);
+        let geom = ConvGeom { stride, padding: 1, ksize: 3 };
+        let a = rand_tensor(g, [b, c, h, h]);
+        let ho = geom.out_size(h);
+        let gy = rand_tensor(g, [b, cout, ho, ho]);
+        let r = g.usize_in(1, 2);
+        let ranks = [r.min(b), r.min(c), r.min(h), r.min(h)];
+        let t = hosvd_fixed(&a, ranks);
+        let lr = t.lowrank_dw(&gy, geom);
+        let ex = conv2d_dw(&t.reconstruct(), &gy, geom, cout);
+        assert_close(&lr.data, &ex.data, 5e-3, 5e-4)
+    });
+}
+
+#[test]
+fn prop_conv_linearity() {
+    // conv(a x + b y, w) == a conv(x, w) + b conv(y, w).
+    cases(105, 20, |g| {
+        let geom = ConvGeom { stride: 1, padding: 1, ksize: 3 };
+        let dims = [2, g.usize_in(1, 3), 6, 6];
+        let x = rand_tensor(g, dims);
+        let y = rand_tensor(g, dims);
+        let cout = g.usize_in(1, 3);
+        let w = rand_tensor(g, [cout, dims[1], 3, 3]);
+        let (a, b) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+        let mut comb = x.clone();
+        for (v, (xv, yv)) in comb
+            .data
+            .iter_mut()
+            .zip(x.data.iter().zip(&y.data))
+        {
+            *v = a * xv + b * yv;
+        }
+        let lhs = conv2d(&comb, &w, geom);
+        let cx = conv2d(&x, &w, geom);
+        let cy = conv2d(&y, &w, geom);
+        let rhs: Vec<f32> = cx
+            .data
+            .iter()
+            .zip(&cy.data)
+            .map(|(p, q)| a * p + b * q)
+            .collect();
+        assert_close(&lhs.data, &rhs, 2e-4, 2e-4)
+    });
+}
+
+#[test]
+fn prop_rank_selection_budget_and_monotonicity() {
+    // For random monotone perplexity tables: (1) both searches respect
+    // the budget; (2) exact <= greedy; (3) exact perplexity is monotone
+    // non-increasing in the budget.
+    cases(106, 20, |g| {
+        let n_layers = g.usize_in(1, 6);
+        let n_eps = g.usize_in(2, 6);
+        let layers = (0..n_layers)
+            .map(|layer| {
+                let mut perp: Vec<f32> =
+                    (0..n_eps).map(|_| g.f32_in(0.01, 2.0)).collect();
+                perp.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let mut mem: Vec<u64> =
+                    (0..n_eps).map(|_| g.usize_in(10, 4000) as u64).collect();
+                mem.sort();
+                LayerPerplexity {
+                    layer,
+                    dims: [4, 4, 4, 4],
+                    ranks: (0..n_eps).map(|j| [j + 1; 4]).collect(),
+                    perplexity: perp,
+                    mem_bytes: mem,
+                }
+            })
+            .collect();
+        let table = PerplexityTable {
+            eps: (0..n_eps).map(|j| 0.4 + 0.1 * j as f32).collect(),
+            layers,
+        };
+        let max_mem: u64 = table
+            .layers
+            .iter()
+            .map(|l| *l.mem_bytes.iter().max().unwrap())
+            .sum();
+        let mut last = f32::INFINITY;
+        for frac in [3u64, 6, 10] {
+            let budget = max_mem * frac / 10;
+            let e = backtracking_select(&table, budget);
+            let gr = greedy_select(&table, budget);
+            match (e, gr) {
+                (Some(e), Some(gr)) => {
+                    if e.total_mem_bytes > budget {
+                        return Err("exact over budget".into());
+                    }
+                    if gr.total_mem_bytes > budget {
+                        return Err("greedy over budget".into());
+                    }
+                    if gr.total_perplexity < e.total_perplexity - 1e-4 {
+                        return Err(format!(
+                            "greedy {} beat exact {}",
+                            gr.total_perplexity, e.total_perplexity
+                        ));
+                    }
+                    if e.total_perplexity > last + 1e-4 {
+                        return Err("exact not monotone in budget".into());
+                    }
+                    last = e.total_perplexity;
+                }
+                (None, Some(_)) => {
+                    return Err("exact infeasible but greedy found".into())
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_internal_consistency() {
+    cases(107, 30, |g| {
+        let l = LayerDims::new(
+            g.usize_in(1, 64),
+            g.usize_in(1, 64),
+            g.usize_in(2, 32),
+            g.usize_in(2, 32),
+            g.usize_in(1, 64),
+            *g.choose(&[1usize, 2]),
+            3,
+        );
+        let r = [
+            g.usize_in(1, 4),
+            g.usize_in(1, 4),
+            g.usize_in(1, 4),
+            g.usize_in(1, 4),
+        ];
+        // ASI overhead strictly below HOSVD overhead (eq. 14 vs 11).
+        if l.asi_overhead(r) >= l.hosvd_overhead() {
+            return Err(format!(
+                "asi {} >= hosvd {}",
+                l.asi_overhead(r),
+                l.hosvd_overhead()
+            ));
+        }
+        // Compression ratio > 1 whenever ranks < dims on every mode.
+        let d = [l.b, l.c, l.h, l.w];
+        if r.iter().zip(&d).all(|(&ri, &di)| ri * 2 <= di) && l.rc(r) <= 1.0 {
+            return Err(format!("rc {} <= 1", l.rc(r)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    cases(108, 30, |g| {
+        // Build a random JSON value, serialize, reparse, compare.
+        fn build(g: &mut Gen, depth: usize) -> Json {
+            match if depth == 0 { 0 } else { g.usize_in(0, 5) } {
+                0 => Json::Num((g.usize_in(0, 10_000) as f64) / 8.0),
+                1 => Json::Bool(g.usize_in(0, 1) == 1),
+                2 => Json::Str(format!("s{}-\"x\"\n", g.usize_in(0, 99))),
+                3 => Json::Null,
+                4 => Json::Arr(
+                    (0..g.usize_in(0, 4)).map(|_| build(g, depth - 1))
+                        .collect(),
+                ),
+                _ => Json::Obj(
+                    (0..g.usize_in(0, 4))
+                        .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(g, 3);
+        let re = Json::parse(&v.to_string())
+            .map_err(|e| format!("reparse: {e}"))?;
+        if re != v {
+            return Err(format!("roundtrip mismatch: {v} vs {re}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tucker_storage_counts() {
+    cases(109, 20, |g| {
+        let dims = [
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+        ];
+        let a = rand_tensor(g, dims);
+        let ranks = [
+            g.usize_in(1, dims[0]),
+            g.usize_in(1, dims[1]),
+            g.usize_in(1, dims[2]),
+            g.usize_in(1, dims[3]),
+        ];
+        let t: Tucker = hosvd_fixed(&a, ranks);
+        let want: usize = ranks.iter().product::<usize>()
+            + dims.iter().zip(&ranks).map(|(d, r)| d * r).sum::<usize>();
+        if t.storage() != want {
+            return Err(format!("storage {} != eq5 {}", t.storage(), want));
+        }
+        Ok(())
+    });
+}
