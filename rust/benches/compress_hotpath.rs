@@ -5,8 +5,8 @@
 //!
 //! Run: `cargo bench --bench compress_hotpath`
 
-use asi::compress::{asi_compress, hosvd_fixed, AsiState};
-use asi::tensor::Tensor4;
+use asi::compress::{asi_compress_ws, hosvd_fixed, AsiState};
+use asi::tensor::{Tensor4, Workspace};
 use asi::util::rng::Rng;
 use asi::util::timer;
 
@@ -18,19 +18,12 @@ fn main() {
     ] {
         let mut rng = Rng::new(1);
         let a = Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()));
-        let ranks = [4usize, 4, 4, 4].map(|r| {
-            r.min(dims[0]).min(dims[1]).min(dims[2]).min(dims[3])
-        });
-        let ranks = [
-            ranks[0].min(dims[0]),
-            ranks[1].min(dims[1]),
-            ranks[2].min(dims[2]),
-            ranks[3].min(dims[3]),
-        ];
+        let ranks: [usize; 4] = std::array::from_fn(|i| 4usize.min(dims[i]));
 
         let mut st = AsiState::init(dims, ranks, &mut Rng::new(2));
+        let mut ws = Workspace::new();
         let asi = timer::bench(&format!("asi  {name}"), 2, 10, || {
-            let _ = asi_compress(&a, &mut st);
+            asi_compress_ws(&a, &mut st, &mut ws).recycle(&mut ws);
         });
         let hosvd = timer::bench(&format!("hosvd {name}"), 1, 3, || {
             let _ = hosvd_fixed(&a, ranks);

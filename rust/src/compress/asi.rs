@@ -3,8 +3,15 @@
 //! version inside XLA; this implementation powers the offline phases
 //! (perplexity probing, rank selection, accounting validation) and the
 //! property-test cross-checks.
+//!
+//! The `_ws` entry points are the fast path: fused unfold-GEMMs compute
+//! `V = A_(m)^T U` and `P = A_(m) V` straight from the strided tensor
+//! (no unfolding is materialized), and every intermediate plus the
+//! returned `Tucker`'s buffers come from a caller-owned [`Workspace`] —
+//! recycle the result (`Tucker::recycle`) between iterations and the
+//! loop performs zero heap allocations after warmup.
 
-use crate::tensor::{Mat, Tensor4};
+use crate::tensor::{kernels, Mat, Tensor4, Workspace};
 use crate::util::rng::Rng;
 
 use super::tucker::Tucker;
@@ -35,18 +42,47 @@ pub fn si_step(am: &Mat, u_prev: &Mat) -> Mat {
     p.mgs()
 }
 
+/// Fused [`si_step`] for mode `m` of `a`: the `V` and `P` contractions
+/// read the strided tensor directly (no unfolding), and every scratch
+/// buffer — including the returned factor's storage — comes from `ws`.
+pub fn si_step_mode(a: &Tensor4, m: usize, u_prev: &Mat, ws: &mut Workspace) -> Mat {
+    let (dm, r) = (u_prev.rows, u_prev.cols);
+    debug_assert_eq!(dm, a.dims[m]);
+    let pm = a.numel() / dm;
+    let mut v = ws.take(pm * r);
+    a.unfold_t_matmul_into(m, u_prev, &mut v);
+    let mut p = ws.take(dm * r);
+    a.unfold_matmul_into(m, &v, r, &mut p);
+    ws.give(v);
+    // MGS over columns of P, run on contiguous vectors via a transposed
+    // scratch (same algorithm and eps floor as `Mat::mgs`).
+    let mut qt = ws.take(r * dm);
+    kernels::transpose_into(dm, r, &p, &mut qt);
+    kernels::mgs_rows(&mut qt, r, dm);
+    kernels::transpose_into(r, dm, &qt, &mut p);
+    ws.give(qt);
+    Mat { rows: dm, cols: r, data: p }
+}
+
 /// Algorithm 1: update every mode's factor with a warm start, then
 /// project the core. Mutates `state` in place (the warm start).
 pub fn asi_compress(a: &Tensor4, state: &mut AsiState) -> Tucker {
-    let mut us: Vec<Mat> = Vec::with_capacity(4);
-    for m in 0..4 {
-        let am = a.unfold(m);
-        us.push(si_step(&am, &state.us[m]));
-    }
-    let us: [Mat; 4] = us.try_into().unwrap();
-    state.us = us.clone();
+    let mut ws = Workspace::new();
+    asi_compress_ws(a, state, &mut ws)
+}
+
+/// Workspace-threaded [`asi_compress`]: the hot-loop form. All
+/// intermediates and the returned `Tucker`'s buffers are checked out of
+/// `ws`; hand the result back via [`Tucker::recycle`] before the next
+/// call and the loop allocates nothing after its first iteration.
+pub fn asi_compress_ws(a: &Tensor4, state: &mut AsiState, ws: &mut Workspace) -> Tucker {
+    let us: [Mat; 4] = std::array::from_fn(|m| {
+        let u = si_step_mode(a, m, &state.us[m], ws);
+        state.us[m].data.copy_from_slice(&u.data);
+        u
+    });
     state.steps += 1;
-    Tucker::project(a, us)
+    Tucker::project_ws(a, us, ws)
 }
 
 /// Matrix (2-mode) ASI used for linear layers: `a ~= u v^T`.
@@ -162,6 +198,37 @@ mod tests {
         assert!(
             warm_err < cold_err,
             "warm {warm_err} should beat cold {cold_err}"
+        );
+    }
+
+    // NOTE: fused-vs-unfolded si_step agreement and pooled-vs-allocating
+    // asi_compress agreement are property-tested in
+    // `rust/tests/proptests.rs` (prop_fused_unfold_matmul_matches_explicit_
+    // unfold, prop_workspace_asi_matches_and_stops_allocating).
+
+    #[test]
+    fn workspace_reuse_no_allocations_after_warmup() {
+        // The acceptance contract: after the first (warmup) iteration, a
+        // recycle-between-calls compress loop checks out every buffer
+        // from the pool — the workspace's fresh-allocation counter must
+        // not move.
+        let dims = [8, 6, 5, 4];
+        let mut rng = Rng::new(20);
+        let a = Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()));
+        let mut st = AsiState::init(dims, [3, 3, 3, 3], &mut Rng::new(21));
+        let mut ws = Workspace::new();
+        let t = asi_compress_ws(&a, &mut st, &mut ws);
+        t.recycle(&mut ws);
+        let warm = ws.alloc_count();
+        assert!(warm > 0, "warmup must have populated the pool");
+        for _ in 0..4 {
+            let t = asi_compress_ws(&a, &mut st, &mut ws);
+            t.recycle(&mut ws);
+        }
+        assert_eq!(
+            ws.alloc_count(),
+            warm,
+            "asi_compress_ws hot loop allocated after warmup"
         );
     }
 

@@ -2,15 +2,16 @@
 //! explained-variance machinery the perplexity probe and rank selection
 //! use (per-mode spectra via the Gram eigensolver).
 
-use crate::tensor::{left_svd, rank_for_energy, Mat, Tensor4};
+use crate::tensor::{left_svd_gram, rank_for_energy, Mat, Tensor4};
 
 use super::tucker::Tucker;
 
-/// Per-mode singular spectra of a tensor (descending).
+/// Per-mode singular spectra of a tensor (descending). Works on the
+/// `d_m x d_m` mode Grams computed straight from the strided tensor —
+/// the `d_m x prod(other dims)` unfolding is never materialized.
 pub fn mode_spectra(a: &Tensor4) -> [Vec<f32>; 4] {
     std::array::from_fn(|m| {
-        let am = a.unfold(m);
-        let (_, sigma) = left_svd(&am, 0);
+        let (_, sigma) = left_svd_gram(&a.mode_gram(m), 0);
         sigma
     })
 }
@@ -24,9 +25,8 @@ pub fn ranks_for_eps(a: &Tensor4, eps: f32) -> [usize; 4] {
 /// Truncated HOSVD at fixed per-mode ranks.
 pub fn hosvd_fixed(a: &Tensor4, ranks: [usize; 4]) -> Tucker {
     let us: [Mat; 4] = std::array::from_fn(|m| {
-        let am = a.unfold(m);
-        let r = ranks[m].min(am.rows);
-        let (u, _) = left_svd(&am, r);
+        let r = ranks[m].min(a.dims[m]);
+        let (u, _) = left_svd_gram(&a.mode_gram(m), r);
         u
     });
     Tucker::project(a, us)

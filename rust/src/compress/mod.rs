@@ -10,7 +10,7 @@ pub mod hosvd;
 pub mod subspace;
 pub mod tucker;
 
-pub use asi::{asi_compress, matrix_asi, si_step, AsiState};
+pub use asi::{asi_compress, asi_compress_ws, matrix_asi, si_step, si_step_mode, AsiState};
 pub use gf::{avg_pool2, gf_dw, gf_storage, upsample2};
 pub use hosvd::{hosvd_eps, hosvd_fixed, mode_spectra, ranks_for_eps};
 pub use subspace::{chordal_distance, principal_cosines, subspace_alignment};

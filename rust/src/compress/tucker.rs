@@ -1,8 +1,10 @@
 //! Tucker decompositions of activation tensors + the eq.-15 low-rank
 //! weight gradient, in host form (used by the perplexity probe and by
 //! property tests that cross-check the Pallas kernels' conventions).
+//! Projection and reconstruction run on the fused mode-product kernels;
+//! `project_ws` + `recycle` keep the ASI hot loop allocation-free.
 
-use crate::tensor::{conv2d_dw, ConvGeom, Mat, Tensor4};
+use crate::tensor::{conv2d_dw, ConvGeom, Mat, Tensor4, Workspace};
 
 /// A Tucker decomposition `A ~= S x_1 U1 x_2 U2 x_3 U3 x_4 U4`.
 #[derive(Debug, Clone)]
@@ -34,42 +36,57 @@ impl Tucker {
 
     /// Project a full tensor onto the factors: `S = A x_m U_m^T`.
     pub fn project(a: &Tensor4, us: [Mat; 4]) -> Tucker {
-        let mut core = a.clone();
-        for (m, u) in us.iter().enumerate() {
-            core = core.mode_product(&u.transpose(), m);
+        let mut ws = Workspace::new();
+        Tucker::project_ws(a, us, &mut ws)
+    }
+
+    /// [`Tucker::project`] with every intermediate — and the returned
+    /// core's storage — checked out of `ws`. Pair with
+    /// [`Tucker::recycle`] for an allocation-free compress loop.
+    pub fn project_ws(a: &Tensor4, us: [Mat; 4], ws: &mut Workspace) -> Tucker {
+        let mut dims = a.dims;
+        dims[0] = us[0].cols;
+        let mut cur = Tensor4 {
+            dims,
+            data: ws.take(dims.iter().product()),
+        };
+        a.mode_product_t_into(&us[0], 0, &mut cur);
+        for (m, u) in us.iter().enumerate().skip(1) {
+            let mut nd = cur.dims;
+            nd[m] = u.cols;
+            let mut next = Tensor4 {
+                dims: nd,
+                data: ws.take(nd.iter().product()),
+            };
+            cur.mode_product_t_into(u, m, &mut next);
+            let prev = std::mem::replace(&mut cur, next);
+            ws.give(prev.data);
         }
-        Tucker { core, us }
+        Tucker { core: cur, us }
+    }
+
+    /// Hand this decomposition's buffers back to a workspace so the next
+    /// `*_ws` call reuses them instead of allocating.
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.core.data);
+        for u in self.us {
+            ws.give(u.data);
+        }
     }
 
     /// Eq. 15 — weight gradient directly on the factors.
     ///
     /// Same staging as the Pallas kernel (`lowrank_grad.py`):
     /// batch + channel modes stay compressed, spatial modes expand.
+    /// Every stage is a mode-product GEMM or the im2col conv kernel.
     pub fn lowrank_dw(&self, gy: &Tensor4, g: ConvGeom) -> Tensor4 {
-        let [_r1, r2, _r3, _r4] = self.core.dims;
-        let [bsz, cout, ho, wo] = gy.dims;
+        let [bsz, cout, _, _] = gy.dims;
         let u1 = &self.us[0];
         let u2 = &self.us[1];
-        let r1 = u1.cols;
         assert_eq!(u1.rows, bsz, "U1 batch dim mismatch");
 
-        // (1) gy1[r, o, i, j] = sum_b U1[b, r] gy[b, o, i, j]
-        let mut gy1 = Tensor4::zeros([r1, cout, ho, wo]);
-        for b in 0..bsz {
-            for r in 0..r1 {
-                let u = u1.at(b, r);
-                if u == 0.0 {
-                    continue;
-                }
-                for o in 0..cout {
-                    for i in 0..ho {
-                        for j in 0..wo {
-                            *gy1.at_mut([r, o, i, j]) += u * gy.at([b, o, i, j]);
-                        }
-                    }
-                }
-            }
-        }
+        // (1) compress the output gradient's batch mode: gy x_0 U1^T.
+        let gy1 = gy.mode_product_t(u1, 0);
 
         // (2) expand spatial modes: (r1, r2, H, W)
         let at = self
@@ -80,25 +97,8 @@ impl Tucker {
         // (3) correlation conv in rank space: (C', r2, D, D)
         let dw_r = conv2d_dw(&at, &gy1, g, cout);
 
-        // (4) expand channels through U2: (C', C, D, D)
-        let cin = u2.rows;
-        let mut dw = Tensor4::zeros([cout, cin, g.ksize, g.ksize]);
-        for o in 0..cout {
-            for r in 0..r2 {
-                for c in 0..cin {
-                    let u = u2.at(c, r);
-                    if u == 0.0 {
-                        continue;
-                    }
-                    for p in 0..g.ksize {
-                        for q in 0..g.ksize {
-                            *dw.at_mut([o, c, p, q]) += dw_r.at([o, r, p, q]) * u;
-                        }
-                    }
-                }
-            }
-        }
-        dw
+        // (4) expand channels through U2: (C', C, D, D) = dw_r x_1 U2.
+        dw_r.mode_product(u2, 1)
     }
 }
 

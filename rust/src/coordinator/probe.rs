@@ -92,13 +92,11 @@ pub fn probe(net: &HostEdgeNet, x: &Tensor4, labels: &[i32]) -> ProbeCapture {
         acts.push(h.clone());
         let mut y = conv2d(&h, w, *g);
         let [_, co, ho, wo] = y.dims;
-        for bi in 0..y.dims[0] {
-            for o in 0..co {
-                for i in 0..ho {
-                    for j in 0..wo {
-                        *y.at_mut([bi, o, i, j]) += b[o];
-                    }
-                }
+        // Per-channel bias over the contiguous (ho, wo) plane.
+        for (ch, plane) in y.data.chunks_mut(ho * wo).enumerate() {
+            let bv = b[ch % co];
+            for v in plane.iter_mut() {
+                *v += bv;
             }
         }
         preacts.push(y.clone());
@@ -108,16 +106,9 @@ pub fn probe(net: &HostEdgeNet, x: &Tensor4, labels: &[i32]) -> ProbeCapture {
     // GAP + FC
     let [_, c, hh, ww] = h.dims;
     let mut gap = Mat::zeros(bsz, c);
-    for bi in 0..bsz {
-        for ci in 0..c {
-            let mut s = 0.0;
-            for i in 0..hh {
-                for j in 0..ww {
-                    s += h.at([bi, ci, i, j]);
-                }
-            }
-            gap[(bi, ci)] = s / (hh * ww) as f32;
-        }
+    let plane = hh * ww;
+    for (bc, chunk) in h.data.chunks(plane).enumerate() {
+        gap.data[bc] = chunk.iter().sum::<f32>() / plane as f32;
     }
     let mut logits = gap.matmul(&net.fc_w);
     for bi in 0..bsz {
@@ -153,16 +144,10 @@ pub fn probe(net: &HostEdgeNet, x: &Tensor4, labels: &[i32]) -> ProbeCapture {
     let mut dws: Vec<Tensor4> = vec![Tensor4::zeros([1, 1, 1, 1]); n];
 
     let mut dh = Tensor4::zeros(preacts[n - 1].dims);
-    let [_, cc, hh2, ww2] = dh.dims;
-    for bi in 0..bsz {
-        for ci in 0..cc {
-            let v = dgap[(bi, ci)] / (hh2 * ww2) as f32;
-            for i in 0..hh2 {
-                for j in 0..ww2 {
-                    *dh.at_mut([bi, ci, i, j]) = v;
-                }
-            }
-        }
+    let [_, _, hh2, ww2] = dh.dims;
+    let plane2 = hh2 * ww2;
+    for (bc, chunk) in dh.data.chunks_mut(plane2).enumerate() {
+        chunk.fill(dgap.data[bc] / plane2 as f32);
     }
     for li in (0..n).rev() {
         // relu backward through this layer's output

@@ -1,10 +1,15 @@
-//! Direct 2-D convolution (NCHW x OIHW) with both backward passes.
+//! 2-D convolution (NCHW x OIHW) with both backward passes, lowered to
+//! im2col + the tiled GEMM microkernels in `tensor::kernels`.
 //!
 //! Used by the offline perplexity probe (exact vs low-rank weight
-//! gradients, eq. 7) — the training hot path convolves inside XLA, so
-//! these loops favour clarity over peak throughput. Semantics match
-//! `ref.conv2d` / `ref.conv_dw_ref` / `ref.conv_dx_ref`.
+//! gradients, eq. 7). The forward pass is `W_mat @ im2col(x)` per image,
+//! the weight gradient is `gy_mat @ im2col(x)^T` accumulated over the
+//! batch, and the input gradient is `W_mat^T @ gy_mat` scattered back
+//! through col2im. The original direct 7-deep loops are retained as
+//! `*_ref` oracles — semantics match `ref.conv2d` / `ref.conv_dw_ref` /
+//! `ref.conv_dx_ref` on the Python side.
 
+use super::kernels;
 use super::tensor4::Tensor4;
 
 /// Convolution geometry.
@@ -21,8 +26,182 @@ impl ConvGeom {
     }
 }
 
+/// Scatter one image into patch-matrix form:
+/// `col[(c*kh + p)*kw + q][i*wo + j] = x[c, i*s + p - pad, j*s + q - pad]`
+/// (zero outside the input).
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &[f32],
+    cin: usize,
+    h: usize,
+    w: usize,
+    g: ConvGeom,
+    ho: usize,
+    wo: usize,
+    col: &mut [f32],
+) {
+    let (kh, kw) = (g.ksize, g.ksize);
+    let howo = ho * wo;
+    debug_assert_eq!(col.len(), cin * kh * kw * howo);
+    for c in 0..cin {
+        for p in 0..kh {
+            for q in 0..kw {
+                let row = &mut col[((c * kh + p) * kw + q) * howo..((c * kh + p) * kw + q + 1) * howo];
+                for i in 0..ho {
+                    let xi = (i * g.stride + p) as isize - g.padding as isize;
+                    let dst = &mut row[i * wo..(i + 1) * wo];
+                    if xi < 0 || xi as usize >= h {
+                        dst.fill(0.0);
+                        continue;
+                    }
+                    let xrow = &x[(c * h + xi as usize) * w..(c * h + xi as usize + 1) * w];
+                    for (j, d) in dst.iter_mut().enumerate() {
+                        let xj = (j * g.stride + q) as isize - g.padding as isize;
+                        *d = if xj < 0 || xj as usize >= w {
+                            0.0
+                        } else {
+                            xrow[xj as usize]
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`im2col`]: accumulate patch-matrix gradients back onto the
+/// input image (`+=` at every source coordinate, skipping padding).
+#[allow(clippy::too_many_arguments)]
+fn col2im_acc(
+    dcol: &[f32],
+    cin: usize,
+    h: usize,
+    w: usize,
+    g: ConvGeom,
+    ho: usize,
+    wo: usize,
+    dx: &mut [f32],
+) {
+    let (kh, kw) = (g.ksize, g.ksize);
+    let howo = ho * wo;
+    debug_assert_eq!(dcol.len(), cin * kh * kw * howo);
+    for c in 0..cin {
+        for p in 0..kh {
+            for q in 0..kw {
+                let row = &dcol[((c * kh + p) * kw + q) * howo..((c * kh + p) * kw + q + 1) * howo];
+                for i in 0..ho {
+                    let xi = (i * g.stride + p) as isize - g.padding as isize;
+                    if xi < 0 || xi as usize >= h {
+                        continue;
+                    }
+                    let xrow = &mut dx[(c * h + xi as usize) * w..(c * h + xi as usize + 1) * w];
+                    for (j, &v) in row[i * wo..(i + 1) * wo].iter().enumerate() {
+                        let xj = (j * g.stride + q) as isize - g.padding as isize;
+                        if xj < 0 || xj as usize >= w {
+                            continue;
+                        }
+                        xrow[xj as usize] += v;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Forward: `y[b, o, i, j] = sum_{c,p,q} x[b, c, i*s+p-pad, j*s+q-pad] w[o, c, p, q]`.
 pub fn conv2d(x: &Tensor4, w: &Tensor4, g: ConvGeom) -> Tensor4 {
+    let [bsz, cin, h, wd] = x.dims;
+    let [cout, cin2, kh, kw] = w.dims;
+    assert_eq!(cin, cin2, "conv2d channel mismatch");
+    assert_eq!(kh, g.ksize);
+    assert_eq!(kw, g.ksize);
+    let (ho, wo) = (g.out_size(h), g.out_size(wd));
+    let (ckk, howo) = (cin * kh * kw, ho * wo);
+    let mut y = Tensor4::zeros([bsz, cout, ho, wo]);
+    let mut col = vec![0.0f32; ckk * howo];
+    let img = cin * h * wd;
+    for b in 0..bsz {
+        im2col(&x.data[b * img..(b + 1) * img], cin, h, wd, g, ho, wo, &mut col);
+        // y_b (cout x ho*wo) = W_mat (cout x ckk) @ col.
+        kernels::matmul(
+            cout,
+            ckk,
+            howo,
+            &w.data,
+            &col,
+            &mut y.data[b * cout * howo..(b + 1) * cout * howo],
+        );
+    }
+    y
+}
+
+/// Weight gradient (eq. 1): `dW[o,c,p,q] = sum_{b,i,j} gy[b,o,i,j] * x[b,c,i*s+p-pad,j*s+q-pad]`.
+pub fn conv2d_dw(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4 {
+    let [bsz, cin, h, wd] = x.dims;
+    let [bsz2, cout2, ho, wo] = gy.dims;
+    assert_eq!(bsz, bsz2);
+    assert_eq!(cout, cout2);
+    let (kh, kw) = (g.ksize, g.ksize);
+    let (ckk, howo) = (cin * kh * kw, ho * wo);
+    let mut dw = vec![0.0f32; cout * ckk];
+    let mut col = vec![0.0f32; ckk * howo];
+    let img = cin * h * wd;
+    for b in 0..bsz {
+        im2col(&x.data[b * img..(b + 1) * img], cin, h, wd, g, ho, wo, &mut col);
+        // dW (cout x ckk) += gy_b (cout x howo) @ col^T.
+        kernels::gemm_nt_acc_st(
+            cout,
+            howo,
+            ckk,
+            &gy.data[b * cout * howo..(b + 1) * cout * howo],
+            &col,
+            &mut dw,
+        );
+    }
+    Tensor4::from_vec([cout, cin, kh, kw], dw)
+}
+
+/// Input gradient (eq. 2): transposed convolution of `gy` with `w`.
+pub fn conv2d_dx(gy: &Tensor4, w: &Tensor4, g: ConvGeom, x_dims: [usize; 4]) -> Tensor4 {
+    let [bsz, cout, ho, wo] = gy.dims;
+    let [cout2, cin, kh, kw] = w.dims;
+    assert_eq!(cout, cout2);
+    let [_, cin2, h, wd] = x_dims;
+    assert_eq!(cin, cin2);
+    let (ckk, howo) = (cin * kh * kw, ho * wo);
+    let mut dx = Tensor4::zeros(x_dims);
+    let mut dcol = vec![0.0f32; ckk * howo];
+    let img = cin * h * wd;
+    for b in 0..bsz {
+        // dcol (ckk x howo) = W_mat^T @ gy_b (cout x howo).
+        kernels::t_matmul(
+            cout,
+            ckk,
+            howo,
+            &w.data,
+            &gy.data[b * cout * howo..(b + 1) * cout * howo],
+            &mut dcol,
+        );
+        col2im_acc(
+            &dcol,
+            cin,
+            h,
+            wd,
+            g,
+            ho,
+            wo,
+            &mut dx.data[b * img..(b + 1) * img],
+        );
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Direct-loop reference oracles (the seed implementation, verbatim).
+// ---------------------------------------------------------------------------
+
+/// Direct-loop forward convolution — reference oracle for [`conv2d`].
+pub fn conv2d_ref(x: &Tensor4, w: &Tensor4, g: ConvGeom) -> Tensor4 {
     let [bsz, cin, h, wd] = x.dims;
     let [cout, cin2, kh, kw] = w.dims;
     assert_eq!(cin, cin2, "conv2d channel mismatch");
@@ -62,8 +241,8 @@ pub fn conv2d(x: &Tensor4, w: &Tensor4, g: ConvGeom) -> Tensor4 {
     y
 }
 
-/// Weight gradient (eq. 1): `dW[o,c,p,q] = sum_{b,i,j} gy[b,o,i,j] * x[b,c,i*s+p-pad,j*s+q-pad]`.
-pub fn conv2d_dw(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4 {
+/// Direct-loop weight gradient — reference oracle for [`conv2d_dw`].
+pub fn conv2d_dw_ref(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4 {
     let [bsz, cin, h, wd] = x.dims;
     let [bsz2, cout2, ho, wo] = gy.dims;
     assert_eq!(bsz, bsz2);
@@ -101,8 +280,8 @@ pub fn conv2d_dw(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4
     dw
 }
 
-/// Input gradient (eq. 2): transposed convolution of `gy` with `w`.
-pub fn conv2d_dx(gy: &Tensor4, w: &Tensor4, g: ConvGeom, x_dims: [usize; 4]) -> Tensor4 {
+/// Direct-loop input gradient — reference oracle for [`conv2d_dx`].
+pub fn conv2d_dx_ref(gy: &Tensor4, w: &Tensor4, g: ConvGeom, x_dims: [usize; 4]) -> Tensor4 {
     let [bsz, cout, ho, wo] = gy.dims;
     let [cout2, cin, _, _] = w.dims;
     assert_eq!(cout, cout2);
@@ -174,6 +353,10 @@ mod tests {
         let y = conv2d(&x, &w, g);
         assert_eq!(y.dims, [2, 4, 4, 4]);
     }
+
+    // NOTE: im2col-vs-direct-loop agreement is property-tested in
+    // `rust/tests/proptests.rs::prop_im2col_conv_matches_direct_loops`
+    // across stride/padding/ksize geometries.
 
     /// Finite-difference check of dW.
     #[test]

@@ -101,9 +101,16 @@ pub fn sym_eig(a: &Mat) -> SymEig {
 /// singular values (descending) — callers use the full spectrum for
 /// explained-variance thresholds.
 pub fn left_svd(a: &Mat, rank: usize) -> (Mat, Vec<f32>) {
-    let eig = sym_eig(&a.gram());
+    left_svd_gram(&a.gram(), rank)
+}
+
+/// [`left_svd`] from a precomputed Gram matrix `G = A A^T`. The HOSVD
+/// path computes per-mode Grams directly from the strided tensor
+/// (`Tensor4::mode_gram`) and never materializes the unfolding.
+pub fn left_svd_gram(gram: &Mat, rank: usize) -> (Mat, Vec<f32>) {
+    let eig = sym_eig(gram);
     let sigma: Vec<f32> = eig.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
-    let r = rank.min(a.rows);
+    let r = rank.min(gram.rows);
     (eig.vectors.take_cols(r), sigma)
 }
 

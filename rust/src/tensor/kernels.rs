@@ -1,0 +1,702 @@
+//! The host compute substrate: cache-blocked, register-tiled f32 GEMM
+//! microkernels plus a `std::thread::scope` row-sharding layer with a size
+//! cutoff. Every hot matrix/tensor/conv path in the crate lowers onto the
+//! entry points here; the original clarity-first scalar loops live on in
+//! [`reference`] as oracles for property tests and the `tensor_ops` bench.
+//!
+//! Design (see `DESIGN.md` for the full write-up):
+//!
+//! * The inner microkernel computes an `MR x NR` block of C with all
+//!   `MR * NR` accumulators held in locals, so the compiler keeps them in
+//!   registers and autovectorizes the contiguous NR-wide FMA rows. One
+//!   pass over a K-panel touches each A/B element once per block instead
+//!   of once per scalar output.
+//! * Outer loops block over K (`KC`), N (`NC`) and M (`MC`) so the B
+//!   panel stays L1/L2-resident across row blocks.
+//! * Matrices below `PAR_CUTOFF` fused multiply-adds stay single-threaded;
+//!   larger ones shard disjoint row ranges of C across scoped threads
+//!   (no work queue, no new dependencies, no unsafe).
+
+use std::sync::OnceLock;
+
+/// Microkernel register-tile height (rows of C per block).
+pub const MR: usize = 4;
+/// Microkernel register-tile width (columns of C per block).
+pub const NR: usize = 16;
+/// Row-panel blocking (rows of A kept hot per K-panel).
+const MC: usize = 64;
+/// K-panel blocking (depth of the multiply kept L1-resident).
+const KC: usize = 256;
+/// Column-panel blocking (columns of B kept cache-resident).
+const NC: usize = 512;
+
+/// Fused multiply-add count below which GEMMs stay single-threaded: at
+/// this size thread spawn/join overhead rivals the compute itself.
+pub const PAR_CUTOFF: usize = 1 << 21;
+
+fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+    })
+}
+
+/// Number of worker threads for a GEMM of `work` fused multiply-adds
+/// whose output can be sharded into at most `rows` row chunks.
+pub fn threads_for(work: usize, rows: usize) -> usize {
+    if work < PAR_CUTOFF {
+        1
+    } else {
+        max_threads().min(rows).max(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernels. `a`, `b`, `c` point at the top-left element of the block;
+// `lda`/`ldb`/`ldc` are the leading dimensions of the full matrices.
+// ---------------------------------------------------------------------------
+
+/// `C[MR x NR] += A_block @ B_panel`, A row-major (element (i, p) at
+/// `a[i * lda + p]`).
+#[inline(always)]
+fn micro_nn(kc: usize, a: &[f32], lda: usize, b: &[f32], ldb: usize, c: &mut [f32], ldc: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let brow = &b[p * ldb..p * ldb + NR];
+        for i in 0..MR {
+            let av = a[i * lda + p];
+            let acci = &mut acc[i];
+            for j in 0..NR {
+                acci[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..MR {
+        let crow = &mut c[i * ldc..i * ldc + NR];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Edge-tile variant of [`micro_nn`] for `mr <= MR`, `nr <= NR`.
+#[inline(always)]
+fn micro_nn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let brow = &b[p * ldb..p * ldb + nr];
+        for i in 0..mr {
+            let av = a[i * lda + p];
+            let acci = &mut acc[i];
+            for (j, &bv) in brow.iter().enumerate() {
+                acci[j] += av * bv;
+            }
+        }
+    }
+    for i in 0..mr {
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// `C[MR x NR] += A_block^T @ B_panel`, A stored transposed (element
+/// (p, i) at `a[p * lda + i]`).
+#[inline(always)]
+fn micro_tn(kc: usize, a: &[f32], lda: usize, b: &[f32], ldb: usize, c: &mut [f32], ldc: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let arow = &a[p * lda..p * lda + MR];
+        let brow = &b[p * ldb..p * ldb + NR];
+        for i in 0..MR {
+            let av = arow[i];
+            let acci = &mut acc[i];
+            for j in 0..NR {
+                acci[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..MR {
+        let crow = &mut c[i * ldc..i * ldc + NR];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Edge-tile variant of [`micro_tn`] for `mr <= MR`, `nr <= NR`.
+#[inline(always)]
+fn micro_tn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let arow = &a[p * lda..p * lda + mr];
+        let brow = &b[p * ldb..p * ldb + nr];
+        for (i, &av) in arow.iter().enumerate() {
+            let acci = &mut acc[i];
+            for (j, &bv) in brow.iter().enumerate() {
+                acci[j] += av * bv;
+            }
+        }
+    }
+    for i in 0..mr {
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-threaded blocked GEMMs (strided, accumulating). These are the
+// building blocks the batched tensor kernels call per outer slice.
+// ---------------------------------------------------------------------------
+
+/// `C (m x n, ldc) += A (m x k, lda) @ B (k x n, ldb)`, single-threaded.
+///
+/// Requires `a.len() >= (m - 1) * lda + k`, `b.len() >= (k - 1) * ldb + n`,
+/// `c.len() >= (m - 1) * ldc + n`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_st(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    let aoff = (ic + ir) * lda + pc;
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let boff = pc * ldb + jc + jr;
+                        let coff = (ic + ir) * ldc + jc + jr;
+                        if mr == MR && nr == NR {
+                            micro_nn(kc, &a[aoff..], lda, &b[boff..], ldb, &mut c[coff..], ldc);
+                        } else {
+                            micro_nn_edge(
+                                kc,
+                                mr,
+                                nr,
+                                &a[aoff..],
+                                lda,
+                                &b[boff..],
+                                ldb,
+                                &mut c[coff..],
+                                ldc,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C (m x n, ldc) += A^T @ B` with A stored `(k x m, lda)`,
+/// single-threaded. A is read down its columns — no transpose is ever
+/// materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_st(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    let aoff = pc * lda + ic + ir;
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let boff = pc * ldb + jc + jr;
+                        let coff = (ic + ir) * ldc + jc + jr;
+                        if mr == MR && nr == NR {
+                            micro_tn(kc, &a[aoff..], lda, &b[boff..], ldb, &mut c[coff..], ldc);
+                        } else {
+                            micro_tn_edge(
+                                kc,
+                                mr,
+                                nr,
+                                &a[aoff..],
+                                lda,
+                                &b[boff..],
+                                ldb,
+                                &mut c[coff..],
+                                ldc,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Unrolled dot product with eight independent accumulators — the serial
+/// dependency chain of a single-accumulator loop caps at one FMA per
+/// float-add latency; eight parallel chains let the compiler vectorize.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    let mut acc = [0.0f32; 8];
+    let chunked = n - n % 8;
+    for (xs, ys) in x[..chunked].chunks_exact(8).zip(y[..chunked].chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (xv, yv) in x[chunked..n].iter().zip(&y[chunked..n]) {
+        tail += xv * yv;
+    }
+    tail + acc.iter().sum::<f32>()
+}
+
+/// `C (m x m) += A (m x k) @ A^T` — symmetric Gram update; only the upper
+/// triangle is computed, then mirrored. Single-threaded.
+pub fn gram_acc_st(m: usize, k: usize, a: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let ri = &a[i * k..(i + 1) * k];
+        for j in i..m {
+            let d = dot(ri, &a[j * k..(j + 1) * k]);
+            c[i * m + j] += d;
+            if j != i {
+                c[j * m + i] += d;
+            }
+        }
+    }
+}
+
+/// `C (m x n, tight) += A (m x k) @ B^T` with B stored `(n x k)` — both
+/// operands are streamed along contiguous rows (dot-product form).
+/// Single-threaded; used by the im2col weight-gradient lowering.
+pub fn gemm_nt_acc_st(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    // Block over B rows so a tile of B stays cache-resident while the
+    // whole of A streams past it.
+    const JB: usize = 32;
+    for jb in (0..n).step_by(JB) {
+        let je = (jb + JB).min(n);
+        for i in 0..m {
+            let ri = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in jb..je {
+                crow[j] += dot(ri, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded entry points for tightly-packed row-major matrices.
+// ---------------------------------------------------------------------------
+
+/// `C (m x n) = A (m x k) @ B (k x n)`, all tightly packed row-major.
+/// Shards disjoint row ranges of C across scoped threads above the size
+/// cutoff.
+pub fn matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "kernels::matmul: A size");
+    assert_eq!(b.len(), k * n, "kernels::matmul: B size");
+    assert_eq!(c.len(), m * n, "kernels::matmul: C size");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nt = threads_for(m * k * n, m);
+    if nt <= 1 {
+        gemm_nn_st(m, k, n, a, k, b, n, c, n);
+        return;
+    }
+    let rows_per = (m + nt - 1) / nt;
+    std::thread::scope(|s| {
+        for (ti, cch) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ti * rows_per;
+            let rows = cch.len() / n;
+            let ach = &a[i0 * k..(i0 + rows) * k];
+            s.spawn(move || gemm_nn_st(rows, k, n, ach, k, b, n, cch, n));
+        }
+    });
+}
+
+/// `C (m x n) = A^T @ B` with A stored `(k x m)`, B `(k x n)`, tightly
+/// packed. No transpose is materialized.
+pub fn t_matmul(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "kernels::t_matmul: A size");
+    assert_eq!(b.len(), k * n, "kernels::t_matmul: B size");
+    assert_eq!(c.len(), m * n, "kernels::t_matmul: C size");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nt = threads_for(m * k * n, m);
+    if nt <= 1 {
+        gemm_tn_st(m, k, n, a, m, b, n, c, n);
+        return;
+    }
+    let rows_per = (m + nt - 1) / nt;
+    std::thread::scope(|s| {
+        for (ti, cch) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ti * rows_per;
+            let rows = cch.len() / n;
+            // Shard A by column range: thread `ti` reads columns
+            // i0..i0+rows, i.e. the strided sub-matrix starting at a[i0].
+            let ach = &a[i0..];
+            s.spawn(move || gemm_tn_st(rows, k, n, ach, m, b, n, cch, n));
+        }
+    });
+}
+
+/// `C (m x n) = A (m x k) @ B^T` with B stored `(n x k)`, tightly packed.
+pub fn matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "kernels::matmul_nt: A size");
+    assert_eq!(b.len(), n * k, "kernels::matmul_nt: B size");
+    assert_eq!(c.len(), m * n, "kernels::matmul_nt: C size");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nt = threads_for(m * k * n, m);
+    if nt <= 1 {
+        gemm_nt_acc_st(m, k, n, a, b, c);
+        return;
+    }
+    let rows_per = (m + nt - 1) / nt;
+    std::thread::scope(|s| {
+        for (ti, cch) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ti * rows_per;
+            let rows = cch.len() / n;
+            let ach = &a[i0 * k..(i0 + rows) * k];
+            s.spawn(move || gemm_nt_acc_st(rows, k, n, ach, b, cch));
+        }
+    });
+}
+
+/// `C (m x m) = A (m x k) @ A^T` — full symmetric Gram matrix.
+pub fn gram(m: usize, k: usize, a: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "kernels::gram: A size");
+    assert_eq!(c.len(), m * m, "kernels::gram: C size");
+    c.fill(0.0);
+    gram_acc_st(m, k, a, c);
+}
+
+// ---------------------------------------------------------------------------
+// Transpose + MGS on contiguous vectors.
+// ---------------------------------------------------------------------------
+
+/// Transpose `src` (rows x cols, row-major) into `dst` (cols x rows),
+/// blocked for cache locality.
+pub fn transpose_into(rows: usize, cols: usize, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), rows * cols, "transpose_into: src size");
+    assert_eq!(dst.len(), rows * cols, "transpose_into: dst size");
+    const TB: usize = 32;
+    for ib in (0..rows).step_by(TB) {
+        let ie = (ib + TB).min(rows);
+        for jb in (0..cols).step_by(TB) {
+            let je = (jb + TB).min(cols);
+            for i in ib..ie {
+                for j in jb..je {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+        }
+    }
+}
+
+/// In-place modified Gram-Schmidt over the `r` rows of `qt` (r x n,
+/// row-major) — i.e. over *contiguous* vectors. [`crate::tensor::Mat::mgs`]
+/// transposes its column vectors into this layout, orthonormalizes, and
+/// transposes back; same algorithm and eps floor as the Pallas MGS kernel.
+pub fn mgs_rows(qt: &mut [f32], r: usize, n: usize) {
+    const EPS: f32 = 1e-8;
+    assert_eq!(qt.len(), r * n, "mgs_rows: size");
+    for j in 0..r {
+        for k in 0..j {
+            let (head, tail) = qt.split_at_mut(j * n);
+            let qk = &head[k * n..(k + 1) * n];
+            let qj = &mut tail[..n];
+            let d = dot(qk, qj);
+            for (x, &y) in qj.iter_mut().zip(qk) {
+                *x -= d * y;
+            }
+        }
+        let qj = &mut qt[j * n..(j + 1) * n];
+        let inv = 1.0 / dot(qj, qj).sqrt().max(EPS);
+        for x in qj.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference oracles — the seed's original clarity-first loops,
+// retained verbatim so property tests and the `tensor_ops` bench can
+// cross-check (and time) the tiled kernels against them.
+// ---------------------------------------------------------------------------
+
+pub mod reference {
+    /// Seed `Mat::matmul`: blocked ikj loop, single accumulator row.
+    pub fn matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            let arow = &a[i * k..(i + 1) * k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Seed `Mat::t_matmul`: `A^T @ B` with A stored `(k x m)`.
+    pub fn t_matmul(k: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for p in 0..k {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Seed `Mat::gram`: triangle of single-accumulator dots.
+    pub fn gram(m: usize, k: usize, a: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * m];
+        for i in 0..m {
+            for j in i..m {
+                let mut s = 0.0;
+                for (x, y) in a[i * k..(i + 1) * k].iter().zip(&a[j * k..(j + 1) * k]) {
+                    s += x * y;
+                }
+                out[i * m + j] = s;
+                out[j * m + i] = s;
+            }
+        }
+        out
+    }
+
+    /// Seed `Mat::mgs`: column-strided modified Gram-Schmidt over an
+    /// `(n x r)` row-major matrix.
+    pub fn mgs(n: usize, r: usize, data: &[f32]) -> Vec<f32> {
+        const EPS: f32 = 1e-8;
+        let mut q = data.to_vec();
+        for j in 0..r {
+            for k in 0..j {
+                let mut d = 0.0;
+                for i in 0..n {
+                    d += q[i * r + k] * q[i * r + j];
+                }
+                for i in 0..n {
+                    let qk = q[i * r + k];
+                    q[i * r + j] -= d * qk;
+                }
+            }
+            let mut norm = 0.0;
+            for i in 0..n {
+                let v = q[i * r + j];
+                norm += v * v;
+            }
+            let norm = norm.sqrt().max(EPS);
+            for i in 0..n {
+                q[i * r + j] /= norm;
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_matches_reference_over_shapes() {
+        // Includes shapes not divisible by MR/NR/KC and degenerate dims.
+        cases(11, 24, |g| {
+            let m = g.usize_in(1, 70);
+            let k = g.usize_in(1, 70);
+            let n = g.usize_in(1, 40);
+            let a = g.normals(m * k);
+            let b = g.normals(k * n);
+            let mut c = vec![0.0f32; m * n];
+            matmul(m, k, n, &a, &b, &mut c);
+            let want = reference::matmul(m, k, n, &a, &b);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn t_matmul_matches_reference_over_shapes() {
+        cases(12, 24, |g| {
+            let k = g.usize_in(1, 70);
+            let m = g.usize_in(1, 50);
+            let n = g.usize_in(1, 40);
+            let a = g.normals(k * m);
+            let b = g.normals(k * n);
+            let mut c = vec![0.0f32; m * n];
+            t_matmul(k, m, n, &a, &b, &mut c);
+            let want = reference::t_matmul(k, m, n, &a, &b);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn matmul_nt_matches_reference() {
+        cases(13, 16, |g| {
+            let m = g.usize_in(1, 30);
+            let k = g.usize_in(1, 90);
+            let n = g.usize_in(1, 30);
+            let a = g.normals(m * k);
+            let b = g.normals(n * k);
+            let mut c = vec![0.0f32; m * n];
+            matmul_nt(m, k, n, &a, &b, &mut c);
+            // B^T materialized, then the reference NN product.
+            let mut bt = vec![0.0f32; k * n];
+            transpose_into(n, k, &b, &mut bt);
+            let want = reference::matmul(m, k, n, &a, &bt);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn gram_matches_reference() {
+        cases(14, 16, |g| {
+            let m = g.usize_in(1, 25);
+            let k = g.usize_in(1, 120);
+            let a = g.normals(m * k);
+            let mut c = vec![0.0f32; m * m];
+            gram(m, k, &a, &mut c);
+            let want = reference::gram(m, k, &a);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn mgs_rows_matches_reference() {
+        cases(15, 12, |g| {
+            let n = g.usize_in(2, 40);
+            let r = g.usize_in(1, 6.min(n));
+            let data = g.normals(n * r);
+            // Kernel path: transpose -> row MGS -> transpose back.
+            let mut qt = vec![0.0f32; r * n];
+            transpose_into(n, r, &data, &mut qt);
+            mgs_rows(&mut qt, r, n);
+            let mut q = vec![0.0f32; n * r];
+            transpose_into(r, n, &qt, &mut q);
+            let want = reference::mgs(n, r, &data);
+            assert_close(&q, &want, 1e-3, 1e-4)
+        });
+    }
+
+    #[test]
+    fn threaded_path_matches_single_thread() {
+        // Big enough to clear PAR_CUTOFF so the scoped-thread shard runs.
+        let (m, k, n) = (160, 130, 128);
+        assert!(m * k * n >= PAR_CUTOFF);
+        let mut rng = Rng::new(16);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut c = vec![0.0f32; m * n];
+        matmul(m, k, n, &a, &b, &mut c);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_nn_st(m, k, n, &a, k, &b, n, &mut c1, n);
+        assert_eq!(c, c1, "threaded and single-thread results must be identical");
+    }
+
+    #[test]
+    fn strided_gemm_blocks() {
+        // Write into an offset block of a larger C to exercise ld* != n.
+        let (m, k, n, ldc) = (5, 7, 6, 10);
+        let mut rng = Rng::new(17);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut cbig = vec![0.0f32; m * ldc];
+        gemm_nn_st(m, k, n, &a, k, &b, n, &mut cbig, ldc);
+        let want = reference::matmul(m, k, n, &a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let d = (cbig[i * ldc + j] - want[i * n + j]).abs();
+                assert!(d < 1e-4, "({i},{j})");
+            }
+            for j in n..ldc {
+                assert_eq!(cbig[i * ldc + j], 0.0, "spill past block");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(18);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 100] {
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - naive).abs() < 1e-3 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+}

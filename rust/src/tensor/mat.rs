@@ -1,8 +1,10 @@
 //! Dense row-major f32 matrices with the linear algebra the rank-selection
 //! and host-compression paths need: matmul, transpose, Gram matrices,
-//! modified Gram-Schmidt. Deliberately simple and allocation-explicit;
-//! the training hot path runs in XLA, not here.
+//! modified Gram-Schmidt. The multiply/orthonormalize entry points lower
+//! onto the tiled + threaded `tensor::kernels` substrate; the original
+//! scalar loops survive in `kernels::reference` as test oracles.
 
+use super::kernels;
 use crate::util::rng::Rng;
 
 /// Row-major dense matrix.
@@ -54,24 +56,13 @@ impl Mat {
         out
     }
 
-    /// `self @ other` — blocked ikj loop (cache-friendly row-major).
+    /// `self @ other` — tiled, register-blocked, threaded above the
+    /// kernel-layer size cutoff.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            let arow = &self.data[i * k..(i + 1) * k];
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        kernels::matmul(m, k, n, &self.data, &other.data, &mut out.data);
         out
     }
 
@@ -80,36 +71,14 @@ impl Mat {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for p in 0..k {
-            let arow = &self.data[p * m..(p + 1) * m];
-            let brow = &other.data[p * n..(p + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        kernels::t_matmul(k, m, n, &self.data, &other.data, &mut out.data);
         out
     }
 
     /// Gram matrix `self @ self^T` (symmetric, rows x rows).
     pub fn gram(&self) -> Mat {
-        let m = self.rows;
-        let mut out = Mat::zeros(m, m);
-        for i in 0..m {
-            for j in i..m {
-                let mut s = 0.0;
-                for (a, b) in self.row(i).iter().zip(self.row(j)) {
-                    s += a * b;
-                }
-                out.data[i * m + j] = s;
-                out.data[j * m + i] = s;
-            }
-        }
+        let mut out = Mat::zeros(self.rows, self.rows);
+        kernels::gram(self.rows, self.cols, &self.data, &mut out.data);
         out
     }
 
@@ -150,33 +119,18 @@ impl Mat {
         out
     }
 
-    /// In-place modified Gram-Schmidt over columns; mirrors the Pallas MGS
-    /// kernel (same eps floor) so host and device agree numerically.
+    /// Modified Gram-Schmidt over columns; mirrors the Pallas MGS kernel
+    /// (same eps floor, same projection order) so host and device agree
+    /// numerically. Runs on contiguous vectors: columns are transposed
+    /// into rows, orthonormalized with the vectorizable kernel, and
+    /// transposed back.
     pub fn mgs(&self) -> Mat {
-        const EPS: f32 = 1e-8;
         let (n, r) = (self.rows, self.cols);
-        let mut q = self.clone();
-        for j in 0..r {
-            for k in 0..j {
-                let mut dot = 0.0;
-                for i in 0..n {
-                    dot += q.data[i * r + k] * q.data[i * r + j];
-                }
-                for i in 0..n {
-                    let qk = q.data[i * r + k];
-                    q.data[i * r + j] -= dot * qk;
-                }
-            }
-            let mut norm = 0.0;
-            for i in 0..n {
-                let v = q.data[i * r + j];
-                norm += v * v;
-            }
-            let norm = norm.sqrt().max(EPS);
-            for i in 0..n {
-                q.data[i * r + j] /= norm;
-            }
-        }
+        let mut qt = vec![0.0f32; r * n];
+        kernels::transpose_into(n, r, &self.data, &mut qt);
+        kernels::mgs_rows(&mut qt, r, n);
+        let mut q = Mat::zeros(n, r);
+        kernels::transpose_into(r, n, &qt, &mut q.data);
         q
     }
 }

@@ -1,14 +1,19 @@
 //! Host tensor-algebra substrate: dense matrices, 4-mode tensors, a
-//! symmetric eigensolver (Jacobi) for Gram-based truncated SVD, and direct
-//! convolutions with both backward passes. All offline-path code — the
-//! training hot path runs inside XLA executables.
+//! symmetric eigensolver (Jacobi) for Gram-based truncated SVD, and
+//! im2col-lowered convolutions with both backward passes. Everything hot
+//! runs on the `kernels` layer (tiled + threaded GEMM microkernels); the
+//! `workspace` arena makes the ASI compression loop allocation-free after
+//! warmup. See `DESIGN.md` for the kernel-layer architecture.
 
 pub mod conv;
 pub mod eig;
+pub mod kernels;
 pub mod mat;
 pub mod tensor4;
+pub mod workspace;
 
-pub use conv::{conv2d, conv2d_dw, conv2d_dx, ConvGeom};
-pub use eig::{left_svd, rank_for_energy, sym_eig, SymEig};
+pub use conv::{conv2d, conv2d_dw, conv2d_dw_ref, conv2d_dx, conv2d_dx_ref, conv2d_ref, ConvGeom};
+pub use eig::{left_svd, left_svd_gram, rank_for_energy, sym_eig, SymEig};
 pub use mat::Mat;
 pub use tensor4::Tensor4;
+pub use workspace::Workspace;

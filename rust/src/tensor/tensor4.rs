@@ -2,7 +2,14 @@
 //! mode unfolding/folding and m-mode products. Layout conventions match
 //! `python/compile/kernels/ref.py` exactly (`moveaxis(m, 0).reshape`),
 //! which pytest cross-checks through the shared test vectors.
+//!
+//! The m-mode products and the subspace-iteration contractions lower onto
+//! `tensor::kernels` GEMMs operating directly on the strided `(outer,
+//! d_m, inner)` view of the C-contiguous buffer — the explicit `unfold`
+//! is never materialized on a hot path (it survives as the layout oracle
+//! for tests and the offline spectra code path).
 
+use super::kernels;
 use super::mat::Mat;
 
 /// Dense row-major (C-contiguous) 4-D tensor.
@@ -112,14 +119,244 @@ impl Tensor4 {
         out
     }
 
+    /// `(outer, d_m, inner)` extents of the contiguous view along mode
+    /// `m`: element `(o, d, i)` lives at `data[(o * d_m + d) * inner + i]`.
+    #[inline]
+    pub fn mode_view(&self, m: usize) -> (usize, usize, usize) {
+        let outer: usize = self.dims[..m].iter().product();
+        let inner: usize = self.dims[m + 1..].iter().product();
+        (outer, self.dims[m], inner)
+    }
+
     /// m-mode product `A x_m mat` with `mat in R^{Q x dims[m]}`.
     pub fn mode_product(&self, mat: &Mat, m: usize) -> Tensor4 {
-        assert_eq!(mat.cols, self.dims[m], "mode_product dim mismatch");
-        let unf = self.unfold(m);
-        let prod = mat.matmul(&unf);
         let mut dims = self.dims;
         dims[m] = mat.rows;
-        Tensor4::fold(&prod, m, dims)
+        let mut out = Tensor4::zeros(dims);
+        self.mode_product_into(mat, m, &mut out);
+        out
+    }
+
+    /// m-mode product by the *transpose* of `mat in R^{dims[m] x Q}` —
+    /// the projection direction Tucker needs — without materializing
+    /// either the transpose or the unfolding.
+    pub fn mode_product_t(&self, mat: &Mat, m: usize) -> Tensor4 {
+        let mut dims = self.dims;
+        dims[m] = mat.cols;
+        let mut out = Tensor4::zeros(dims);
+        self.mode_product_t_into(mat, m, &mut out);
+        out
+    }
+
+    /// `out = A x_m mat` written into a caller-provided tensor (dims must
+    /// already be `self.dims` with mode `m` replaced by `mat.rows`).
+    pub fn mode_product_into(&self, mat: &Mat, m: usize, out: &mut Tensor4) {
+        let (outer, dm, inner) = self.mode_view(m);
+        assert_eq!(mat.cols, dm, "mode_product dim mismatch");
+        let q = mat.rows;
+        let mut want = self.dims;
+        want[m] = q;
+        assert_eq!(out.dims, want, "mode_product_into output dims");
+        if inner == 1 {
+            // Mode-3 view: the product collapses to `in (outer x dm) @
+            // mat^T (dm x q)` on the flat buffer.
+            kernels::matmul_nt(outer, dm, q, &self.data, &mat.data, &mut out.data);
+            return;
+        }
+        out.data.fill(0.0);
+        let work = outer * q * dm * inner;
+        let nt = kernels::threads_for(work, outer);
+        let in_stride = dm * inner;
+        let out_stride = q * inner;
+        if nt <= 1 {
+            for o in 0..outer {
+                kernels::gemm_nn_st(
+                    q,
+                    dm,
+                    inner,
+                    &mat.data,
+                    dm,
+                    &self.data[o * in_stride..],
+                    inner,
+                    &mut out.data[o * out_stride..],
+                    inner,
+                );
+            }
+            return;
+        }
+        let os_per = (outer + nt - 1) / nt;
+        let md = &mat.data;
+        let src = &self.data;
+        std::thread::scope(|s| {
+            for (ti, och) in out.data.chunks_mut(os_per * out_stride).enumerate() {
+                let o0 = ti * os_per;
+                let nos = och.len() / out_stride;
+                s.spawn(move || {
+                    for oi in 0..nos {
+                        kernels::gemm_nn_st(
+                            q,
+                            dm,
+                            inner,
+                            md,
+                            dm,
+                            &src[(o0 + oi) * in_stride..],
+                            inner,
+                            &mut och[oi * out_stride..],
+                            inner,
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    /// `out = A x_m mat^T` with `mat in R^{dims[m] x Q}` written into a
+    /// caller-provided tensor (mode `m` of `out.dims` must be `mat.cols`).
+    pub fn mode_product_t_into(&self, mat: &Mat, m: usize, out: &mut Tensor4) {
+        let (outer, dm, inner) = self.mode_view(m);
+        assert_eq!(mat.rows, dm, "mode_product_t dim mismatch");
+        let q = mat.cols;
+        let mut want = self.dims;
+        want[m] = q;
+        assert_eq!(out.dims, want, "mode_product_t_into output dims");
+        if inner == 1 {
+            // Collapses to `in (outer x dm) @ mat (dm x q)`.
+            kernels::matmul(outer, dm, q, &self.data, &mat.data, &mut out.data);
+            return;
+        }
+        out.data.fill(0.0);
+        let work = outer * q * dm * inner;
+        let nt = kernels::threads_for(work, outer);
+        let in_stride = dm * inner;
+        let out_stride = q * inner;
+        if nt <= 1 {
+            for o in 0..outer {
+                kernels::gemm_tn_st(
+                    q,
+                    dm,
+                    inner,
+                    &mat.data,
+                    q,
+                    &self.data[o * in_stride..],
+                    inner,
+                    &mut out.data[o * out_stride..],
+                    inner,
+                );
+            }
+            return;
+        }
+        let os_per = (outer + nt - 1) / nt;
+        let md = &mat.data;
+        let src = &self.data;
+        std::thread::scope(|s| {
+            for (ti, och) in out.data.chunks_mut(os_per * out_stride).enumerate() {
+                let o0 = ti * os_per;
+                let nos = och.len() / out_stride;
+                s.spawn(move || {
+                    for oi in 0..nos {
+                        kernels::gemm_tn_st(
+                            q,
+                            dm,
+                            inner,
+                            md,
+                            q,
+                            &src[(o0 + oi) * in_stride..],
+                            inner,
+                            &mut och[oi * out_stride..],
+                            inner,
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    /// Mode-`m` Gram matrix `A_(m) A_(m)^T in R^{d_m x d_m}` computed
+    /// directly from the strided view — the unfolding is never built.
+    /// This is all HOSVD's per-mode truncated SVD needs.
+    pub fn mode_gram(&self, m: usize) -> Mat {
+        let (outer, dm, inner) = self.mode_view(m);
+        let mut g = Mat::zeros(dm, dm);
+        if inner == 1 {
+            // Rows of A_(m) are columns of the flat (outer x dm) matrix:
+            // G = in^T @ in — threaded.
+            kernels::t_matmul(outer, dm, dm, &self.data, &self.data, &mut g.data);
+            return g;
+        }
+        for o in 0..outer {
+            let s = &self.data[o * dm * inner..(o + 1) * dm * inner];
+            kernels::gram_acc_st(dm, inner, s, &mut g.data);
+        }
+        g
+    }
+
+    /// Fused `V = A_(m)^T U` with `U in R^{d_m x r}`, written into `v`
+    /// (`prod(other dims) x r`, row-major, rows in unfold column order).
+    /// The unfolding is never materialized.
+    pub fn unfold_t_matmul_into(&self, m: usize, u: &Mat, v: &mut [f32]) {
+        let (outer, dm, inner) = self.mode_view(m);
+        assert_eq!(u.rows, dm, "unfold_t_matmul dim mismatch");
+        let r = u.cols;
+        assert_eq!(v.len(), outer * inner * r, "unfold_t_matmul output size");
+        if inner == 1 {
+            // A_(m)^T is the flat (outer x dm) matrix itself.
+            kernels::matmul(outer, dm, r, &self.data, &u.data, v);
+            return;
+        }
+        if outer == 1 {
+            // Mode 0: one packed `in^T (inner x dm) @ U` — threaded.
+            kernels::t_matmul(dm, inner, r, &self.data, &u.data, v);
+            return;
+        }
+        v.fill(0.0);
+        for o in 0..outer {
+            // V rows o*inner..(o+1)*inner = in_o^T (inner x dm) @ U.
+            kernels::gemm_tn_st(
+                inner,
+                dm,
+                r,
+                &self.data[o * dm * inner..],
+                inner,
+                &u.data,
+                r,
+                &mut v[o * inner * r..],
+                r,
+            );
+        }
+    }
+
+    /// Fused `P = A_(m) V` with `v` in the layout produced by
+    /// [`Tensor4::unfold_t_matmul_into`]; accumulates into `p`
+    /// (`d_m x r`). Together the pair implements one warm-started
+    /// subspace-iteration step without ever building `A_(m)`.
+    pub fn unfold_matmul_into(&self, m: usize, v: &[f32], r: usize, p: &mut [f32]) {
+        let (outer, dm, inner) = self.mode_view(m);
+        assert_eq!(v.len(), outer * inner * r, "unfold_matmul V size");
+        assert_eq!(p.len(), dm * r, "unfold_matmul output size");
+        if inner == 1 {
+            // P = in^T (dm x outer) @ V (outer x r) — threaded.
+            kernels::t_matmul(outer, dm, r, &self.data, v, p);
+            return;
+        }
+        if outer == 1 {
+            // Mode 0: one packed `in (dm x inner) @ V` — threaded.
+            kernels::matmul(dm, inner, r, &self.data, v, p);
+            return;
+        }
+        p.fill(0.0);
+        for o in 0..outer {
+            kernels::gemm_nn_st(
+                dm,
+                inner,
+                r,
+                &self.data[o * dm * inner..],
+                inner,
+                &v[o * inner * r..],
+                r,
+                p,
+                r,
+            );
+        }
     }
 }
 

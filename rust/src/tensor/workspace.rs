@@ -1,0 +1,110 @@
+//! Reusable scratch-buffer arena for the allocation-free ASI hot path.
+//!
+//! The contract is checkout/return: [`Workspace::take`] hands out a zeroed
+//! `Vec<f32>` of the requested length, reusing the smallest pooled buffer
+//! whose capacity fits (best-fit) and allocating only when nothing fits;
+//! [`Workspace::give`] returns a buffer to the pool. Buffers that leave a
+//! hot-path call inside a result (e.g. a `Tucker`'s core and factors) are
+//! handed back by the caller — see `Tucker::recycle` — so a steady-state
+//! compress loop performs zero heap allocations after its first (warmup)
+//! iteration. [`Workspace::alloc_count`] exposes the fresh-allocation
+//! counter the workspace-reuse test asserts on.
+
+/// Scratch-buffer pool. Not thread-safe by design: each hot loop owns one.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    allocs: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { free: Vec::new(), allocs: 0 }
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements. Reuses the
+    /// best-fitting pooled buffer; counts a fresh allocation otherwise.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.allocs += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of fresh heap allocations this workspace has performed.
+    /// Stable across iterations == the hot loop is allocation-free.
+    pub fn alloc_count(&self) -> usize {
+        self.allocs
+    }
+
+    /// Total f32 capacity currently parked in the pool.
+    pub fn pooled_elements(&self) -> usize {
+        self.free.iter().map(|b| b.capacity()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_reuses() {
+        let mut ws = Workspace::new();
+        let mut b = ws.take(8);
+        assert_eq!(b, vec![0.0; 8]);
+        b[3] = 7.0;
+        ws.give(b);
+        assert_eq!(ws.alloc_count(), 1);
+        // Smaller request reuses the same buffer, re-zeroed.
+        let b2 = ws.take(4);
+        assert_eq!(b2, vec![0.0; 4]);
+        assert_eq!(ws.alloc_count(), 1);
+        ws.give(b2);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate() {
+        let mut ws = Workspace::new();
+        let small = ws.take(4);
+        let big = ws.take(100);
+        ws.give(big);
+        ws.give(small);
+        let got = ws.take(3);
+        assert!(got.capacity() < 100, "should pick the 4-element buffer");
+        assert_eq!(ws.alloc_count(), 2);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let a = ws.take(16);
+            let b = ws.take(32);
+            ws.give(a);
+            ws.give(b);
+        }
+        assert_eq!(ws.alloc_count(), 2);
+    }
+}

@@ -1,11 +1,13 @@
 //! Property-based tests over the coordinator's invariants and the tensor
 //! substrate, using the in-repo deterministic harness (`util::prop`).
 
-use asi::compress::{asi_compress, hosvd_fixed, AsiState, Tucker};
+use asi::compress::{asi_compress, asi_compress_ws, hosvd_fixed, si_step,
+                    si_step_mode, AsiState, Tucker};
 use asi::coordinator::rank_selection::{backtracking_select, greedy_select,
                                        LayerPerplexity, PerplexityTable};
 use asi::metrics::flops::LayerDims;
-use asi::tensor::{conv2d, conv2d_dw, ConvGeom, Mat, Tensor4};
+use asi::tensor::{conv2d, conv2d_dw, conv2d_dw_ref, conv2d_dx, conv2d_dx_ref,
+                  conv2d_ref, kernels, ConvGeom, Mat, Tensor4, Workspace};
 use asi::util::json::Json;
 use asi::util::prop::{assert_close, cases, Gen};
 use asi::util::rng::Rng;
@@ -261,6 +263,133 @@ fn prop_json_roundtrip() {
             .map_err(|e| format!("reparse: {e}"))?;
         if re != v {
             return Err(format!("roundtrip mismatch: {v} vs {re}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_matmul_family_matches_scalar_reference() {
+    // The tiled/threaded kernels behind Mat::{matmul, t_matmul, gram}
+    // must agree with the retained scalar oracles within 1e-4 relative
+    // tolerance, across shapes that are NOT multiples of the register
+    // tiles (MR=4, NR=16) or the cache panels.
+    cases(110, 25, |g| {
+        let m = g.usize_in(1, 70);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 33);
+        let a = Mat::from_vec(m, k, g.normals(m * k));
+        let b = Mat::from_vec(k, n, g.normals(k * n));
+        let got = a.matmul(&b);
+        let want = kernels::reference::matmul(m, k, n, &a.data, &b.data);
+        assert_close(&got.data, &want, 1e-4, 1e-5)?;
+
+        let at = Mat::from_vec(k, m, g.normals(k * m));
+        let got = at.t_matmul(&b);
+        let want = kernels::reference::t_matmul(k, m, n, &at.data, &b.data);
+        assert_close(&got.data, &want, 1e-4, 1e-5)?;
+
+        let got = a.gram();
+        let want = kernels::reference::gram(m, k, &a.data);
+        assert_close(&got.data, &want, 1e-4, 1e-5)
+    });
+}
+
+#[test]
+fn prop_fused_unfold_matmul_matches_explicit_unfold() {
+    // si_step_mode contracts the strided tensor directly; it must agree
+    // with the materialized-unfolding path on every mode.
+    cases(111, 12, |g| {
+        let dims = [
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+            g.usize_in(1, 6),
+        ];
+        let a = rand_tensor(g, dims);
+        let mut ws = Workspace::new();
+        for m in 0..4 {
+            let r = g.usize_in(1, 3.min(dims[m]));
+            let u_prev = Mat::from_vec(dims[m], r, g.normals(dims[m] * r));
+            let want = si_step(&a.unfold(m), &u_prev);
+            let got = si_step_mode(&a, m, &u_prev, &mut ws);
+            assert_close(&got.data, &want.data, 1e-4, 1e-5)?;
+            ws.give(got.data);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_im2col_conv_matches_direct_loops() {
+    // Forward, dW and dx through the im2col + GEMM lowering vs the
+    // direct 7-deep reference loops, over stride-1/2 and padded/unpadded
+    // geometries (including 1x1 kernels).
+    cases(112, 15, |g| {
+        let geom = ConvGeom {
+            stride: *g.choose(&[1usize, 2]),
+            padding: g.usize_in(0, 2),
+            ksize: *g.choose(&[1usize, 3]),
+        };
+        let h = g.usize_in(geom.ksize.max(2), 8);
+        let wd = g.usize_in(geom.ksize.max(2), 8);
+        let bsz = g.usize_in(1, 3);
+        let cin = g.usize_in(1, 4);
+        let cout = g.usize_in(1, 4);
+        let x = rand_tensor(g, [bsz, cin, h, wd]);
+        let w = Tensor4::from_vec(
+            [cout, cin, geom.ksize, geom.ksize],
+            g.normals(cout * cin * geom.ksize * geom.ksize),
+        );
+        let y = conv2d(&x, &w, geom);
+        let y_ref = conv2d_ref(&x, &w, geom);
+        assert_close(&y.data, &y_ref.data, 1e-4, 1e-5)?;
+
+        let gy = Tensor4::from_vec(y.dims, g.normals(y.numel()));
+        let dw = conv2d_dw(&x, &gy, geom, cout);
+        let dw_ref = conv2d_dw_ref(&x, &gy, geom, cout);
+        assert_close(&dw.data, &dw_ref.data, 1e-4, 1e-5)?;
+
+        let dx = conv2d_dx(&gy, &w, geom, x.dims);
+        let dx_ref = conv2d_dx_ref(&gy, &w, geom, x.dims);
+        assert_close(&dx.data, &dx_ref.data, 1e-4, 1e-5)
+    });
+}
+
+#[test]
+fn prop_workspace_asi_matches_and_stops_allocating() {
+    // The pooled hot path must (1) produce the same decomposition as the
+    // allocating path and (2) stop allocating after its first iteration.
+    cases(113, 6, |g| {
+        let dims = [
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+        ];
+        let r = g.usize_in(1, 2);
+        let a = rand_tensor(g, dims);
+        let mut st_plain = AsiState::init(
+            dims,
+            [r, r, r, r],
+            &mut Rng::new(g.case as u64 + 500),
+        );
+        let mut st_ws = st_plain.clone();
+        let mut ws = Workspace::new();
+        let mut warm = 0usize;
+        for it in 0..4 {
+            let plain = asi_compress(&a, &mut st_plain);
+            let pooled = asi_compress_ws(&a, &mut st_ws, &mut ws);
+            assert_close(&plain.core.data, &pooled.core.data, 1e-4, 1e-5)?;
+            pooled.recycle(&mut ws);
+            if it == 0 {
+                warm = ws.alloc_count();
+            } else if ws.alloc_count() != warm {
+                return Err(format!(
+                    "iteration {it} allocated ({} vs warmup {warm})",
+                    ws.alloc_count()
+                ));
+            }
         }
         Ok(())
     });

@@ -1,0 +1,209 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The repo builds with zero external dependencies, so this vendored
+//! shim provides the (small) `anyhow` API surface the crate actually
+//! uses: `Result`, `Error`, the `Context` extension trait for `Result`
+//! and `Option`, and the `bail!` / `ensure!` / `anyhow!` macros. The
+//! error value is a chain of context frames (innermost first); `{e}`
+//! prints the outermost frame, `{e:#}` the colon-joined chain, and
+//! `{e:?}` the anyhow-style "Caused by:" listing.
+
+use std::fmt;
+
+/// A context-chain error value. Deliberately does *not* implement
+/// `std::error::Error`, exactly like `anyhow::Error`, so the blanket
+/// `From<E: std::error::Error>` conversion below stays coherent.
+pub struct Error {
+    /// Context frames, innermost (root cause) first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.push(ctx.to_string());
+        self
+    }
+
+    /// Context frames, outermost first (like `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("unknown error")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-joined, outermost first.
+            for (i, frame) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(frame)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().map(|s| s.as_str()).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut frames = self.chain.iter().rev();
+        if let Some(m) = frames.next() {
+            f.write_str(m)?;
+        }
+        let mut header = false;
+        for frame in frames {
+            if !header {
+                f.write_str("\n\nCaused by:")?;
+                header = true;
+            }
+            write!(f, "\n    {frame}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the source chain into context frames (innermost first).
+        let mut frames = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(c) = cur {
+            frames.push(c.to_string());
+            cur = c.source();
+        }
+        frames.reverse();
+        Error { chain: frames }
+    }
+}
+
+/// `anyhow::Result` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn bail_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let r: Result<String> =
+            std::fs::read_to_string("/definitely/not/a/file").with_context(|| "reading file");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "reading file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3u32).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "17".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 17);
+    }
+}

@@ -1,0 +1,226 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The coordinator/runtime layer is written against the real PJRT CPU
+//! client, but this repo must build with zero external dependencies and
+//! no XLA toolchain. This stub mirrors the exact API surface
+//! `runtime::engine` / `runtime::value` use so the whole crate
+//! typechecks and the host-side paths (compression, probing, rank
+//! selection, analytic experiments) run; anything that would actually
+//! touch a device fails fast with a descriptive [`Error`]. Swapping the
+//! real bindings back in is a one-line Cargo change.
+
+use std::fmt;
+
+/// Stub error: carries the operation name that required real PJRT.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT is unavailable in this offline build (stub `xla` \
+         crate; link the real PJRT bindings to run AOT executables)"
+    ))
+}
+
+/// Element types a PJRT literal can carry (only F32/S32 are produced by
+/// this system's executables; the rest exist so callers can match
+/// non-exhaustively like they would against the real bindings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Native types that can cross the host/device boundary.
+pub trait ArrayElement: Copy + Default + 'static {
+    const TY: ElementType;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Shape of a dense array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side literal value. The stub only records its shape; element
+/// storage would live device-side with real bindings.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+}
+
+impl Literal {
+    pub fn scalar<T: ArrayElement>(_v: T) -> Literal {
+        Literal { shape: ArrayShape { dims: vec![], ty: T::TY } }
+    }
+
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        Literal {
+            shape: ArrayShape { dims: vec![data.len() as i64], ty: T::TY },
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal {
+            shape: ArrayShape { dims: dims.to_vec(), ty: self.shape.ty },
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-resident buffer (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// The PJRT client. `cpu()` fails in the stub, so everything downstream
+/// of `Engine::load` degrades gracefully with a clear message.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline build"), "{err}");
+    }
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+}
