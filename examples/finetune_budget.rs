@@ -15,6 +15,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use asi::compress::Method;
 use asi::coordinator::{backtracking_select, greedy_select,
                        measure_perplexity, probe, HostEdgeNet, Session,
                        WarmStart, DEFAULT_EPS};
@@ -74,24 +75,22 @@ fn main() -> Result<()> {
     }
 
     // ---- online phase -------------------------------------------------
-    // Pick the baked rank variant closest to the selected mean rank.
+    // Hand the selected rank plan to Method::resolve_exec, which picks
+    // the baked ASI variant with the closest rank plan.
     let sel = exact.unwrap();
-    let mean_rank: f64 = sel
-        .ranks(&table)
-        .iter()
-        .flat_map(|r| r.iter())
-        .map(|&r| r as f64)
-        .sum::<f64>()
-        / (4.0 * depth as f64);
-    let variant = [1usize, 2, 4, 8]
-        .into_iter()
-        .min_by_key(|&r| ((r as f64 - mean_rank).abs() * 1000.0) as i64)
-        .unwrap();
-    let exec = format!("mcunet_asi_d{depth}_r{variant}");
+    let method = Method::Asi { depth, ranks: sel.ranks(&table) };
+    let exec = method.resolve_exec(&session.engine.manifest, "mcunet")?;
     println!("\n== online: fine-tuning with {exec} ==");
     let pre = session.pretrain("mcunet", 60, 0.05, 1)?;
-    let rep = session.finetune("mcunet", &exec, Some(&pre), 80, 0.05,
-                               WarmStart::Warm, 4, 7)?;
+    let rep = session
+        .finetune("mcunet", method)
+        .pretrained(&pre)
+        .steps(80)
+        .lr(0.05)
+        .warm(WarmStart::Warm)
+        .eval_batches(4)
+        .seed(7)
+        .run()?;
     println!("loss curve : {}", rep.loss.sparkline(50));
     println!("accuracy   : {:.2}%", 100.0 * rep.accuracy);
     println!(

@@ -13,7 +13,8 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use asi::coordinator::{Session, Trainer, WarmStart};
+use asi::compress::Method;
+use asi::coordinator::{Session, Trainer};
 use asi::data::TokenDataset;
 use asi::models::zoo;
 use asi::runtime::HostTensor;
@@ -28,10 +29,12 @@ fn main() -> Result<()> {
     let ds = TokenDataset::new(lm.vocab, lm.seq_len, 11);
 
     for depth in [1usize, 3] {
-        for method in ["vanilla", "asi"] {
-            let exec = format!("tinylm_{method}_d{depth}");
-            let mut tr = Trainer::new(&session.engine, "tinylm", &exec,
-                                      0.05, WarmStart::Warm, 5)?;
+        // The LM rank is baked into the executable, so the ASI method
+        // carries no rank plan here.
+        for method in [Method::Vanilla { depth },
+                       Method::Asi { depth, ranks: vec![] }] {
+            let spec = session.finetune("tinylm", method).lr(0.05).seed(5);
+            let mut tr = Trainer::new(&spec)?;
             let mut last = f32::NAN;
             for i in 0..steps {
                 let (toks, _, _) = ds.batch("train", i, lm.batch_size);
@@ -39,8 +42,8 @@ fn main() -> Result<()> {
                                         toks);
                 last = tr.step(x, None)?;
             }
-            println!("{exec}: final loss {last:.4} \
-                      (state {} bytes)", tr.state_bytes());
+            println!("{}: final loss {last:.4} \
+                      (state {} bytes)", tr.exec_name, tr.state_bytes());
         }
     }
 

@@ -14,8 +14,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use asi::coordinator::{Session, Trainer, WarmStart};
-use asi::metrics::flops::{train_cost, LayerDims, Method};
+use asi::compress::Method;
+use asi::coordinator::{Session, Trainer};
+use asi::metrics::flops::{train_cost, LayerDims};
 use asi::util::timer;
 
 fn main() -> Result<()> {
@@ -34,39 +35,35 @@ fn main() -> Result<()> {
             LayerDims::new(b, c, h, w, cout, stride, cnn.ksize)
         })
         .collect();
-    let ranks = vec![[4usize, 4, 4, 4]; 2];
 
     println!(
         "{:<10} {:>12} {:>14} {:>12}",
         "method", "ms/step", "model MFLOPs", "vs vanilla"
     );
     let mut vanilla_ms = f64::NAN;
-    for method in ["vanilla", "gf", "asi", "hosvd"] {
-        let exec = match method {
-            "asi" => format!("{model}_asi_d2_r4"),
-            m => format!("{model}_{m}_d2"),
-        };
-        let mut tr = Trainer::new(&session.engine, model, &exec, 0.05,
-                                  WarmStart::Warm, 3)?;
+    for method in [
+        Method::Vanilla { depth: 2 },
+        Method::GradFilter { depth: 2 },
+        Method::asi(2, 4),
+        Method::hosvd(2, 4),
+    ] {
+        let name = method.name();
+        let spec = session.finetune(model, method.clone()).lr(0.05).seed(3);
+        let mut tr = Trainer::new(&spec)?;
+        let exec = tr.exec_name.clone();
         let b = session.downstream_ds.batch("train", 0, cnn.batch_size);
         tr.step_image(&b)?; // XLA compile + warm-up
         let stats = timer::bench(&exec, 1, iters, || {
             let b = session.downstream_ds.batch("train", 1, cnn.batch_size);
             tr.step_image(&b).expect("step");
         });
-        let m = match method {
-            "vanilla" => Method::Vanilla,
-            "gf" => Method::GradientFilter,
-            "hosvd" => Method::Hosvd(ranks.clone()),
-            _ => Method::Asi(ranks.clone()),
-        };
-        let cost = train_cost(&layers, 2, &m);
-        if method == "vanilla" {
+        let cost = train_cost(&layers, &method);
+        if name == "vanilla" {
             vanilla_ms = stats.mean_s * 1e3;
         }
         println!(
             "{:<10} {:>12.2} {:>14.1} {:>11.2}x",
-            method,
+            name,
             stats.mean_s * 1e3,
             cost.flops as f64 / 1e6,
             stats.mean_s * 1e3 / vanilla_ms

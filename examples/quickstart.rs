@@ -5,6 +5,17 @@
 //! two conv layers with ASI under a warm start, and reports loss,
 //! accuracy and the activation state the coordinator carries.
 //!
+//! Methods are named through the typed [`Method`] enum and runs are
+//! configured with the [`FinetuneSpec`] builder — no raw executable
+//! strings anywhere:
+//!
+//! ```ignore
+//! session.finetune("mcunet", Method::asi(2, 4))
+//!     .pretrained(&pre).steps(80).lr(0.05)
+//!     .warm(WarmStart::Warm).eval_batches(4).seed(7)
+//!     .run()?
+//! ```
+//!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
@@ -13,8 +24,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use asi::compress::Method;
 use asi::coordinator::{Session, WarmStart};
-use asi::metrics::flops::{train_cost, LayerDims, Method};
+use asi::metrics::flops::{train_cost, LayerDims};
 
 fn main() -> Result<()> {
     let session = Session::open(Path::new("artifacts"), 42)?;
@@ -26,24 +38,26 @@ fn main() -> Result<()> {
 
     // 2. Fine-tune the last 2 conv layers with ASI (rank 4 per mode).
     println!("fine-tuning with ASI (depth 2, warm start)...");
-    let rep = session.finetune(
-        "mcunet",
-        "mcunet_asi_d2_r4",
-        Some(&pre),
-        80,
-        0.05,
-        WarmStart::Warm,
-        4,
-        7,
-    )?;
+    let method = Method::asi(2, 4);
+    let rep = session
+        .finetune("mcunet", method.clone())
+        .pretrained(&pre)
+        .steps(80)
+        .lr(0.05)
+        .warm(WarmStart::Warm)
+        .eval_batches(4)
+        .seed(7)
+        .run()?;
 
+    println!("executable : {}", rep.exec);
     println!("loss curve : {}", rep.loss.sparkline(50));
     println!("final loss : {:.4}", rep.final_loss);
     println!("accuracy   : {:.2}%", 100.0 * rep.accuracy);
     println!("per step   : {:.1} ms", 1e3 * rep.wall_s / rep.steps as f64);
     println!("ASI state  : {} bytes (warm-start factors)", rep.state_bytes);
 
-    // 3. The paper's analytic accounting for the same configuration.
+    // 3. The paper's analytic accounting for the same configuration —
+    //    the same Method value drives the cost model.
     let cnn = session.engine.manifest.cnn("mcunet")?;
     let layers: Vec<LayerDims> = cnn
         .activation_shapes
@@ -53,9 +67,8 @@ fn main() -> Result<()> {
             LayerDims::new(b, c, h, w, cout, stride, cnn.ksize)
         })
         .collect();
-    let ranks = vec![[4, 4, 4, 4]; 2];
-    let vanilla = train_cost(&layers, 2, &Method::Vanilla);
-    let asi = train_cost(&layers, 2, &Method::Asi(ranks));
+    let vanilla = train_cost(&layers, &Method::Vanilla { depth: 2 });
+    let asi = train_cost(&layers, &method);
     println!(
         "activation memory: vanilla {:.1} KiB vs ASI {:.1} KiB ({:.1}x)",
         vanilla.act_bytes as f64 / 1024.0,

@@ -2,8 +2,13 @@
 //! cost-model evaluation itself (criterion is unavailable offline; the
 //! in-repo harness prints mean/min/max).
 //!
+//! The microbench drives the cost model the way every experiment driver
+//! now does: one `dyn Compressor` per method, built by `Method`, with
+//! `flops`/`storage_elems` evaluated through the trait object.
+//!
 //! Run: `cargo bench --bench fig2_analytic`
 
+use asi::compress::{Compressor, Method};
 use asi::experiments::fig2;
 use asi::metrics::flops::LayerDims;
 use asi::util::timer;
@@ -12,16 +17,27 @@ fn main() {
     println!("{}", fig2::flops_vs_map_size().render());
     println!("{}", fig2::ratios_vs_rank().render());
 
-    // Microbench the analytic model (it sits inside every experiment
-    // driver's inner loop, so it should be effectively free).
+    // Microbench the analytic model exactly as `train_cost` pays for it
+    // per tail layer: build each method's compressor (a small boxing;
+    // ASI factor init is lazy) and evaluate flops/storage through the
+    // trait object. It sits inside every experiment driver's inner
+    // loop, so it should be effectively free.
     let l = LayerDims::new(128, 64, 32, 32, 64, 1, 3);
+    let methods = [
+        Method::Vanilla { depth: 1 },
+        Method::GradFilter { depth: 1 },
+        Method::hosvd(1, 4),
+        Method::asi(1, 4),
+    ];
     let mut acc = 0u64;
     let st = timer::bench("cost_model_eval", 100, 10_000, || {
-        acc = acc
-            .wrapping_add(l.fwd_flops())
-            .wrapping_add(l.asi_overhead([4, 4, 4, 4]))
-            .wrapping_add(l.asi_dw_flops([4, 4, 4, 4]))
-            .wrapping_add(l.hosvd_overhead());
+        acc = acc.wrapping_add(l.fwd_flops());
+        for m in &methods {
+            let c: Box<dyn Compressor> = m.layer_compressor(0, l.act_dims());
+            acc = acc
+                .wrapping_add(c.flops(l))
+                .wrapping_add(c.storage_elems(l.act_dims()));
+        }
     });
     println!("{}", st.report());
     assert!(acc > 0);

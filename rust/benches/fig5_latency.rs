@@ -6,7 +6,8 @@
 
 use std::path::Path;
 
-use asi::coordinator::{Session, Trainer, WarmStart};
+use asi::compress::Method;
+use asi::coordinator::{Session, Trainer};
 use asi::util::timer;
 
 fn main() {
@@ -20,14 +21,16 @@ fn main() {
     let cnn = session.engine.manifest.cnn(model).expect("cnn").clone();
 
     let mut rows = Vec::new();
-    for method in ["vanilla", "gf", "asi", "hosvd"] {
-        let exec = match method {
-            "asi" => format!("{model}_asi_d2_r4"),
-            m => format!("{model}_{m}_d2"),
-        };
-        let mut tr = Trainer::new(&session.engine, model, &exec, 0.05,
-                                  WarmStart::Warm, 3)
-            .expect("trainer");
+    for method in [
+        Method::Vanilla { depth: 2 },
+        Method::GradFilter { depth: 2 },
+        Method::asi(2, 4),
+        Method::hosvd(2, 4),
+    ] {
+        let name = method.name();
+        let spec = session.finetune(model, method).lr(0.05).seed(3);
+        let mut tr = Trainer::new(&spec).expect("trainer");
+        let exec = tr.exec_name.clone();
         let b = session.downstream_ds.batch("train", 0, cnn.batch_size);
         tr.step_image(&b).expect("warmup");
         let st = timer::bench(&exec, 2, 10, || {
@@ -35,7 +38,7 @@ fn main() {
             tr.step_image(&b).expect("step");
         });
         println!("{}", st.report());
-        rows.push((method, st.mean_s));
+        rows.push((name, st.mean_s));
     }
     let vanilla = rows
         .iter()

@@ -1,0 +1,393 @@
+//! The `Compressor` trait — one object-safe surface over every
+//! activation-compression method the paper evaluates (ASI, HOSVD_eps,
+//! fixed-rank HOSVD, gradient filtering, and the identity/vanilla
+//! baseline). The host paths (perplexity probe, rank selection, the
+//! analytic accounting) iterate over `&mut dyn Compressor` instead of
+//! per-method match arms; each impl's body is the corresponding free
+//! function, so numeric outputs are identical to calling those directly.
+
+use crate::metrics::flops::{tucker_elems, LayerDims};
+use crate::tensor::{conv2d_dw, ConvGeom, Mat, Tensor4, Workspace};
+use crate::util::rng::Rng;
+
+use super::asi::{asi_compress_ws, AsiState};
+use super::gf::avg_pool2;
+use super::hosvd::{hosvd_eps, hosvd_fixed};
+use super::tucker::Tucker;
+
+/// What one `compress` call produced: the method-specific retained form
+/// of the activation, with a uniform gradient/storage interface.
+#[derive(Debug, Clone)]
+pub enum Compressed {
+    /// Tucker form (ASI / HOSVD) — eq. 5 storage, eq. 15 gradient.
+    Tucker(Tucker),
+    /// 2x2 average-pooled activation (gradient filtering).
+    Pooled(Tensor4),
+    /// The uncompressed activation (vanilla / identity).
+    Dense(Tensor4),
+}
+
+impl Compressed {
+    /// Elements actually retained by this representation.
+    pub fn storage_elems(&self) -> u64 {
+        match self {
+            Compressed::Tucker(t) => t.storage() as u64,
+            Compressed::Pooled(x) => x.numel() as u64,
+            Compressed::Dense(x) => x.numel() as u64,
+        }
+    }
+
+    /// Per-mode ranks, when the representation has them.
+    pub fn ranks(&self) -> Option<[usize; 4]> {
+        match self {
+            Compressed::Tucker(t) => Some(t.ranks()),
+            _ => None,
+        }
+    }
+
+    /// Weight gradient computed from the retained form and the output
+    /// gradient `gy` — eq. 15 for Tucker, the x4-compensated pooled
+    /// correlation for GF, the exact correlation for Dense.
+    pub fn dw(&self, gy: &Tensor4, g: ConvGeom) -> Tensor4 {
+        let cout = gy.dims[1];
+        match self {
+            Compressed::Tucker(t) => t.lowrank_dw(gy, g),
+            Compressed::Pooled(xp) => {
+                let gyp = avg_pool2(gy);
+                let mut dw = conv2d_dw(xp, &gyp, g, cout);
+                for v in dw.data.iter_mut() {
+                    *v *= 4.0;
+                }
+                dw
+            }
+            Compressed::Dense(x) => conv2d_dw(x, gy, g, cout),
+        }
+    }
+}
+
+/// Cross-step state a compressor carries (warm starts).
+#[derive(Debug)]
+pub enum CompressorState<'a> {
+    /// No state is threaded between steps.
+    Stateless,
+    /// ASI warm-start factors, one per mode, plus the step counter.
+    Warm { us: &'a [Mat; 4], steps: usize },
+}
+
+/// Object-safe strategy interface for one fine-tuned layer's activation
+/// compression. `flops`/`storage_elems` are the analytic cost model
+/// (eqs. 5, 11–15) evaluated with the impl's configured ranks, so
+/// `metrics::flops::train_cost` dispatches through the same trait the
+/// probe does.
+pub trait Compressor {
+    /// Method key as it appears in the manifest ("asi", "hosvd", ...).
+    fn name(&self) -> &'static str;
+
+    /// Compress one activation tensor; scratch comes from `ws`.
+    fn compress(&mut self, a: &Tensor4, ws: &mut Workspace) -> Compressed;
+
+    /// Analytic elements retained for an activation of shape `dims`
+    /// (eq. 5 for Tucker methods, the pooled map for GF).
+    fn storage_elems(&self, dims: [usize; 4]) -> u64;
+
+    /// Analytic per-step FLOPs: compression overhead + weight-gradient
+    /// cost for this method on layer `l` (eqs. 11–16).
+    fn flops(&self, l: LayerDims) -> u64;
+
+    /// Warm-start state carried across steps, if any.
+    fn state(&self) -> CompressorState<'_>;
+}
+
+/// ASI (Algorithm 1): warm-started single subspace iteration per mode.
+/// Wraps [`asi_compress_ws`]; the warm-start factors live in `state`.
+///
+/// Factor initialization is *lazy*: the random cold-start factors are
+/// only materialized on the first `compress` call, so building an `Asi`
+/// purely for the analytic cost model (`flops`/`storage_elems`, as
+/// `train_cost` does per layer) allocates nothing.
+pub struct Asi {
+    dims: [usize; 4],
+    ranks: [usize; 4],
+    seed: u64,
+    state: Option<AsiState>,
+}
+
+impl Asi {
+    /// Cold-start at `seed` — the factor init (on first `compress`) is
+    /// exactly `AsiState::init(dims, ranks, &mut Rng::new(seed))`.
+    pub fn new(dims: [usize; 4], ranks: [usize; 4], seed: u64) -> Asi {
+        Asi { dims, ranks, seed, state: None }
+    }
+
+    /// Adopt an existing warm-start state (e.g. restored from a
+    /// checkpoint or threaded from a previous layer lifetime).
+    pub fn from_state(state: AsiState, ranks: [usize; 4]) -> Asi {
+        let dims: [usize; 4] = std::array::from_fn(|m| state.us[m].rows);
+        Asi { dims, ranks, seed: 0, state: Some(state) }
+    }
+}
+
+impl Compressor for Asi {
+    fn name(&self) -> &'static str {
+        "asi"
+    }
+
+    fn compress(&mut self, a: &Tensor4, ws: &mut Workspace) -> Compressed {
+        let (dims, ranks, seed) = (self.dims, self.ranks, self.seed);
+        let state = self.state.get_or_insert_with(|| {
+            AsiState::init(dims, ranks, &mut Rng::new(seed))
+        });
+        Compressed::Tucker(asi_compress_ws(a, state, ws))
+    }
+
+    fn storage_elems(&self, dims: [usize; 4]) -> u64 {
+        tucker_elems(dims, self.ranks)
+    }
+
+    fn flops(&self, l: LayerDims) -> u64 {
+        l.asi_overhead(self.ranks) + l.asi_dw_flops(self.ranks)
+    }
+
+    fn state(&self) -> CompressorState<'_> {
+        match &self.state {
+            // Factors exist only once the first compress ran.
+            Some(st) => CompressorState::Warm { us: &st.us, steps: st.steps },
+            None => CompressorState::Stateless,
+        }
+    }
+}
+
+/// HOSVD_eps: per-mode ranks chosen by explained variance each call.
+/// The analytic costs use the most recent call's ranks (full rank before
+/// the first call — the conservative bound).
+pub struct HosvdEps {
+    eps: f32,
+    last_ranks: Option<[usize; 4]>,
+}
+
+impl HosvdEps {
+    pub fn new(eps: f32) -> HosvdEps {
+        HosvdEps { eps, last_ranks: None }
+    }
+
+    pub fn eps(&self) -> f32 {
+        self.eps
+    }
+}
+
+impl Compressor for HosvdEps {
+    fn name(&self) -> &'static str {
+        "hosvd"
+    }
+
+    fn compress(&mut self, a: &Tensor4, _ws: &mut Workspace) -> Compressed {
+        let (t, r) = hosvd_eps(a, self.eps);
+        self.last_ranks = Some(r);
+        Compressed::Tucker(t)
+    }
+
+    fn storage_elems(&self, dims: [usize; 4]) -> u64 {
+        tucker_elems(dims, self.last_ranks.unwrap_or(dims))
+    }
+
+    fn flops(&self, l: LayerDims) -> u64 {
+        let r = self.last_ranks.unwrap_or([l.b, l.c, l.h, l.w]);
+        l.hosvd_overhead() + l.asi_dw_flops(r)
+    }
+
+    fn state(&self) -> CompressorState<'_> {
+        CompressorState::Stateless
+    }
+}
+
+/// Truncated HOSVD at fixed per-mode ranks (the baked-rank baseline).
+pub struct HosvdFixed {
+    ranks: [usize; 4],
+}
+
+impl HosvdFixed {
+    pub fn new(ranks: [usize; 4]) -> HosvdFixed {
+        HosvdFixed { ranks }
+    }
+}
+
+impl Compressor for HosvdFixed {
+    fn name(&self) -> &'static str {
+        "hosvd"
+    }
+
+    fn compress(&mut self, a: &Tensor4, _ws: &mut Workspace) -> Compressed {
+        Compressed::Tucker(hosvd_fixed(a, self.ranks))
+    }
+
+    fn storage_elems(&self, dims: [usize; 4]) -> u64 {
+        tucker_elems(dims, self.ranks)
+    }
+
+    fn flops(&self, l: LayerDims) -> u64 {
+        l.hosvd_overhead() + l.asi_dw_flops(self.ranks)
+    }
+
+    fn state(&self) -> CompressorState<'_> {
+        CompressorState::Stateless
+    }
+}
+
+/// Gradient filtering (CVPR-23): keep the 2x2-pooled activation.
+#[derive(Default)]
+pub struct GradFilter;
+
+impl GradFilter {
+    pub fn new() -> GradFilter {
+        GradFilter
+    }
+}
+
+impl Compressor for GradFilter {
+    fn name(&self) -> &'static str {
+        "gf"
+    }
+
+    fn compress(&mut self, a: &Tensor4, _ws: &mut Workspace) -> Compressed {
+        Compressed::Pooled(avg_pool2(a))
+    }
+
+    fn storage_elems(&self, dims: [usize; 4]) -> u64 {
+        super::gf::gf_storage(dims) as u64
+    }
+
+    fn flops(&self, l: LayerDims) -> u64 {
+        l.gf_dw_flops()
+    }
+
+    fn state(&self) -> CompressorState<'_> {
+        CompressorState::Stateless
+    }
+}
+
+/// No compression — vanilla training's activation handling.
+#[derive(Default)]
+pub struct Identity;
+
+impl Identity {
+    pub fn new() -> Identity {
+        Identity
+    }
+}
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+
+    fn compress(&mut self, a: &Tensor4, _ws: &mut Workspace) -> Compressed {
+        Compressed::Dense(a.clone())
+    }
+
+    fn storage_elems(&self, dims: [usize; 4]) -> u64 {
+        dims.iter().map(|&d| d as u64).product()
+    }
+
+    fn flops(&self, l: LayerDims) -> u64 {
+        l.dw_flops_vanilla()
+    }
+
+    fn state(&self) -> CompressorState<'_> {
+        CompressorState::Stateless
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::gf::{gf_dw, gf_storage};
+
+    fn randt(dims: [usize; 4], seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(dims, rng.normal_vec(dims.iter().product()))
+    }
+
+    #[test]
+    fn dyn_dispatch_covers_every_method() {
+        let dims = [4usize, 3, 6, 6];
+        let a = randt(dims, 1);
+        let mut ws = Workspace::new();
+        let mut comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity::new()),
+            Box::new(GradFilter::new()),
+            Box::new(HosvdEps::new(0.8)),
+            Box::new(HosvdFixed::new([2, 2, 2, 2])),
+            Box::new(Asi::new(dims, [2, 2, 2, 2], 7)),
+        ];
+        let l = LayerDims::new(4, 3, 6, 6, 8, 1, 3);
+        for c in comps.iter_mut() {
+            let out = c.compress(&a, &mut ws);
+            assert!(out.storage_elems() > 0, "{}", c.name());
+            assert!(c.flops(l) > 0, "{}", c.name());
+            let gy = randt([4, 8, 6, 6], 2);
+            let g = ConvGeom { stride: 1, padding: 1, ksize: 3 };
+            assert_eq!(out.dw(&gy, g).dims, [8, 3, 3, 3]);
+        }
+    }
+
+    #[test]
+    fn identity_dw_is_exact() {
+        let dims = [2usize, 3, 4, 4];
+        let a = randt(dims, 3);
+        let gy = randt([2, 5, 4, 4], 4);
+        let g = ConvGeom { stride: 1, padding: 1, ksize: 3 };
+        let mut ws = Workspace::new();
+        let out = Identity::new().compress(&a, &mut ws);
+        let want = conv2d_dw(&a, &gy, g, 5);
+        assert_eq!(out.dw(&gy, g).data, want.data);
+        assert_eq!(out.storage_elems(), a.numel() as u64);
+    }
+
+    #[test]
+    fn gradfilter_matches_gf_free_functions() {
+        let dims = [2usize, 3, 6, 6];
+        let a = randt(dims, 5);
+        let gy = randt([2, 4, 6, 6], 6);
+        let g = ConvGeom { stride: 1, padding: 0, ksize: 1 };
+        let mut ws = Workspace::new();
+        let gf = GradFilter::new();
+        assert_eq!(gf.storage_elems(dims), gf_storage(dims) as u64);
+        let out = GradFilter::new().compress(&a, &mut ws);
+        let want = gf_dw(&a, &gy, g, 4);
+        let got = out.dw(&gy, g);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn asi_warm_state_is_exposed_and_advances() {
+        let dims = [4usize, 4, 4, 4];
+        let a = randt(dims, 8);
+        let mut ws = Workspace::new();
+        let mut c = Asi::new(dims, [2, 2, 2, 2], 9);
+        // Lazy init: no factors exist until the first compress.
+        assert!(matches!(c.state(), CompressorState::Stateless));
+        c.compress(&a, &mut ws);
+        match c.state() {
+            CompressorState::Warm { us, steps } => {
+                assert_eq!(steps, 1);
+                assert_eq!(us[0].rows, 4);
+            }
+            _ => panic!("ASI must stay warm"),
+        }
+    }
+
+    #[test]
+    fn hosvd_eps_records_ranks_for_costs() {
+        let dims = [4usize, 4, 4, 4];
+        let a = randt(dims, 10);
+        let mut ws = Workspace::new();
+        let mut c = HosvdEps::new(0.7);
+        // Before any call: conservative full-rank storage.
+        assert_eq!(c.storage_elems(dims), tucker_elems(dims, dims));
+        let out = c.compress(&a, &mut ws);
+        assert_eq!(c.storage_elems(dims),
+                   tucker_elems(dims, out.ranks().unwrap()));
+    }
+}

@@ -56,9 +56,11 @@ pub fn gf_dw(x: &Tensor4, gy: &Tensor4, g: ConvGeom, cout: usize) -> Tensor4 {
 }
 
 /// Memory (elements) kept by gradient filtering for one layer: the pooled
-/// activation, i.e. a quarter of the full map.
+/// activation, i.e. a quarter of the full map. The `.max(1)` guards keep
+/// the formula total on degenerate 1-pixel maps, matching
+/// `LayerDims::gf_storage` (the analytic accounting).
 pub fn gf_storage(dims: [usize; 4]) -> usize {
-    dims[0] * dims[1] * (dims[2] / 2) * (dims[3] / 2)
+    dims[0] * dims[1] * (dims[2] / 2).max(1) * (dims[3] / 2).max(1)
 }
 
 #[cfg(test)]

@@ -1,0 +1,467 @@
+//! `Method` — the one type that names a compression method.
+//!
+//! Every place that used to pick an AOT executable by raw string
+//! (`"mcunet_asi_d2_r4"`) or re-dispatch on a method keyword now goes
+//! through this enum: [`Method::resolve_exec`] derives the executable
+//! name from the manifest's metadata (model / method / depth / baked
+//! ranks) with a did-you-mean error when nothing matches, and
+//! [`Method::layer_compressor`] builds the matching [`Compressor`] so
+//! the analytic cost model and the host probe share one dispatch path.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::flops::LayerDims;
+use crate::runtime::{ExecEntry, Manifest};
+
+use super::compressor::{Asi, Compressor, GradFilter, HosvdFixed, Identity};
+
+/// Which activation-handling method a training run uses. The only way
+/// to name a method anywhere in the system.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Method {
+    /// Vanilla training of the whole network (pre-training).
+    Full,
+    /// Vanilla fine-tuning of the last `depth` layers.
+    Vanilla { depth: usize },
+    /// Gradient filtering (CVPR-23), patch size 2.
+    GradFilter { depth: usize },
+    /// HOSVD_eps baseline with per-layer per-mode ranks.
+    Hosvd { depth: usize, ranks: Vec<[usize; 4]> },
+    /// ASI (the contribution) with per-layer per-mode ranks; leave
+    /// `ranks` empty for the matrix/LM form (the rank is baked into the
+    /// executable).
+    Asi { depth: usize, ranks: Vec<[usize; 4]> },
+}
+
+impl Method {
+    /// ASI with a uniform per-mode rank across the fine-tuned tail.
+    pub fn asi(depth: usize, rank: usize) -> Method {
+        Method::Asi { depth, ranks: vec![[rank; 4]; depth] }
+    }
+
+    /// HOSVD with a uniform per-mode rank across the fine-tuned tail.
+    pub fn hosvd(depth: usize, rank: usize) -> Method {
+        Method::Hosvd { depth, ranks: vec![[rank; 4]; depth] }
+    }
+
+    /// Parse a CLI-style method keyword.
+    pub fn from_key(key: &str, depth: usize, rank: usize) -> Result<Method> {
+        Ok(match key {
+            "full" => Method::Full,
+            "vanilla" => Method::Vanilla { depth },
+            "gf" => Method::GradFilter { depth },
+            "hosvd" => Method::hosvd(depth, rank),
+            "asi" => Method::asi(depth, rank),
+            other => bail!(
+                "unknown method '{other}' \
+                 (expected full | vanilla | gf | hosvd | asi)"
+            ),
+        })
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::Vanilla { .. } => "vanilla",
+            Method::GradFilter { .. } => "gf",
+            Method::Hosvd { .. } => "hosvd",
+            Method::Asi { .. } => "asi",
+        }
+    }
+
+    /// Method key as recorded in the manifest (`Full` compiles as a
+    /// vanilla step over every layer).
+    fn manifest_key(&self) -> &'static str {
+        match self {
+            Method::Full | Method::Vanilla { .. } => "vanilla",
+            Method::GradFilter { .. } => "gf",
+            Method::Hosvd { .. } => "hosvd",
+            Method::Asi { .. } => "asi",
+        }
+    }
+
+    /// Number of fine-tuned tail layers; `None` means the whole network.
+    pub fn depth(&self) -> Option<usize> {
+        match self {
+            Method::Full => None,
+            Method::Vanilla { depth }
+            | Method::GradFilter { depth }
+            | Method::Hosvd { depth, .. }
+            | Method::Asi { depth, .. } => Some(*depth),
+        }
+    }
+
+    /// Per-layer per-mode ranks (empty for rank-free methods).
+    pub fn ranks(&self) -> &[[usize; 4]] {
+        match self {
+            Method::Hosvd { ranks, .. } | Method::Asi { ranks, .. } => ranks,
+            _ => &[],
+        }
+    }
+
+    /// Same method with the tail ranks replaced (no-op for rank-free
+    /// methods) — used to re-cost a run with the manifest's baked ranks.
+    pub fn with_ranks(self, new: Vec<[usize; 4]>) -> Method {
+        match self {
+            Method::Hosvd { depth, .. } => Method::Hosvd { depth, ranks: new },
+            Method::Asi { depth, .. } => Method::Asi { depth, ranks: new },
+            other => other,
+        }
+    }
+
+    /// Build the compressor for tail layer `i` whose input activation
+    /// has shape `dims`. Panics if a ranked method has no entry for `i`
+    /// (the rank plan must cover the fine-tuned tail).
+    pub fn layer_compressor(&self, i: usize, dims: [usize; 4])
+        -> Box<dyn Compressor> {
+        match self {
+            Method::Full | Method::Vanilla { .. } => Box::new(Identity::new()),
+            Method::GradFilter { .. } => Box::new(GradFilter::new()),
+            Method::Hosvd { ranks, .. } => Box::new(HosvdFixed::new(ranks[i])),
+            Method::Asi { ranks, .. } => {
+                Box::new(Asi::new(dims, ranks[i], i as u64))
+            }
+        }
+    }
+
+    /// Derive the AOT executable name for `model` from the manifest's
+    /// metadata. Ambiguous ASI rank variants are resolved to the baked
+    /// rank plan closest (L1) to the requested ranks; every failure mode
+    /// produces an error listing the executables that *do* exist.
+    pub fn resolve_exec(&self, manifest: &Manifest, model: &str)
+        -> Result<String> {
+        if !manifest.models.contains_key(model) {
+            let known: Vec<&str> =
+                manifest.models.keys().map(String::as_str).collect();
+            bail!("unknown model '{model}' (known models: {})",
+                  known.join(", "));
+        }
+        let key = self.manifest_key();
+        let depth = match self.depth() {
+            Some(d) => d,
+            // Full == vanilla over every conv layer.
+            None => manifest.cnn(model)?.convs.len(),
+        };
+        let cands = manifest.find_train(model, key, depth);
+        if cands.is_empty() {
+            return Err(self.no_match_error(manifest, model, key, depth));
+        }
+        if cands.len() == 1 {
+            return Ok(cands[0].name.clone());
+        }
+        // Several baked variants (the ASI rank sweep): pick the closest.
+        let want = self.ranks();
+        if want.is_empty() {
+            // A rank-free ambiguity is harmless when the candidates are
+            // functionally identical executables — e.g. `*_train_full`
+            // next to `*_vanilla_dN` when N == the model's conv count
+            // (same method, same depth, same signature). Pick the first
+            // (name order); otherwise the caller must disambiguate.
+            if cands.iter().all(|e| same_signature(e, cands[0])) {
+                return Ok(cands[0].name.clone());
+            }
+            let names: Vec<&str> =
+                cands.iter().map(|e| e.name.as_str()).collect();
+            bail!(
+                "{} '{key}' executables for model '{model}' at depth \
+                 {depth} ({}); specify ranks to disambiguate",
+                cands.len(),
+                names.join(", ")
+            );
+        }
+        let best = cands
+            .iter()
+            .min_by_key(|e| rank_distance(want, &e.ranks))
+            .expect("non-empty candidate set");
+        Ok(best.name.clone())
+    }
+
+    /// Strict variant of [`Method::resolve_exec`] for existence guards
+    /// and sweeps: a ranked method must match a baked plan *exactly*
+    /// (after clipping the requested ranks to the tail activation dims,
+    /// which is how the AOT pipeline bakes them) — no nearest-plan
+    /// substitution. Use this wherever a table row or assert is labeled
+    /// with the requested ranks; keep `resolve_exec` for mapping
+    /// rank-selection output onto the closest compiled variant.
+    pub fn resolve_exec_strict(&self, manifest: &Manifest, model: &str)
+        -> Result<String> {
+        let exec = self.resolve_exec(manifest, model)?;
+        let want = self.ranks();
+        if want.is_empty() {
+            // Rank-free lookups are already required to be unambiguous.
+            return Ok(exec);
+        }
+        let cnn = manifest.cnn(model)?;
+        let tail_start =
+            cnn.activation_shapes.len().saturating_sub(want.len());
+        let clipped: Vec<[usize; 4]> = want
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                match cnn.activation_shapes.get(tail_start + i) {
+                    Some(d) => std::array::from_fn(|m| r[m].min(d[m])),
+                    None => *r,
+                }
+            })
+            .collect();
+        let entry = manifest.exec(&exec)?;
+        if rank_distance(&clipped, &entry.ranks) != 0 {
+            bail!(
+                "no baked '{}' variant on '{model}' with ranks {want:?} \
+                 (closest is {exec} with {:?})",
+                self.name(),
+                entry.ranks
+            );
+        }
+        Ok(exec)
+    }
+
+    /// Build the "nothing at this depth" error with a did-you-mean list.
+    fn no_match_error(&self, manifest: &Manifest, model: &str, key: &str,
+                      depth: usize) -> anyhow::Error {
+        let same_method: Vec<&ExecEntry> = manifest
+            .executables
+            .values()
+            .filter(|e| e.model == model && e.kind == "train"
+                    && e.method == key)
+            .collect();
+        if same_method.is_empty() {
+            let any_train: Vec<String> = manifest
+                .executables
+                .values()
+                .filter(|e| e.model == model && e.kind == "train")
+                .map(|e| e.name.clone())
+                .collect();
+            return anyhow::anyhow!(
+                "no '{key}' training executable for model '{model}'; \
+                 available train executables: {}",
+                any_train.join(", ")
+            );
+        }
+        let alts: Vec<String> = same_method
+            .iter()
+            .map(|e| format!("{} (depth {})", e.name, e.depth))
+            .collect();
+        anyhow::anyhow!(
+            "no '{key}' executable for model '{model}' at depth {depth}; \
+             did you mean one of: {}?",
+            alts.join(", ")
+        )
+    }
+}
+
+/// Two executables are interchangeable when their input/output
+/// signatures match slot for slot (role, shape, dtype).
+fn same_signature(a: &ExecEntry, b: &ExecEntry) -> bool {
+    let sigs_eq = |x: &[crate::runtime::TensorSig],
+                   y: &[crate::runtime::TensorSig]| {
+        x.len() == y.len()
+            && x.iter().zip(y).all(|(s, t)| {
+                s.role == t.role && s.shape == t.shape && s.dtype == t.dtype
+            })
+    };
+    sigs_eq(&a.inputs, &b.inputs) && sigs_eq(&a.outputs, &b.outputs)
+}
+
+/// L1 distance between a requested rank plan and a baked one; missing
+/// baked layers/modes count their full requested rank as penalty.
+fn rank_distance(want: &[[usize; 4]], baked: &[Vec<usize>]) -> u64 {
+    let mut d = 0u64;
+    for (i, w) in want.iter().enumerate() {
+        match baked.get(i) {
+            Some(b) => {
+                for m in 0..4 {
+                    let bv = b.get(m).copied().unwrap_or(0);
+                    d += (w[m] as i64 - bv as i64).unsigned_abs();
+                }
+            }
+            None => d += w.iter().map(|&r| r as u64).sum::<u64>(),
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A manifest with a 2-conv CNN, its full-training exec, one
+    /// fine-tuning depth and an ASI rank sweep — enough to exercise
+    /// every resolution path.
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m": {"kind": "cnn",
+               "convs": [{"cout": 8, "stride": 2}, {"cout": 8, "stride": 1}],
+               "num_classes": 4, "in_channels": 3, "image_size": 8,
+               "batch_size": 2, "ksize": 3, "padding": 1,
+               "activation_shapes": [[2,3,8,8],[2,8,4,4]],
+               "output_shapes": [[2,8,4,4],[2,8,4,4]]},
+        "lm": {"kind": "lm", "vocab": 64, "d_model": 16, "n_heads": 2,
+                "n_blocks": 2, "d_ff": 32, "seq_len": 8, "batch_size": 2,
+                "rank": 4}
+      },
+      "executables": {
+        "m_train_full": {"model": "m", "kind": "train",
+                         "method": "vanilla", "depth": 2},
+        "m_vanilla_d1": {"model": "m", "kind": "train",
+                         "method": "vanilla", "depth": 1},
+        "m_vanilla_d2": {"model": "m", "kind": "train",
+                         "method": "vanilla", "depth": 2},
+        "m_gf_d1": {"model": "m", "kind": "train",
+                    "method": "gf", "depth": 1},
+        "m_asi_d1_r2": {"model": "m", "kind": "train", "method": "asi",
+                        "depth": 1, "ranks": [[2,2,2,2]],
+                        "inputs": [{"name": "u0", "role": "us",
+                                    "shape": [2,2], "dtype": "f32"}]},
+        "m_asi_d1_r4": {"model": "m", "kind": "train", "method": "asi",
+                        "depth": 1, "ranks": [[2,4,4,4]],
+                        "inputs": [{"name": "u0", "role": "us",
+                                    "shape": [2,4], "dtype": "f32"}]},
+        "lm_asi_d1": {"model": "lm", "kind": "train", "method": "asi",
+                      "depth": 1}
+      }
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn resolves_every_method_kind() {
+        let m = manifest();
+        assert_eq!(Method::Full.resolve_exec(&m, "m").unwrap(),
+                   "m_train_full");
+        assert_eq!(Method::Vanilla { depth: 1 }.resolve_exec(&m, "m")
+                       .unwrap(),
+                   "m_vanilla_d1");
+        assert_eq!(Method::GradFilter { depth: 1 }.resolve_exec(&m, "m")
+                       .unwrap(),
+                   "m_gf_d1");
+        assert_eq!(Method::asi(1, 4).resolve_exec(&m, "m").unwrap(),
+                   "m_asi_d1_r4");
+        assert_eq!(Method::asi(1, 2).resolve_exec(&m, "m").unwrap(),
+                   "m_asi_d1_r2");
+    }
+
+    #[test]
+    fn asi_rank_sweep_picks_nearest_baked_plan() {
+        let m = manifest();
+        // 5 is closer to the r4 plan; 1 is closer to r2.
+        assert_eq!(Method::asi(1, 5).resolve_exec(&m, "m").unwrap(),
+                   "m_asi_d1_r4");
+        assert_eq!(Method::asi(1, 1).resolve_exec(&m, "m").unwrap(),
+                   "m_asi_d1_r2");
+        // Non-uniform plans work too (a rank-selection output).
+        let m3 = Method::Asi { depth: 1, ranks: vec![[2, 4, 4, 4]] };
+        assert_eq!(m3.resolve_exec(&m, "m").unwrap(), "m_asi_d1_r4");
+    }
+
+    #[test]
+    fn strict_resolution_requires_exact_baked_plan() {
+        let m = manifest();
+        // Uniform rank 4 clips to the tail activation dims [2,8,4,4]
+        // exactly as the AOT pipeline bakes it -> exact match.
+        assert_eq!(Method::asi(1, 4).resolve_exec_strict(&m, "m").unwrap(),
+                   "m_asi_d1_r4");
+        assert_eq!(Method::asi(1, 2).resolve_exec_strict(&m, "m").unwrap(),
+                   "m_asi_d1_r2");
+        // Rank 5 has no baked variant: nearest-match resolution would
+        // silently substitute r4; strict resolution refuses.
+        assert_eq!(Method::asi(1, 5).resolve_exec(&m, "m").unwrap(),
+                   "m_asi_d1_r4");
+        let err = format!("{:#}",
+                          Method::asi(1, 5).resolve_exec_strict(&m, "m")
+                              .unwrap_err());
+        assert!(err.contains("no baked 'asi' variant"), "{err}");
+        assert!(err.contains("m_asi_d1_r4"), "{err}");
+        // Rank-free methods: strict == plain resolution.
+        assert_eq!(Method::Vanilla { depth: 1 }
+                       .resolve_exec_strict(&m, "m")
+                       .unwrap(),
+                   "m_vanilla_d1");
+    }
+
+    #[test]
+    fn lm_asi_resolves_without_ranks() {
+        let m = manifest();
+        let lm = Method::Asi { depth: 1, ranks: vec![] };
+        assert_eq!(lm.resolve_exec(&m, "lm").unwrap(), "lm_asi_d1");
+    }
+
+    #[test]
+    fn unknown_model_lists_known_models() {
+        let m = manifest();
+        let err = format!("{:#}",
+                          Method::asi(1, 4).resolve_exec(&m, "nope")
+                              .unwrap_err());
+        assert!(err.contains("unknown model 'nope'"), "{err}");
+        assert!(err.contains("m") && err.contains("lm"), "{err}");
+    }
+
+    #[test]
+    fn unknown_depth_suggests_existing_depths() {
+        let m = manifest();
+        let err = format!("{:#}",
+                          Method::asi(3, 4).resolve_exec(&m, "m")
+                              .unwrap_err());
+        assert!(err.contains("did you mean"), "{err}");
+        assert!(err.contains("m_asi_d1_r4 (depth 1)"), "{err}");
+    }
+
+    #[test]
+    fn unknown_method_lists_train_execs() {
+        let m = manifest();
+        let err = format!("{:#}",
+                          Method::hosvd(1, 4).resolve_exec(&m, "m")
+                              .unwrap_err());
+        assert!(err.contains("no 'hosvd' training executable"), "{err}");
+        assert!(err.contains("m_vanilla_d1"), "{err}");
+    }
+
+    #[test]
+    fn ambiguous_rank_free_asi_errors_with_candidates() {
+        let m = manifest();
+        let err = format!("{:#}",
+                          Method::Asi { depth: 1, ranks: vec![] }
+                              .resolve_exec(&m, "m")
+                              .unwrap_err());
+        assert!(err.contains("specify ranks"), "{err}");
+        assert!(err.contains("m_asi_d1_r2") && err.contains("m_asi_d1_r4"),
+                "{err}");
+    }
+
+    #[test]
+    fn full_depth_vanilla_twins_resolve_cleanly() {
+        // m has 2 convs and the manifest bakes both m_train_full and
+        // m_vanilla_d2 (method "vanilla", depth 2, identical empty
+        // signatures). Both Full and Vanilla{2} must resolve to the
+        // functionally-identical twin, not error as ambiguous.
+        let m = manifest();
+        assert_eq!(Method::Full.resolve_exec(&m, "m").unwrap(),
+                   "m_train_full");
+        assert_eq!(Method::Vanilla { depth: 2 }.resolve_exec(&m, "m")
+                       .unwrap(),
+                   "m_train_full");
+    }
+
+    #[test]
+    fn full_is_not_defined_for_lm_models() {
+        let m = manifest();
+        assert!(Method::Full.resolve_exec(&m, "lm").is_err());
+    }
+
+    #[test]
+    fn from_key_roundtrip_and_accessors() {
+        let m = Method::from_key("asi", 2, 4).unwrap();
+        assert_eq!(m, Method::asi(2, 4));
+        assert_eq!(m.name(), "asi");
+        assert_eq!(m.depth(), Some(2));
+        assert_eq!(m.ranks(), &[[4, 4, 4, 4], [4, 4, 4, 4]]);
+        assert_eq!(Method::Full.depth(), None);
+        assert!(Method::from_key("bogus", 1, 1).is_err());
+        let re = Method::hosvd(2, 4).with_ranks(vec![[1; 4], [2; 4]]);
+        assert_eq!(re.ranks(), &[[1, 1, 1, 1], [2, 2, 2, 2]]);
+    }
+}

@@ -3,15 +3,25 @@
 //! gradient filtering (CVPR-23 baseline). Used by the offline phases
 //! (perplexity, rank selection) and by tests; the hot path runs the
 //! Pallas/XLA versions.
+//!
+//! The typed surface lives in two modules: [`method`] (`Method`, the one
+//! way to *name* a method and resolve its AOT executable) and
+//! [`compressor`] (the object-safe `Compressor` strategy trait whose
+//! impls wrap the per-method free functions below).
 
 pub mod asi;
+pub mod compressor;
 pub mod gf;
 pub mod hosvd;
+pub mod method;
 pub mod subspace;
 pub mod tucker;
 
 pub use asi::{asi_compress, asi_compress_ws, matrix_asi, si_step, si_step_mode, AsiState};
+pub use compressor::{Asi, Compressed, Compressor, CompressorState, GradFilter,
+                     HosvdEps, HosvdFixed, Identity};
 pub use gf::{avg_pool2, gf_dw, gf_storage, upsample2};
 pub use hosvd::{hosvd_eps, hosvd_fixed, mode_spectra, ranks_for_eps};
+pub use method::Method;
 pub use subspace::{chordal_distance, principal_cosines, subspace_alignment};
 pub use tucker::Tucker;

@@ -20,5 +20,5 @@ pub use probe::{probe, HostEdgeNet, ProbeCapture};
 pub use rank_selection::{backtracking_select, greedy_select,
                          measure_perplexity, PerplexityTable, Selection,
                          DEFAULT_EPS};
-pub use session::{FinetuneReport, Session};
+pub use session::{FinetuneReport, FinetuneSpec, Session};
 pub use trainer::{Trainer, WarmStart};

@@ -11,8 +11,8 @@
 
 use anyhow::Result;
 
-use crate::compress::{hosvd_eps, Tucker};
-use crate::tensor::{ConvGeom, Tensor4};
+use crate::compress::{Compressor, HosvdEps};
+use crate::tensor::{ConvGeom, Tensor4, Workspace};
 
 use super::probe::ProbeCapture;
 
@@ -46,20 +46,28 @@ pub fn measure_perplexity(
     tail_start: usize,
     eps_grid: &[f32],
 ) -> Result<PerplexityTable> {
+    // One HOSVD_eps compressor per grid point, driven through the
+    // object-safe trait — the same dispatch surface every other host
+    // path uses (no per-method match arms here).
+    let mut grid: Vec<Box<dyn Compressor>> = eps_grid
+        .iter()
+        .map(|&eps| Box::new(HosvdEps::new(eps)) as Box<dyn Compressor>)
+        .collect();
+    let mut ws = Workspace::new();
     let mut layers = Vec::new();
     for li in tail_start..cap.acts.len() {
         let a: &Tensor4 = &cap.acts[li];
         let gy = &cap.gys[li];
         let exact = &cap.dws[li];
-        let mut ranks = Vec::with_capacity(eps_grid.len());
-        let mut perp = Vec::with_capacity(eps_grid.len());
-        let mut mem = Vec::with_capacity(eps_grid.len());
-        for &eps in eps_grid {
-            let (t, r): (Tucker, [usize; 4]) = hosvd_eps(a, eps);
-            let approx = t.lowrank_dw(gy, geoms[li]);
+        let mut ranks = Vec::with_capacity(grid.len());
+        let mut perp = Vec::with_capacity(grid.len());
+        let mut mem = Vec::with_capacity(grid.len());
+        for comp in grid.iter_mut() {
+            let c = comp.compress(a, &mut ws);
+            let approx = c.dw(gy, geoms[li]);
             perp.push(exact.sub(&approx).frob_norm());
-            mem.push(4 * t.storage() as u64);
-            ranks.push(r);
+            mem.push(4 * c.storage_elems());
+            ranks.push(c.ranks().expect("HOSVD produces ranked output"));
         }
         layers.push(LayerPerplexity {
             layer: li - tail_start,

@@ -1,12 +1,27 @@
 //! End-to-end fine-tuning sessions: (optional) in-repo pre-training on
 //! the synthetic pretrain split, then fine-tuning with the selected
-//! method on a shifted downstream split, with accuracy/loss logging —
+//! [`Method`] on a shifted downstream split, with accuracy/loss logging —
 //! the workflow every experiment driver and the CLI share.
+//!
+//! Runs are configured through the [`FinetuneSpec`] builder:
+//!
+//! ```ignore
+//! let rep = session
+//!     .finetune("mcunet", Method::asi(2, 4))
+//!     .pretrained(&pre)
+//!     .steps(80)
+//!     .lr(0.05)
+//!     .warm(WarmStart::Warm)
+//!     .eval_batches(4)
+//!     .seed(7)
+//!     .run()?;
+//! ```
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::compress::Method;
 use crate::data::{ImageDataset, ImageSpec};
 use crate::metrics::Series;
 use crate::runtime::Engine;
@@ -16,6 +31,9 @@ use super::trainer::{Trainer, WarmStart};
 /// Outcome of one fine-tuning run.
 #[derive(Debug, Clone)]
 pub struct FinetuneReport {
+    /// The method that was run.
+    pub method: Method,
+    /// The AOT executable the method resolved to.
     pub exec: String,
     pub steps: u64,
     pub loss: Series,
@@ -30,6 +48,92 @@ pub struct Session {
     pub engine: Engine,
     pub pretrain_ds: ImageDataset,
     pub downstream_ds: ImageDataset,
+}
+
+/// One configured fine-tuning run: model + method + hyper-parameters.
+/// Built by [`Session::finetune`]; consumed by [`FinetuneSpec::run`] or
+/// handed to [`Trainer::new`] for step-by-step driving.
+#[derive(Clone)]
+pub struct FinetuneSpec<'a> {
+    pub session: &'a Session,
+    pub model: String,
+    pub method: Method,
+    pub pretrained: Option<&'a Trainer<'a>>,
+    pub steps: u64,
+    pub lr: f32,
+    pub warm: WarmStart,
+    pub eval_batches: u64,
+    pub seed: u64,
+}
+
+impl<'a> FinetuneSpec<'a> {
+    /// Start from a pre-trained sibling's parameters instead of the
+    /// deterministic init.
+    pub fn pretrained(mut self, tr: &'a Trainer<'a>) -> Self {
+        self.pretrained = Some(tr);
+        self
+    }
+
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn warm(mut self, warm: WarmStart) -> Self {
+        self.warm = warm;
+        self
+    }
+
+    pub fn eval_batches(mut self, n: u64) -> Self {
+        self.eval_batches = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The AOT executable this spec's method resolves to.
+    pub fn resolve_exec(&self) -> Result<String> {
+        self.method
+            .resolve_exec(&self.session.engine.manifest, &self.model)
+    }
+
+    /// Run the configured fine-tuning loop and evaluate.
+    /// (`Trainer::new` already applies `pretrained`, if set.)
+    pub fn run(&self) -> Result<FinetuneReport> {
+        let mut tr = Trainer::new(self)?;
+        let batch = self.session.batch_size(&self.model)?;
+        let mut loss = Series::new("loss");
+        let t0 = std::time::Instant::now();
+        let mut last = f32::NAN;
+        for i in 0..self.steps {
+            let b = self.session.downstream_ds.batch("train", i, batch);
+            last = tr.step_image(&b)?;
+            if i % 5 == 0 || i + 1 == self.steps {
+                loss.push(i, last as f64);
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let accuracy = tr.eval_accuracy(&self.session.downstream_ds, batch,
+                                        self.eval_batches)?;
+        Ok(FinetuneReport {
+            method: self.method.clone(),
+            exec: tr.exec_name.clone(),
+            steps: self.steps,
+            loss,
+            final_loss: last,
+            accuracy,
+            wall_s,
+            state_bytes: tr.state_bytes(),
+        })
+    }
 }
 
 impl Session {
@@ -47,12 +151,13 @@ impl Session {
         })
     }
 
-    /// In-repo pre-training with the full vanilla step.
+    /// In-repo pre-training with the full vanilla step. Drives its own
+    /// loop (rather than `FinetuneSpec::run`) because pre-training reads
+    /// `pretrain_ds`, not the downstream split.
     pub fn pretrain(&self, model: &str, steps: u64, lr: f32, seed: u64)
         -> Result<Trainer<'_>> {
-        let exec = format!("{model}_train_full");
-        let mut tr = Trainer::new(&self.engine, model, &exec, lr,
-                                  WarmStart::Warm, seed)?;
+        let spec = self.finetune(model, Method::Full).lr(lr).seed(seed);
+        let mut tr = Trainer::new(&spec)?;
         let batch = self.batch_size(model)?;
         for i in 0..steps {
             let b = self.pretrain_ds.batch("train", i, batch);
@@ -61,52 +166,23 @@ impl Session {
         Ok(tr)
     }
 
-    fn batch_size(&self, model: &str) -> Result<usize> {
+    pub(crate) fn batch_size(&self, model: &str) -> Result<usize> {
         Ok(self.engine.manifest.cnn(model)?.batch_size)
     }
 
-    /// Fine-tune with `exec_name`, starting from `pretrained` parameters
-    /// (pass `None` to start from the deterministic init).
-    #[allow(clippy::too_many_arguments)]
-    pub fn finetune(
-        &self,
-        model: &str,
-        exec_name: &str,
-        pretrained: Option<&Trainer<'_>>,
-        steps: u64,
-        lr: f32,
-        warm: WarmStart,
-        eval_batches: u64,
-        seed: u64,
-    ) -> Result<FinetuneReport> {
-        let mut tr = Trainer::new(&self.engine, model, exec_name, lr, warm,
-                                  seed)?;
-        if let Some(src) = pretrained {
-            // Transplant the pretrained parameters into the new split.
-            tr.load_full_params(&src.full_params())?;
+    /// Begin configuring a fine-tuning run of `method` on `model`.
+    /// Defaults: 80 steps, lr 0.05, warm start, 4 eval batches, seed 7.
+    pub fn finetune(&self, model: &str, method: Method) -> FinetuneSpec<'_> {
+        FinetuneSpec {
+            session: self,
+            model: model.to_string(),
+            method,
+            pretrained: None,
+            steps: 80,
+            lr: 0.05,
+            warm: WarmStart::Warm,
+            eval_batches: 4,
+            seed: 7,
         }
-        let batch = self.batch_size(model)?;
-        let mut loss = Series::new("loss");
-        let t0 = std::time::Instant::now();
-        let mut last = f32::NAN;
-        for i in 0..steps {
-            let b = self.downstream_ds.batch("train", i, batch);
-            last = tr.step_image(&b)?;
-            if i % 5 == 0 || i + 1 == steps {
-                loss.push(i, last as f64);
-            }
-        }
-        let wall_s = t0.elapsed().as_secs_f64();
-        let accuracy = tr.eval_accuracy(&self.downstream_ds, batch,
-                                        eval_batches)?;
-        Ok(FinetuneReport {
-            exec: exec_name.to_string(),
-            steps,
-            loss,
-            final_loss: last,
-            accuracy,
-            wall_s,
-            state_bytes: tr.state_bytes(),
-        })
     }
 }

@@ -12,6 +12,8 @@ use crate::data::{ImageBatch, ImageDataset};
 use crate::runtime::{Engine, ExecArg, HostTensor};
 use crate::util::rng::Rng;
 
+use super::session::FinetuneSpec;
+
 /// How ASI warm-start state is handled across steps.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WarmStart {
@@ -45,21 +47,38 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
-    /// Create a session: runs `<model>_init`, splits the parameter list
-    /// according to the train executable's signature, initializes factors.
-    pub fn new(
+    /// Create a trainer from a configured spec: the executable is
+    /// derived from `spec.method` via the manifest (no raw exec names),
+    /// and `spec.pretrained` parameters are transplanted if set. The
+    /// loop fields (`steps`, `eval_batches`) are consumed by
+    /// [`FinetuneSpec::run`], not here.
+    pub fn new(spec: &FinetuneSpec<'e>) -> Result<Trainer<'e>> {
+        let exec = spec.resolve_exec()?;
+        let mut tr = Trainer::for_exec(&spec.session.engine, &exec, spec.lr,
+                                       spec.warm, spec.seed)?;
+        if let Some(src) = spec.pretrained {
+            // Transplant the pretrained parameters into the new split.
+            tr.load_full_params(&src.full_params())?;
+        }
+        Ok(tr)
+    }
+
+    /// Low-level constructor bound to an explicit executable name: runs
+    /// `<model>_init`, splits the parameter list according to the train
+    /// executable's signature, initializes factors. Everything outside
+    /// the coordinator goes through [`Trainer::new`] + [`FinetuneSpec`].
+    pub(crate) fn for_exec(
         engine: &'e Engine,
-        model: &str,
         exec_name: &str,
         lr: f32,
         warm: WarmStart,
         seed: u64,
     ) -> Result<Trainer<'e>> {
-        let params = engine
-            .load_params(model)
-            .with_context(|| format!("loading {model} params"))?;
-
         let entry = engine.manifest.exec(exec_name)?.clone();
+        let model = entry.model.clone();
+        let params = engine
+            .load_params(&model)
+            .with_context(|| format!("loading {model} params"))?;
         let n_trained = entry.input_indices("trained").len();
         let n_frozen = entry.input_indices("frozen").len()
             + entry.input_indices("rest").len();

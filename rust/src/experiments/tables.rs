@@ -7,7 +7,8 @@
 //! regenerates the resource columns on the real ImageNet-geometry
 //! schedules in `models::zoo`.
 
-use crate::metrics::flops::{train_cost, LayerDims, Method};
+use crate::compress::Method;
+use crate::metrics::flops::{train_cost, LayerDims};
 use crate::metrics::{gflops, mb, Table};
 use crate::models::zoo;
 
@@ -41,7 +42,7 @@ pub fn model_rows(t: &mut Table, arch_name: &str, batch: usize,
         }
     };
     // Vanilla over all layers.
-    let all = train_cost(&arch.layers, n, &Method::Vanilla);
+    let all = train_cost(&arch.layers, &Method::Full);
     t.row(vec![
         arch_name.into(), "vanilla".into(), "All".into(),
         mb(all.act_bytes), fmt_flops(all.flops),
@@ -50,12 +51,12 @@ pub fn model_rows(t: &mut Table, arch_name: &str, batch: usize,
         let tail = &arch.layers[n - d..];
         let ranks = ranks_for(tail);
         for (name, m) in [
-            ("vanilla", Method::Vanilla),
-            ("gf_r2", Method::GradientFilter),
-            ("hosvd_e0.8", Method::Hosvd(ranks.clone())),
-            ("asi", Method::Asi(ranks.clone())),
+            ("vanilla", Method::Vanilla { depth: d }),
+            ("gf_r2", Method::GradFilter { depth: d }),
+            ("hosvd_e0.8", Method::Hosvd { depth: d, ranks: ranks.clone() }),
+            ("asi", Method::Asi { depth: d, ranks: ranks.clone() }),
         ] {
-            let c = train_cost(&arch.layers, d, &m);
+            let c = train_cost(&arch.layers, &m);
             t.row(vec![
                 arch_name.into(), name.into(), d.to_string(),
                 mb(c.act_bytes), fmt_flops(c.flops),

@@ -7,10 +7,11 @@
 
 use anyhow::{Context, Result};
 
+use crate::compress::Method;
 use crate::coordinator::{measure_perplexity, probe, HostEdgeNet, Session,
-                         WarmStart, DEFAULT_EPS};
+                         Trainer, WarmStart, DEFAULT_EPS};
 use crate::data::TokenDataset;
-use crate::metrics::flops::{train_cost, LayerDims, Method};
+use crate::metrics::flops::{train_cost, LayerDims};
 use crate::metrics::{mb, Table};
 use crate::runtime::HostTensor;
 use crate::tensor::{ConvGeom, Tensor4};
@@ -64,18 +65,29 @@ pub fn fig3(session: &Session, model: &str, budget: Budget) -> Result<Table> {
         configs.push((2, r));
     }
     for (depth, rank) in configs {
-        let exec = format!("{model}_asi_d{depth}_r{rank}");
-        if session.engine.manifest.exec(&exec).is_err() {
+        let method = Method::asi(depth, rank);
+        // Strict: only run variants actually baked at this (depth, rank)
+        // — nearest-match substitution would mislabel the sweep rows.
+        if method
+            .resolve_exec_strict(&session.engine.manifest, model)
+            .is_err()
+        {
             continue;
         }
         for (name, warm) in [("warm", WarmStart::Warm),
                              ("cold", WarmStart::Cold)] {
-            let rep = session.finetune(
-                model, &exec, Some(&pre), budget.finetune_steps, 0.05, warm,
-                budget.eval_batches, 7,
-            )?;
-            println!("  fig3 {exec} {name}: loss {:.3} acc {:.3}  {}",
-                     rep.final_loss, rep.accuracy, rep.loss.sparkline(40));
+            let rep = session
+                .finetune(model, method.clone())
+                .pretrained(&pre)
+                .steps(budget.finetune_steps)
+                .lr(0.05)
+                .warm(warm)
+                .eval_batches(budget.eval_batches)
+                .seed(7)
+                .run()?;
+            println!("  fig3 {} {name}: loss {:.3} acc {:.3}  {}",
+                     rep.exec, rep.final_loss, rep.accuracy,
+                     rep.loss.sparkline(40));
             t.row(vec![
                 depth.to_string(),
                 rank.to_string(),
@@ -98,37 +110,40 @@ pub fn fig4(session: &Session, model: &str, budget: Budget) -> Result<Table> {
     let layers = compact_layers(session, model)?;
     let pre = session.pretrain(model, budget.pretrain_steps, 0.05, 1)?;
     for depth in [1usize, 2, 4] {
-        for method in ["vanilla", "gf", "asi", "hosvd"] {
-            let exec = match method {
-                "asi" => format!("{model}_asi_d{depth}_r4"),
-                m => format!("{model}_{m}_d{depth}"),
-            };
-            if session.engine.manifest.exec(&exec).is_err() {
+        for method in [
+            Method::Vanilla { depth },
+            Method::GradFilter { depth },
+            Method::asi(depth, 4),
+            Method::hosvd(depth, 4),
+        ] {
+            let Ok(exec) =
+                method.resolve_exec_strict(&session.engine.manifest, model)
+            else {
                 continue;
-            }
-            let rep = session.finetune(
-                model, &exec, Some(&pre), budget.finetune_steps, 0.05,
-                WarmStart::Warm, budget.eval_batches, 7,
-            )?;
-            // Analytic accounting on the compact geometry.
+            };
+            let rep = session
+                .finetune(model, method.clone())
+                .pretrained(&pre)
+                .steps(budget.finetune_steps)
+                .lr(0.05)
+                .warm(WarmStart::Warm)
+                .eval_batches(budget.eval_batches)
+                .seed(7)
+                .run()?;
+            // Analytic accounting on the compact geometry, costed with
+            // the ranks actually baked into the resolved executable.
             let entry = session.engine.manifest.exec(&exec)?;
-            let ranks: Vec<[usize; 4]> = entry
+            let baked: Vec<[usize; 4]> = entry
                 .ranks
                 .iter()
                 .map(|r| [r[0], r[1], r[2], r[3]])
                 .collect();
-            let m = match method {
-                "vanilla" => Method::Vanilla,
-                "gf" => Method::GradientFilter,
-                "hosvd" => Method::Hosvd(ranks.clone()),
-                _ => Method::Asi(ranks.clone()),
-            };
-            let cost = train_cost(&layers, depth, &m);
+            let cost = train_cost(&layers, &method.clone().with_ranks(baked));
             println!("  fig4 {exec}: acc {:.3} loss {:.3}  {}",
                      rep.accuracy, rep.final_loss, rep.loss.sparkline(40));
             t.row(vec![
                 depth.to_string(),
-                method.into(),
+                method.name().into(),
                 format!("{:.4}", rep.accuracy),
                 format!("{:.4}", rep.final_loss),
                 mb(cost.act_bytes),
@@ -148,16 +163,22 @@ pub fn fig5(session: &Session, model: &str, iters: usize) -> Result<Table> {
         &["method", "ms_per_step", "vs_vanilla"],
     );
     let mut vanilla_ms = f64::NAN;
-    for method in ["vanilla", "gf", "asi", "hosvd"] {
-        let exec = match method {
-            "asi" => format!("{model}_asi_d2_r4"),
-            m => format!("{model}_{m}_d2"),
-        };
-        if session.engine.manifest.exec(&exec).is_err() {
+    for method in [
+        Method::Vanilla { depth: 2 },
+        Method::GradFilter { depth: 2 },
+        Method::asi(2, 4),
+        Method::hosvd(2, 4),
+    ] {
+        let name = method.name();
+        if method
+            .resolve_exec_strict(&session.engine.manifest, model)
+            .is_err()
+        {
             continue;
         }
-        let mut tr = crate::coordinator::Trainer::new(
-            &session.engine, model, &exec, 0.05, WarmStart::Warm, 3)?;
+        let spec = session.finetune(model, method).lr(0.05).seed(3);
+        let mut tr = Trainer::new(&spec)?;
+        let exec = tr.exec_name.clone();
         let batch = session.engine.manifest.cnn(model)?.batch_size;
         let b0 = session.downstream_ds.batch("train", 0, batch);
         tr.step_image(&b0)?; // compile + warm
@@ -165,12 +186,12 @@ pub fn fig5(session: &Session, model: &str, iters: usize) -> Result<Table> {
             let b = session.downstream_ds.batch("train", 1, batch);
             tr.step_image(&b).expect("step");
         });
-        if method == "vanilla" {
+        if name == "vanilla" {
             vanilla_ms = stats.mean_s * 1e3;
         }
         println!("  fig5 {}", stats.report());
         t.row(vec![
-            method.into(),
+            name.into(),
             format!("{:.2}", stats.mean_s * 1e3),
             format!("{:.2}x", stats.mean_s * 1e3 / vanilla_ms),
         ]);
@@ -231,13 +252,14 @@ pub fn table4_train(session: &Session, budget: Budget) -> Result<Table> {
     let lm = session.engine.manifest.lm("tinylm")?.clone();
     let ds = TokenDataset::new(lm.vocab, lm.seq_len, 11);
     for depth in [1usize, 3, 5] {
-        for method in ["vanilla", "asi"] {
-            let exec = format!("tinylm_{method}_d{depth}");
-            if session.engine.manifest.exec(&exec).is_err() {
+        for method in [Method::Vanilla { depth },
+                       Method::Asi { depth, ranks: vec![] }] {
+            let name = method.name();
+            let spec = session.finetune("tinylm", method).lr(0.05).seed(5);
+            if spec.resolve_exec().is_err() {
                 continue;
             }
-            let mut tr = crate::coordinator::Trainer::new(
-                &session.engine, "tinylm", &exec, 0.05, WarmStart::Warm, 5)?;
+            let mut tr = Trainer::new(&spec)?;
             let mut last = f32::NAN;
             for i in 0..budget.finetune_steps {
                 let (toks, _, _) = ds.batch("train", i, lm.batch_size);
@@ -247,10 +269,11 @@ pub fn table4_train(session: &Session, budget: Budget) -> Result<Table> {
             }
             let acc = lm_answer_accuracy(session, &tr, &ds, &lm,
                                          budget.eval_batches)?;
-            println!("  table4 {exec}: loss {last:.3} answer-acc {acc:.3}");
+            println!("  table4 {}: loss {last:.3} answer-acc {acc:.3}",
+                     tr.exec_name);
             t.row(vec![
                 depth.to_string(),
-                method.into(),
+                name.into(),
                 format!("{last:.4}"),
                 format!("{acc:.4}"),
             ]);

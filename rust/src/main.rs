@@ -18,6 +18,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
+use asi::compress::Method;
 use asi::coordinator::{backtracking_select, greedy_select,
                        measure_perplexity, probe, HostEdgeNet, Session,
                        WarmStart, DEFAULT_EPS};
@@ -103,8 +104,9 @@ USAGE:
   asi experiment <id> [--quick|--full] [--out DIR] [--artifacts DIR]
       ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 table4
            table4-train all-analytic
-  asi train --model mcunet --method asi --depth 2 [--steps N] [--lr F]
-            [--cold] [--pretrain N]
+  asi train --model mcunet --method asi --depth 2 [--rank R] [--steps N]
+            [--lr F] [--cold] [--pretrain N]
+      methods: full | vanilla | gf | hosvd | asi
   asi rank-select --model mcunet --budget-kb N [--greedy]
   asi audit <exec>        per-opcode HLO audit of one artifact
   asi engine-stats        compile/run statistics after a smoke run
@@ -184,24 +186,29 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let model = args.get("model", "mcunet");
-    let method = args.get("method", "asi");
+    let method_key = args.get("method", "asi");
     let depth: usize = args.get("depth", "2").parse()?;
+    let rank: usize = args.get("rank", "4").parse()?;
     let steps: u64 = args.get("steps", "100").parse()?;
     let pretrain: u64 = args.get("pretrain", "50").parse()?;
     let lr: f32 = args.get("lr", "0.05").parse()?;
     let warm = if args.has("cold") { WarmStart::Cold } else { WarmStart::Warm };
 
     let session = Session::open(&artifacts_dir(args), 42)?;
-    let exec = match method.as_str() {
-        "asi" => format!("{model}_asi_d{depth}_r{}", args.get("rank", "4")),
-        "full" => format!("{model}_train_full"),
-        m => format!("{model}_{m}_d{depth}"),
-    };
+    let method = Method::from_key(&method_key, depth, rank)?;
     println!("pretraining {model} for {pretrain} steps...");
     let pre = session.pretrain(&model, pretrain, lr, 1)?;
-    println!("fine-tuning with {exec} for {steps} steps...");
-    let rep = session.finetune(&model, &exec, Some(&pre), steps, lr, warm,
-                               8, 7)?;
+    let spec = session
+        .finetune(&model, method)
+        .pretrained(&pre)
+        .steps(steps)
+        .lr(lr)
+        .warm(warm)
+        .eval_batches(8)
+        .seed(7);
+    println!("fine-tuning with {} for {steps} steps...",
+             spec.resolve_exec()?);
+    let rep = spec.run()?;
     println!("loss curve: {}", rep.loss.sparkline(60));
     println!(
         "final loss {:.4}, accuracy {:.4}, {:.1} ms/step, state {} bytes",
@@ -280,9 +287,13 @@ fn cmd_rank_select(args: &Args) -> Result<()> {
 /// path (`Engine::run`, everything re-uploaded per call through Literal
 /// conversion) vs the mixed-buffer path used by the Trainer. §Perf L3.
 fn cmd_bench_ab(args: &Args) -> Result<()> {
-    let exec = args.get("exec", "mcunet_asi_d2_r4");
     let iters: usize = args.get("iters", "10").parse()?;
     let engine = Engine::load(&artifacts_dir(args))?;
+    // Default: the depth-2 rank-4 ASI step, resolved through Method.
+    let exec = match args.flags.get("exec") {
+        Some(e) => e.clone(),
+        None => Method::asi(2, 4).resolve_exec(&engine.manifest, "mcunet")?,
+    };
     let inputs = engine.zero_inputs(&exec)?;
     engine.run(&exec, &inputs)?; // compile + warm
     let lit = asi::util::timer::bench("literal path", 2, iters, || {

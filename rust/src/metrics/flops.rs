@@ -4,7 +4,19 @@
 //! These formulas regenerate every Mem/GFLOPs column of Tables 1–4 and
 //! all four panels of Fig. 2. They are *shape functions*: the paper's own
 //! reported numbers come from the same algebra, so this module reproduces
-//! those columns exactly given the same layer shapes.
+//! those columns exactly given the same layer shapes. Method dispatch
+//! goes through `compress::{Method, Compressor}` — the per-method arms
+//! live in the compressor impls, not here.
+
+use crate::compress::{Compressor as _, Method};
+
+/// eq. 5 — Tucker element count for dims `d` and (unclamped) ranks `r`.
+/// The single definition of the storage formula, shared by
+/// `LayerDims::tucker_storage` and the `Compressor` impls.
+pub fn tucker_elems(d: [usize; 4], r: [usize; 4]) -> u64 {
+    r.iter().map(|&x| x as u64).product::<u64>()
+        + d.iter().zip(&r).map(|(&dm, &rm)| (dm * rm) as u64).sum::<u64>()
+}
 
 /// Geometry of one convolution layer (supports grouped convs so the real
 /// MobileNetV2 depthwise schedule can be modelled).
@@ -113,9 +125,7 @@ impl LayerDims {
 
     /// eq. 5 — Tucker storage in elements.
     pub fn tucker_storage(&self, r: [usize; 4]) -> u64 {
-        let d = [self.b, self.c, self.h, self.w];
-        r.iter().map(|&x| x as u64).product::<u64>()
-            + d.iter().zip(&r).map(|(&dm, &rm)| (dm * rm) as u64).sum::<u64>()
+        tucker_elems([self.b, self.c, self.h, self.w], r)
     }
 
     /// eq. 19 — compression ratio vanilla / ASI.
@@ -144,29 +154,8 @@ impl LayerDims {
     }
 }
 
-/// Which activation-handling method a fine-tuned tail uses.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Method {
-    Vanilla,
-    GradientFilter,
-    /// Per-layer per-mode ranks.
-    Hosvd(Vec<[usize; 4]>),
-    Asi(Vec<[usize; 4]>),
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Vanilla => "vanilla",
-            Method::GradientFilter => "gf",
-            Method::Hosvd(_) => "hosvd",
-            Method::Asi(_) => "asi",
-        }
-    }
-}
-
-/// Aggregate per-step cost of fine-tuning the last `tail.len()` conv
-/// layers of a model whose full conv stack is `all_layers`.
+/// Aggregate per-step cost of fine-tuning a model's tail with the given
+/// [`Method`] (which carries the depth and any rank plan).
 #[derive(Debug, Clone)]
 pub struct TrainCost {
     /// Total training FLOPs for one step (fwd whole net + bwd tail +
@@ -176,9 +165,12 @@ pub struct TrainCost {
     pub act_bytes: u64,
 }
 
-pub fn train_cost(all_layers: &[LayerDims], depth: usize, method: &Method) -> TrainCost {
+/// Evaluate the cost model by dispatching each tail layer through the
+/// [`Compressor`] the method builds for it — the same strategy objects
+/// the host probe runs, so the analytic and measured paths cannot drift.
+pub fn train_cost(all_layers: &[LayerDims], method: &Method) -> TrainCost {
     let n = all_layers.len();
-    let depth = depth.min(n);
+    let depth = method.depth().unwrap_or(n).min(n);
     let tail = &all_layers[n - depth..];
 
     // Forward pass over the entire network (frozen layers included).
@@ -188,33 +180,12 @@ pub fn train_cost(all_layers: &[LayerDims], depth: usize, method: &Method) -> Tr
     for (i, l) in tail.iter().enumerate() {
         // dx is needed to propagate to every trained layer except the
         // deepest one.
-        if i > 0 || depth < n {
-            // (the deepest trained layer still computes dx only if there
-            //  is a trained layer below it — there is not, so skip i==0)
-        }
         if i > 0 {
             flops += l.dx_flops();
         }
-        match method {
-            Method::Vanilla => {
-                flops += l.dw_flops_vanilla();
-                act += 4 * l.act_elems();
-            }
-            Method::GradientFilter => {
-                flops += l.gf_dw_flops();
-                act += 4 * l.gf_storage();
-            }
-            Method::Hosvd(ranks) => {
-                let r = ranks[i];
-                flops += l.hosvd_overhead() + l.asi_dw_flops(r);
-                act += 4 * l.tucker_storage(r);
-            }
-            Method::Asi(ranks) => {
-                let r = ranks[i];
-                flops += l.asi_overhead(r) + l.asi_dw_flops(r);
-                act += 4 * l.tucker_storage(r);
-            }
-        }
+        let comp = method.layer_compressor(i, l.act_dims());
+        flops += comp.flops(*l);
+        act += 4 * comp.storage_elems(l.act_dims());
     }
     TrainCost { flops, act_bytes: act }
 }
@@ -337,14 +308,63 @@ mod tests {
                                     32 >> (i / 2), 16 << (i / 2), 1, 3))
             .collect();
         let ranks = vec![[4, 4, 4, 4]; 2];
-        let v = train_cost(&layers, 2, &Method::Vanilla);
-        let a = train_cost(&layers, 2, &Method::Asi(ranks.clone()));
-        let h = train_cost(&layers, 2, &Method::Hosvd(ranks));
-        let g = train_cost(&layers, 2, &Method::GradientFilter);
+        let v = train_cost(&layers, &Method::Vanilla { depth: 2 });
+        let a = train_cost(&layers,
+                           &Method::Asi { depth: 2, ranks: ranks.clone() });
+        let h = train_cost(&layers, &Method::Hosvd { depth: 2, ranks });
+        let g = train_cost(&layers, &Method::GradFilter { depth: 2 });
         assert!(h.flops > v.flops, "hosvd {} !> vanilla {}", h.flops, v.flops);
         assert!(a.flops < v.flops, "asi {} !< vanilla {}", a.flops, v.flops);
         assert!(a.act_bytes < g.act_bytes);
         assert!(g.act_bytes < v.act_bytes);
+    }
+
+    #[test]
+    fn train_cost_trait_dispatch_matches_raw_formulas() {
+        // The Compressor-trait path must reproduce the eq. 5/11–16
+        // arithmetic exactly (the refactor's identical-numerics bar).
+        let layers: Vec<LayerDims> = (0..4)
+            .map(|i| LayerDims::new(16, 8 << (i / 2), 16 >> (i / 2),
+                                    16 >> (i / 2), 8 << (i / 2), 1, 3))
+            .collect();
+        let ranks = [[3usize, 4, 2, 2], [2, 3, 2, 1]];
+        let fwd: u64 = layers.iter().map(|l| l.fwd_flops()).sum();
+        let tail = &layers[2..];
+
+        let got = train_cost(
+            &layers,
+            &Method::Asi { depth: 2, ranks: ranks.to_vec() },
+        );
+        let mut flops = fwd;
+        let mut act = 0u64;
+        for (i, l) in tail.iter().enumerate() {
+            if i > 0 {
+                flops += l.dx_flops();
+            }
+            flops += l.asi_overhead(ranks[i]) + l.asi_dw_flops(ranks[i]);
+            act += 4 * l.tucker_storage(ranks[i]);
+        }
+        assert_eq!(got.flops, flops);
+        assert_eq!(got.act_bytes, act);
+
+        let got = train_cost(&layers, &Method::GradFilter { depth: 2 });
+        let mut flops = fwd;
+        let mut act = 0u64;
+        for (i, l) in tail.iter().enumerate() {
+            if i > 0 {
+                flops += l.dx_flops();
+            }
+            flops += l.gf_dw_flops();
+            act += 4 * l.gf_storage();
+        }
+        assert_eq!(got.flops, flops);
+        assert_eq!(got.act_bytes, act);
+
+        // Full == vanilla over every layer.
+        let full = train_cost(&layers, &Method::Full);
+        let van = train_cost(&layers, &Method::Vanilla { depth: 4 });
+        assert_eq!(full.flops, van.flops);
+        assert_eq!(full.act_bytes, van.act_bytes);
     }
 
     #[test]

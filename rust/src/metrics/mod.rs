@@ -4,6 +4,6 @@ pub mod flops;
 pub mod hlo_audit;
 pub mod report;
 
-pub use flops::{train_cost, LayerDims, LinearDims, Method, TrainCost};
+pub use flops::{train_cost, LayerDims, LinearDims, TrainCost};
 pub use hlo_audit::{audit_hlo, HloAudit};
 pub use report::{gflops, mb, ratio, tflops, Series, Table};

@@ -1,8 +1,10 @@
 //! Property-based tests over the coordinator's invariants and the tensor
 //! substrate, using the in-repo deterministic harness (`util::prop`).
 
-use asi::compress::{asi_compress, asi_compress_ws, hosvd_fixed, si_step,
-                    si_step_mode, AsiState, Tucker};
+use asi::compress::{asi_compress, asi_compress_ws, gf_storage, hosvd_fixed,
+                    ranks_for_eps, si_step, si_step_mode, Asi, AsiState,
+                    Compressed, Compressor, GradFilter, HosvdEps, HosvdFixed,
+                    Tucker};
 use asi::coordinator::rank_selection::{backtracking_select, greedy_select,
                                        LayerPerplexity, PerplexityTable};
 use asi::metrics::flops::LayerDims;
@@ -390,6 +392,85 @@ fn prop_workspace_asi_matches_and_stops_allocating() {
                     ws.alloc_count()
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compressor_impls_match_free_functions() {
+    // Every `Compressor` impl is a thin wrapper over the corresponding
+    // free function; driven through `&mut dyn Compressor`, each must
+    // reproduce that function's output exactly across random shapes.
+    cases(114, 10, |g| {
+        let dims = [
+            g.usize_in(2, 6),
+            g.usize_in(2, 6),
+            g.usize_in(2, 6), // >= 2 so GF's pooled map is non-empty
+            g.usize_in(2, 6),
+        ];
+        let a = rand_tensor(g, dims);
+        let r = g.usize_in(1, 3);
+        let ranks = [
+            r.min(dims[0]),
+            r.min(dims[1]),
+            r.min(dims[2]),
+            r.min(dims[3]),
+        ];
+        let mut ws = Workspace::new();
+
+        // ASI: same seed => same cold factors => same decomposition as
+        // asi_compress_ws on an identically-initialized state.
+        let seed = g.case as u64 + 900;
+        let mut asi_c = Asi::new(dims, ranks, seed);
+        let c: &mut dyn Compressor = &mut asi_c;
+        let got = c.compress(&a, &mut ws);
+        let mut st = AsiState::init(dims, ranks, &mut Rng::new(seed));
+        let want = asi_compress_ws(&a, &mut st, &mut Workspace::new());
+        match &got {
+            Compressed::Tucker(t) => {
+                assert_close(&t.core.data, &want.core.data, 1e-5, 1e-6)?;
+                for m in 0..4 {
+                    assert_close(&t.us[m].data, &want.us[m].data, 1e-5,
+                                 1e-6)?;
+                }
+            }
+            other => return Err(format!("ASI produced {other:?}")),
+        }
+
+        // Gradient filtering: analytic storage == gf_storage.
+        let gf = GradFilter::new();
+        if gf.storage_elems(dims) != gf_storage(dims) as u64 {
+            return Err(format!(
+                "GF storage {} != gf_storage {}",
+                gf.storage_elems(dims),
+                gf_storage(dims)
+            ));
+        }
+
+        // HOSVD_eps: selected ranks == ranks_for_eps.
+        let eps = g.f32_in(0.4, 0.95);
+        let mut he = HosvdEps::new(eps);
+        let c: &mut dyn Compressor = &mut he;
+        let got = c.compress(&a, &mut ws);
+        let want_r = ranks_for_eps(&a, eps);
+        if got.ranks() != Some(want_r) {
+            return Err(format!(
+                "HosvdEps ranks {:?} != ranks_for_eps {want_r:?}",
+                got.ranks()
+            ));
+        }
+
+        // Fixed-rank HOSVD: identical decomposition to hosvd_fixed.
+        let mut hf = HosvdFixed::new(ranks);
+        let c: &mut dyn Compressor = &mut hf;
+        let got = c.compress(&a, &mut ws);
+        let want = hosvd_fixed(&a, ranks);
+        match &got {
+            Compressed::Tucker(t) => {
+                assert_close(&t.core.data, &want.core.data, 1e-5, 1e-6)?
+            }
+            other => return Err(format!("HosvdFixed produced {other:?}")),
         }
         Ok(())
     });

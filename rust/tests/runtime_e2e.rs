@@ -2,10 +2,14 @@
 //! skipped (with a message) when `artifacts/` has not been built, so
 //! `cargo test` stays green in a fresh checkout; `make test` builds the
 //! artifacts first and exercises everything.
+//!
+//! All training executables are named through `Method` + `FinetuneSpec`
+//! — the only raw executable strings left are engine-level (`*_infer`).
 
 use std::path::{Path, PathBuf};
 
-use asi::coordinator::{Session, Trainer, WarmStart};
+use asi::compress::Method;
+use asi::coordinator::{Checkpoint, Session, Trainer, WarmStart};
 use asi::data::TokenDataset;
 use asi::runtime::{Engine, HostTensor};
 
@@ -41,9 +45,8 @@ fn engine_loads_and_validates_shapes() {
 fn vanilla_training_reduces_loss() {
     let Some(dir) = artifacts() else { return };
     let session = Session::open(&dir, 42).unwrap();
-    let mut tr = Trainer::new(&session.engine, "mcunet",
-                              "mcunet_train_full", 0.05, WarmStart::Warm, 1)
-        .unwrap();
+    let spec = session.finetune("mcunet", Method::Full).lr(0.05).seed(1);
+    let mut tr = Trainer::new(&spec).unwrap();
     let mut first = f32::NAN;
     let mut last = f32::NAN;
     for i in 0..25 {
@@ -64,12 +67,13 @@ fn asi_loss_matches_vanilla_at_step_zero() {
     let Some(dir) = artifacts() else { return };
     let session = Session::open(&dir, 42).unwrap();
     let b = session.downstream_ds.batch("train", 0, 32);
-    let mut lv = Trainer::new(&session.engine, "mcunet",
-                              "mcunet_vanilla_d2", 0.05, WarmStart::Warm, 1)
-        .unwrap();
-    let mut la = Trainer::new(&session.engine, "mcunet",
-                              "mcunet_asi_d2_r4", 0.05, WarmStart::Warm, 1)
-        .unwrap();
+    let vspec = session
+        .finetune("mcunet", Method::Vanilla { depth: 2 })
+        .lr(0.05)
+        .seed(1);
+    let mut lv = Trainer::new(&vspec).unwrap();
+    let aspec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(1);
+    let mut la = Trainer::new(&aspec).unwrap();
     let l1 = lv.step_image(&b).unwrap();
     let l2 = la.step_image(&b).unwrap();
     assert!((l1 - l2).abs() < 1e-4, "vanilla {l1} vs asi {l2}");
@@ -79,9 +83,8 @@ fn asi_loss_matches_vanilla_at_step_zero() {
 fn warm_start_factors_are_threaded() {
     let Some(dir) = artifacts() else { return };
     let session = Session::open(&dir, 42).unwrap();
-    let mut tr = Trainer::new(&session.engine, "mcunet",
-                              "mcunet_asi_d2_r4", 0.05, WarmStart::Warm, 1)
-        .unwrap();
+    let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(1);
+    let mut tr = Trainer::new(&spec).unwrap();
     let us0: Vec<Vec<f32>> = tr.us.iter()
         .map(|u| u.as_f32().unwrap().to_vec()).collect();
     let b = session.downstream_ds.batch("train", 0, 32);
@@ -114,10 +117,14 @@ fn rank_sweep_memory_monotone() {
     let session = Session::open(&dir, 42).unwrap();
     let mut sizes = Vec::new();
     for r in [1usize, 2, 4, 8] {
-        let tr = Trainer::new(&session.engine, "mcunet",
-                              &format!("mcunet_asi_d2_r{r}"), 0.05,
-                              WarmStart::Warm, 1)
-            .unwrap();
+        let method = Method::asi(2, r);
+        // Fail with a clear message (not a confusing monotonicity
+        // assert) if a baked rank variant is missing from artifacts.
+        method
+            .resolve_exec_strict(&session.engine.manifest, "mcunet")
+            .expect("baked ASI rank variant missing");
+        let spec = session.finetune("mcunet", method).lr(0.05).seed(1);
+        let tr = Trainer::new(&spec).unwrap();
         sizes.push(tr.state_bytes());
     }
     assert!(sizes.windows(2).all(|w| w[0] < w[1]), "{sizes:?}");
@@ -129,9 +136,11 @@ fn lm_training_step_runs_and_learns() {
     let session = Session::open(&dir, 42).unwrap();
     let lm = session.engine.manifest.lm("tinylm").unwrap().clone();
     let ds = TokenDataset::new(lm.vocab, lm.seq_len, 3);
-    let mut tr = Trainer::new(&session.engine, "tinylm", "tinylm_asi_d1",
-                              0.05, WarmStart::Warm, 1)
-        .unwrap();
+    let spec = session
+        .finetune("tinylm", Method::Asi { depth: 1, ranks: vec![] })
+        .lr(0.05)
+        .seed(1);
+    let mut tr = Trainer::new(&spec).unwrap();
     let mut first = f32::NAN;
     let mut last = f32::NAN;
     for i in 0..12 {
@@ -151,9 +160,12 @@ fn cold_start_differs_from_warm() {
     let Some(dir) = artifacts() else { return };
     let session = Session::open(&dir, 42).unwrap();
     let run = |warm: WarmStart| -> Vec<f32> {
-        let mut tr = Trainer::new(&session.engine, "mcunet",
-                                  "mcunet_asi_d2_r4", 0.05, warm, 1)
-            .unwrap();
+        let spec = session
+            .finetune("mcunet", Method::asi(2, 4))
+            .lr(0.05)
+            .warm(warm)
+            .seed(1);
+        let mut tr = Trainer::new(&spec).unwrap();
         (0..6)
             .map(|i| {
                 let b = session.downstream_ds.batch("train", i, 32);
@@ -167,4 +179,39 @@ fn cold_start_differs_from_warm() {
     // later steps diverge because the gradients differ.
     assert!(w.iter().zip(&c).skip(1).any(|(a, b)| (a - b).abs() > 1e-6),
             "warm and cold runs identical: {w:?}");
+}
+
+#[test]
+fn checkpoint_roundtrips_spec_built_trainer() {
+    // A trainer configured through FinetuneSpec, stepped, checkpointed
+    // and restored into a fresh spec-built trainer must carry its warm
+    // factors and step counter across the round trip.
+    let Some(dir) = artifacts() else { return };
+    let session = Session::open(&dir, 42).unwrap();
+    let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(9);
+    let mut tr = Trainer::new(&spec).unwrap();
+    for i in 0..3 {
+        let b = session.downstream_ds.batch("train", i, 32);
+        tr.step_image(&b).unwrap();
+    }
+    let ckdir = std::env::temp_dir().join("asi_ckpt_spec_e2e");
+    Checkpoint::of(&tr).save(&ckdir, "spec").unwrap();
+    let back = Checkpoint::load(&ckdir, "spec").unwrap();
+
+    let mut tr2 = Trainer::new(&spec).unwrap();
+    assert_eq!(tr2.step_idx, 0);
+    back.restore(&mut tr2).unwrap();
+    assert_eq!(tr2.step_idx, tr.step_idx, "step counter must survive");
+    assert_eq!(tr2.us.len(), tr.us.len());
+    for (a, b) in tr2.us.iter().zip(&tr.us) {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(),
+                   "warm factors must survive");
+    }
+    // Both trainers continue identically from the restored state.
+    let b = session.downstream_ds.batch("train", 3, 32);
+    let l1 = tr.step_image(&b).unwrap();
+    let l2 = tr2.step_image(&b).unwrap();
+    assert!((l1 - l2).abs() < 1e-6,
+            "restored trainer diverged: {l1} vs {l2}");
+    let _ = std::fs::remove_dir_all(&ckdir);
 }
