@@ -27,7 +27,8 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(48);
     let depth = 2usize;
-    let session = Session::open(Path::new("artifacts"), 42)?;
+    let engine = Session::load_engine(Path::new("artifacts"))?;
+    let session = Session::new(&engine, 42);
     let cnn = session.engine.manifest.cnn("mcunet")?.clone();
 
     // ---- offline phase -----------------------------------------------

@@ -24,7 +24,8 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(40);
-    let session = Session::open(Path::new("artifacts"), 42)?;
+    let engine = Session::load_engine(Path::new("artifacts"))?;
+    let session = Session::new(&engine, 42);
     let lm = session.engine.manifest.lm("tinylm")?.clone();
     let ds = TokenDataset::new(lm.vocab, lm.seq_len, 11);
 

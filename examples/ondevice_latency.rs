@@ -24,7 +24,8 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(5);
-    let session = Session::open(Path::new("artifacts"), 42)?;
+    let engine = Session::load_engine(Path::new("artifacts"))?;
+    let session = Session::new(&engine, 42);
     let model = "mcunet";
     let cnn = session.engine.manifest.cnn(model)?.clone();
     let layers: Vec<LayerDims> = cnn

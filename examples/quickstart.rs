@@ -29,7 +29,8 @@ use asi::coordinator::{Session, WarmStart};
 use asi::metrics::flops::{train_cost, LayerDims};
 
 fn main() -> Result<()> {
-    let session = Session::open(Path::new("artifacts"), 42)?;
+    let engine = Session::load_engine(Path::new("artifacts"))?;
+    let session = Session::new(&engine, 42);
     println!("platform: {}", session.engine.platform());
 
     // 1. Pre-train (the "ImageNet checkpoint" substitute).

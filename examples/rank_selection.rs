@@ -19,7 +19,8 @@ use asi::coordinator::{backtracking_select, greedy_select,
 use asi::tensor::{ConvGeom, Tensor4};
 
 fn main() -> Result<()> {
-    let session = Session::open(Path::new("artifacts"), 42)?;
+    let engine = Session::load_engine(Path::new("artifacts"))?;
+    let session = Session::new(&engine, 42);
     let model = "mcunet";
     let depth = 4usize;
     let cnn = session.engine.manifest.cnn(model)?.clone();

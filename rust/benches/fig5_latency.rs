@@ -16,7 +16,8 @@ fn main() {
         eprintln!("skipping fig5_latency: run `make artifacts` first");
         return;
     }
-    let session = Session::open(artifacts, 42).expect("session");
+    let engine = Session::load_engine(artifacts).expect("engine");
+    let session = Session::new(&engine, 42);
     let model = "mcunet";
     let cnn = session.engine.manifest.cnn(model).expect("cnn").clone();
 

@@ -1,0 +1,138 @@
+//! Bench: fleet serving throughput — the same tenant set run serially
+//! (1 worker) and concurrently (4 workers) against one shared engine.
+//! The shared `Sync` engine plus ASI's tiny per-tenant state is what
+//! makes the concurrent packing pay off; this bench measures it and
+//! asserts the >1.5x aggregate steps/s floor (skippable with
+//! ASI_BENCH_LAX=1 on noisy shared runners).
+//!
+//! Also cross-checks determinism: every tenant's loss/accuracy must be
+//! bit-identical between the serial and concurrent runs.
+//!
+//! Emits `BENCH_fleet.json` always — with `"skipped": true` when the
+//! AOT artifacts are absent (fresh checkout; run `make artifacts`).
+//!
+//! Run: `cargo bench --bench fleet_throughput`
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use asi::compress::Method;
+use asi::fleet::{run_fleet, FleetReport, FleetSpec};
+use asi::runtime::Engine;
+use asi::util::json::Json;
+use asi::util::timer;
+
+const TENANTS: usize = 8;
+const STEPS: u64 = 10;
+
+fn write_json(fields: Vec<(&str, Json)>) {
+    let json = Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    );
+    std::fs::write("BENCH_fleet.json", format!("{json}\n"))
+        .expect("writing BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json");
+}
+
+fn spec() -> FleetSpec {
+    FleetSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(TENANTS)
+        .steps(STEPS)
+        .base_seed(7)
+}
+
+fn run(engine: &Engine, workers: usize) -> FleetReport {
+    let rep = run_fleet(engine, &spec().workers(workers)).expect("fleet");
+    assert!(
+        rep.failed.is_empty(),
+        "tenants failed at {workers} workers: {:?}",
+        rep.failed
+    );
+    println!(
+        "{workers} worker(s): {:.1} steps/s, wall {:.2}s, peak state {} B",
+        rep.steps_per_s(),
+        rep.wall_s,
+        rep.peak_state_bytes
+    );
+    rep
+}
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping fleet_throughput: run `make artifacts` first");
+        write_json(vec![
+            ("skipped", Json::Bool(true)),
+            ("reason", Json::Str("artifacts/ not built".into())),
+        ]);
+        return;
+    }
+    let engine = Engine::load(artifacts).expect("engine");
+
+    // Warm the shared caches outside the timed runs so both worker
+    // counts see the same hot state: one compile of the train + infer
+    // executables, one parameter read — no wasted training steps.
+    let train_exec = Method::asi(2, 4)
+        .resolve_exec(&engine.manifest, "mcunet")
+        .expect("exec");
+    let infer_exec = engine
+        .manifest
+        .executables
+        .values()
+        .find(|e| e.kind == "infer" && e.model == "mcunet")
+        .map(|e| e.name.clone())
+        .expect("mcunet infer exec in manifest");
+    engine
+        .warmup(&[train_exec.as_str(), infer_exec.as_str()])
+        .expect("warmup");
+    engine.load_params_shared("mcunet").expect("params");
+
+    let serial = run(&engine, 1);
+    let fleet = run(&engine, 4);
+
+    // Determinism: identical per-tenant outcomes at any worker count.
+    for (a, b) in serial.tenants.iter().zip(&fleet.tenants) {
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(
+            a.report.final_loss.to_bits(),
+            b.report.final_loss.to_bits(),
+            "tenant {} loss diverged across worker counts",
+            a.tenant
+        );
+        assert_eq!(
+            a.report.accuracy.to_bits(),
+            b.report.accuracy.to_bits(),
+            "tenant {} accuracy diverged across worker counts",
+            a.tenant
+        );
+    }
+
+    let speedup = fleet.steps_per_s() / serial.steps_per_s();
+    println!(
+        "aggregate speedup at 4 workers: {speedup:.2}x \
+         ({} tenants x {} steps)",
+        TENANTS, STEPS
+    );
+
+    write_json(vec![
+        ("tenants", Json::Num(TENANTS as f64)),
+        ("steps_per_tenant", Json::Num(STEPS as f64)),
+        ("serial_steps_per_s", Json::Num(serial.steps_per_s())),
+        ("fleet_steps_per_s", Json::Num(fleet.steps_per_s())),
+        ("serial_wall_s", Json::Num(serial.wall_s)),
+        ("fleet_wall_s", Json::Num(fleet.wall_s)),
+        ("speedup", Json::Num(speedup)),
+        ("tenants_per_s", Json::Num(fleet.tenants_per_s())),
+        ("peak_state_bytes", Json::Num(fleet.peak_state_bytes as f64)),
+        ("steals", Json::Num(fleet.steals() as f64)),
+        ("compiles", Json::Num(fleet.engine.compiles as f64)),
+        ("param_reads", Json::Num(fleet.engine.param_reads as f64)),
+    ]);
+
+    // The acceptance floor: 4 workers must beat serial by >1.5x on
+    // aggregate steps/s over the same quick budget.
+    timer::assert_speedup("fleet 4-worker aggregate", speedup, 1.5);
+}

@@ -316,16 +316,10 @@ fn main() {
         .expect("writing BENCH_tensor_ops.json");
     println!("\nwrote BENCH_tensor_ops.json");
 
+    // Perf floors — downgraded to warnings under ASI_BENCH_LAX=1 so a
+    // noisy shared runner can't hard-fail CI on a neighbor's load.
     let mm = rows.iter().find(|r| r.name == "matmul 256x256x256").unwrap();
-    assert!(
-        mm.speedup() >= 4.0,
-        "256^3 matmul speedup {:.2}x below the 4x floor",
-        mm.speedup()
-    );
+    timer::assert_speedup("256^3 matmul", mm.speedup(), 4.0);
     let e2e = rows.iter().find(|r| r.name == "asi_compress B32 C48 8x8").unwrap();
-    assert!(
-        e2e.speedup() >= 2.0,
-        "end-to-end asi_compress speedup {:.2}x below the 2x floor",
-        e2e.speedup()
-    );
+    timer::assert_speedup("end-to-end asi_compress", e2e.speedup(), 2.0);
 }

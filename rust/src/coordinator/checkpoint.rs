@@ -93,12 +93,21 @@ impl Checkpoint {
         let meta = obj(vec![
             ("exec", s(&self.exec_name)),
             ("step", num(self.step_idx as f64)),
+            // Pairs the sidecar with its blob: a crash between the two
+            // renames below leaves a detectable mismatch instead of a
+            // silently-wrong (new blob, stale meta) checkpoint.
+            ("blob_fnv", s(&format!("{:016x}", fnv1a64(&blob)))),
             ("frozen", sections[0].1.clone()),
             ("trained", sections[1].1.clone()),
             ("us", sections[2].1.clone()),
         ]);
-        std::fs::write(dir.join(format!("{stem}.bin")), blob)?;
-        std::fs::write(dir.join(format!("{stem}.json")), meta.to_string())?;
+        // Write-then-rename so a reader (or a crashed fleet tenant)
+        // never observes a half-written file; blob first, meta last.
+        write_atomic(&dir.join(format!("{stem}.bin")), &blob)?;
+        write_atomic(
+            &dir.join(format!("{stem}.json")),
+            meta.to_string().as_bytes(),
+        )?;
         Ok(())
     }
 
@@ -108,6 +117,15 @@ impl Checkpoint {
         let meta = Json::parse(&meta_text)?;
         let blob = std::fs::read(dir.join(format!("{stem}.bin")))
             .with_context(|| format!("reading checkpoint {stem}.bin"))?;
+        if let Some(want) = meta.get("blob_fnv").as_str() {
+            let got = format!("{:016x}", fnv1a64(&blob));
+            if got != want {
+                bail!(
+                    "checkpoint {stem}: blob does not match its sidecar \
+                     (torn .bin/.json pair or corruption)"
+                );
+            }
+        }
         let mut off = 0usize;
         let mut read_group = |key: &str| -> Result<Vec<HostTensor>> {
             let mut out = Vec::new();
@@ -140,6 +158,29 @@ impl Checkpoint {
             us,
         })
     }
+}
+
+/// FNV-1a 64-bit hash — pairs a checkpoint blob with its JSON sidecar.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Write `bytes` to `path` via a sibling temp file + rename (atomic on
+/// POSIX when both live on one filesystem, which they do here).
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut name = path.file_name().context("checkpoint path")?.to_owned();
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -185,6 +226,23 @@ mod tests {
         bytes.truncate(bytes.len() - 4);
         std::fs::write(&p, bytes).unwrap();
         assert!(Checkpoint::load(&dir, "t").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_sidecar_rejected() {
+        // Simulate a torn pair: new blob renamed in, stale meta left
+        // behind — same shapes, so only the hash can catch it.
+        let dir = std::env::temp_dir().join("asi_ckpt_torn");
+        let mut c = sample();
+        c.save(&dir, "t").unwrap();
+        c.step_idx = 99;
+        c.trained[0] = HostTensor::f32(vec![4], vec![0.0; 4]);
+        let meta = std::fs::read(dir.join("t.json")).unwrap();
+        c.save(&dir, "t").unwrap();
+        std::fs::write(dir.join("t.json"), meta).unwrap(); // stale meta
+        let err = format!("{:#}", Checkpoint::load(&dir, "t").unwrap_err());
+        assert!(err.contains("does not match its sidecar"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

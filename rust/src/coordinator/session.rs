@@ -3,9 +3,15 @@
 //! [`Method`] on a shifted downstream split, with accuracy/loss logging —
 //! the workflow every experiment driver and the CLI share.
 //!
+//! A session *borrows* its engine: many sessions (one per fleet tenant)
+//! share one `&Engine` across `thread::scope` workers, each with its own
+//! seeded dataset pair.
+//!
 //! Runs are configured through the [`FinetuneSpec`] builder:
 //!
 //! ```ignore
+//! let engine = Engine::load(Path::new("artifacts"))?;
+//! let session = Session::new(&engine, 42);
 //! let rep = session
 //!     .finetune("mcunet", Method::asi(2, 4))
 //!     .pretrained(&pre)
@@ -43,9 +49,10 @@ pub struct FinetuneReport {
     pub state_bytes: u64,
 }
 
-/// A session owns the engine plus the dataset pair (pretrain/downstream).
-pub struct Session {
-    pub engine: Engine,
+/// A session borrows the shared engine and owns the dataset pair
+/// (pretrain/downstream) for one tenant's seed.
+pub struct Session<'e> {
+    pub engine: &'e Engine,
     pub pretrain_ds: ImageDataset,
     pub downstream_ds: ImageDataset,
 }
@@ -55,7 +62,7 @@ pub struct Session {
 /// handed to [`Trainer::new`] for step-by-step driving.
 #[derive(Clone)]
 pub struct FinetuneSpec<'a> {
-    pub session: &'a Session,
+    pub session: &'a Session<'a>,
     pub model: String,
     pub method: Method,
     pub pretrained: Option<&'a Trainer<'a>>,
@@ -109,6 +116,14 @@ impl<'a> FinetuneSpec<'a> {
     /// (`Trainer::new` already applies `pretrained`, if set.)
     pub fn run(&self) -> Result<FinetuneReport> {
         let mut tr = Trainer::new(self)?;
+        self.run_trainer(&mut tr)
+    }
+
+    /// Drive an already-constructed trainer through this spec's loop and
+    /// evaluation. Split out from [`FinetuneSpec::run`] so callers that
+    /// need the trainer around the loop (the fleet runner: resident-state
+    /// accounting, per-tenant checkpoints) share the exact same schedule.
+    pub fn run_trainer(&self, tr: &mut Trainer<'_>) -> Result<FinetuneReport> {
         let batch = self.session.batch_size(&self.model)?;
         let mut loss = Series::new("loss");
         let t0 = std::time::Instant::now();
@@ -136,10 +151,10 @@ impl<'a> FinetuneSpec<'a> {
     }
 }
 
-impl Session {
-    pub fn open(artifacts: &Path, seed: u64) -> Result<Session> {
-        let engine = Engine::load(artifacts).context("loading engine")?;
-        Ok(Session {
+impl<'e> Session<'e> {
+    /// Bind a session to a shared engine with its own seeded datasets.
+    pub fn new(engine: &'e Engine, seed: u64) -> Session<'e> {
+        Session {
             engine,
             // Pretrain and downstream use different prototype seeds —
             // the "pretrain on ImageNet, fine-tune elsewhere" shift.
@@ -148,7 +163,14 @@ impl Session {
                 10,
                 seed ^ 0xDEAD,
             )),
-        })
+        }
+    }
+
+    /// Load an engine from `artifacts` for single-session use. The
+    /// caller keeps the engine alive and the session borrows it — the
+    /// two-step spelling of what used to be `Session::open`.
+    pub fn load_engine(artifacts: &Path) -> Result<Engine> {
+        Engine::load(artifacts).context("loading engine")
     }
 
     /// In-repo pre-training with the full vanilla step. Drives its own

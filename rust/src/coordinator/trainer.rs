@@ -54,7 +54,7 @@ impl<'e> Trainer<'e> {
     /// [`FinetuneSpec::run`], not here.
     pub fn new(spec: &FinetuneSpec<'e>) -> Result<Trainer<'e>> {
         let exec = spec.resolve_exec()?;
-        let mut tr = Trainer::for_exec(&spec.session.engine, &exec, spec.lr,
+        let mut tr = Trainer::for_exec(spec.session.engine, &exec, spec.lr,
                                        spec.warm, spec.seed)?;
         if let Some(src) = spec.pretrained {
             // Transplant the pretrained parameters into the new split.
@@ -285,6 +285,20 @@ impl<'e> Trainer<'e> {
     /// warm-start factors (what Rust must keep resident).
     pub fn state_bytes(&self) -> u64 {
         self.us.iter().map(|u| 4 * u.len() as u64).sum()
+    }
+
+    /// Per-tenant mutable *training* state: warm-start factors plus the
+    /// fine-tuned parameters — the footprint the paper's state-size
+    /// argument is about, and what the fleet's resident-state gauge
+    /// charges a tenant for. Frozen weights are excluded from the
+    /// metric because they are value-identical across tenants of one
+    /// model; note that today each trainer still holds its *own copy*
+    /// of them (host + device), so a tenant's total memory is this
+    /// number plus one frozen-set copy — sharing those buffers across
+    /// tenants is a ROADMAP open item.
+    pub fn resident_state_bytes(&self) -> u64 {
+        self.state_bytes()
+            + self.trained.iter().map(|t| 4 * t.len() as u64).sum::<u64>()
     }
 }
 

@@ -36,7 +36,7 @@ impl Budget {
 }
 
 /// Compact-model layer dims from the manifest (for per-run accounting).
-fn compact_layers(session: &Session, model: &str) -> Result<Vec<LayerDims>> {
+fn compact_layers(session: &Session<'_>, model: &str) -> Result<Vec<LayerDims>> {
     let cnn = session.engine.manifest.cnn(model)?;
     Ok(cnn
         .activation_shapes
@@ -49,7 +49,7 @@ fn compact_layers(session: &Session, model: &str) -> Result<Vec<LayerDims>> {
 }
 
 /// Fig. 3 — warm-start ablation: ASI warm vs cold across depths.
-pub fn fig3(session: &Session, model: &str, budget: Budget) -> Result<Table> {
+pub fn fig3(session: &Session<'_>, model: &str, budget: Budget) -> Result<Table> {
     let mut t = Table::new(
         "Fig 3: warm-start ablation (ASI, synthetic downstream)",
         &["depth", "rank", "variant", "final_loss", "accuracy"],
@@ -101,7 +101,7 @@ pub fn fig3(session: &Session, model: &str, budget: Budget) -> Result<Table> {
 }
 
 /// Fig. 4 — ASI vs HOSVD vs vanilla vs GF: accuracy + resource columns.
-pub fn fig4(session: &Session, model: &str, budget: Budget) -> Result<Table> {
+pub fn fig4(session: &Session<'_>, model: &str, budget: Budget) -> Result<Table> {
     let mut t = Table::new(
         "Fig 4 / Tables (accuracy): methods across depths (synthetic Pets)",
         &["depth", "method", "accuracy", "final_loss", "mem_mb", "gflops",
@@ -157,7 +157,7 @@ pub fn fig4(session: &Session, model: &str, budget: Budget) -> Result<Table> {
 
 /// Fig. 5 — measured per-step wall-clock of the four methods (the
 /// Raspberry-Pi substitution: same-CPU ratios).
-pub fn fig5(session: &Session, model: &str, iters: usize) -> Result<Table> {
+pub fn fig5(session: &Session<'_>, model: &str, iters: usize) -> Result<Table> {
     let mut t = Table::new(
         "Fig 5: measured training-step latency (this host, depth 2)",
         &["method", "ms_per_step", "vs_vanilla"],
@@ -201,7 +201,7 @@ pub fn fig5(session: &Session, model: &str, iters: usize) -> Result<Table> {
 
 /// Fig. 6 — perplexity vs explained-variance threshold for the last
 /// four conv layers (host probe + HOSVD_eps).
-pub fn fig6(session: &Session, model: &str) -> Result<Table> {
+pub fn fig6(session: &Session<'_>, model: &str) -> Result<Table> {
     let mut t = Table::new(
         "Fig 6: activation perplexity vs eps (last 4 layers)",
         &["layer", "eps", "perplexity", "ranks", "mem_kb"],
@@ -244,7 +244,7 @@ pub fn fig6(session: &Session, model: &str) -> Result<Table> {
 }
 
 /// Table 4 (training) — TinyLM vanilla vs ASI across depths.
-pub fn table4_train(session: &Session, budget: Budget) -> Result<Table> {
+pub fn table4_train(session: &Session<'_>, budget: Budget) -> Result<Table> {
     let mut t = Table::new(
         "Table 4 (training): TinyLM on synthetic BoolQ, rank 20",
         &["depth", "method", "final_loss", "answer_acc"],
@@ -285,7 +285,7 @@ pub fn table4_train(session: &Session, budget: Budget) -> Result<Table> {
 /// Probe accuracy: does the model put more mass on the correct yes/no
 /// token at the answer position?
 fn lm_answer_accuracy(
-    session: &Session,
+    session: &Session<'_>,
     tr: &crate::coordinator::Trainer<'_>,
     ds: &TokenDataset,
     lm: &crate::runtime::LmModel,

@@ -1,0 +1,250 @@
+//! Fleet serving layer — concurrent multi-tenant fine-tuning against one
+//! shared [`Engine`].
+//!
+//! The source paper's pitch is that ASI shrinks the per-run training
+//! state by up to ~120×; this module is the system-level payoff: because
+//! each tenant's resident state is tiny, a single host packs many
+//! independent on-device learners (per-device continual adaptation à la
+//! LANCE) onto one process. The engine is `Sync`, so tenants share its
+//! compiled-executable cache (each AOT executable XLA-compiles exactly
+//! once, however many tenants use it) and its memoized initial-parameter
+//! blobs (one disk read per model).
+//!
+//! A fleet = `tenants` independent fine-tuning runs of one model ×
+//! [`Method`], each with its own training seed and synthetic data shard,
+//! executed by a bounded work-stealing worker pool
+//! ([`scheduler::run_work_stealing`]). Tenant results are deterministic:
+//! a fleet run at any worker count produces per-tenant reports
+//! bit-identical to running the same tenant serially, because tenants
+//! share no mutable state (the engine caches are value-identical
+//! whichever tenant populates them first).
+
+pub mod report;
+pub mod scheduler;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::compress::Method;
+use crate::coordinator::{Checkpoint, Session, Trainer};
+use crate::runtime::Engine;
+
+pub use report::{FleetReport, StateCharge, StateGauge, TenantReport};
+pub use scheduler::{run_work_stealing, WorkerStats};
+
+/// Per-tenant identity derived from the fleet spec: which seeds this
+/// tenant trains and shards data with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantPlan {
+    pub id: usize,
+    /// Warm-start / trainer seed.
+    pub seed: u64,
+    /// Synthetic dataset shard seed (each tenant sees its own shifted
+    /// downstream split — the "fleet of devices" data model).
+    pub data_seed: u64,
+}
+
+/// Configuration of a fleet run: tenants = one model × method, fanned
+/// out over per-tenant seeds and data shards.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub model: String,
+    pub method: Method,
+    pub tenants: usize,
+    /// Worker-pool bound (clamped to the tenant count at run time).
+    pub workers: usize,
+    pub steps: u64,
+    pub lr: f32,
+    pub eval_batches: u64,
+    pub base_seed: u64,
+    /// When set, each tenant checkpoints its final state under
+    /// `<dir>/tenant-<id>/final.{bin,json}`.
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl FleetSpec {
+    /// Defaults: 4 tenants, `min(4, cores)` workers, 80 steps, lr 0.05,
+    /// 4 eval batches, base seed 7, no checkpoints.
+    pub fn new(model: &str, method: Method) -> FleetSpec {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        FleetSpec {
+            model: model.to_string(),
+            method,
+            tenants: 4,
+            workers: cores.min(4),
+            steps: 80,
+            lr: 0.05,
+            eval_batches: 4,
+            base_seed: 7,
+            checkpoint_dir: None,
+        }
+    }
+
+    /// The smoke-budget variant: 8 steps, 2 eval batches.
+    pub fn quick(mut self) -> FleetSpec {
+        self.steps = 8;
+        self.eval_batches = 2;
+        self
+    }
+
+    pub fn tenants(mut self, n: usize) -> FleetSpec {
+        self.tenants = n;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> FleetSpec {
+        self.workers = n;
+        self
+    }
+
+    pub fn steps(mut self, n: u64) -> FleetSpec {
+        self.steps = n;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> FleetSpec {
+        self.lr = lr;
+        self
+    }
+
+    pub fn base_seed(mut self, seed: u64) -> FleetSpec {
+        self.base_seed = seed;
+        self
+    }
+
+    pub fn checkpoint_dir(mut self, dir: PathBuf) -> FleetSpec {
+        self.checkpoint_dir = Some(dir);
+        self
+    }
+
+    /// Deterministic per-tenant seed derivation (pure function of the
+    /// spec — a tenant's plan is identical whether it runs in a fleet of
+    /// 1 or 1000, which is what makes serial-vs-fleet runs comparable).
+    pub fn tenant(&self, id: usize) -> TenantPlan {
+        let i = id as u64;
+        TenantPlan {
+            id,
+            seed: self.base_seed.wrapping_add(i),
+            // Golden-ratio hashing spreads shard seeds so neighboring
+            // tenants don't see near-identical synthetic prototypes.
+            data_seed: self
+                .base_seed
+                .wrapping_add((i + 1).wrapping_mul(0x9E3779B97F4A7C15)),
+        }
+    }
+}
+
+/// Run one tenant to completion on `worker`, charging the resident-state
+/// gauge while its mutable training state is live.
+fn run_tenant(
+    engine: &Engine,
+    spec: &FleetSpec,
+    plan: TenantPlan,
+    worker: usize,
+    gauge: &StateGauge,
+) -> Result<TenantReport> {
+    let session = Session::new(engine, plan.data_seed);
+    let fspec = session
+        .finetune(&spec.model, spec.method.clone())
+        .steps(spec.steps)
+        .lr(spec.lr)
+        .eval_batches(spec.eval_batches)
+        .seed(plan.seed);
+    let mut tr = Trainer::new(&fspec)
+        .with_context(|| format!("tenant {} trainer", plan.id))?;
+    let resident = tr.resident_state_bytes();
+    // RAII: released on every exit path, error and panic included.
+    let _charge = gauge.charge(resident);
+    let report = fspec.run_trainer(&mut tr)?;
+    if let Some(base) = &spec.checkpoint_dir {
+        let dir = base.join(format!("tenant-{:04}", plan.id));
+        Checkpoint::of(&tr)
+            .save(&dir, "final")
+            .with_context(|| format!("tenant {} checkpoint", plan.id))?;
+    }
+    Ok(TenantReport {
+        tenant: plan.id,
+        seed: plan.seed,
+        data_seed: plan.data_seed,
+        worker,
+        resident_bytes: resident,
+        report,
+    })
+}
+
+/// Run the whole fleet against a shared engine and aggregate the
+/// per-tenant reports. Tenant failures (errors or panics) are isolated:
+/// they appear in [`FleetReport::failed`] and the rest of the fleet
+/// completes.
+pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
+    let gauge = StateGauge::new();
+    let t0 = Instant::now();
+    let (slots, worker_stats) =
+        run_work_stealing(spec.workers, spec.tenants, |worker, id| {
+            run_tenant(engine, spec, spec.tenant(id), worker, &gauge)
+        });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut tenants = Vec::with_capacity(spec.tenants);
+    let mut failed = Vec::new();
+    for (id, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(t)) => tenants.push(t),
+            Some(Err(e)) => failed.push((id, format!("{e:#}"))),
+            None => failed.push((id, "tenant panicked".to_string())),
+        }
+    }
+    Ok(FleetReport {
+        model: spec.model.clone(),
+        method: spec.method.name().to_string(),
+        // The scheduler clamps the pool; its stats are the source of
+        // truth for how many workers actually ran.
+        workers: worker_stats.len(),
+        wall_s,
+        tenants,
+        failed,
+        peak_state_bytes: gauge.peak_bytes(),
+        worker_stats,
+        engine: engine.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_plans_are_deterministic_and_distinct() {
+        let spec = FleetSpec::new("mcunet", Method::asi(2, 4)).base_seed(11);
+        let again = FleetSpec::new("mcunet", Method::asi(2, 4)).base_seed(11);
+        let plans: Vec<TenantPlan> = (0..16).map(|i| spec.tenant(i)).collect();
+        for (i, p) in plans.iter().enumerate() {
+            assert_eq!(*p, again.tenant(i), "plan must be pure");
+            assert_eq!(p.seed, 11 + i as u64);
+        }
+        let mut data_seeds: Vec<u64> =
+            plans.iter().map(|p| p.data_seed).collect();
+        data_seeds.sort_unstable();
+        data_seeds.dedup();
+        assert_eq!(data_seeds.len(), 16, "shard seeds must be distinct");
+    }
+
+    #[test]
+    fn quick_budget_shrinks_the_run() {
+        let spec = FleetSpec::new("mcunet", Method::asi(2, 4)).quick();
+        assert_eq!(spec.steps, 8);
+        assert_eq!(spec.eval_batches, 2);
+        assert!(spec.workers >= 1);
+    }
+
+    #[test]
+    fn plan_is_independent_of_fleet_size() {
+        let small = FleetSpec::new("m", Method::Full).tenants(2);
+        let large = small.clone().tenants(512);
+        assert_eq!(small.tenant(1), large.tenant(1));
+    }
+}

@@ -1,0 +1,272 @@
+//! Fleet-level reporting: per-tenant outcomes aggregated into throughput
+//! and memory metrics, renderable as a terminal table and exportable as
+//! JSON (`fleet.json` / `BENCH_fleet.json`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::FinetuneReport;
+use crate::metrics::Table;
+use crate::runtime::EngineStats;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::scheduler::WorkerStats;
+
+/// High-water-mark gauge for bytes of tenant *training* state (trained
+/// params + warm-start factors) resident at once — the paper-relevant
+/// packing metric. A tenant's full footprint additionally includes its
+/// private copy of the frozen weights until cross-tenant sharing lands
+/// (see ROADMAP open items).
+#[derive(Debug, Default)]
+pub struct StateGauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl StateGauge {
+    pub fn new() -> StateGauge {
+        StateGauge::default()
+    }
+
+    /// Charge `bytes` while a tenant's state is live.
+    pub fn acquire(&self, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    /// Return a tenant's charge when its state is dropped.
+    pub fn release(&self, bytes: u64) {
+        self.current.fetch_sub(bytes, Ordering::SeqCst);
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::SeqCst)
+    }
+
+    /// RAII variant of acquire/release: the charge is returned on drop
+    /// — including the unwind path of a panicking tenant, so a poisoned
+    /// tenant can't permanently inflate the gauge for the rest of the
+    /// fleet run.
+    pub fn charge(&self, bytes: u64) -> StateCharge<'_> {
+        self.acquire(bytes);
+        StateCharge { gauge: self, bytes }
+    }
+}
+
+/// A live [`StateGauge`] charge; releases itself on drop.
+pub struct StateCharge<'g> {
+    gauge: &'g StateGauge,
+    bytes: u64,
+}
+
+impl Drop for StateCharge<'_> {
+    fn drop(&mut self) {
+        self.gauge.release(self.bytes);
+    }
+}
+
+/// One tenant's outcome inside a fleet run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: usize,
+    /// Training seed (warm-start factor init).
+    pub seed: u64,
+    /// Dataset-shard seed (which synthetic downstream split it saw).
+    pub data_seed: u64,
+    /// Worker thread that executed the tenant.
+    pub worker: usize,
+    /// Mutable training state (trained params + warm factors) held
+    /// resident while the tenant ran.
+    pub resident_bytes: u64,
+    pub report: FinetuneReport,
+}
+
+/// Aggregate outcome of a fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub model: String,
+    pub method: String,
+    pub workers: usize,
+    pub wall_s: f64,
+    pub tenants: Vec<TenantReport>,
+    /// Tenants that failed (id, error) — absent from `tenants`.
+    pub failed: Vec<(usize, String)>,
+    pub peak_state_bytes: u64,
+    pub worker_stats: Vec<WorkerStats>,
+    /// Engine counters observed at the end of the run (shared across
+    /// tenants: `compiles` stays at one per distinct executable and
+    /// `param_reads` at one per model, however many tenants ran).
+    pub engine: EngineStats,
+}
+
+impl FleetReport {
+    /// Fine-tuning steps completed across all successful tenants.
+    pub fn total_steps(&self) -> u64 {
+        self.tenants.iter().map(|t| t.report.steps).sum()
+    }
+
+    /// Aggregate training throughput (all tenants' steps over the run's
+    /// wall clock) — the number the 4-vs-1-worker bench compares.
+    pub fn steps_per_s(&self) -> f64 {
+        self.total_steps() as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Completed tenants per second of wall clock.
+    pub fn tenants_per_s(&self) -> f64 {
+        self.tenants.len() as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Steals across the worker pool (load-imbalance indicator).
+    pub fn steals(&self) -> usize {
+        self.worker_stats.iter().map(|w| w.stolen).sum()
+    }
+
+    /// Per-tenant table plus the aggregate footer line.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "Fleet: {} tenants x {} ({}), {} workers",
+                self.tenants.len() + self.failed.len(),
+                self.model,
+                self.method,
+                self.workers
+            ),
+            &["tenant", "worker", "seed", "steps", "final_loss", "accuracy",
+              "ms/step", "state_bytes"],
+        );
+        for tr in &self.tenants {
+            t.row(vec![
+                tr.tenant.to_string(),
+                tr.worker.to_string(),
+                tr.seed.to_string(),
+                tr.report.steps.to_string(),
+                format!("{:.4}", tr.report.final_loss),
+                format!("{:.4}", tr.report.accuracy),
+                format!(
+                    "{:.1}",
+                    1e3 * tr.report.wall_s / tr.report.steps.max(1) as f64
+                ),
+                tr.resident_bytes.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        for (id, err) in &self.failed {
+            out.push_str(&format!("tenant {id} FAILED: {err}\n"));
+        }
+        out.push_str(&format!(
+            "aggregate: {:.1} steps/s, {:.2} tenants/s, peak resident state \
+             {} B, {} steals, wall {:.2}s\n",
+            self.steps_per_s(),
+            self.tenants_per_s(),
+            self.peak_state_bytes,
+            self.steals(),
+            self.wall_s
+        ));
+        out.push_str(&format!(
+            "engine: {} compiles ({:.2}s), {} runs ({:.2}s), {} param reads\n",
+            self.engine.compiles,
+            self.engine.compile_s,
+            self.engine.runs,
+            self.engine.run_s,
+            self.engine.param_reads
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("method", s(&self.method)),
+            ("workers", num(self.workers as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("total_steps", num(self.total_steps() as f64)),
+            ("steps_per_s", num(self.steps_per_s())),
+            ("tenants_per_s", num(self.tenants_per_s())),
+            ("peak_state_bytes", num(self.peak_state_bytes as f64)),
+            ("steals", num(self.steals() as f64)),
+            (
+                "engine",
+                obj(vec![
+                    ("compiles", num(self.engine.compiles as f64)),
+                    ("compile_s", num(self.engine.compile_s)),
+                    ("runs", num(self.engine.runs as f64)),
+                    ("run_s", num(self.engine.run_s)),
+                    ("param_reads", num(self.engine.param_reads as f64)),
+                ]),
+            ),
+            (
+                "tenants",
+                arr(self.tenants.iter().map(|t| {
+                    obj(vec![
+                        ("tenant", num(t.tenant as f64)),
+                        ("worker", num(t.worker as f64)),
+                        ("seed", num(t.seed as f64)),
+                        ("data_seed", num(t.data_seed as f64)),
+                        ("exec", s(&t.report.exec)),
+                        ("steps", num(t.report.steps as f64)),
+                        ("final_loss", num(t.report.final_loss as f64)),
+                        ("accuracy", num(t.report.accuracy as f64)),
+                        ("wall_s", num(t.report.wall_s)),
+                        ("resident_bytes", num(t.resident_bytes as f64)),
+                        ("loss", t.report.loss.to_json()),
+                    ])
+                })),
+            ),
+            (
+                "failed",
+                arr(self.failed.iter().map(|(id, e)| {
+                    obj(vec![("tenant", num(*id as f64)), ("error", s(e))])
+                })),
+            ),
+        ])
+    }
+
+    /// Write `<stem>.json` under `dir` (created if missing).
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!("{stem}.json"));
+        std::fs::write(&path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_tracks_concurrent_peak() {
+        let g = StateGauge::new();
+        g.acquire(100);
+        g.acquire(250);
+        g.release(100);
+        g.acquire(40);
+        g.release(250);
+        g.release(40);
+        assert_eq!(g.peak_bytes(), 350);
+    }
+
+    #[test]
+    fn gauge_peak_under_contention() {
+        let g = StateGauge::new();
+        std::thread::scope(|sc| {
+            for _ in 0..8 {
+                sc.spawn(|| {
+                    for _ in 0..100 {
+                        g.acquire(7);
+                        g.release(7);
+                    }
+                });
+            }
+        });
+        // Whatever interleaving happened, the books must balance and the
+        // peak can never exceed all threads fully overlapped.
+        assert!(g.peak_bytes() >= 7);
+        assert!(g.peak_bytes() <= 8 * 7);
+        assert_eq!(g.current.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Work-stealing scheduler over a bounded `thread::scope` worker pool.
+//!
+//! Tenants are enqueued round-robin into per-worker deques; each worker
+//! drains its own deque from the front and, when empty, steals from the
+//! *back* of a sibling's deque (classic Chase–Lev discipline, here with
+//! plain `Mutex<VecDeque>` since std is all we have and tenant tasks are
+//! seconds-long — queue overhead is noise). Because the full task set is
+//! known up front and nothing re-enqueues, "every deque empty" is the
+//! termination condition and no condvar is needed.
+//!
+//! A panicking task is contained: the worker records the slot as failed
+//! and moves on, so one poisoned tenant cannot sink the fleet.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+/// Per-worker execution counters, surfaced in the fleet report.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Tasks this worker completed (own + stolen).
+    pub executed: usize,
+    /// Of those, tasks stolen from a sibling's deque.
+    pub stolen: usize,
+    /// Tasks whose closure panicked (contained, slot left empty).
+    pub panicked: usize,
+}
+
+/// Run `items` tasks on `workers` threads with work stealing.
+///
+/// `f(worker, item)` is called exactly once per item in `0..items`;
+/// slot `i` of the returned vector holds its result, or `None` if the
+/// closure panicked. Worker count is clamped to at least 1 and at most
+/// the item count (a 16-tenant fleet on `--workers 64` spawns 16); the
+/// effective count is `stats.len()` of the returned worker stats — the
+/// single source of truth for how many workers actually ran.
+pub fn run_work_stealing<T, F>(
+    workers: usize,
+    items: usize,
+    f: F,
+) -> (Vec<Option<T>>, Vec<WorkerStats>)
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    if items == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let workers = workers.clamp(1, items);
+
+    // Round-robin initial distribution.
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for i in 0..items {
+        deques[i % workers].lock().expect("deque").push_back(i);
+    }
+
+    let results: Vec<Mutex<Option<T>>> =
+        (0..items).map(|_| Mutex::new(None)).collect();
+    let stats: Vec<Mutex<WorkerStats>> = (0..workers)
+        .map(|w| Mutex::new(WorkerStats { worker: w, ..Default::default() }))
+        .collect();
+
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let deques = &deques;
+            let results = &results;
+            let stats = &stats;
+            let f = &f;
+            s.spawn(move || loop {
+                // Own deque first (front), then steal (back), scanning
+                // siblings starting after ourselves to spread pressure.
+                let mut task: Option<(usize, bool)> = deques[w]
+                    .lock()
+                    .expect("deque")
+                    .pop_front()
+                    .map(|i| (i, false));
+                if task.is_none() {
+                    for k in 1..workers {
+                        let victim = (w + k) % workers;
+                        if let Some(i) =
+                            deques[victim].lock().expect("deque").pop_back()
+                        {
+                            task = Some((i, true));
+                            break;
+                        }
+                    }
+                }
+                let Some((i, stolen)) = task else { break };
+                let out = catch_unwind(AssertUnwindSafe(|| f(w, i)));
+                let mut st = stats[w].lock().expect("stats");
+                st.executed += 1;
+                st.stolen += usize::from(stolen);
+                match out {
+                    Ok(v) => {
+                        *results[i].lock().expect("result slot") = Some(v);
+                    }
+                    Err(_) => st.panicked += 1,
+                }
+            });
+        }
+    });
+
+    (
+        results
+            .into_iter()
+            .map(|m| m.into_inner().expect("result slot"))
+            .collect(),
+        stats
+            .into_iter()
+            .map(|m| m.into_inner().expect("stats"))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let (results, stats) = run_work_stealing(4, 37, |_, i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i * 2
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 37);
+        assert_eq!(results.len(), 37);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, Some(i * 2));
+        }
+        assert_eq!(stats.iter().map(|s| s.executed).sum::<usize>(), 37);
+    }
+
+    #[test]
+    fn imbalanced_load_gets_stolen() {
+        // Worker 0's items sleep; the rest are instant — with stealing,
+        // the fast workers drain worker 0's backlog.
+        let (results, stats) = run_work_stealing(4, 64, |_, i| {
+            if i % 4 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            i
+        });
+        assert!(results.iter().all(|r| r.is_some()));
+        let stolen: usize = stats.iter().map(|s| s.stolen).sum();
+        assert!(stolen > 0, "no steals on an imbalanced load: {stats:?}");
+    }
+
+    #[test]
+    fn worker_count_clamps() {
+        let (results, stats) = run_work_stealing(16, 3, |w, i| (w, i));
+        assert_eq!(results.len(), 3);
+        assert_eq!(stats.len(), 3, "workers must clamp to item count");
+        let (results, _) = run_work_stealing(0, 2, |_, i| i);
+        assert_eq!(results.len(), 2);
+        let (results, stats) = run_work_stealing(4, 0, |_, i: usize| i);
+        assert!(results.is_empty() && stats.is_empty());
+    }
+
+    #[test]
+    fn panics_are_contained() {
+        let (results, stats) = run_work_stealing(3, 9, |_, i| {
+            assert!(i != 4, "poison task");
+            i
+        });
+        assert_eq!(results[4], None);
+        for (i, r) in results.iter().enumerate() {
+            if i != 4 {
+                assert_eq!(*r, Some(i), "healthy task lost");
+            }
+        }
+        assert_eq!(stats.iter().map(|s| s.panicked).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn single_worker_is_serial_in_order() {
+        let order = Mutex::new(Vec::new());
+        let (_, stats) = run_work_stealing(1, 5, |w, i| {
+            assert_eq!(w, 0);
+            order.lock().unwrap().push(i);
+        });
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(stats[0].executed, 5);
+        assert_eq!(stats[0].stolen, 0);
+    }
+}

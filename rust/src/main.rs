@@ -7,12 +7,16 @@
 //!     ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 table4
 //!          table4-train rank-select all-analytic
 //! asi train --model mcunet --method asi --depth 2 [--steps N] [--lr F]
+//! asi fleet --tenants N --model mcunet --method asi --depth 2 [--quick]
 //! asi rank-select --model mcunet --budget-kb N [--greedy]
 //! asi engine-stats
 //! asi list
 //! ```
+//!
+//! Unknown `--flags` are rejected with a did-you-mean hint (see
+//! `util::cli`), so a typo like `--step 80` cannot silently run the
+//! defaults.
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
@@ -23,43 +27,11 @@ use asi::coordinator::{backtracking_select, greedy_select,
                        measure_perplexity, probe, HostEdgeNet, Session,
                        WarmStart, DEFAULT_EPS};
 use asi::experiments::{self, training::Budget};
+use asi::fleet::{run_fleet, FleetSpec};
 use asi::metrics::Table;
 use asi::runtime::Engine;
 use asi::tensor::{ConvGeom, Tensor4};
-
-/// Tiny flag parser: positional args + `--key value` / `--flag` pairs.
-struct Args {
-    positional: Vec<String>,
-    flags: BTreeMap<String, String>,
-}
-
-impl Args {
-    fn parse() -> Args {
-        let mut positional = Vec::new();
-        let mut flags = BTreeMap::new();
-        let mut it = std::env::args().skip(1).peekable();
-        while let Some(a) = it.next() {
-            if let Some(name) = a.strip_prefix("--") {
-                let val = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
-                    _ => "true".to_string(),
-                };
-                flags.insert(name.to_string(), val);
-            } else {
-                positional.push(a);
-            }
-        }
-        Args { positional, flags }
-    }
-
-    fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn has(&self, key: &str) -> bool {
-        self.flags.contains_key(key)
-    }
-}
+use asi::util::cli::Args;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts", "artifacts"))
@@ -85,12 +57,14 @@ fn run() -> Result<()> {
     match cmd {
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
+        "fleet" => cmd_fleet(&args),
         "rank-select" => cmd_rank_select(&args),
         "engine-stats" => cmd_engine_stats(&args),
         "bench-ab" => cmd_bench_ab(&args),
         "audit" => cmd_audit(&args),
         "list" => cmd_list(&args),
-        "help" | _ => {
+        // `help` stays lenient: `asi --help` and typos both land here.
+        _ => {
             print!("{}", HELP);
             Ok(())
         }
@@ -107,6 +81,11 @@ USAGE:
   asi train --model mcunet --method asi --depth 2 [--rank R] [--steps N]
             [--lr F] [--cold] [--pretrain N]
       methods: full | vanilla | gf | hosvd | asi
+  asi fleet --tenants N [--workers W] --model mcunet --method asi
+            --depth 2 [--rank R] [--steps N] [--lr F] [--seed S]
+            [--quick] [--ckpt DIR] [--out DIR]
+      concurrent multi-tenant fine-tuning against one shared engine;
+      writes <out>/fleet.json
   asi rank-select --model mcunet --budget-kb N [--greedy]
   asi audit <exec>        per-opcode HLO audit of one artifact
   asi engine-stats        compile/run statistics after a smoke run
@@ -114,6 +93,7 @@ USAGE:
 ";
 
 fn cmd_list(args: &Args) -> Result<()> {
+    args.expect_known("list", &["artifacts"])?;
     let engine = Engine::load(&artifacts_dir(args))?;
     println!("platform: {}", engine.platform());
     let mut t = Table::new(
@@ -136,6 +116,10 @@ fn cmd_list(args: &Args) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
+    args.expect_known(
+        "experiment",
+        &["quick", "full", "out", "artifacts", "model", "iters"],
+    )?;
     let id = args
         .positional
         .get(1)
@@ -160,13 +144,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         _ => {}
     }
 
-    let session = Session::open(&artifacts_dir(args), 42)?;
+    let engine = Engine::load(&artifacts_dir(args)).context("loading engine")?;
+    let session = Session::new(&engine, 42);
     let model = args.get("model", "mcunet");
     let tables = match id {
         "fig3" => vec![experiments::training::fig3(&session, &model, budget)?],
         "fig4" => vec![experiments::training::fig4(&session, &model, budget)?],
         "fig5" => {
-            let iters = args.get("iters", "5").parse().unwrap_or(5);
+            let iters = args.get("iters", "5").parse()?;
             vec![experiments::training::fig5(&session, &model, iters)?]
         }
         "fig6" => vec![experiments::training::fig6(&session, &model)?],
@@ -176,7 +161,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         other => bail!("unknown experiment '{other}'"),
     };
     experiments::emit(&tables, &out)?;
-    let st = session.engine.stats();
+    let st = engine.stats();
     println!(
         "[engine] compiles {} ({:.2}s), runs {} ({:.2}s)",
         st.compiles, st.compile_s, st.runs, st.run_s
@@ -185,6 +170,11 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    args.expect_known(
+        "train",
+        &["model", "method", "depth", "rank", "steps", "pretrain", "lr",
+          "cold", "artifacts"],
+    )?;
     let model = args.get("model", "mcunet");
     let method_key = args.get("method", "asi");
     let depth: usize = args.get("depth", "2").parse()?;
@@ -194,7 +184,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let lr: f32 = args.get("lr", "0.05").parse()?;
     let warm = if args.has("cold") { WarmStart::Cold } else { WarmStart::Warm };
 
-    let session = Session::open(&artifacts_dir(args), 42)?;
+    let engine = Engine::load(&artifacts_dir(args)).context("loading engine")?;
+    let session = Session::new(&engine, 42);
     let method = Method::from_key(&method_key, depth, rank)?;
     println!("pretraining {model} for {pretrain} steps...");
     let pre = session.pretrain(&model, pretrain, lr, 1)?;
@@ -220,7 +211,61 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Concurrent multi-tenant fine-tuning against one shared engine.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    args.expect_known(
+        "fleet",
+        &["tenants", "workers", "model", "method", "depth", "rank", "steps",
+          "lr", "seed", "quick", "ckpt", "out", "artifacts"],
+    )?;
+    let model = args.get("model", "mcunet");
+    let method_key = args.get("method", "asi");
+    let depth: usize = args.get("depth", "2").parse()?;
+    let rank: usize = args.get("rank", "4").parse()?;
+    let tenants: usize = args.get("tenants", "4").parse()?;
+    let method = Method::from_key(&method_key, depth, rank)?;
+
+    let mut spec = FleetSpec::new(&model, method)
+        .tenants(tenants)
+        .base_seed(args.get("seed", "7").parse()?)
+        .lr(args.get("lr", "0.05").parse()?);
+    if args.has("workers") {
+        spec = spec.workers(args.get("workers", "4").parse()?);
+    }
+    if args.has("quick") {
+        spec = spec.quick();
+    }
+    if args.has("steps") {
+        spec = spec.steps(args.get("steps", "80").parse()?);
+    }
+    if args.has("ckpt") {
+        spec = spec.checkpoint_dir(PathBuf::from(args.get("ckpt", "ckpt")));
+    }
+
+    let engine = Engine::load(&artifacts_dir(args)).context("loading engine")?;
+    println!(
+        "fleet: {} tenants of {model} ({}) on up to {} workers, \
+         {} steps each...",
+        spec.tenants,
+        spec.method.name(),
+        spec.workers,
+        spec.steps
+    );
+    let report = run_fleet(&engine, &spec)?;
+    print!("{}", report.render());
+    report.save(&out_dir(args), "fleet")?;
+    println!("wrote {}/fleet.json", out_dir(args).display());
+    if !report.failed.is_empty() {
+        bail!("{} of {} tenants failed", report.failed.len(), spec.tenants);
+    }
+    Ok(())
+}
+
 fn cmd_rank_select(args: &Args) -> Result<()> {
+    args.expect_known(
+        "rank-select",
+        &["model", "budget-kb", "depth", "greedy", "artifacts"],
+    )?;
     let model = args.get("model", "mcunet");
     let budget_kb: u64 = args.get("budget-kb", "64").parse()?;
     let depth: usize = args.get("depth", "4").parse()?;
@@ -287,6 +332,7 @@ fn cmd_rank_select(args: &Args) -> Result<()> {
 /// path (`Engine::run`, everything re-uploaded per call through Literal
 /// conversion) vs the mixed-buffer path used by the Trainer. §Perf L3.
 fn cmd_bench_ab(args: &Args) -> Result<()> {
+    args.expect_known("bench-ab", &["iters", "exec", "artifacts"])?;
     let iters: usize = args.get("iters", "10").parse()?;
     let engine = Engine::load(&artifacts_dir(args))?;
     // Default: the depth-2 rank-4 ASI step, resolved through Method.
@@ -331,6 +377,7 @@ fn cmd_bench_ab(args: &Args) -> Result<()> {
 
 /// Per-opcode HLO audit of one artifact (the L2 profiling view).
 fn cmd_audit(args: &Args) -> Result<()> {
+    args.expect_known("audit", &["artifacts"])?;
     let exec = args
         .positional
         .get(1)
@@ -354,6 +401,7 @@ fn cmd_audit(args: &Args) -> Result<()> {
 }
 
 fn cmd_engine_stats(args: &Args) -> Result<()> {
+    args.expect_known("engine-stats", &["artifacts"])?;
     let engine = Engine::load(&artifacts_dir(args))?;
     // Smoke: run every model's infer executable on its init params.
     let names: Vec<(String, String)> = engine
@@ -380,9 +428,10 @@ fn cmd_engine_stats(args: &Args) -> Result<()> {
     }
     let st = engine.stats();
     println!(
-        "compiles {} ({:.2}s total), runs {} ({:.3}s), h2d {} B, d2h {} B",
+        "compiles {} ({:.2}s total), runs {} ({:.3}s), h2d {} B, d2h {} B, \
+         {} param reads",
         st.compiles, st.compile_s, st.runs, st.run_s, st.h2d_bytes,
-        st.d2h_bytes
+        st.d2h_bytes, st.param_reads
     );
     Ok(())
 }

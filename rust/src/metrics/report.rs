@@ -171,6 +171,20 @@ impl Series {
         }
         out
     }
+
+    /// `{"name": ..., "points": [[step, value], ...]}` — consumed by the
+    /// fleet report and `BENCH_fleet.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            (
+                "points",
+                arr(self.points.iter().map(|&(step, v)| {
+                    arr([Json::Num(step as f64), Json::Num(v)])
+                })),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +223,20 @@ mod tests {
         let sp = s.sparkline(10);
         assert_eq!(sp.chars().count(), 10);
         assert_eq!(s.last(), Some(0.5));
+    }
+
+    #[test]
+    fn series_json_roundtrips() {
+        let mut sr = Series::new("loss");
+        sr.push(0, 2.5);
+        sr.push(5, 1.25);
+        let j = sr.to_json();
+        assert_eq!(j.get("name").as_str(), Some("loss"));
+        let pts = j.get("points").as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].as_arr().unwrap()[0].as_f64(), Some(5.0));
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("points").as_arr().unwrap().len(), 2);
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once
 //! on the CPU client, caches the executables, and runs them on host
 //! tensors. This is the only place the `xla` crate is touched.
+//!
+//! The engine is `Sync`: one instance is shared by every concurrent
+//! fine-tuning tenant (see `fleet`). The executable cache is a
+//! `RwLock` map of per-entry cells so the read path is contention-free
+//! once warm, while a cold entry is compiled exactly once under a
+//! per-entry lock (concurrent requesters for *different* executables
+//! compile in parallel; requesters for the *same* one block on its cell,
+//! not on the whole cache). Statistics are plain atomics and initial
+//! parameters are memoized per model, so N tenants cost one disk read.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -12,7 +22,8 @@ use anyhow::{bail, Context, Result};
 use super::manifest::Manifest;
 use super::value::{DType, HostTensor};
 
-/// Compile/run statistics, surfaced in `asi engine-stats` and the benches.
+/// Compile/run statistics snapshot, surfaced in `asi engine-stats`, the
+/// fleet report and the benches.
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
     pub compiles: usize,
@@ -21,6 +32,79 @@ pub struct EngineStats {
     pub run_s: f64,
     pub h2d_bytes: u64,
     pub d2h_bytes: u64,
+    /// Times a model's parameter blob was actually read from disk
+    /// (cache misses of the memoized `load_params`).
+    pub param_reads: usize,
+}
+
+/// Internal atomic counters behind [`EngineStats`]. Durations are kept
+/// as integer nanoseconds so they can live in an `AtomicU64`.
+#[derive(Debug, Default)]
+struct AtomicStats {
+    compiles: AtomicUsize,
+    compile_ns: AtomicU64,
+    runs: AtomicUsize,
+    run_ns: AtomicU64,
+    h2d_bytes: AtomicU64,
+    d2h_bytes: AtomicU64,
+    param_reads: AtomicUsize,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> EngineStats {
+        EngineStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            compile_s: self.compile_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            runs: self.runs.load(Ordering::Relaxed),
+            run_s: self.run_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            param_reads: self.param_reads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One cache slot with fallible once-initialization: `init` serializes
+/// the (expensive) fill of this entry only — a `get_or_try_init` for
+/// stable Rust. Used per executable (XLA compile) and per model
+/// (parameter blob read), so concurrent fills of *different* entries
+/// proceed in parallel while racers on the *same* entry block on its
+/// cell, not on the whole cache. A failed fill leaves the slot empty
+/// and the next caller retries.
+struct InitCell<T> {
+    init: Mutex<()>,
+    slot: OnceLock<T>,
+}
+
+// Manual impl: `derive(Default)` would demand `T: Default`, which the
+// payload types (e.g. the stub `xla::PjRtLoadedExecutable`) don't have.
+impl<T> Default for InitCell<T> {
+    fn default() -> Self {
+        InitCell { init: Mutex::new(()), slot: OnceLock::new() }
+    }
+}
+
+impl<T> InitCell<T> {
+    fn get(&self) -> Option<&T> {
+        self.slot.get()
+    }
+
+    fn get_or_try_init(&self, fill: impl FnOnce() -> Result<T>) -> Result<&T> {
+        if self.slot.get().is_none() {
+            // Recover a poisoned guard: the OnceLock slot (not the
+            // mutex) is the source of truth, and a panic mid-fill must
+            // leave the entry retryable, not brick it for every later
+            // tenant of the same executable/model.
+            let _filling =
+                self.init.lock().unwrap_or_else(|p| p.into_inner());
+            // A racer may have finished while we waited on the lock.
+            if self.slot.get().is_none() {
+                let v = fill()?;
+                let _ = self.slot.set(v);
+            }
+        }
+        Ok(self.slot.get().expect("just populated"))
+    }
 }
 
 /// One argument of a mixed (buffers + host tensors) execution.
@@ -31,14 +115,23 @@ pub enum ExecArg<'a> {
     Host(&'a HostTensor),
 }
 
-/// The engine owns the PJRT client, the manifest, and the executable cache.
+/// The engine owns the PJRT client, the manifest, and the executable
+/// cache. Shareable as `&Engine` across `thread::scope` workers.
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<EngineStats>,
+    exes: RwLock<HashMap<String, Arc<InitCell<xla::PjRtLoadedExecutable>>>>,
+    params: RwLock<HashMap<String, Arc<InitCell<Arc<Vec<HostTensor>>>>>>,
+    stats: AtomicStats,
 }
+
+// The engine must stay shareable across tenant workers; this fails to
+// compile if a non-Sync field (e.g. a RefCell) sneaks back in.
+const _: fn() = || {
+    fn assert_sync_send<T: Sync + Send>() {}
+    assert_sync_send::<Engine>();
+};
 
 impl Engine {
     /// Load the manifest from `dir` and connect the PJRT CPU client.
@@ -49,8 +142,9 @@ impl Engine {
             client,
             dir: dir.to_path_buf(),
             manifest,
-            exes: RefCell::new(HashMap::new()),
-            stats: RefCell::new(EngineStats::default()),
+            exes: RwLock::new(HashMap::new()),
+            params: RwLock::new(HashMap::new()),
+            stats: AtomicStats::default(),
         })
     }
 
@@ -59,40 +153,52 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
+        self.stats.snapshot()
     }
 
-    /// Compile (or fetch from cache) the named executable.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(name) {
-            return Ok(());
+    /// Fetch (compiling on first use) the cache cell for `name`. The
+    /// returned cell's slot is guaranteed populated on `Ok`.
+    fn executable(&self, name: &str)
+        -> Result<Arc<InitCell<xla::PjRtLoadedExecutable>>> {
+        // Warm path: a read lock and a map hit.
+        if let Some(cell) = self.exes.read().expect("exe cache").get(name) {
+            if cell.get().is_some() {
+                return Ok(cell.clone());
+            }
         }
-        let entry = self.manifest.exec(name)?;
-        let path = self.dir.join(&entry.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA-compiling {name}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut st = self.stats.borrow_mut();
-            st.compiles += 1;
-            st.compile_s += dt;
-        }
-        self.exes.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+        // Cold path: install the cell under the write lock (cheap), then
+        // compile under the cell's own lock so other entries stay live.
+        let cell = {
+            let mut map = self.exes.write().expect("exe cache");
+            map.entry(name.to_string()).or_default().clone()
+        };
+        cell.get_or_try_init(|| {
+            let entry = self.manifest.exec(name)?;
+            let path = self.dir.join(&entry.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("XLA-compiling {name}"))?;
+            self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+            self.stats.compile_ns.fetch_add(
+                t0.elapsed().as_nanos() as u64,
+                Ordering::Relaxed,
+            );
+            Ok(exe)
+        })?;
+        Ok(cell)
     }
 
     /// Pre-compile a set of executables (amortize XLA compile up front).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.ensure_compiled(n)?;
+            self.executable(n)?;
         }
         Ok(())
     }
@@ -132,17 +238,26 @@ impl Engine {
         Ok(())
     }
 
+    /// Record a completed execution in the stats counters.
+    fn note_run(&self, t0: Instant, h2d: u64, d2h: u64) {
+        self.stats.runs.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .run_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.h2d_bytes.fetch_add(h2d, Ordering::Relaxed);
+        self.stats.d2h_bytes.fetch_add(d2h, Ordering::Relaxed);
+    }
+
     /// Execute `name` on `inputs`; returns the flat output tuple.
     pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.ensure_compiled(name)?;
+        let cell = self.executable(name)?;
         self.validate(name, inputs)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|t| t.to_literal())
             .collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).expect("ensured above");
+        let exe = cell.get().expect("populated by executable()");
         let result = exe
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("executing {name}"))?;
@@ -154,14 +269,11 @@ impl Engine {
             .iter()
             .map(HostTensor::from_literal)
             .collect::<Result<_>>()?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut st = self.stats.borrow_mut();
-            st.runs += 1;
-            st.run_s += dt;
-            st.h2d_bytes += inputs.iter().map(|t| 4 * t.len() as u64).sum::<u64>();
-            st.d2h_bytes += outs.iter().map(|t| 4 * t.len() as u64).sum::<u64>();
-        }
+        self.note_run(
+            t0,
+            inputs.iter().map(|t| 4 * t.len() as u64).sum(),
+            outs.iter().map(|t| 4 * t.len() as u64).sum(),
+        );
         // Sanity: output arity should match the manifest.
         let entry = self.manifest.exec(name)?;
         if entry.outputs.len() != outs.len() {
@@ -188,7 +300,9 @@ impl Engine {
                 .buffer_from_host_buffer::<i32>(data, shape, None),
         }
         .context("uploading host tensor")?;
-        self.stats.borrow_mut().h2d_bytes += 4 * t.len() as u64;
+        self.stats
+            .h2d_bytes
+            .fetch_add(4 * t.len() as u64, Ordering::Relaxed);
         Ok(buf)
     }
 
@@ -197,7 +311,7 @@ impl Engine {
     /// passed through without any copy.
     pub fn run_mixed(&self, name: &str, args: &[ExecArg<'_>])
         -> Result<Vec<HostTensor>> {
-        self.ensure_compiled(name)?;
+        let cell = self.executable(name)?;
         let entry = self.manifest.exec(name)?;
         if entry.inputs.len() != args.len() {
             bail!("{name}: expected {} inputs, got {}", entry.inputs.len(),
@@ -232,8 +346,7 @@ impl Engine {
             })
             .collect();
         let t0 = Instant::now();
-        let exes = self.exes.borrow();
-        let exe = exes.get(name).expect("ensured above");
+        let exe = cell.get().expect("populated by executable()");
         let result = exe
             .execute_b::<&xla::PjRtBuffer>(&bufs)
             .with_context(|| format!("executing {name} (buffers)"))?;
@@ -245,22 +358,49 @@ impl Engine {
             .iter()
             .map(HostTensor::from_literal)
             .collect::<Result<_>>()?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut st = self.stats.borrow_mut();
-            st.runs += 1;
-            st.run_s += dt;
-            st.d2h_bytes += outs.iter().map(|t| 4 * t.len() as u64).sum::<u64>();
-        }
+        self.note_run(t0, 0, outs.iter().map(|t| 4 * t.len() as u64).sum());
         Ok(outs)
     }
 
-    /// Load a model's initial parameters from its data blob.
+    /// A model's initial parameters, read from its data blob on first
+    /// use and memoized — N concurrent tenants of the same model share
+    /// one disk read. The shared list is immutable; callers that mutate
+    /// (trainers) clone what they need via [`Engine::load_params`].
+    pub fn load_params_shared(&self, model: &str)
+        -> Result<Arc<Vec<HostTensor>>> {
+        // Same per-entry discipline as the executable cache: the map
+        // locks are held only for lookup/insert, and the disk read
+        // happens under the model's own cell lock — concurrent tenants
+        // of one model trigger exactly one read, and warm lookups of
+        // other models never block behind it.
+        if let Some(cell) = self.params.read().expect("param cache").get(model)
+        {
+            if let Some(p) = cell.get() {
+                return Ok(p.clone());
+            }
+        }
+        let cell = {
+            let mut map = self.params.write().expect("param cache");
+            map.entry(model.to_string()).or_default().clone()
+        };
+        let p = cell
+            .get_or_try_init(|| Ok(Arc::new(self.read_params(model)?)))?;
+        Ok(p.clone())
+    }
+
+    /// Owned copy of a model's initial parameters (memcpy from the
+    /// memoized list, not a disk read).
     pub fn load_params(&self, model: &str) -> Result<Vec<HostTensor>> {
+        Ok(self.load_params_shared(model)?.as_ref().clone())
+    }
+
+    /// Actually read + decode a model's parameter blob from disk.
+    fn read_params(&self, model: &str) -> Result<Vec<HostTensor>> {
         let pf = self.manifest.params_of(model)?;
         let path = self.dir.join(&pf.file);
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.display()))?;
+        self.stats.param_reads.fetch_add(1, Ordering::Relaxed);
         let total: usize = pf.tensors.iter().map(|t| t.elements()).sum();
         if bytes.len() != 4 * total {
             bail!(

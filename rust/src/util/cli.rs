@@ -1,0 +1,161 @@
+//! Tiny CLI argument parser: positional args + `--key value` / `--flag`
+//! pairs, with *strict* flag checking — every command declares the flags
+//! it understands and anything else errors with a did-you-mean hint
+//! (mirroring `Method::resolve_exec`), so `--step 80` fails loudly
+//! instead of silently running 100 default steps.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: positionals + `--key value` / `--flag` pairs.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Parse an explicit argument list (testable entry point). A flag
+    /// followed by a non-flag token consumes it as its value; otherwise
+    /// it is a bare boolean flag.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Reject any flag outside `known`, suggesting the closest known
+    /// flag (edit distance ≤ 3) when there is one.
+    pub fn expect_known(&self, command: &str, known: &[&str]) -> Result<()> {
+        for flag in self.flags.keys() {
+            if known.contains(&flag.as_str()) {
+                continue;
+            }
+            let nearest = known
+                .iter()
+                .map(|k| (edit_distance(flag, k), *k))
+                .min()
+                .filter(|&(d, _)| d <= 3);
+            match nearest {
+                Some((_, k)) => bail!(
+                    "unknown flag '--{flag}' for '{command}'; did you mean \
+                     '--{k}'? (known flags: {})",
+                    join_flags(known)
+                ),
+                None => bail!(
+                    "unknown flag '--{flag}' for '{command}' \
+                     (known flags: {})",
+                    join_flags(known)
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn join_flags(known: &[&str]) -> String {
+    known
+        .iter()
+        .map(|k| format!("--{k}"))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Levenshtein distance (two-row DP) — inputs are short flag names.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("train --model mcunet --cold --steps 80");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model", "x"), "mcunet");
+        assert_eq!(a.get("steps", "100"), "80");
+        assert!(a.has("cold"));
+        assert_eq!(a.get("cold", ""), "true");
+        assert_eq!(a.get("missing", "fallback"), "fallback");
+    }
+
+    #[test]
+    fn known_flags_pass() {
+        let a = parse("train --model mcunet --steps 80");
+        a.expect_known("train", &["model", "steps", "lr"]).unwrap();
+    }
+
+    #[test]
+    fn typo_gets_did_you_mean() {
+        let a = parse("train --step 80");
+        let err = format!(
+            "{:#}",
+            a.expect_known("train", &["model", "steps", "lr"]).unwrap_err()
+        );
+        assert!(err.contains("unknown flag '--step'"), "{err}");
+        assert!(err.contains("did you mean '--steps'"), "{err}");
+    }
+
+    #[test]
+    fn far_off_flag_lists_known() {
+        let a = parse("train --bananas 3");
+        let err = format!(
+            "{:#}",
+            a.expect_known("train", &["model", "steps"]).unwrap_err()
+        );
+        assert!(err.contains("unknown flag '--bananas'"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("--model, --steps"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("step", "steps"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
+    }
+}

@@ -1,5 +1,7 @@
-//! Offline substrates: JSON, deterministic RNG, timing, property testing.
+//! Offline substrates: JSON, CLI parsing, deterministic RNG, timing,
+//! property testing.
 
+pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -3,6 +3,27 @@
 
 use std::time::Instant;
 
+/// True when `ASI_BENCH_LAX` is set (to anything but `0`): perf-floor
+/// assertions in the benches downgrade to warnings so noisy shared CI
+/// runners don't hard-fail on a neighbor's cache pressure.
+pub fn lax() -> bool {
+    std::env::var_os("ASI_BENCH_LAX").is_some_and(|v| v != "0")
+}
+
+/// Assert a speedup floor, or just warn when [`lax`] is active.
+pub fn assert_speedup(what: &str, speedup: f64, floor: f64) {
+    if speedup >= floor {
+        return;
+    }
+    let msg =
+        format!("{what}: speedup {speedup:.2}x below the {floor:.1}x floor");
+    if lax() {
+        eprintln!("warning (ASI_BENCH_LAX): {msg}");
+    } else {
+        panic!("{msg}");
+    }
+}
+
 /// Measure one closure invocation in seconds.
 pub fn time_once<F: FnOnce() -> R, R>(f: F) -> (f64, R) {
     let t0 = Instant::now();

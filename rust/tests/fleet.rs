@@ -1,0 +1,215 @@
+//! Fleet-layer tests that need no AOT artifacts: the work-stealing
+//! scheduler under load, report aggregation/JSON, engine thread-safety
+//! at the type level, and the strict CLI parser. (The artifact-gated
+//! end-to-end concurrency tests live in `runtime_e2e.rs`.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use asi::compress::Method;
+use asi::coordinator::FinetuneReport;
+use asi::fleet::{run_work_stealing, FleetReport, FleetSpec, StateGauge,
+                 TenantReport};
+use asi::metrics::Series;
+use asi::runtime::{Engine, EngineStats};
+use asi::util::cli::Args;
+
+/// The whole fleet design rests on sharing `&Engine` (and `&Session`)
+/// across `thread::scope` workers; regress loudly if a non-Sync field
+/// ever sneaks back into the runtime or coordinator layer.
+#[test]
+fn engine_and_session_are_sync() {
+    fn assert_sync_send<T: Sync + Send>() {}
+    assert_sync_send::<Engine>();
+    assert_sync_send::<asi::coordinator::Session<'static>>();
+}
+
+#[test]
+fn scheduler_balances_heterogeneous_tenants() {
+    // Tenant durations follow a long-tail: without stealing, the worker
+    // that owns the slow tenants would serialize the tail.
+    let max_live = AtomicUsize::new(0);
+    let live = AtomicUsize::new(0);
+    let (results, stats) = run_work_stealing(4, 24, |_, i| {
+        let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+        max_live.fetch_max(now, Ordering::SeqCst);
+        std::thread::sleep(std::time::Duration::from_millis(
+            if i % 6 == 0 { 10 } else { 1 },
+        ));
+        live.fetch_sub(1, Ordering::SeqCst);
+        i
+    });
+    assert_eq!(results.len(), 24);
+    assert!(results.iter().all(|r| r.is_some()));
+    assert!(
+        max_live.load(Ordering::SeqCst) > 1,
+        "workers never overlapped"
+    );
+    let executed: usize = stats.iter().map(|s| s.executed).sum();
+    assert_eq!(executed, 24);
+}
+
+#[test]
+fn gauge_charges_overlap_not_sum() {
+    // Two sequential tenants of 100 B peak at 100, not 200; two
+    // overlapping ones peak at 200. The scheduler decides the overlap;
+    // here we script it by hand.
+    let g = StateGauge::new();
+    g.acquire(100);
+    g.release(100);
+    g.acquire(100);
+    g.release(100);
+    assert_eq!(g.peak_bytes(), 100);
+    let g = StateGauge::new();
+    g.acquire(100);
+    g.acquire(100);
+    g.release(100);
+    g.release(100);
+    assert_eq!(g.peak_bytes(), 200);
+}
+
+fn fake_tenant(id: usize, steps: u64) -> TenantReport {
+    let mut loss = Series::new("loss");
+    loss.push(0, 2.0);
+    loss.push(steps - 1, 1.0);
+    TenantReport {
+        tenant: id,
+        seed: 7 + id as u64,
+        data_seed: 1000 + id as u64,
+        worker: id % 2,
+        resident_bytes: 4096,
+        report: FinetuneReport {
+            method: Method::asi(2, 4),
+            exec: "mcunet_asi_d2_r4".into(),
+            steps,
+            loss,
+            final_loss: 1.0,
+            accuracy: 0.5,
+            wall_s: 0.5,
+            state_bytes: 1024,
+        },
+    }
+}
+
+fn fake_report(workers: usize, tenants: usize, wall_s: f64) -> FleetReport {
+    FleetReport {
+        model: "mcunet".into(),
+        method: "asi".into(),
+        workers,
+        wall_s,
+        tenants: (0..tenants).map(|i| fake_tenant(i, 10)).collect(),
+        failed: vec![(tenants, "poisoned".into())],
+        peak_state_bytes: 4096 * workers as u64,
+        worker_stats: Vec::new(),
+        engine: EngineStats::default(),
+    }
+}
+
+#[test]
+fn report_aggregates_throughput() {
+    let r = fake_report(4, 8, 2.0);
+    assert_eq!(r.total_steps(), 80);
+    assert!((r.steps_per_s() - 40.0).abs() < 1e-9);
+    assert!((r.tenants_per_s() - 4.0).abs() < 1e-9);
+    let rendered = r.render();
+    assert!(rendered.contains("Fleet: 9 tenants"), "{rendered}");
+    assert!(rendered.contains("FAILED: poisoned"), "{rendered}");
+    assert!(rendered.contains("steps/s"), "{rendered}");
+}
+
+#[test]
+fn report_json_shape() {
+    let r = fake_report(2, 3, 1.0);
+    let j = r.to_json();
+    assert_eq!(j.get("workers").as_usize(), Some(2));
+    assert_eq!(j.get("total_steps").as_usize(), Some(30));
+    let tenants = j.get("tenants").as_arr().unwrap();
+    assert_eq!(tenants.len(), 3);
+    assert_eq!(tenants[0].get("exec").as_str(), Some("mcunet_asi_d2_r4"));
+    assert_eq!(
+        tenants[1].get("loss").get("name").as_str(),
+        Some("loss")
+    );
+    let failed = j.get("failed").as_arr().unwrap();
+    assert_eq!(failed[0].get("error").as_str(), Some("poisoned"));
+    // Round-trips through the parser.
+    let text = j.to_string();
+    let back = asi::util::json::Json::parse(&text).unwrap();
+    assert_eq!(back.get("model").as_str(), Some("mcunet"));
+}
+
+#[test]
+fn report_save_writes_json() {
+    let dir = std::env::temp_dir().join("asi_fleet_report_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    fake_report(2, 2, 1.0).save(&dir, "fleet").unwrap();
+    let text = std::fs::read_to_string(dir.join("fleet.json")).unwrap();
+    let j = asi::util::json::Json::parse(&text).unwrap();
+    assert_eq!(j.get("tenants").as_arr().unwrap().len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_spec_seed_plans_survive_worker_count() {
+    // The serial-vs-fleet determinism guarantee starts here: plans
+    // depend only on (base_seed, id), never on workers/tenant count.
+    let a = FleetSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(8)
+        .workers(1);
+    let b = a.clone().workers(4).tenants(64);
+    for i in 0..8 {
+        assert_eq!(a.tenant(i), b.tenant(i));
+    }
+}
+
+#[test]
+fn fleet_run_against_missing_artifacts_fails_cleanly() {
+    // Offline (stub xla / no artifacts): the engine refuses to load and
+    // the error names the problem instead of panicking.
+    let err = Engine::load(std::path::Path::new("definitely/not/there"));
+    assert!(err.is_err());
+}
+
+#[test]
+fn scheduler_results_keep_tenant_order_under_contention() {
+    let order = Mutex::new(Vec::new());
+    let (results, _) = run_work_stealing(4, 32, |_, i| {
+        order.lock().unwrap().push(i);
+        i * i
+    });
+    // Execution order is nondeterministic; slot order is not.
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(*r, Some(i * i));
+    }
+    assert_eq!(order.lock().unwrap().len(), 32);
+}
+
+// ---- strict CLI parsing (the `--step 80` regression) -------------------
+
+#[test]
+fn cli_rejects_typo_with_hint() {
+    let args = Args::parse_from(
+        ["train", "--step", "80"].map(String::from),
+    );
+    let err = format!(
+        "{:#}",
+        args.expect_known("train", &["steps", "model"]).unwrap_err()
+    );
+    assert!(err.contains("did you mean '--steps'"), "{err}");
+}
+
+#[test]
+fn cli_accepts_fleet_flag_set() {
+    let args = Args::parse_from(
+        ["fleet", "--tenants", "8", "--quick", "--workers", "4"]
+            .map(String::from),
+    );
+    args.expect_known(
+        "fleet",
+        &["tenants", "workers", "model", "method", "depth", "rank",
+          "steps", "lr", "seed", "quick", "ckpt", "out", "artifacts"],
+    )
+    .unwrap();
+    assert_eq!(args.get("tenants", "4"), "8");
+    assert!(args.has("quick"));
+}

@@ -9,8 +9,10 @@
 use std::path::{Path, PathBuf};
 
 use asi::compress::Method;
-use asi::coordinator::{Checkpoint, Session, Trainer, WarmStart};
+use asi::coordinator::{Checkpoint, FinetuneReport, Session, Trainer,
+                       WarmStart};
 use asi::data::TokenDataset;
+use asi::fleet::{run_fleet, FleetSpec};
 use asi::runtime::{Engine, HostTensor};
 
 fn artifacts() -> Option<PathBuf> {
@@ -44,7 +46,8 @@ fn engine_loads_and_validates_shapes() {
 #[test]
 fn vanilla_training_reduces_loss() {
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let spec = session.finetune("mcunet", Method::Full).lr(0.05).seed(1);
     let mut tr = Trainer::new(&spec).unwrap();
     let mut first = f32::NAN;
@@ -65,7 +68,8 @@ fn asi_loss_matches_vanilla_at_step_zero() {
     // Compression touches only the *backward* path, so the reported loss
     // of the first step must be identical between methods.
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let b = session.downstream_ds.batch("train", 0, 32);
     let vspec = session
         .finetune("mcunet", Method::Vanilla { depth: 2 })
@@ -82,7 +86,8 @@ fn asi_loss_matches_vanilla_at_step_zero() {
 #[test]
 fn warm_start_factors_are_threaded() {
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(1);
     let mut tr = Trainer::new(&spec).unwrap();
     let us0: Vec<Vec<f32>> = tr.us.iter()
@@ -114,7 +119,8 @@ fn warm_start_factors_are_threaded() {
 fn rank_sweep_memory_monotone() {
     // Larger baked ranks -> more warm-start state carried by L3.
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let mut sizes = Vec::new();
     for r in [1usize, 2, 4, 8] {
         let method = Method::asi(2, r);
@@ -133,7 +139,8 @@ fn rank_sweep_memory_monotone() {
 #[test]
 fn lm_training_step_runs_and_learns() {
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let lm = session.engine.manifest.lm("tinylm").unwrap().clone();
     let ds = TokenDataset::new(lm.vocab, lm.seq_len, 3);
     let spec = session
@@ -158,7 +165,8 @@ fn lm_training_step_runs_and_learns() {
 #[test]
 fn cold_start_differs_from_warm() {
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let run = |warm: WarmStart| -> Vec<f32> {
         let spec = session
             .finetune("mcunet", Method::asi(2, 4))
@@ -187,7 +195,8 @@ fn checkpoint_roundtrips_spec_built_trainer() {
     // and restored into a fresh spec-built trainer must carry its warm
     // factors and step counter across the round trip.
     let Some(dir) = artifacts() else { return };
-    let session = Session::open(&dir, 42).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
     let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(9);
     let mut tr = Trainer::new(&spec).unwrap();
     for i in 0..3 {
@@ -214,4 +223,123 @@ fn checkpoint_roundtrips_spec_built_trainer() {
     assert!((l1 - l2).abs() < 1e-6,
             "restored trainer diverged: {l1} vs {l2}");
     let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+// ---- fleet / concurrency (the Sync-engine contract) --------------------
+
+/// One tenant's run on a *private* engine — the serial reference the
+/// concurrent runs must match bit-for-bit.
+fn serial_reference(dir: &Path, seed: u64, data_seed: u64) -> FinetuneReport {
+    let engine = Engine::load(dir).unwrap();
+    let session = Session::new(&engine, data_seed);
+    session
+        .finetune("mcunet", Method::asi(2, 4))
+        .steps(6)
+        .eval_batches(2)
+        .seed(seed)
+        .run()
+        .unwrap()
+}
+
+fn assert_reports_identical(a: &FinetuneReport, b: &FinetuneReport) {
+    assert_eq!(a.exec, b.exec);
+    assert_eq!(
+        a.final_loss.to_bits(),
+        b.final_loss.to_bits(),
+        "final loss diverged: {} vs {}",
+        a.final_loss,
+        b.final_loss
+    );
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.loss.points.len(), b.loss.points.len());
+    for ((s1, v1), (s2, v2)) in a.loss.points.iter().zip(&b.loss.points) {
+        assert_eq!(s1, s2);
+        assert_eq!(v1.to_bits(), v2.to_bits(), "loss curve diverged");
+    }
+}
+
+#[test]
+fn concurrent_tenants_share_engine_and_match_serial() {
+    let Some(dir) = artifacts() else { return };
+    const N: usize = 4;
+    let serial: Vec<FinetuneReport> = (0..N)
+        .map(|i| serial_reference(&dir, 100 + i as u64, 500 + i as u64))
+        .collect();
+
+    // The same four tenants concurrently against ONE shared engine.
+    let engine = Engine::load(&dir).unwrap();
+    let concurrent: Vec<FinetuneReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|i| {
+                let engine = &engine;
+                s.spawn(move || {
+                    let session = Session::new(engine, 500 + i as u64);
+                    session
+                        .finetune("mcunet", Method::asi(2, 4))
+                        .steps(6)
+                        .eval_batches(2)
+                        .seed(100 + i as u64)
+                        .run()
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (a, b) in serial.iter().zip(&concurrent) {
+        assert_reports_identical(a, b);
+    }
+    // Compile-once under contention: all tenants share one train and
+    // one infer executable, and one on-disk parameter read.
+    let st = engine.stats();
+    assert_eq!(st.compiles, 2,
+               "expected exactly one compile per distinct executable");
+    assert_eq!(st.param_reads, 1, "params must be read from disk once");
+}
+
+#[test]
+fn fleet_matches_serial_at_same_seeds() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let spec = FleetSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(8)
+        .quick()
+        .base_seed(3);
+    let serial = run_fleet(&engine, &spec.clone().workers(1)).unwrap();
+    let fleet = run_fleet(&engine, &spec.workers(4)).unwrap();
+    assert!(serial.failed.is_empty(), "{:?}", serial.failed);
+    assert!(fleet.failed.is_empty(), "{:?}", fleet.failed);
+    assert_eq!(serial.tenants.len(), 8);
+    for (a, b) in serial.tenants.iter().zip(&fleet.tenants) {
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.seed, b.seed);
+        assert_reports_identical(&a.report, &b.report);
+    }
+    // Concurrency packs more state at once, never less.
+    assert!(fleet.peak_state_bytes >= serial.peak_state_bytes);
+    // One model, one executable family: the shared engine never
+    // recompiled however many tenants and worker counts ran.
+    assert_eq!(engine.stats().param_reads, 1);
+}
+
+#[test]
+fn fleet_writes_per_tenant_checkpoints() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let ck = std::env::temp_dir().join("asi_fleet_ckpt_e2e");
+    let _ = std::fs::remove_dir_all(&ck);
+    let spec = FleetSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(3)
+        .workers(3)
+        .quick()
+        .checkpoint_dir(ck.clone());
+    let rep = run_fleet(&engine, &spec).unwrap();
+    assert!(rep.failed.is_empty(), "{:?}", rep.failed);
+    for i in 0..3 {
+        let td = ck.join(format!("tenant-{i:04}"));
+        let back = Checkpoint::load(&td, "final").unwrap();
+        assert_eq!(back.step_idx, 8, "quick budget is 8 steps");
+    }
+    let _ = std::fs::remove_dir_all(&ck);
 }
