@@ -13,12 +13,12 @@
 //!
 //! Run: `cargo bench --bench fleet_throughput`
 
-use std::collections::BTreeMap;
 use std::path::Path;
 
 use asi::compress::Method;
 use asi::fleet::{run_fleet, FleetReport, FleetSpec};
 use asi::runtime::Engine;
+use asi::util::fs::write_bench_json;
 use asi::util::json::Json;
 use asi::util::timer;
 
@@ -26,13 +26,7 @@ const TENANTS: usize = 8;
 const STEPS: u64 = 10;
 
 fn write_json(fields: Vec<(&str, Json)>) {
-    let json = Json::Obj(
-        fields
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect::<BTreeMap<_, _>>(),
-    );
-    std::fs::write("BENCH_fleet.json", format!("{json}\n"))
+    write_bench_json("BENCH_fleet.json", fields)
         .expect("writing BENCH_fleet.json");
     println!("wrote BENCH_fleet.json");
 }

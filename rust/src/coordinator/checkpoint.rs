@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::HostTensor;
+use crate::util::fs::write_atomic;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::trainer::Trainer;
@@ -65,6 +66,16 @@ impl Checkpoint {
         tr.us = self.us.clone();
         tr.step_idx = self.step_idx;
         Ok(())
+    }
+
+    /// Serialized blob size (all tensors, 4 bytes/element) — what the
+    /// async writer charges a queued checkpoint for.
+    pub fn state_bytes(&self) -> u64 {
+        [&self.frozen, &self.trained, &self.us]
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|t| 4 * t.len() as u64)
+            .sum()
     }
 
     pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
@@ -170,19 +181,6 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Write `bytes` to `path` via a sibling temp file + rename (atomic on
-/// POSIX when both live on one filesystem, which they do here).
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    let mut name = path.file_name().context("checkpoint path")?.to_owned();
-    name.push(".tmp");
-    let tmp = path.with_file_name(name);
-    std::fs::write(&tmp, bytes)
-        .with_context(|| format!("writing {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("renaming into {}", path.display()))?;
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,5 +248,29 @@ mod tests {
     fn missing_files_error() {
         let dir = std::env::temp_dir().join("asi_ckpt_missing");
         assert!(Checkpoint::load(&dir, "nope").is_err());
+    }
+
+    #[test]
+    fn failed_save_leaves_no_tmp_litter() {
+        // Occupy `t.bin` with a directory: the rename fails, the error
+        // surfaces, and no sibling `.tmp` file survives in the dir.
+        let dir = std::env::temp_dir().join("asi_ckpt_tmp_leak");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("t.bin")).unwrap();
+        assert!(sample().save(&dir, "t").is_err());
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp litter: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn state_bytes_counts_all_sections() {
+        // sample(): frozen 6 + trained (4 + 2) + us 3 = 15 f32s.
+        assert_eq!(sample().state_bytes(), 15 * 4);
     }
 }

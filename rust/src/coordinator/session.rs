@@ -119,6 +119,18 @@ impl<'a> FinetuneSpec<'a> {
         self.run_trainer(&mut tr)
     }
 
+    /// Rebuild a trainer and restore `ck` into it — the resume half of
+    /// the burst lifecycle. The restored trainer continues bit-identical
+    /// to one that was never dropped: parameters, warm-start factors
+    /// and the step counter (which keys the batch stream) all round-trip
+    /// through [`Checkpoint`].
+    pub fn resume(&self, ck: &super::Checkpoint) -> Result<Trainer<'a>> {
+        let mut tr = Trainer::new(self)?;
+        ck.restore(&mut tr)
+            .context("restoring checkpoint into a spec-built trainer")?;
+        Ok(tr)
+    }
+
     /// Drive an already-constructed trainer through this spec's loop and
     /// evaluation. Split out from [`FinetuneSpec::run`] so callers that
     /// need the trainer around the loop (the fleet runner: resident-state
@@ -159,11 +171,16 @@ impl<'e> Session<'e> {
             // Pretrain and downstream use different prototype seeds —
             // the "pretrain on ImageNet, fine-tune elsewhere" shift.
             pretrain_ds: ImageDataset::new(ImageSpec::cifar_like(10, seed)),
-            downstream_ds: ImageDataset::new(ImageSpec::cifar_like(
-                10,
-                seed ^ 0xDEAD,
-            )),
+            downstream_ds: Session::downstream_dataset(seed),
         }
+    }
+
+    /// The downstream (fine-tuning) dataset for a tenant seed, without
+    /// an engine — the single definition of the seed shift, shared with
+    /// the streaming layer's synthetic sources so stream batches are
+    /// bit-identical to `Session` batches at the same seed.
+    pub fn downstream_dataset(seed: u64) -> ImageDataset {
+        ImageDataset::new(ImageSpec::cifar_like(10, seed ^ 0xDEAD))
     }
 
     /// Load an engine from `artifacts` for single-session use. The

@@ -222,6 +222,24 @@ impl<'e> Trainer<'e> {
         self.step(x, Some(y))
     }
 
+    /// Run one bounded burst of `steps` image steps, pulling each batch
+    /// by the trainer's own *global* step counter; returns the last
+    /// loss. Because batches are keyed off `step_idx` (which a
+    /// [`super::Checkpoint`] restores), a run preempted into bursts
+    /// consumes exactly the batch sequence of an uninterrupted run —
+    /// the streaming service's bit-identity guarantee starts here.
+    pub fn run_burst<F>(&mut self, steps: u64, mut batch_at: F) -> Result<f32>
+    where
+        F: FnMut(u64) -> ImageBatch,
+    {
+        let mut last = f32::NAN;
+        for _ in 0..steps {
+            let b = batch_at(self.step_idx as u64);
+            last = self.step_image(&b)?;
+        }
+        Ok(last)
+    }
+
     /// Full parameter list in `<model>_init` / `<model>_infer` order —
     /// the trained run is re-inserted at its original flatten position.
     pub fn full_params(&self) -> Vec<HostTensor> {

@@ -46,6 +46,23 @@ pub struct TenantPlan {
     pub data_seed: u64,
 }
 
+/// Deterministic per-tenant seed derivation — a pure function of
+/// `(base_seed, id)`, shared by the batch fleet and the streaming serve
+/// layer so a tenant's identity is the same whichever execution model
+/// runs it (which is what makes cross-mode bit-identity checks
+/// meaningful).
+pub fn derive_plan(base_seed: u64, id: usize) -> TenantPlan {
+    let i = id as u64;
+    TenantPlan {
+        id,
+        seed: base_seed.wrapping_add(i),
+        // Golden-ratio hashing spreads shard seeds so neighboring
+        // tenants don't see near-identical synthetic prototypes.
+        data_seed: base_seed
+            .wrapping_add((i + 1).wrapping_mul(0x9E3779B97F4A7C15)),
+    }
+}
+
 /// Configuration of a fleet run: tenants = one model × method, fanned
 /// out over per-tenant seeds and data shards.
 #[derive(Debug, Clone)]
@@ -125,16 +142,7 @@ impl FleetSpec {
     /// spec — a tenant's plan is identical whether it runs in a fleet of
     /// 1 or 1000, which is what makes serial-vs-fleet runs comparable).
     pub fn tenant(&self, id: usize) -> TenantPlan {
-        let i = id as u64;
-        TenantPlan {
-            id,
-            seed: self.base_seed.wrapping_add(i),
-            // Golden-ratio hashing spreads shard seeds so neighboring
-            // tenants don't see near-identical synthetic prototypes.
-            data_seed: self
-                .base_seed
-                .wrapping_add((i + 1).wrapping_mul(0x9E3779B97F4A7C15)),
-        }
+        derive_plan(self.base_seed, id)
     }
 }
 

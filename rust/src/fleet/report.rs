@@ -5,11 +5,12 @@
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::FinetuneReport;
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
+use crate::util::fs::write_atomic_in;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::scheduler::WorkerStats;
@@ -202,8 +203,11 @@ impl FleetReport {
                     obj(vec![
                         ("tenant", num(t.tenant as f64)),
                         ("worker", num(t.worker as f64)),
-                        ("seed", num(t.seed as f64)),
-                        ("data_seed", num(t.data_seed as f64)),
+                        // Seeds as decimal strings: golden-ratio-hashed
+                        // u64 shard seeds exceed 2^53 and would round
+                        // through f64, breaking replay-from-report.
+                        ("seed", s(&t.seed.to_string())),
+                        ("data_seed", s(&t.data_seed.to_string())),
                         ("exec", s(&t.report.exec)),
                         ("steps", num(t.report.steps as f64)),
                         ("final_loss", num(t.report.final_loss as f64)),
@@ -223,14 +227,15 @@ impl FleetReport {
         ])
     }
 
-    /// Write `<stem>.json` under `dir` (created if missing).
+    /// Write `<stem>.json` under `dir` (created if missing). Atomic via
+    /// tmp+rename — a reader polling `fleet.json` mid-run never sees a
+    /// torn report, matching the tenant-checkpoint guarantee.
     pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating {}", dir.display()))?;
-        let path = dir.join(format!("{stem}.json"));
-        std::fs::write(&path, format!("{}\n", self.to_json()))
-            .with_context(|| format!("writing {}", path.display()))?;
-        Ok(())
+        write_atomic_in(
+            dir,
+            &format!("{stem}.json"),
+            format!("{}\n", self.to_json()).as_bytes(),
+        )
     }
 }
 

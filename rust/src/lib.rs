@@ -22,5 +22,6 @@ pub mod fleet;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -30,6 +30,7 @@ use asi::experiments::{self, training::Budget};
 use asi::fleet::{run_fleet, FleetSpec};
 use asi::metrics::Table;
 use asi::runtime::Engine;
+use asi::serve::{run_serve, Policy, Priority, ServeSpec};
 use asi::tensor::{ConvGeom, Tensor4};
 use asi::util::cli::Args;
 
@@ -58,6 +59,7 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
         "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
         "rank-select" => cmd_rank_select(&args),
         "engine-stats" => cmd_engine_stats(&args),
         "bench-ab" => cmd_bench_ab(&args),
@@ -86,6 +88,13 @@ USAGE:
             [--quick] [--ckpt DIR] [--out DIR]
       concurrent multi-tenant fine-tuning against one shared engine;
       writes <out>/fleet.json
+  asi serve --tenants N --workers W --bursts K [--burst-steps S]
+            [--high-every M] [--aging A] [--fifo] [--model mcunet]
+            [--method asi] [--depth D] [--rank R] [--lr F] [--seed S]
+            [--quick] [--ckpt DIR] [--out DIR]
+      streaming continual-adaptation service: burst-granular priority
+      scheduling with aging, checkpoint/yield/re-enqueue tenants, and
+      a dedicated async checkpoint writer; writes <out>/serve.json
   asi rank-select --model mcunet --budget-kb N [--greedy]
   asi audit <exec>        per-opcode HLO audit of one artifact
   asi engine-stats        compile/run statistics after a smoke run
@@ -255,6 +264,74 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     print!("{}", report.render());
     report.save(&out_dir(args), "fleet")?;
     println!("wrote {}/fleet.json", out_dir(args).display());
+    if !report.failed.is_empty() {
+        bail!("{} of {} tenants failed", report.failed.len(), spec.tenants);
+    }
+    Ok(())
+}
+
+/// Streaming continual-adaptation service (priority scheduler + async
+/// checkpoint writer) against one shared engine.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(
+        "serve",
+        &["tenants", "workers", "bursts", "burst-steps", "high-every",
+          "aging", "fifo", "model", "method", "depth", "rank", "lr",
+          "seed", "quick", "ckpt", "out", "artifacts"],
+    )?;
+    let model = args.get("model", "mcunet");
+    let method_key = args.get("method", "asi");
+    let depth: usize = args.get("depth", "2").parse()?;
+    let rank: usize = args.get("rank", "4").parse()?;
+    let method = Method::from_key(&method_key, depth, rank)?;
+
+    let mut spec = ServeSpec::new(&model, method)
+        .tenants(args.get("tenants", "4").parse()?)
+        .base_seed(args.get("seed", "7").parse()?)
+        .lr(args.get("lr", "0.05").parse()?)
+        .high_every(args.get("high-every", "4").parse()?)
+        .aging(args.get("aging", "8").parse()?);
+    if args.has("workers") {
+        spec = spec.workers(args.get("workers", "4").parse()?);
+    }
+    if args.has("quick") {
+        spec = spec.quick();
+    }
+    if args.has("bursts") {
+        spec = spec.bursts(args.get("bursts", "4").parse()?);
+    }
+    if args.has("burst-steps") {
+        spec = spec.burst_steps(args.get("burst-steps", "20").parse()?);
+    }
+    if args.has("fifo") {
+        spec = spec.policy(Policy::FifoRunToCompletion);
+    }
+    if args.has("ckpt") {
+        spec = spec.checkpoint_dir(PathBuf::from(args.get("ckpt", "ckpt")));
+    }
+
+    let engine = Engine::load(&artifacts_dir(args)).context("loading engine")?;
+    println!(
+        "serve: {} tenants of {model} ({}), {} policy, up to {} workers, \
+         {} bursts x {} steps each...",
+        spec.tenants,
+        spec.method.name(),
+        spec.policy.name(),
+        spec.workers,
+        spec.bursts,
+        spec.burst_steps
+    );
+    let report = run_serve(&engine, &spec)?;
+    print!("{}", report.render());
+    report.save(&out_dir(args), "serve")?;
+    println!("wrote {}/serve.json", out_dir(args).display());
+    let high = report.latency(Priority::High);
+    if high.count > 0 {
+        println!(
+            "high-priority p95 burst latency: {:.1} ms ({} bursts)",
+            high.p95_ms, high.count
+        );
+    }
     if !report.failed.is_empty() {
         bail!("{} of {} tenants failed", report.failed.len(), spec.tenants);
     }

@@ -5,8 +5,9 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use crate::util::fs::write_atomic_in;
 use crate::util::json::{arr, obj, s, Json};
 
 /// A simple column-typed table.
@@ -92,16 +93,18 @@ impl Table {
         ])
     }
 
-    /// Write CSV + JSON artifacts under `dir` (created if missing).
+    /// Write CSV + JSON artifacts under `dir` (created if missing),
+    /// atomically — report files are re-emitted across runs and may be
+    /// watched by tooling, so they get the same tmp+rename discipline
+    /// as checkpoints.
     pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating {}", dir.display()))?;
-        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
-        std::fs::write(
-            dir.join(format!("{stem}.json")),
-            self.to_json().to_string(),
-        )?;
-        Ok(())
+        write_atomic_in(dir, &format!("{stem}.csv"),
+                        self.to_csv().as_bytes())?;
+        write_atomic_in(
+            dir,
+            &format!("{stem}.json"),
+            self.to_json().to_string().as_bytes(),
+        )
     }
 }
 

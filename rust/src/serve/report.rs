@@ -1,0 +1,444 @@
+//! Serve-level reporting: per-tenant stream outcomes, per-priority
+//! burst-latency percentiles (the number the scheduler exists to
+//! improve), writer-thread telemetry, and JSON export
+//! (`serve.json` / `BENCH_serve.json`).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::metrics::Table;
+use crate::runtime::EngineStats;
+use crate::util::fs::write_atomic_in;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::scheduler::{Priority, WorkerStats};
+use super::writer::WriterStats;
+
+/// Nearest-rank percentile of an ascending-sorted slice; `q` in (0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    let rank = (q * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// One dispatched burst's scheduling telemetry.
+#[derive(Debug, Clone)]
+pub struct BurstRecord {
+    pub tenant: usize,
+    pub burst: u64,
+    pub prio: Priority,
+    pub worker: usize,
+    /// Queue wait before the burst started.
+    pub wait_s: f64,
+    /// Execution time from dispatch to burst completion.
+    pub run_s: f64,
+    /// Dispatched via an aging promotion.
+    pub aged: bool,
+}
+
+impl BurstRecord {
+    /// Ready-to-complete latency — what a device waiting on its
+    /// adaptation burst experiences.
+    pub fn latency_s(&self) -> f64 {
+        self.wait_s + self.run_s
+    }
+}
+
+/// Latency distribution summary for one priority class.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    pub fn of(latencies_s: impl Iterator<Item = f64>) -> LatencySummary {
+        let mut ms: Vec<f64> = latencies_s.map(|l| l * 1e3).collect();
+        if ms.is_empty() {
+            return LatencySummary::default();
+        }
+        ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        LatencySummary {
+            count: ms.len(),
+            mean_ms: ms.iter().sum::<f64>() / ms.len() as f64,
+            p50_ms: percentile(&ms, 0.50),
+            p95_ms: percentile(&ms, 0.95),
+            p99_ms: percentile(&ms, 0.99),
+            max_ms: *ms.last().expect("non-empty"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("mean_ms", num(self.mean_ms)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("max_ms", num(self.max_ms)),
+        ])
+    }
+}
+
+/// One tenant's completed stream inside a serve run.
+#[derive(Debug, Clone)]
+pub struct TenantServe {
+    pub tenant: usize,
+    pub prio: Priority,
+    pub seed: u64,
+    pub data_seed: u64,
+    pub bursts: u64,
+    pub steps: u64,
+    pub final_loss: f32,
+    pub accuracy: f32,
+    /// Mutable training state resident while a burst of this tenant ran.
+    pub resident_bytes: u64,
+}
+
+/// Aggregate outcome of a serve run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub method: String,
+    /// Scheduling policy the run used (`priority` / `fifo`).
+    pub policy: String,
+    pub workers: usize,
+    /// Effective aging threshold; `u64::MAX` means promotion was
+    /// disabled (the FIFO control arm).
+    pub aging: u64,
+    pub wall_s: f64,
+    pub tenants: Vec<TenantServe>,
+    /// Tenants that failed (id, error) — absent from `tenants`.
+    pub failed: Vec<(usize, String)>,
+    /// Every dispatched burst, sorted (tenant, burst).
+    pub bursts: Vec<BurstRecord>,
+    pub peak_state_bytes: u64,
+    pub worker_stats: Vec<WorkerStats>,
+    pub writer: WriterStats,
+    pub engine: EngineStats,
+}
+
+impl ServeReport {
+    pub fn total_steps(&self) -> u64 {
+        self.tenants.iter().map(|t| t.steps).sum()
+    }
+
+    pub fn steps_per_s(&self) -> f64 {
+        self.total_steps() as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Burst-latency summary for one priority class.
+    pub fn latency(&self, prio: Priority) -> LatencySummary {
+        LatencySummary::of(
+            self.bursts
+                .iter()
+                .filter(|b| b.prio == prio)
+                .map(|b| b.latency_s()),
+        )
+    }
+
+    /// Aging promotions across the run.
+    pub fn aged_dispatches(&self) -> usize {
+        self.bursts.iter().filter(|b| b.aged).count()
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "Serve: {} tenants x {} ({}), {} workers, {} policy",
+                self.tenants.len() + self.failed.len(),
+                self.model,
+                self.method,
+                self.workers,
+                self.policy,
+            ),
+            &["tenant", "prio", "bursts", "steps", "final_loss", "accuracy",
+              "state_bytes"],
+        );
+        for tr in &self.tenants {
+            t.row(vec![
+                tr.tenant.to_string(),
+                tr.prio.name().to_string(),
+                tr.bursts.to_string(),
+                tr.steps.to_string(),
+                format!("{:.4}", tr.final_loss),
+                format!("{:.4}", tr.accuracy),
+                tr.resident_bytes.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        for (id, err) in &self.failed {
+            out.push_str(&format!("tenant {id} FAILED: {err}\n"));
+        }
+        for prio in [Priority::High, Priority::Background] {
+            let l = self.latency(prio);
+            if l.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{} burst latency: p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} \
+                 ms, max {:.1} ms over {} bursts\n",
+                prio.name(),
+                l.p50_ms,
+                l.p95_ms,
+                l.p99_ms,
+                l.max_ms,
+                l.count
+            ));
+        }
+        out.push_str(&format!(
+            "aggregate: {:.1} steps/s, {} aged dispatches, peak resident \
+             state {} B, wall {:.2}s\n",
+            self.steps_per_s(),
+            self.aged_dispatches(),
+            self.peak_state_bytes,
+            self.wall_s
+        ));
+        out.push_str(&format!(
+            "writer: {} jobs ({} ckpt, {} report), {} B, busy {:.2}s, \
+             {} blocked sends, {} errors\n",
+            self.writer.jobs,
+            self.writer.checkpoints,
+            self.writer.reports,
+            self.writer.bytes,
+            self.writer.busy_s,
+            self.writer.blocked_sends,
+            self.writer.errors.len()
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("method", s(&self.method)),
+            ("policy", s(&self.policy)),
+            ("workers", num(self.workers as f64)),
+            (
+                "aging",
+                if self.aging == u64::MAX {
+                    Json::Null
+                } else {
+                    num(self.aging as f64)
+                },
+            ),
+            ("wall_s", num(self.wall_s)),
+            ("total_steps", num(self.total_steps() as f64)),
+            ("steps_per_s", num(self.steps_per_s())),
+            ("aged_dispatches", num(self.aged_dispatches() as f64)),
+            ("peak_state_bytes", num(self.peak_state_bytes as f64)),
+            ("latency_high", self.latency(Priority::High).to_json()),
+            (
+                "latency_background",
+                self.latency(Priority::Background).to_json(),
+            ),
+            (
+                "writer",
+                obj(vec![
+                    ("jobs", num(self.writer.jobs as f64)),
+                    ("checkpoints", num(self.writer.checkpoints as f64)),
+                    ("reports", num(self.writer.reports as f64)),
+                    ("bytes", num(self.writer.bytes as f64)),
+                    ("busy_s", num(self.writer.busy_s)),
+                    (
+                        "blocked_sends",
+                        num(self.writer.blocked_sends as f64),
+                    ),
+                    (
+                        "errors",
+                        arr(self.writer.errors.iter().map(|e| s(e))),
+                    ),
+                ]),
+            ),
+            (
+                "engine",
+                obj(vec![
+                    ("compiles", num(self.engine.compiles as f64)),
+                    ("runs", num(self.engine.runs as f64)),
+                    ("param_reads", num(self.engine.param_reads as f64)),
+                ]),
+            ),
+            (
+                "tenants",
+                arr(self.tenants.iter().map(|t| {
+                    obj(vec![
+                        ("tenant", num(t.tenant as f64)),
+                        ("prio", s(t.prio.name())),
+                        // Seeds as decimal strings: golden-ratio-hashed
+                        // u64 shard seeds exceed 2^53 and would round
+                        // through f64, breaking replay-from-report.
+                        ("seed", s(&t.seed.to_string())),
+                        ("data_seed", s(&t.data_seed.to_string())),
+                        ("bursts", num(t.bursts as f64)),
+                        ("steps", num(t.steps as f64)),
+                        ("final_loss", num(t.final_loss as f64)),
+                        ("accuracy", num(t.accuracy as f64)),
+                        ("resident_bytes", num(t.resident_bytes as f64)),
+                    ])
+                })),
+            ),
+            (
+                "bursts",
+                arr(self.bursts.iter().map(|b| {
+                    obj(vec![
+                        ("tenant", num(b.tenant as f64)),
+                        ("burst", num(b.burst as f64)),
+                        ("prio", s(b.prio.name())),
+                        ("worker", num(b.worker as f64)),
+                        ("wait_ms", num(b.wait_s * 1e3)),
+                        ("run_ms", num(b.run_s * 1e3)),
+                        ("latency_ms", num(b.latency_s() * 1e3)),
+                        ("aged", Json::Bool(b.aged)),
+                    ])
+                })),
+            ),
+            (
+                "failed",
+                arr(self.failed.iter().map(|(id, e)| {
+                    obj(vec![("tenant", num(*id as f64)), ("error", s(e))])
+                })),
+            ),
+        ])
+    }
+
+    /// Write `<stem>.json` under `dir` (created if missing), atomically.
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        write_atomic_in(
+            dir,
+            &format!("{stem}.json"),
+            format!("{}\n", self.to_json()).as_bytes(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn latency_summary_orders_and_converts() {
+        let l = LatencySummary::of([0.300, 0.100, 0.200].into_iter());
+        assert_eq!(l.count, 3);
+        assert_eq!(l.p50_ms, 200.0);
+        assert_eq!(l.max_ms, 300.0);
+        assert!((l.mean_ms - 200.0).abs() < 1e-9);
+        assert_eq!(LatencySummary::of(std::iter::empty()).count, 0);
+    }
+
+    fn fake_report() -> ServeReport {
+        let burst = |tenant, burst, prio, wait_s: f64| BurstRecord {
+            tenant,
+            burst,
+            prio,
+            worker: 0,
+            wait_s,
+            run_s: 0.01,
+            aged: tenant == 1 && burst == 1,
+        };
+        ServeReport {
+            model: "mcunet".into(),
+            method: "asi".into(),
+            policy: "priority".into(),
+            workers: 2,
+            aging: 8,
+            wall_s: 1.0,
+            tenants: vec![
+                TenantServe {
+                    tenant: 0,
+                    prio: Priority::High,
+                    seed: 7,
+                    data_seed: 99,
+                    bursts: 2,
+                    steps: 8,
+                    final_loss: 1.25,
+                    accuracy: 0.5,
+                    resident_bytes: 4096,
+                },
+                TenantServe {
+                    tenant: 1,
+                    prio: Priority::Background,
+                    seed: 8,
+                    data_seed: 100,
+                    bursts: 2,
+                    steps: 8,
+                    final_loss: 1.5,
+                    accuracy: 0.25,
+                    resident_bytes: 4096,
+                },
+            ],
+            failed: vec![(2, "poisoned".into())],
+            bursts: vec![
+                burst(0, 0, Priority::High, 0.001),
+                burst(0, 1, Priority::High, 0.002),
+                burst(1, 0, Priority::Background, 0.050),
+                burst(1, 1, Priority::Background, 0.120),
+            ],
+            peak_state_bytes: 8192,
+            worker_stats: Vec::new(),
+            writer: WriterStats { jobs: 5, checkpoints: 4, reports: 1,
+                                  ..Default::default() },
+            engine: EngineStats::default(),
+        }
+    }
+
+    #[test]
+    fn report_aggregates_and_filters_by_class() {
+        let r = fake_report();
+        assert_eq!(r.total_steps(), 16);
+        assert_eq!(r.latency(Priority::High).count, 2);
+        assert_eq!(r.latency(Priority::Background).count, 2);
+        assert!(r.latency(Priority::High).p95_ms
+                < r.latency(Priority::Background).p95_ms);
+        assert_eq!(r.aged_dispatches(), 1);
+        let rendered = r.render();
+        assert!(rendered.contains("high burst latency"), "{rendered}");
+        assert!(rendered.contains("FAILED: poisoned"), "{rendered}");
+        assert!(rendered.contains("writer: 5 jobs"), "{rendered}");
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let j = fake_report().to_json();
+        assert_eq!(j.get("policy").as_str(), Some("priority"));
+        assert_eq!(j.get("latency_high").get("count").as_usize(), Some(2));
+        assert_eq!(j.get("tenants").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("bursts").as_arr().unwrap().len(), 4);
+        assert_eq!(
+            j.get("bursts").as_arr().unwrap()[0].get("prio").as_str(),
+            Some("high")
+        );
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("model").as_str(), Some("mcunet"));
+    }
+
+    #[test]
+    fn report_save_is_atomic_json() {
+        let dir = std::env::temp_dir().join("asi_serve_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        fake_report().save(&dir, "serve").unwrap();
+        let text = std::fs::read_to_string(dir.join("serve.json")).unwrap();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("workers").as_usize(), Some(2));
+        assert!(!dir.join("serve.json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

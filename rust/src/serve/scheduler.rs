@@ -1,0 +1,494 @@
+//! Priority scheduler for re-enqueueable, burst-granular tasks.
+//!
+//! This generalizes `fleet::scheduler::run_work_stealing` along the two
+//! axes the streaming service needs:
+//!
+//! * **Tasks re-enqueue.** A fleet task runs once to completion; a
+//!   stream task runs one bounded burst, yields, and goes back into the
+//!   queue. "Every deque empty" is therefore no longer a termination
+//!   condition — the pool tracks *live* tasks (queued + running) and
+//!   idle workers park on a condvar until a re-enqueue wakes them or
+//!   the live count hits zero.
+//! * **Priorities + aging.** Tasks carry a [`Priority`] class
+//!   (latency-sensitive adaptation vs background refresh). The queue
+//!   pops the best `(effective class, FIFO seq)` pair, where a task's
+//!   effective class improves by one level for every `aging`
+//!   scheduling decisions it has waited through — so a background
+//!   tenant is promoted rather than starved, and once promoted it
+//!   competes FIFO with the high class. Every queued task is popped
+//!   within `aging * (CLASSES - 1) + (tasks queued before it) + 1`
+//!   decisions (the no-starvation bound the property tests assert).
+//!
+//! The per-worker deques of the fleet scheduler are deliberately gone:
+//! burst tasks are re-prioritized on every yield, which a single
+//! ordered run queue expresses directly (bursts run for many
+//! milliseconds to seconds, so one mutex is noise — the same tradeoff
+//! the fleet layer already made).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduling class of a stream task. Order is meaningful: lower
+/// discriminant = scheduled first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive continual adaptation (a user is waiting).
+    High,
+    /// Background refresh (throughput matters, latency does not).
+    Background,
+}
+
+/// Number of priority classes (the aging promotion ceiling).
+pub const CLASSES: usize = 2;
+
+impl Priority {
+    pub fn class(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Background => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Background => "background",
+        }
+    }
+}
+
+struct Entry<T> {
+    item: T,
+    prio: Priority,
+    /// FIFO tie-break: monotonic push counter.
+    seq: u64,
+    /// Pop-counter value when this entry was queued — its age is the
+    /// number of scheduling decisions it has sat through.
+    born: u64,
+    at: Instant,
+}
+
+/// A popped task plus its scheduling telemetry.
+pub struct Popped<T> {
+    pub item: T,
+    pub prio: Priority,
+    /// Dispatched through an aging promotion (effective class better
+    /// than the task's own).
+    pub aged: bool,
+    /// Wall-clock time spent queued.
+    pub waited: Duration,
+}
+
+/// The ordered run queue: pop = min `(effective class, seq)`. Pure and
+/// single-threaded — the pool wraps it in a mutex; tests drive it
+/// directly.
+pub struct RunQueue<T> {
+    entries: VecDeque<Entry<T>>,
+    /// Monotonic push counter (FIFO tie-break).
+    pushes: u64,
+    /// Monotonic pop counter — the aging clock. Counting *scheduling
+    /// decisions* (not pushes) means an enqueue burst cannot age the
+    /// queue by itself.
+    pops: u64,
+    /// Scheduling decisions a task waits before its class improves one
+    /// level. `u64::MAX` disables aging (pure strict priority).
+    aging: u64,
+}
+
+impl<T> RunQueue<T> {
+    /// `aging == 0` means "promotion off" (same as `u64::MAX`) — the
+    /// natural reading of `--aging 0`, not fastest-possible promotion.
+    pub fn new(aging: u64) -> RunQueue<T> {
+        RunQueue {
+            entries: VecDeque::new(),
+            pushes: 0,
+            pops: 0,
+            aging: if aging == 0 { u64::MAX } else { aging },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn push(&mut self, item: T, prio: Priority) {
+        self.pushes += 1;
+        self.entries.push_back(Entry {
+            item,
+            prio,
+            seq: self.pushes,
+            born: self.pops,
+            at: Instant::now(),
+        });
+    }
+
+    /// Effective class of an entry: one level better per `aging`
+    /// scheduling decisions waited, floored at the top class.
+    fn effective_class(&self, e: &Entry<T>) -> usize {
+        let waited = self.pops.saturating_sub(e.born);
+        let boost = (waited / self.aging) as usize;
+        e.prio.class().saturating_sub(boost)
+    }
+
+    pub fn pop(&mut self) -> Option<Popped<T>> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        // Select against the number of *completed* decisions — the
+        // clock advances after, so an entry's wait never counts the
+        // decision that dispatches it (a lone fresh task can't come
+        // out "aged", and promotion fires after exactly `aging`
+        // decisions sat through, as documented).
+        let best = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (self.effective_class(e), e.seq))
+            .map(|(i, _)| i)
+            .expect("non-empty queue");
+        let e = self.entries.remove(best).expect("indexed entry");
+        let popped = Popped {
+            aged: self.effective_class(&e) < e.prio.class(),
+            prio: e.prio,
+            waited: e.at.elapsed(),
+            item: e.item,
+        };
+        self.pops += 1;
+        Some(popped)
+    }
+}
+
+/// What a worker decides after running one burst of a task.
+pub enum Outcome<T> {
+    /// Yield: the task goes back into the queue at the given class.
+    Requeue(T, Priority),
+    /// The task's stream is exhausted (or failed); it leaves the pool.
+    Done,
+}
+
+/// Dispatch telemetry handed to the task closure alongside the payload.
+pub struct TaskCtx {
+    pub worker: usize,
+    pub prio: Priority,
+    /// Queue wait of this dispatch.
+    pub waited: Duration,
+    /// This dispatch happened through an aging promotion.
+    pub aged: bool,
+}
+
+/// Per-worker counters, surfaced in the serve report.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    /// Bursts this worker dispatched (all classes).
+    pub executed: usize,
+    /// Of those, high-class dispatches.
+    pub high: usize,
+    /// Dispatches that went through an aging promotion.
+    pub aged: usize,
+    /// Bursts whose closure panicked (task dropped from the pool).
+    pub panicked: usize,
+    /// Times this worker parked on the condvar (idle/wake telemetry).
+    pub parks: usize,
+}
+
+struct State<T> {
+    queue: RunQueue<T>,
+    /// Tasks queued + running. Zero = the pool is drained.
+    live: usize,
+}
+
+/// Run re-enqueueable tasks on `workers` threads until every task
+/// completes. `f` receives one task per call and decides via
+/// [`Outcome`] whether the task re-enqueues (yield) or leaves. Panics
+/// inside `f` drop the task (recorded in [`WorkerStats::panicked`])
+/// without sinking the pool. Workers are clamped to
+/// `1..=initial.len()` — re-enqueues never raise concurrency above the
+/// live task count, so extra threads could only idle.
+pub fn run_stream_pool<T, F>(
+    workers: usize,
+    aging: u64,
+    initial: Vec<(T, Priority)>,
+    f: F,
+) -> Vec<WorkerStats>
+where
+    T: Send,
+    F: Fn(&TaskCtx, T) -> Outcome<T> + Sync,
+{
+    if initial.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, initial.len());
+
+    let mut queue = RunQueue::new(aging);
+    let live = initial.len();
+    for (item, prio) in initial {
+        queue.push(item, prio);
+    }
+    let state = Mutex::new(State { queue, live });
+    let cv = Condvar::new();
+    let stats: Vec<Mutex<WorkerStats>> = (0..workers)
+        .map(|w| Mutex::new(WorkerStats { worker: w, ..Default::default() }))
+        .collect();
+
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let state = &state;
+            let cv = &cv;
+            let stats = &stats;
+            let f = &f;
+            s.spawn(move || {
+                let mut guard = state.lock().expect("pool state");
+                loop {
+                    if guard.live == 0 {
+                        // Drained: release everyone still parked.
+                        cv.notify_all();
+                        return;
+                    }
+                    let Some(p) = guard.queue.pop() else {
+                        // Live tasks exist but are all running on other
+                        // workers; park until a yield or the drain.
+                        stats[w].lock().expect("stats").parks += 1;
+                        guard = cv.wait(guard).expect("pool state");
+                        continue;
+                    };
+                    drop(guard);
+                    let ctx = TaskCtx {
+                        worker: w,
+                        prio: p.prio,
+                        waited: p.waited,
+                        aged: p.aged,
+                    };
+                    {
+                        let mut st = stats[w].lock().expect("stats");
+                        st.executed += 1;
+                        st.high += usize::from(p.prio == Priority::High);
+                        st.aged += usize::from(p.aged);
+                    }
+                    let out =
+                        catch_unwind(AssertUnwindSafe(|| f(&ctx, p.item)));
+                    guard = state.lock().expect("pool state");
+                    match out {
+                        Ok(Outcome::Requeue(item, prio)) => {
+                            guard.queue.push(item, prio);
+                            cv.notify_one();
+                        }
+                        Ok(Outcome::Done) => {
+                            guard.live -= 1;
+                            if guard.live == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Err(_) => {
+                            stats[w].lock().expect("stats").panicked += 1;
+                            guard.live -= 1;
+                            if guard.live == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    stats.into_iter().map(|m| m.into_inner().expect("stats")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn pop_is_priority_then_fifo_without_aging() {
+        let mut q = RunQueue::new(u64::MAX);
+        q.push("bg0", Priority::Background);
+        q.push("hi0", Priority::High);
+        q.push("bg1", Priority::Background);
+        q.push("hi1", Priority::High);
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.pop().map(|p| p.item)).collect();
+        assert_eq!(order, vec!["hi0", "hi1", "bg0", "bg1"]);
+    }
+
+    #[test]
+    fn aging_promotes_background_past_fresh_high() {
+        // aging=2: after sitting through 2 *completed* scheduling
+        // decisions the background task competes in the top class,
+        // where its older push seq wins FIFO ties against fresh highs.
+        let mut q = RunQueue::new(2);
+        q.push("bg", Priority::Background);
+        q.push("hi0", Priority::High);
+        q.push("hi1", Priority::High);
+        assert_eq!(q.pop().unwrap().item, "hi0");
+        // One decision waited: not yet promoted, hi1 still wins.
+        let p = q.pop().unwrap();
+        assert_eq!(p.item, "hi1", "promotion must not fire early");
+        assert!(!p.aged);
+        // Two decisions waited: promoted; beats a fresher high task.
+        q.push("hi2", Priority::High);
+        let p = q.pop().unwrap();
+        assert_eq!(p.item, "bg", "aged background must beat fresh high");
+        assert!(p.aged);
+        assert_eq!(q.pop().unwrap().item, "hi2");
+    }
+
+    #[test]
+    fn lone_fresh_task_is_not_aged() {
+        // The dispatching decision itself doesn't count as waiting —
+        // a task popped from an otherwise-empty queue at aging=1 must
+        // not be reported as an aging promotion.
+        let mut q = RunQueue::new(1);
+        q.push("only", Priority::Background);
+        let p = q.pop().unwrap();
+        assert_eq!(p.item, "only");
+        assert!(!p.aged, "empty-queue pop reported as aged");
+    }
+
+    #[test]
+    fn aging_zero_means_disabled_not_instant() {
+        let mut q = RunQueue::new(0);
+        q.push(usize::MAX, Priority::Background);
+        for i in 0..20 {
+            q.push(i, Priority::High);
+            let p = q.pop().unwrap();
+            assert_eq!(p.prio, Priority::High, "--aging 0 must disable \
+                       promotion, not make it instant");
+        }
+    }
+
+    #[test]
+    fn strict_priority_never_ages_at_max() {
+        let mut q = RunQueue::new(u64::MAX);
+        q.push(usize::MAX, Priority::Background);
+        for i in 0..100 {
+            q.push(i, Priority::High);
+            assert!(q.pop().unwrap().prio == Priority::High);
+        }
+        let p = q.pop().unwrap();
+        assert_eq!(p.prio, Priority::Background);
+        assert!(!p.aged, "u64::MAX aging must never promote");
+    }
+
+    #[test]
+    fn pool_runs_every_task_and_every_burst() {
+        // 6 tasks x 4 bursts each: count dispatches.
+        let bursts = AtomicUsize::new(0);
+        let stats = run_stream_pool(
+            3,
+            8,
+            (0..6).map(|i| ((i, 0u32), Priority::Background)).collect(),
+            |_, (id, burst)| {
+                bursts.fetch_add(1, Ordering::SeqCst);
+                if burst + 1 < 4 {
+                    Outcome::Requeue((id, burst + 1), Priority::Background)
+                } else {
+                    Outcome::Done
+                }
+            },
+        );
+        assert_eq!(bursts.load(Ordering::SeqCst), 24);
+        assert_eq!(stats.iter().map(|s| s.executed).sum::<usize>(), 24);
+    }
+
+    #[test]
+    fn pool_single_worker_serializes_by_priority() {
+        let order = Mutex::new(Vec::new());
+        run_stream_pool(
+            1,
+            u64::MAX,
+            vec![
+                ("bg", Priority::Background),
+                ("hi", Priority::High),
+            ],
+            |ctx, name| {
+                order.lock().unwrap().push((name, ctx.prio));
+                Outcome::Done
+            },
+        );
+        let order = order.into_inner().unwrap();
+        assert_eq!(order[0].0, "hi");
+        assert_eq!(order[1].0, "bg");
+    }
+
+    #[test]
+    fn pool_panic_drops_task_not_pool() {
+        let ran = AtomicUsize::new(0);
+        let stats = run_stream_pool(
+            2,
+            8,
+            (0..5).map(|i| (i, Priority::High)).collect(),
+            |_, i| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                assert!(i != 3, "poison task");
+                Outcome::Done
+            },
+        );
+        assert_eq!(ran.load(Ordering::SeqCst), 5);
+        assert_eq!(stats.iter().map(|s| s.panicked).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn pool_idle_workers_wake_on_requeue() {
+        // One task, 3 workers: two workers must park while the task
+        // bounces, and the pool still drains (no lost wakeup).
+        let bursts = AtomicUsize::new(0);
+        let stats = run_stream_pool(
+            3,
+            8,
+            vec![(0u32, Priority::High)],
+            |_, burst| {
+                bursts.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(1));
+                if burst + 1 < 10 {
+                    Outcome::Requeue(burst + 1, Priority::High)
+                } else {
+                    Outcome::Done
+                }
+            },
+        );
+        assert_eq!(bursts.load(Ordering::SeqCst), 10);
+        // Workers clamp to the initial task count (1), so the "extra
+        // workers park" path is exercised by the next test instead.
+        assert_eq!(stats.len(), 1);
+    }
+
+    #[test]
+    fn pool_parks_when_tasks_outnumbered_by_workers_mid_run() {
+        // Two tasks, two workers; task 0 finishes instantly, task 1
+        // keeps yielding — worker that ran task 0 parks (or exits once
+        // live==0). The drain must terminate both threads.
+        let stats = run_stream_pool(
+            2,
+            8,
+            vec![(("a", 0u32), Priority::High),
+                 (("b", 0u32), Priority::Background)],
+            |_, (name, burst)| {
+                if name == "a" || burst >= 6 {
+                    Outcome::Done
+                } else {
+                    std::thread::sleep(Duration::from_millis(1));
+                    Outcome::Requeue((name, burst + 1), Priority::Background)
+                }
+            },
+        );
+        assert_eq!(stats.len(), 2);
+        let executed: usize = stats.iter().map(|s| s.executed).sum();
+        assert_eq!(executed, 1 + 7, "a once + b's 7 bursts");
+    }
+
+    #[test]
+    fn empty_pool_returns_immediately() {
+        let stats = run_stream_pool(4, 8, Vec::<(u32, Priority)>::new(),
+                                    |_, _| Outcome::Done);
+        assert!(stats.is_empty());
+    }
+}

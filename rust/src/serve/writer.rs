@@ -1,0 +1,256 @@
+//! Dedicated writer thread behind a bounded channel — the "async /
+//! overlapped I/O" half of the streaming service.
+//!
+//! Workers never touch the disk on the training path: checkpoint
+//! snapshots and report text are queued as [`WriteJob`]s and a single
+//! writer thread absorbs them, so a slow disk stalls nothing until the
+//! channel's bound is reached (at which point `submit` blocks — the
+//! back-pressure is deliberate and counted, not silent). All file
+//! output goes through the atomic tmp+rename path, and write *errors*
+//! are collected into [`WriterStats::errors`] rather than panicking
+//! the writer: a failed checkpoint write must not take the serving
+//! loop down with it.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Checkpoint;
+use crate::util::fs::write_atomic_in;
+
+/// One unit of deferred I/O.
+pub enum WriteJob {
+    /// Persist a checkpoint snapshot as `<dir>/<stem>.{bin,json}`.
+    /// `Arc` because the producer keeps the same snapshot as its
+    /// between-bursts state — queueing a write must not deep-copy the
+    /// tensor payload on the training path.
+    Checkpoint { dir: PathBuf, stem: String, ckpt: Arc<Checkpoint> },
+    /// Persist report text as `<dir>/<name>` (atomically).
+    Report { dir: PathBuf, name: String, text: String },
+}
+
+/// Aggregate writer-thread telemetry, returned by [`Writer::finish`].
+#[derive(Debug, Clone, Default)]
+pub struct WriterStats {
+    pub jobs: u64,
+    pub checkpoints: u64,
+    pub reports: u64,
+    /// Bytes of checkpoint tensor payload + report text handled.
+    pub bytes: u64,
+    /// Wall time the writer spent actually writing.
+    pub busy_s: f64,
+    /// Submissions that found the channel full and had to block — the
+    /// back-pressure indicator (0 on a healthy disk).
+    pub blocked_sends: u64,
+    /// Write failures (job description + error); never panics the pool.
+    pub errors: Vec<String>,
+}
+
+/// Handle to the writer thread. Shared by reference across workers
+/// (`submit(&self, ..)`); consumed by [`Writer::finish`] at shutdown.
+pub struct Writer {
+    tx: Option<SyncSender<WriteJob>>,
+    handle: Option<JoinHandle<WriterStats>>,
+    blocked: AtomicU64,
+}
+
+impl Writer {
+    /// Spawn the writer with a channel bound of `capacity` jobs.
+    pub fn spawn(capacity: usize) -> Writer {
+        Writer::spawn_throttled(capacity, None)
+    }
+
+    /// Test/bench hook: sleep `throttle` before each job, simulating a
+    /// slow disk so back-pressure paths can be exercised on a fast one.
+    pub fn spawn_throttled(capacity: usize, throttle: Option<Duration>)
+        -> Writer {
+        let (tx, rx) = sync_channel::<WriteJob>(capacity.max(1));
+        let handle =
+            std::thread::spawn(move || drain(rx, throttle));
+        Writer { tx: Some(tx), handle: Some(handle), blocked: AtomicU64::new(0) }
+    }
+
+    /// Queue a job. Non-blocking while the channel has room; blocks
+    /// (and counts the stall) when the writer is `capacity` jobs
+    /// behind. Errors only if the writer thread is gone.
+    pub fn submit(&self, job: WriteJob) -> Result<()> {
+        let tx = self.tx.as_ref().expect("writer already finished");
+        match tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job)) => {
+                self.blocked.fetch_add(1, Ordering::Relaxed);
+                if tx.send(job).is_err() {
+                    bail!("writer thread terminated with jobs pending");
+                }
+                Ok(())
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                bail!("writer thread terminated with jobs pending")
+            }
+        }
+    }
+
+    /// Close the channel, drain every queued job, and join the thread.
+    pub fn finish(mut self) -> WriterStats {
+        drop(self.tx.take());
+        let mut stats = self
+            .handle
+            .take()
+            .expect("writer already finished")
+            .join()
+            .unwrap_or_else(|_| WriterStats {
+                errors: vec!["writer thread panicked".into()],
+                ..Default::default()
+            });
+        stats.blocked_sends = self.blocked.load(Ordering::Relaxed);
+        stats
+    }
+}
+
+impl Drop for Writer {
+    fn drop(&mut self) {
+        // `finish` is the normal path; on unwind still drain + join so
+        // queued checkpoints hit the disk.
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn drain(rx: Receiver<WriteJob>, throttle: Option<Duration>) -> WriterStats {
+    let mut st = WriterStats::default();
+    while let Ok(job) = rx.recv() {
+        if let Some(d) = throttle {
+            std::thread::sleep(d);
+        }
+        let t0 = Instant::now();
+        st.jobs += 1;
+        let outcome = match job {
+            WriteJob::Checkpoint { dir, stem, ckpt } => {
+                st.checkpoints += 1;
+                st.bytes += ckpt.state_bytes();
+                ckpt.save(&dir, &stem).map_err(|e| {
+                    format!("checkpoint {}/{stem}: {e:#}", dir.display())
+                })
+            }
+            WriteJob::Report { dir, name, text } => {
+                st.reports += 1;
+                st.bytes += text.len() as u64;
+                write_atomic_in(&dir, &name, text.as_bytes())
+                    .map_err(|e| format!("report {name}: {e:#}"))
+            }
+        };
+        if let Err(msg) = outcome {
+            st.errors.push(msg);
+        }
+        st.busy_s += t0.elapsed().as_secs_f64();
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("asi_writer_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn reports_land_on_disk_after_finish() {
+        let dir = scratch("reports");
+        let w = Writer::spawn(4);
+        for i in 0..3 {
+            w.submit(WriteJob::Report {
+                dir: dir.clone(),
+                name: format!("r{i}.json"),
+                text: format!("{{\"i\":{i}}}"),
+            })
+            .unwrap();
+        }
+        let st = w.finish();
+        assert_eq!(st.jobs, 3);
+        assert_eq!(st.reports, 3);
+        assert!(st.errors.is_empty(), "{:?}", st.errors);
+        for i in 0..3 {
+            let text =
+                std::fs::read_to_string(dir.join(format!("r{i}.json")))
+                    .unwrap();
+            assert_eq!(text, format!("{{\"i\":{i}}}"));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_channel_blocks_and_counts() {
+        let dir = scratch("backpressure");
+        // Capacity 1 + 5ms/job throttle: the burst of 6 submissions
+        // must hit the full channel at least once.
+        let w = Writer::spawn_throttled(1, Some(Duration::from_millis(5)));
+        for i in 0..6 {
+            w.submit(WriteJob::Report {
+                dir: dir.clone(),
+                name: format!("b{i}"),
+                text: "x".into(),
+            })
+            .unwrap();
+        }
+        let st = w.finish();
+        assert_eq!(st.jobs, 6, "every job must still be written");
+        assert!(st.blocked_sends > 0, "expected back-pressure stalls");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_errors_are_collected_not_fatal() {
+        let dir = scratch("errors");
+        std::fs::create_dir_all(dir.join("occupied")).unwrap();
+        let w = Writer::spawn(2);
+        // Renaming onto a directory fails -> recorded error.
+        w.submit(WriteJob::Report {
+            dir: dir.clone(),
+            name: "occupied".into(),
+            text: "x".into(),
+        })
+        .unwrap();
+        // The writer keeps going afterwards.
+        w.submit(WriteJob::Report {
+            dir: dir.clone(),
+            name: "fine.txt".into(),
+            text: "ok".into(),
+        })
+        .unwrap();
+        let st = w.finish();
+        assert_eq!(st.errors.len(), 1, "{:?}", st.errors);
+        assert!(st.errors[0].contains("occupied"), "{:?}", st.errors);
+        assert_eq!(std::fs::read_to_string(dir.join("fine.txt")).unwrap(),
+                   "ok");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_without_finish_still_drains() {
+        let dir = scratch("drop");
+        {
+            let w = Writer::spawn(8);
+            w.submit(WriteJob::Report {
+                dir: dir.clone(),
+                name: "late.txt".into(),
+                text: "drained".into(),
+            })
+            .unwrap();
+            // w dropped here without finish().
+        }
+        assert_eq!(std::fs::read_to_string(dir.join("late.txt")).unwrap(),
+                   "drained");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

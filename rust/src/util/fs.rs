@@ -1,0 +1,155 @@
+//! Atomic file emission shared by checkpoints and every report writer.
+//!
+//! `write_atomic` is the single torn-write defense in the system: a
+//! sibling `.tmp` file is written first and renamed into place, so a
+//! reader (or a crashed tenant) never observes a half-written file. The
+//! temp file is removed on *every* failure path — a failed rename, a
+//! failed write, or a panic between the two — so an error cannot leave
+//! `.tmp` litter next to checkpoints.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Removes the temp file on drop unless disarmed — covers the error
+/// returns below *and* unwinding callers.
+struct TmpGuard {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl Drop for TmpGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// The sibling temp path `write_atomic` stages through (`<name>.tmp`).
+pub fn tmp_sibling(path: &Path) -> Result<PathBuf> {
+    let mut name = path
+        .file_name()
+        .with_context(|| format!("no file name in {}", path.display()))?
+        .to_owned();
+    name.push(".tmp");
+    Ok(path.with_file_name(name))
+}
+
+/// Write `bytes` to `path` via a sibling temp file + rename (atomic on
+/// POSIX when both live on one filesystem, which they do here). The
+/// temp file never survives a failure.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path)?;
+    let mut guard = TmpGuard { path: tmp.clone(), armed: true };
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    guard.armed = false;
+    Ok(())
+}
+
+/// `write_atomic` with the parent directory created first — the shape
+/// every report/checkpoint emitter wants.
+pub fn write_atomic_in(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    write_atomic(&dir.join(name), bytes)
+}
+
+/// Write a `BENCH_*.json` report object atomically into the working
+/// directory — the shared emitter for the self-asserting benches, so a
+/// runner killed mid-write can't publish a torn artifact.
+pub fn write_bench_json(
+    name: &str,
+    fields: Vec<(&str, crate::util::json::Json)>,
+) -> Result<()> {
+    let body = format!("{}\n", crate::util::json::obj(fields));
+    write_atomic(Path::new(name), body.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("asi_fs_atomic").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = scratch("ok");
+        let p = dir.join("out.json");
+        write_atomic(&p, b"one").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"one");
+        write_atomic(&p, b"two").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"two");
+        assert!(!tmp_sibling(&p).unwrap().exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_rename_removes_tmp() {
+        // Renaming a file onto an existing directory fails; the sibling
+        // .tmp must not be left behind (the PR-3 leak).
+        let dir = scratch("rename_fail");
+        let target = dir.join("occupied");
+        std::fs::create_dir_all(&target).unwrap();
+        let err = write_atomic(&target, b"data").unwrap_err();
+        assert!(format!("{err:#}").contains("renaming into"), "{err:#}");
+        assert!(target.is_dir(), "target dir must survive");
+        assert!(
+            !tmp_sibling(&target).unwrap().exists(),
+            "tmp file leaked on rename failure"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_write_removes_tmp() {
+        // Writing into a missing parent fails before the rename; no
+        // temp path may survive (nothing was created, and the guard
+        // tolerates that).
+        let dir = scratch("write_fail");
+        let p = dir.join("missing").join("out.bin");
+        assert!(write_atomic(&p, b"x").is_err());
+        assert!(!tmp_sibling(&p).unwrap().exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pathless_input_errors() {
+        assert!(write_atomic(Path::new("/"), b"x").is_err());
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_atomic() {
+        use crate::util::json::{num, Json};
+        let dir = scratch("bench_json");
+        // Benches pass a bare "BENCH_*.json" (working directory); any
+        // path works — use an absolute one so the test is hermetic.
+        let path = dir.join("BENCH_test.json");
+        write_bench_json(
+            path.to_str().unwrap(),
+            vec![("speedup", num(2.5)), ("n", num(8.0))],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("speedup").as_f64(), Some(2.5));
+        assert!(!tmp_sibling(&path).unwrap().exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_atomic_in_creates_parent() {
+        let dir = scratch("nested").join("a").join("b");
+        write_atomic_in(&dir, "r.json", b"{}").unwrap();
+        assert_eq!(std::fs::read(dir.join("r.json")).unwrap(), b"{}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

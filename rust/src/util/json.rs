@@ -286,7 +286,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity; null keeps the emitted
+                    // reports parseable (a diverged loss is still
+                    // visible as a hole, not a syntax error).
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -369,6 +374,14 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("1e3").unwrap().as_f64(), Some(1000.0));
         assert_eq!(Json::parse("-0.5").unwrap().as_f64(), Some(-0.5));
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let text = obj(vec![("loss", num(f64::NAN))]).to_string();
+        assert_eq!(Json::parse(&text).unwrap().get("loss"), &Json::Null);
     }
 
     #[test]

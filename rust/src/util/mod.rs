@@ -1,7 +1,8 @@
-//! Offline substrates: JSON, CLI parsing, deterministic RNG, timing,
-//! property testing.
+//! Offline substrates: JSON, CLI parsing, atomic file writes,
+//! deterministic RNG, timing, property testing.
 
 pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod prop;
 pub mod rng;

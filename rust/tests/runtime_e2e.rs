@@ -14,6 +14,7 @@ use asi::coordinator::{Checkpoint, FinetuneReport, Session, Trainer,
 use asi::data::TokenDataset;
 use asi::fleet::{run_fleet, FleetSpec};
 use asi::runtime::{Engine, HostTensor};
+use asi::serve::{run_serve, ServeSpec};
 
 fn artifacts() -> Option<PathBuf> {
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -321,6 +322,121 @@ fn fleet_matches_serial_at_same_seeds() {
     // One model, one executable family: the shared engine never
     // recompiled however many tenants and worker counts ran.
     assert_eq!(engine.stats().param_reads, 1);
+}
+
+// ---- streaming serve (burst preemption + async writer) -----------------
+
+fn assert_tensors_bit_identical(name: &str, a: &[HostTensor],
+                                b: &[HostTensor]) {
+    assert_eq!(a.len(), b.len(), "{name} arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape(), y.shape(), "{name}[{i}] shape");
+        let (xs, ys) = (x.as_f32().unwrap(), y.as_f32().unwrap());
+        for (j, (va, vb)) in xs.iter().zip(ys.iter()).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{name}[{i}][{j}] diverged: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn preempted_bursts_bit_identical_to_uninterrupted() {
+    // The serve layer's core guarantee: a tenant preempted every burst
+    // (trainer torn down, state through the on-disk Checkpoint
+    // round-trip, trainer rebuilt) finishes with *bit-identical*
+    // parameters to the same tenant run serially to completion.
+    let Some(dir) = artifacts() else { return };
+    const BURSTS: u64 = 3;
+    const STEPS: u64 = 4;
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 77);
+    let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(5);
+
+    let mut solo = Trainer::new(&spec).unwrap();
+    solo.run_burst(BURSTS * STEPS, |i| {
+        session.downstream_ds.batch("train", i, 32)
+    })
+    .unwrap();
+
+    let ckdir = std::env::temp_dir().join("asi_serve_preempt_e2e");
+    let _ = std::fs::remove_dir_all(&ckdir);
+    let mut carried: Option<Checkpoint> = None;
+    for _ in 0..BURSTS {
+        let mut tr = match &carried {
+            Some(c) => spec.resume(c).unwrap(),
+            None => Trainer::new(&spec).unwrap(),
+        };
+        tr.run_burst(STEPS, |i| {
+            session.downstream_ds.batch("train", i, 32)
+        })
+        .unwrap();
+        // Full disk round-trip between bursts — harsher than the
+        // in-memory handoff the serve loop uses.
+        Checkpoint::of(&tr).save(&ckdir, "burst").unwrap();
+        carried = Some(Checkpoint::load(&ckdir, "burst").unwrap());
+    }
+    let preempted = carried.unwrap();
+    assert_eq!(preempted.step_idx, solo.step_idx);
+    assert_tensors_bit_identical("trained", &preempted.trained,
+                                 &solo.trained);
+    assert_tensors_bit_identical("us", &preempted.us, &solo.us);
+    assert_tensors_bit_identical("frozen", &preempted.frozen, &solo.frozen);
+    let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+#[test]
+fn serve_matches_serial_runs_and_streams_checkpoints() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let ck = std::env::temp_dir().join("asi_serve_ckpt_e2e");
+    let _ = std::fs::remove_dir_all(&ck);
+    let spec = ServeSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(3)
+        .workers(2)
+        .bursts(2)
+        .burst_steps(3)
+        .high_every(2)
+        .base_seed(5)
+        .checkpoint_dir(ck.clone());
+    let rep = run_serve(&engine, &spec).unwrap();
+    assert!(rep.failed.is_empty(), "{:?}", rep.failed);
+    assert_eq!(rep.tenants.len(), 3);
+    assert_eq!(rep.bursts.len(), 6, "3 tenants x 2 bursts dispatched");
+    assert!(rep.writer.errors.is_empty(), "{:?}", rep.writer.errors);
+    // 3 tenants x (2 `latest` + 1 `final`) checkpoint jobs.
+    assert_eq!(rep.writer.checkpoints, 9);
+
+    for t in &rep.tenants {
+        assert_eq!(t.steps, 6);
+        // Serial reference at the same derived seeds: the streaming
+        // schedule must not change training results at all.
+        let plan = spec.plan(t.tenant);
+        let session = Session::new(&engine, plan.data_seed);
+        let serial = session
+            .finetune("mcunet", Method::asi(2, 4))
+            .steps(6)
+            .lr(spec.lr)
+            .eval_batches(spec.eval_batches)
+            .seed(plan.seed)
+            .run()
+            .unwrap();
+        assert_eq!(
+            t.final_loss.to_bits(),
+            serial.final_loss.to_bits(),
+            "tenant {} loss diverged from the serial run",
+            t.tenant
+        );
+        assert_eq!(t.accuracy.to_bits(), serial.accuracy.to_bits());
+        // The async writer must have landed both checkpoint stems
+        // before run_serve returned (finish() drains the channel).
+        let td = ck.join(format!("tenant-{:04}", t.tenant));
+        assert_eq!(Checkpoint::load(&td, "final").unwrap().step_idx, 6);
+        assert_eq!(Checkpoint::load(&td, "latest").unwrap().step_idx, 6);
+    }
+    let _ = std::fs::remove_dir_all(&ck);
 }
 
 #[test]

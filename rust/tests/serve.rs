@@ -1,0 +1,309 @@
+//! Serve-layer tests that need no AOT artifacts: property tests for the
+//! priority queue (ordering + aging no-starvation), stream-pool
+//! semantics under contention, writer-thread behavior, report shape,
+//! and the strict CLI surface. (Artifact-gated end-to-end serving
+//! tests — preemption bit-identity, real burst latencies — live in
+//! `runtime_e2e.rs`.)
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use asi::serve::{run_stream_pool, Outcome, Priority, RunQueue, WriteJob,
+                 Writer};
+use asi::util::cli::Args;
+use asi::util::prop::cases;
+
+// ---- property: pop order is (class, FIFO) when aging is off ------------
+
+#[test]
+fn prop_pop_is_min_class_then_fifo_without_aging() {
+    cases(0xC1A55, 200, |g| {
+        let mut q: RunQueue<u64> = RunQueue::new(u64::MAX);
+        // Reference model: (class, push_seq) pairs still queued.
+        let mut model: Vec<(usize, u64)> = Vec::new();
+        let mut pushes = 0u64;
+        for _ in 0..g.usize_in(1, 60) {
+            if model.is_empty() || g.usize_in(0, 2) > 0 {
+                let prio = *g.choose(&[Priority::High,
+                                       Priority::Background]);
+                pushes += 1;
+                q.push(pushes, prio);
+                model.push((prio.class(), pushes));
+            } else {
+                let got = q.pop().expect("model says non-empty").item;
+                let want_idx = model
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &(c, s))| (c, s))
+                    .map(|(i, _)| i)
+                    .expect("non-empty");
+                let (wc, ws) = model.remove(want_idx);
+                if got != ws {
+                    return Err(format!(
+                        "popped seq {got}, expected seq {ws} (class {wc})"
+                    ));
+                }
+            }
+        }
+        // Drain: the remaining pops must follow the same order.
+        while let Some(p) = q.pop() {
+            let want_idx = model
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &(c, s))| (c, s))
+                .map(|(i, _)| i)
+                .expect("model non-empty");
+            let (_, ws) = model.remove(want_idx);
+            if p.item != ws {
+                return Err(format!("drain popped {} != {ws}", p.item));
+            }
+            if p.aged {
+                return Err("aging fired at u64::MAX".into());
+            }
+        }
+        if !model.is_empty() {
+            return Err("queue drained before the model".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- property: aging bounds every task's wait (no starvation) ----------
+
+#[test]
+fn prop_aging_guarantees_every_tenant_runs() {
+    cases(0xA6E, 150, |g| {
+        let aging = g.usize_in(1, 8) as u64;
+        let mut q: RunQueue<u64> = RunQueue::new(aging);
+        // For every queued entry: (push id, pops when enqueued, queue
+        // length at enqueue). The no-starvation bound says entry e is
+        // popped within `aging * (CLASSES - 1) + qlen + 1` decisions
+        // of its enqueue, whatever adversarial pushes follow.
+        let mut queued: Vec<(u64, u64, usize)> = Vec::new();
+        let mut pushes = 0u64;
+        let mut pops = 0u64;
+        let check_pop = |q: &mut RunQueue<u64>,
+                             queued: &mut Vec<(u64, u64, usize)>,
+                             pops: &mut u64|
+         -> Result<(), String> {
+            let Some(p) = q.pop() else {
+                return if queued.is_empty() {
+                    Ok(())
+                } else {
+                    Err("queue empty but model is not".into())
+                };
+            };
+            *pops += 1;
+            let i = queued
+                .iter()
+                .position(|&(id, _, _)| id == p.item)
+                .ok_or("popped unknown entry")?;
+            let (_, born, qlen) = queued.remove(i);
+            let bound = aging * (asi::serve::scheduler::CLASSES as u64 - 1)
+                + qlen as u64
+                + 1;
+            if *pops - born > bound {
+                return Err(format!(
+                    "entry waited {} decisions, bound {bound} \
+                     (aging {aging}, qlen {qlen})",
+                    *pops - born
+                ));
+            }
+            Ok(())
+        };
+        // Adversarial phase: a hostile stream of fresh High pushes
+        // interleaved with pops, plus occasional Background entries.
+        for _ in 0..g.usize_in(10, 80) {
+            match g.usize_in(0, 3) {
+                // Push fresh high-priority work (the starvation threat).
+                0 | 1 => {
+                    pushes += 1;
+                    q.push(pushes, Priority::High);
+                    queued.push((pushes, pops, q.len() - 1));
+                }
+                2 => {
+                    pushes += 1;
+                    q.push(pushes, Priority::Background);
+                    queued.push((pushes, pops, q.len() - 1));
+                }
+                _ => check_pop(&mut q, &mut queued, &mut pops)?,
+            }
+        }
+        while !queued.is_empty() {
+            check_pop(&mut q, &mut queued, &mut pops)?;
+        }
+        Ok(())
+    });
+}
+
+// ---- property: pool runs every burst exactly once under preemption ----
+
+#[test]
+fn prop_pool_completes_every_burst_under_random_interleavings() {
+    cases(0x9001, 25, |g| {
+        let tenants = g.usize_in(1, 8);
+        let workers = g.usize_in(1, 4);
+        let aging = g.usize_in(1, 6) as u64;
+        let bursts: Vec<u64> =
+            (0..tenants).map(|_| g.usize_in(1, 5) as u64).collect();
+        let ran: Vec<AtomicUsize> =
+            (0..tenants).map(|_| AtomicUsize::new(0)).collect();
+        let initial: Vec<((usize, u64), Priority)> = (0..tenants)
+            .map(|id| {
+                let p = if id % 2 == 0 { Priority::High }
+                        else { Priority::Background };
+                ((id, 0u64), p)
+            })
+            .collect();
+        let total = &bursts;
+        let stats = run_stream_pool(workers, aging, initial,
+            |ctx, (id, b)| {
+                ran[id].fetch_add(1, Ordering::SeqCst);
+                if b + 1 < total[id] {
+                    Outcome::Requeue((id, b + 1), ctx.prio)
+                } else {
+                    Outcome::Done
+                }
+            });
+        for (id, r) in ran.iter().enumerate() {
+            let got = r.load(Ordering::SeqCst) as u64;
+            if got != bursts[id] {
+                return Err(format!(
+                    "tenant {id} ran {got} bursts, expected {}",
+                    bursts[id]
+                ));
+            }
+        }
+        let executed: usize = stats.iter().map(|s| s.executed).sum();
+        if executed as u64 != bursts.iter().sum::<u64>() {
+            return Err("stats disagree with dispatch count".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- pool semantics under contention -----------------------------------
+
+#[test]
+fn high_class_preempts_backlogged_background() {
+    // One worker, a backlog of slow background tasks, then (via
+    // re-enqueue) fresh high tasks: every high dispatch must run
+    // before the remaining background ones.
+    let order = Mutex::new(Vec::new());
+    let initial: Vec<((&str, u64), Priority)> = vec![
+        (("seed", 0), Priority::High),
+        (("bg-a", 0), Priority::Background),
+        (("bg-b", 0), Priority::Background),
+        (("bg-c", 0), Priority::Background),
+    ];
+    run_stream_pool(1, u64::MAX, initial, |_, (name, b)| {
+        order.lock().unwrap().push(name);
+        if name == "seed" && b < 2 {
+            // The seed task keeps yielding at High: it must re-enter
+            // ahead of every queued Background task.
+            Outcome::Requeue((name, b + 1), Priority::High)
+        } else {
+            Outcome::Done
+        }
+    });
+    let order = order.into_inner().unwrap();
+    assert_eq!(
+        &order[..3],
+        &["seed", "seed", "seed"],
+        "high re-enqueues must preempt the background backlog: {order:?}"
+    );
+}
+
+#[test]
+fn preempted_task_carries_state_across_dispatches() {
+    // The state-handoff contract the serve layer relies on: whatever a
+    // task carries in its payload survives requeue verbatim.
+    let seen = Mutex::new(Vec::new());
+    run_stream_pool(
+        2,
+        4,
+        vec![((0u64, VecDeque::from(vec![1, 2, 3])), Priority::High)],
+        |_, (sum, mut rest): (u64, VecDeque<u64>)| {
+            match rest.pop_front() {
+                Some(x) => Outcome::Requeue((sum + x, rest),
+                                            Priority::High),
+                None => {
+                    seen.lock().unwrap().push(sum);
+                    Outcome::Done
+                }
+            }
+        },
+    );
+    assert_eq!(*seen.lock().unwrap(), vec![6], "payload state was lost");
+}
+
+// ---- writer integration with the pool ----------------------------------
+
+#[test]
+fn pool_workers_share_one_writer_without_loss() {
+    let dir = std::env::temp_dir().join("asi_serve_pool_writer");
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = Writer::spawn_throttled(2, Some(Duration::from_millis(1)));
+    let initial: Vec<((usize, u64), Priority)> =
+        (0..6).map(|i| ((i, 0u64), Priority::Background)).collect();
+    run_stream_pool(3, 8, initial, |_, (id, b)| {
+        w.submit(WriteJob::Report {
+            dir: dir.clone(),
+            name: format!("t{id}-b{b}.txt"),
+            text: format!("{id}:{b}"),
+        })
+        .expect("submit");
+        if b + 1 < 3 {
+            Outcome::Requeue((id, b + 1), Priority::Background)
+        } else {
+            Outcome::Done
+        }
+    });
+    let st = w.finish();
+    assert_eq!(st.jobs, 18, "6 tenants x 3 bursts");
+    assert!(st.errors.is_empty(), "{:?}", st.errors);
+    for id in 0..6 {
+        for b in 0..3 {
+            let text = std::fs::read_to_string(
+                dir.join(format!("t{id}-b{b}.txt")),
+            )
+            .expect("every burst's report written");
+            assert_eq!(text, format!("{id}:{b}"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- strict CLI surface -------------------------------------------------
+
+#[test]
+fn cli_accepts_serve_flag_set() {
+    let args = Args::parse_from(
+        ["serve", "--tenants", "8", "--bursts", "4", "--burst-steps",
+         "10", "--high-every", "4", "--aging", "8", "--fifo", "--quick"]
+            .map(String::from),
+    );
+    args.expect_known(
+        "serve",
+        &["tenants", "workers", "bursts", "burst-steps", "high-every",
+          "aging", "fifo", "model", "method", "depth", "rank", "lr",
+          "seed", "quick", "ckpt", "out", "artifacts"],
+    )
+    .unwrap();
+    assert_eq!(args.get("bursts", "1"), "4");
+    assert!(args.has("fifo"));
+}
+
+#[test]
+fn cli_serve_typo_gets_hint() {
+    let args =
+        Args::parse_from(["serve", "--burst-step", "10"].map(String::from));
+    let err = format!(
+        "{:#}",
+        args.expect_known("serve", &["bursts", "burst-steps", "aging"])
+            .unwrap_err()
+    );
+    assert!(err.contains("did you mean '--burst-steps'"), "{err}");
+}
