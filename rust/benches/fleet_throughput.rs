@@ -111,6 +111,21 @@ fn main() {
         TENANTS, STEPS
     );
 
+    // Shared-frozen contract: each run_fleet pins + uploads the frozen
+    // set exactly once, however many tenants run — the engine counter
+    // (cumulative across the two runs) must show 2 builds and not
+    // 2 x TENANTS, and every tenant must have hit the shared set.
+    assert_eq!(
+        fleet.engine.frozen_builds, 2,
+        "expected one frozen upload per run, got {} across 2 runs",
+        fleet.engine.frozen_builds
+    );
+    assert_eq!(
+        fleet.engine.frozen_hits,
+        2 * TENANTS,
+        "every tenant of both runs must borrow the shared set"
+    );
+
     write_json(vec![
         ("tenants", Json::Num(TENANTS as f64)),
         ("steps_per_tenant", Json::Num(STEPS as f64)),
@@ -121,6 +136,12 @@ fn main() {
         ("speedup", Json::Num(speedup)),
         ("tenants_per_s", Json::Num(fleet.tenants_per_s())),
         ("peak_state_bytes", Json::Num(fleet.peak_state_bytes as f64)),
+        (
+            "shared_frozen_bytes",
+            Json::Num(fleet.shared_frozen_bytes as f64),
+        ),
+        ("frozen_builds", Json::Num(fleet.engine.frozen_builds as f64)),
+        ("frozen_hits", Json::Num(fleet.engine.frozen_hits as f64)),
         ("steals", Json::Num(fleet.steals() as f64)),
         ("compiles", Json::Num(fleet.engine.compiles as f64)),
         ("param_reads", Json::Num(fleet.engine.param_reads as f64)),

@@ -180,13 +180,35 @@ fn run_training(engine: &Engine) {
         assert_eq!(a.tenant, b.tenant);
         assert_eq!(a.steps, b.steps);
         assert_eq!(
-            a.final_loss.to_bits(),
-            b.final_loss.to_bits(),
+            a.final_loss.map(f32::to_bits),
+            b.final_loss.map(f32::to_bits),
             "tenant {} loss diverged across scheduling policies",
             a.tenant
         );
+        assert!(a.final_loss.is_some(), "stepped tenants report a loss");
         assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
     }
+
+    // The refcounted frozen cache means a preempted tenant's resume
+    // re-uploads ZERO frozen bytes — the per-burst churn the priority
+    // arm used to pay on every one of its resumes.
+    let resume_high = prio.resume_overhead(Priority::High);
+    let resume_bg = prio.resume_overhead(Priority::Background);
+    assert!(resume_high.resumes + resume_bg.resumes > 0,
+            "priority arm must have resumed preempted tenants");
+    assert_eq!(
+        resume_high.reupload_bytes + resume_bg.reupload_bytes,
+        0,
+        "resumes must hit the shared frozen set, not re-upload it"
+    );
+    println!(
+        "resume overhead: high {} resumes / mean rebuild {:.2} ms, \
+         background {} resumes / mean rebuild {:.2} ms, 0 B re-uploaded",
+        resume_high.resumes,
+        resume_high.mean_rebuild_ms,
+        resume_bg.resumes,
+        resume_bg.mean_rebuild_ms
+    );
 
     let extra = vec![
         ("steps_per_s_priority", Json::Num(prio.steps_per_s())),
@@ -199,6 +221,25 @@ fn run_training(engine: &Engine) {
         (
             "peak_state_bytes",
             Json::Num(prio.peak_state_bytes as f64),
+        ),
+        (
+            "shared_frozen_bytes",
+            Json::Num(prio.shared_frozen_bytes as f64),
+        ),
+        (
+            "resume_mean_rebuild_ms_high",
+            Json::Num(resume_high.mean_rebuild_ms),
+        ),
+        (
+            "resume_mean_rebuild_ms_background",
+            Json::Num(resume_bg.mean_rebuild_ms),
+        ),
+        (
+            "resume_reupload_bytes",
+            Json::Num(
+                (resume_high.reupload_bytes + resume_bg.reupload_bytes)
+                    as f64,
+            ),
         ),
     ];
     report_and_assert(

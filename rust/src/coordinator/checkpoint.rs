@@ -4,6 +4,15 @@
 //!
 //! Layout: `<stem>.bin` (concatenated little-endian f32 tensors) +
 //! `<stem>.json` (shape/role sidecar + step counter + executable name).
+//!
+//! Frozen weights are stored only when they *diverged* from the model
+//! defaults (a copy-on-write trainer). The common case — a tenant that
+//! borrows the engine's shared [`crate::runtime::FrozenSet`] — snapshots
+//! as `frozen: None`: the sidecar records `"frozen_default": true`, the
+//! blob carries trained + us only, and a parked serve tenant pins no
+//! private frozen copy in host memory. Pre-sharing checkpoints (which
+//! always serialized frozen) still load: an explicit frozen section is
+//! read back as a divergent copy and bit-compared on restore.
 
 use std::path::Path;
 
@@ -20,7 +29,12 @@ use super::trainer::Trainer;
 pub struct Checkpoint {
     pub exec_name: String,
     pub step_idx: i32,
-    pub frozen: Vec<HostTensor>,
+    /// Loss of the most recent step (`None` before any step) — restored
+    /// so zero-step bursts report the last real loss, not NaN.
+    pub last_loss: Option<f32>,
+    /// `None` = the model's default frozen weights (the shared set; not
+    /// serialized). `Some` = a copy-on-write trainer's private copy.
+    pub frozen: Option<Vec<HostTensor>>,
     pub trained: Vec<HostTensor>,
     pub us: Vec<HostTensor>,
 }
@@ -30,7 +44,14 @@ impl Checkpoint {
         Checkpoint {
             exec_name: tr.exec_name.clone(),
             step_idx: tr.step_idx,
-            frozen: tr.frozen.clone(),
+            last_loss: tr.last_loss,
+            frozen: if tr.frozen_is_shared() {
+                None
+            } else {
+                Some(
+                    tr.frozen_host().into_iter().cloned().collect(),
+                )
+            },
             trained: tr.trained.clone(),
             us: tr.us.clone(),
         }
@@ -58,24 +79,33 @@ impl Checkpoint {
             }
             Ok(())
         };
-        check("frozen", &self.frozen, &tr.frozen)?;
         check("trained", &self.trained, &tr.trained)?;
         check("us", &self.us, &tr.us)?;
-        tr.frozen = self.frozen.clone();
+        tr.restore_frozen(self.frozen.as_deref())?;
         tr.trained = self.trained.clone();
         tr.us = self.us.clone();
         tr.step_idx = self.step_idx;
+        tr.last_loss = self.last_loss;
         Ok(())
     }
 
-    /// Serialized blob size (all tensors, 4 bytes/element) — what the
-    /// async writer charges a queued checkpoint for.
+    /// Serialized blob size — what the async writer charges a queued
+    /// checkpoint for, and what a parked serve tenant keeps resident.
+    /// Default (shared) frozen weights cost 0 here: they live once in
+    /// the engine, not per checkpoint.
     pub fn state_bytes(&self) -> u64 {
-        [&self.frozen, &self.trained, &self.us]
+        let frozen: u64 = self
+            .frozen
             .iter()
             .flat_map(|g| g.iter())
-            .map(|t| 4 * t.len() as u64)
-            .sum()
+            .map(HostTensor::byte_len)
+            .sum();
+        frozen
+            + [&self.trained, &self.us]
+                .iter()
+                .flat_map(|g| g.iter())
+                .map(|t| t.byte_len())
+                .sum::<u64>()
     }
 
     pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
@@ -83,8 +113,11 @@ impl Checkpoint {
             .with_context(|| format!("creating {}", dir.display()))?;
         let mut blob: Vec<u8> = Vec::new();
         let mut sections = Vec::new();
+        static EMPTY: Vec<HostTensor> = Vec::new();
         for (role, tensors) in [
-            ("frozen", &self.frozen),
+            // A default (shared) frozen run serializes as an empty
+            // section + the `frozen_default` marker below.
+            ("frozen", self.frozen.as_ref().unwrap_or(&EMPTY)),
             ("trained", &self.trained),
             ("us", &self.us),
         ] {
@@ -101,9 +134,23 @@ impl Checkpoint {
                 }
             }
         }
-        let meta = obj(vec![
+        let mut meta_fields = vec![
             ("exec", s(&self.exec_name)),
             ("step", num(self.step_idx as f64)),
+        ];
+        // Bit pattern, not a decimal: a NaN loss (divergent run) is
+        // state too — `num(NaN)` would serialize as null and the
+        // round-trip would silently forget that a step ever ran. The
+        // key is *omitted* (never null) when no step has run, matching
+        // the no-null-scalar contract the artifact lint enforces.
+        if let Some(l) = self.last_loss {
+            let bits = format!("{:08x}", l.to_bits());
+            meta_fields.push(("last_loss_bits", s(&bits)));
+        }
+        meta_fields.extend([
+            // True when the frozen run is the model default and lives in
+            // the engine's shared set rather than this file.
+            ("frozen_default", Json::Bool(self.frozen.is_none())),
             // Pairs the sidecar with its blob: a crash between the two
             // renames below leaves a detectable mismatch instead of a
             // silently-wrong (new blob, stale meta) checkpoint.
@@ -112,6 +159,7 @@ impl Checkpoint {
             ("trained", sections[1].1.clone()),
             ("us", sections[2].1.clone()),
         ]);
+        let meta = obj(meta_fields);
         // Write-then-rename so a reader (or a crashed fleet tenant)
         // never observes a half-written file; blob first, meta last.
         write_atomic(&dir.join(format!("{stem}.bin")), &blob)?;
@@ -155,16 +203,36 @@ impl Checkpoint {
             }
             Ok(out)
         };
-        let frozen = read_group("frozen")?;
+        let frozen_tensors = read_group("frozen")?;
         let trained = read_group("trained")?;
         let us = read_group("us")?;
         if off != blob.len() {
             bail!("checkpoint blob has {} trailing bytes", blob.len() - off);
         }
+        // New checkpoints mark default-frozen explicitly; pre-sharing
+        // checkpoints always serialized frozen, so an absent marker
+        // with a non-empty section means a real (possibly divergent)
+        // copy that restore will bit-compare against the shared set.
+        let frozen_default = meta.get("frozen_default").as_bool()
+            .unwrap_or(frozen_tensors.is_empty());
+        // A present-but-malformed key is corruption and must fail
+        // loudly — silently decaying to None would claim "no step ever
+        // ran", the exact lie the bit-hex format exists to prevent.
+        let last_loss = match meta.get("last_loss_bits").as_str() {
+            Some(h) => Some(f32::from_bits(
+                u32::from_str_radix(h, 16).map_err(|_| {
+                    anyhow::anyhow!(
+                        "checkpoint {stem}: malformed last_loss_bits '{h}'"
+                    )
+                })?,
+            )),
+            None => None,
+        };
         Ok(Checkpoint {
             exec_name: meta.get("exec").as_str().unwrap_or("").to_string(),
             step_idx: meta.get("step").as_i64().unwrap_or(0) as i32,
-            frozen,
+            last_loss,
+            frozen: if frozen_default { None } else { Some(frozen_tensors) },
             trained,
             us,
         })
@@ -189,14 +257,19 @@ mod tests {
         Checkpoint {
             exec_name: "m_asi_d2_r4".into(),
             step_idx: 17,
-            frozen: vec![HostTensor::f32(vec![2, 3], (0..6)
-                .map(|i| i as f32).collect())],
+            last_loss: Some(1.5),
+            frozen: Some(vec![HostTensor::f32(vec![2, 3], (0..6)
+                .map(|i| i as f32).collect())]),
             trained: vec![
                 HostTensor::f32(vec![4], vec![1.5, -2.0, 0.0, 3.25]),
                 HostTensor::f32(vec![1, 2], vec![9.0, -9.0]),
             ],
             us: vec![HostTensor::f32(vec![3, 1], vec![0.1, 0.2, 0.3])],
         }
+    }
+
+    fn sample_default_frozen() -> Checkpoint {
+        Checkpoint { frozen: None, ..sample() }
     }
 
     #[test]
@@ -207,10 +280,88 @@ mod tests {
         let back = Checkpoint::load(&dir, "t").unwrap();
         assert_eq!(back.exec_name, c.exec_name);
         assert_eq!(back.step_idx, 17);
+        assert_eq!(back.last_loss, Some(1.5));
         assert_eq!(back.trained.len(), 2);
         assert_eq!(back.trained[0].as_f32().unwrap(),
                    c.trained[0].as_f32().unwrap());
         assert_eq!(back.us[0].shape(), &[3, 1]);
+        // Divergent frozen copies survive the round trip.
+        let (f, bf) = (c.frozen.as_ref().unwrap(),
+                       back.frozen.as_ref().unwrap());
+        assert_eq!(bf[0].as_f32().unwrap(), f[0].as_f32().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn default_frozen_roundtrips_without_serializing_weights() {
+        let dir = std::env::temp_dir().join("asi_ckpt_default_frozen");
+        let owned = sample();
+        let shared = sample_default_frozen();
+        owned.save(&dir, "owned").unwrap();
+        shared.save(&dir, "shared").unwrap();
+        // The shared-frozen blob must be strictly smaller: frozen
+        // weights live in the engine, not the file.
+        let owned_len =
+            std::fs::metadata(dir.join("owned.bin")).unwrap().len();
+        let shared_len =
+            std::fs::metadata(dir.join("shared.bin")).unwrap().len();
+        assert!(shared_len < owned_len,
+                "default frozen must not be serialized \
+                 ({shared_len} vs {owned_len})");
+        let back = Checkpoint::load(&dir, "shared").unwrap();
+        assert!(back.frozen.is_none(), "frozen_default marker lost");
+        assert_eq!(back.last_loss, Some(1.5));
+        // And the parked-state charge excludes the shared weights.
+        assert!(shared.state_bytes() < owned.state_bytes());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn none_last_loss_survives() {
+        let dir = std::env::temp_dir().join("asi_ckpt_no_loss");
+        let c = Checkpoint { last_loss: None, ..sample_default_frozen() };
+        c.save(&dir, "t").unwrap();
+        assert_eq!(Checkpoint::load(&dir, "t").unwrap().last_loss, None);
+        // Omitted, not null — sidecars obey the no-null-scalar contract
+        // the artifact lint enforces.
+        let sidecar =
+            std::fs::read_to_string(dir.join("t.json")).unwrap();
+        assert!(!sidecar.contains("null"), "{sidecar}");
+        assert!(!sidecar.contains("last_loss_bits"), "{sidecar}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_last_loss_bits_rejected() {
+        // Corruption in a present key must fail loudly, not decay to
+        // "no step ever ran".
+        let dir = std::env::temp_dir().join("asi_ckpt_bad_bits");
+        let c = sample_default_frozen();
+        c.save(&dir, "t").unwrap();
+        let p = dir.join("t.json");
+        let meta = std::fs::read_to_string(&p)
+            .unwrap()
+            .replace("3fc00000", "3fc00zzz"); // 1.5f32 -> non-hex
+        std::fs::write(&p, meta).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&dir, "t").unwrap_err());
+        assert!(err.contains("malformed last_loss_bits"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn nan_last_loss_roundtrips_bit_exact() {
+        // A diverged run's NaN loss is state: Some(NaN) must survive
+        // (decimal serialization would turn it into null -> None and
+        // forget that a step ever ran).
+        let dir = std::env::temp_dir().join("asi_ckpt_nan_loss");
+        let nan = f32::from_bits(0x7FC0_1234); // payload-carrying NaN
+        let c = Checkpoint {
+            last_loss: Some(nan),
+            ..sample_default_frozen()
+        };
+        c.save(&dir, "t").unwrap();
+        let back = Checkpoint::load(&dir, "t").unwrap().last_loss;
+        assert_eq!(back.map(f32::to_bits), Some(nan.to_bits()));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -272,5 +423,7 @@ mod tests {
     fn state_bytes_counts_all_sections() {
         // sample(): frozen 6 + trained (4 + 2) + us 3 = 15 f32s.
         assert_eq!(sample().state_bytes(), 15 * 4);
+        // Default frozen drops the 6 shared f32s from the charge.
+        assert_eq!(sample_default_frozen().state_bytes(), 9 * 4);
     }
 }

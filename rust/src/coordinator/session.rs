@@ -139,12 +139,11 @@ impl<'a> FinetuneSpec<'a> {
         let batch = self.session.batch_size(&self.model)?;
         let mut loss = Series::new("loss");
         let t0 = std::time::Instant::now();
-        let mut last = f32::NAN;
         for i in 0..self.steps {
             let b = self.session.downstream_ds.batch("train", i, batch);
-            last = tr.step_image(&b)?;
+            let l = tr.step_image(&b)?;
             if i % 5 == 0 || i + 1 == self.steps {
-                loss.push(i, last as f64);
+                loss.push(i, l as f64);
             }
         }
         let wall_s = t0.elapsed().as_secs_f64();
@@ -155,7 +154,9 @@ impl<'a> FinetuneSpec<'a> {
             exec: tr.exec_name.clone(),
             steps: self.steps,
             loss,
-            final_loss: last,
+            // The trainer's carried loss, so a zero-step run over a
+            // restored checkpoint reports the last real loss, not NaN.
+            final_loss: tr.last_loss.unwrap_or(f32::NAN),
             accuracy,
             wall_s,
             state_bytes: tr.state_bytes(),

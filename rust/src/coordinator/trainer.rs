@@ -5,11 +5,21 @@
 //! signature, and threads the returned state into the next step. The
 //! compute itself is one PJRT executable call per step — Python never
 //! runs here.
+//!
+//! Frozen weights are *borrowed*, not owned: a trainer holds the engine's
+//! refcounted [`FrozenSet`] (views into the memoized init blob host-side
+//! — zero extra copies — plus one device upload per model+method, shared
+//! by every concurrent tenant) and only falls back to a private copy
+//! when its frozen weights actually diverge from the model defaults
+//! (pretrained transplant, restored divergent checkpoint) — the
+//! copy-on-write escape hatch.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::{ImageBatch, ImageDataset};
-use crate::runtime::{Engine, ExecArg, HostTensor};
+use crate::runtime::{Engine, ExecArg, FrozenSet, HostTensor};
 use crate::util::rng::Rng;
 
 use super::session::FinetuneSpec;
@@ -23,26 +33,46 @@ pub enum WarmStart {
     Cold,
 }
 
+/// A trainer's frozen weights: shared by default, private only after
+/// copy-on-write.
+enum FrozenParams {
+    /// The engine's shared set — device buffers uploaded once per
+    /// model+method, refcounted across tenants.
+    Shared(Arc<FrozenSet>),
+    /// Copy-on-write escape hatch: this trainer's frozen weights diverged
+    /// from the model defaults. `dev` is uploaded lazily on the next
+    /// step (empty until then).
+    Owned { host: Vec<HostTensor>, dev: Vec<xla::PjRtBuffer> },
+}
+
 /// A training session bound to one train executable.
 pub struct Trainer<'e> {
     engine: &'e Engine,
     pub exec_name: String,
     pub infer_name: String,
-    /// Parameters below the fine-tuned tail (manifest role `frozen`/`rest`).
-    pub frozen: Vec<HostTensor>,
+    /// Parameters below the fine-tuned tail (manifest role `frozen`/`rest`)
+    /// — shared with sibling tenants unless copy-on-write fired.
+    frozen: FrozenParams,
     /// Fine-tuned parameters (role `trained`).
     pub trained: Vec<HostTensor>,
     /// ASI warm-start factors (role `us`).
     pub us: Vec<HostTensor>,
     pub lr: f32,
     pub step_idx: i32,
+    /// Loss reported by the most recent step — `None` until the first
+    /// step runs. Survives checkpoint round-trips so a zero-step burst
+    /// still reports the last real loss instead of NaN.
+    pub last_loss: Option<f32>,
     pub warm: WarmStart,
     /// Position of the trained run inside the init-order parameter list
     /// (CNNs: == frozen.len(); LM: before the non-block params).
     trained_start: usize,
-    /// Device-resident copies of the frozen parameters (uploaded once —
-    /// the static weights never cross the host-device boundary again).
-    frozen_dev: Vec<xla::PjRtBuffer>,
+    /// Frozen bytes this trainer itself pushed across the host-device
+    /// boundary: the shared-set upload if this trainer's construction
+    /// built it (first tenant only), plus any copy-on-write upload. The
+    /// serve layer's resume-overhead metric reads this — a resume that
+    /// hits the shared cache reports 0.
+    pub frozen_upload_bytes: u64,
     rng: Rng,
 }
 
@@ -57,16 +87,18 @@ impl<'e> Trainer<'e> {
         let mut tr = Trainer::for_exec(spec.session.engine, &exec, spec.lr,
                                        spec.warm, spec.seed)?;
         if let Some(src) = spec.pretrained {
-            // Transplant the pretrained parameters into the new split.
+            // Transplant the pretrained parameters into the new split
+            // (copy-on-write: the frozen run usually diverges from init).
             tr.load_full_params(&src.full_params())?;
         }
         Ok(tr)
     }
 
-    /// Low-level constructor bound to an explicit executable name: runs
-    /// `<model>_init`, splits the parameter list according to the train
-    /// executable's signature, initializes factors. Everything outside
-    /// the coordinator goes through [`Trainer::new`] + [`FinetuneSpec`].
+    /// Low-level constructor bound to an explicit executable name:
+    /// borrows the engine's shared frozen set (uploaded by whichever
+    /// tenant got there first), clones only the trained run, initializes
+    /// factors. Everything outside the coordinator goes through
+    /// [`Trainer::new`] + [`FinetuneSpec`].
     pub(crate) fn for_exec(
         engine: &'e Engine,
         exec_name: &str,
@@ -76,27 +108,15 @@ impl<'e> Trainer<'e> {
     ) -> Result<Trainer<'e>> {
         let entry = engine.manifest.exec(exec_name)?.clone();
         let model = entry.model.clone();
-        let params = engine
-            .load_params(&model)
-            .with_context(|| format!("loading {model} params"))?;
-        let n_trained = entry.input_indices("trained").len();
-        let n_frozen = entry.input_indices("frozen").len()
-            + entry.input_indices("rest").len();
-        if n_trained + n_frozen != params.len() {
-            bail!(
-                "{exec_name}: trained({n_trained}) + frozen({n_frozen}) != \
-                 init params ({})",
-                params.len()
-            );
-        }
-        // The AOT convention: full param list = frozen ++ trained for CNNs
-        // and rest ++ trained for the LM (blocks are tail-split); in both
-        // cases the trained tensors are the *last* n_trained of init's
-        // output only for CNNs. For the LM, `rest` itself contains
-        // non-block params (embed, ln_f, pos) that flatten *before and
-        // after* blocks; we recover the split by matching shapes.
-        let (frozen, trained, trained_start) =
-            split_params(params, &entry, n_frozen, n_trained)?;
+        let (fset, built) = engine
+            .frozen_shared(exec_name)
+            .with_context(|| format!("acquiring {exec_name} frozen set"))?;
+        // Slice the trained run from the set's own init blob — the blob
+        // its split geometry was computed from, with no second cache
+        // lookup.
+        let (s, nt) = (fset.trained_start, fset.n_trained);
+        let trained = fset.init_params()[s..s + nt].to_vec();
+        let frozen_upload_bytes = if built { fset.bytes } else { 0 };
 
         // Initialize warm-start factors from i.i.d. normals (Alg. 1 t=0).
         let rng = Rng::new(seed);
@@ -116,32 +136,84 @@ impl<'e> Trainer<'e> {
             engine,
             exec_name: exec_name.to_string(),
             infer_name: format!("{model}_infer"),
-            frozen,
+            trained_start: s,
+            frozen: FrozenParams::Shared(fset),
             trained,
             us,
             lr,
             step_idx: 0,
+            last_loss: None,
             warm,
-            trained_start,
-            frozen_dev: Vec::new(),
+            frozen_upload_bytes,
             rng,
         })
+    }
+
+    /// The frozen host tensors, wherever they live (views into the
+    /// shared set — zero host copies — or this trainer's private
+    /// copy-on-write tensors), in trainer order.
+    pub fn frozen_host(&self) -> Vec<&HostTensor> {
+        match &self.frozen {
+            FrozenParams::Shared(set) => {
+                (0..set.n_frozen()).map(|k| set.host_at(k)).collect()
+            }
+            FrozenParams::Owned { host, .. } => host.iter().collect(),
+        }
+    }
+
+    /// Whether this trainer still borrows the engine's shared frozen set
+    /// (false once copy-on-write fired).
+    pub fn frozen_is_shared(&self) -> bool {
+        matches!(self.frozen, FrozenParams::Shared(_))
+    }
+
+    /// Bytes of frozen weights this trainer references (shared bytes are
+    /// counted once per *set*, not per tenant — see the fleet gauge).
+    pub fn frozen_bytes(&self) -> u64 {
+        self.frozen_host().iter().map(|t| t.byte_len()).sum()
+    }
+
+    /// Replace the frozen weights with a private (copy-on-write) copy;
+    /// device buffers re-upload lazily on the next step. Releases the
+    /// shared set's refcount if this trainer held it.
+    pub(crate) fn set_frozen_owned(&mut self, host: Vec<HostTensor>) {
+        self.frozen = FrozenParams::Owned { host, dev: Vec::new() };
+    }
+
+    /// Drop any private frozen copy and re-borrow the engine's shared
+    /// set (the restore path for checkpoints carrying default frozen
+    /// weights).
+    pub(crate) fn reset_frozen_shared(&mut self) -> Result<()> {
+        if !self.frozen_is_shared() {
+            let (fset, built) = self.engine.frozen_shared(&self.exec_name)?;
+            if built {
+                self.frozen_upload_bytes += fset.bytes;
+            }
+            self.frozen = FrozenParams::Shared(fset);
+        }
+        Ok(())
     }
 
     /// One training step; returns the loss.
     ///
     /// Hot-path layout: frozen parameters are device-resident buffers
-    /// (uploaded once), only the batch, hyper-scalars, trained tensors
-    /// and warm-start factors are uploaded per step.
+    /// (the shared set, uploaded once per model+method across all
+    /// tenants), only the batch, hyper-scalars, trained tensors and
+    /// warm-start factors are uploaded per step.
     pub fn step(&mut self, x: HostTensor, y: Option<HostTensor>) -> Result<f32> {
-        if self.frozen_dev.len() != self.frozen.len() {
-            self.frozen_dev = self
-                .frozen
-                .iter()
-                .map(|t| self.engine.upload(t))
-                .collect::<Result<_>>()?;
+        let engine = self.engine;
+        // Copy-on-write trainers upload their private frozen copy once.
+        if let FrozenParams::Owned { host, dev } = &mut self.frozen {
+            if dev.len() != host.len() {
+                *dev = host
+                    .iter()
+                    .map(|t| engine.upload(t))
+                    .collect::<Result<_>>()?;
+                self.frozen_upload_bytes +=
+                    host.iter().map(HostTensor::byte_len).sum::<u64>();
+            }
         }
-        let entry = self.engine.manifest.exec(&self.exec_name)?.clone();
+        let entry = engine.manifest.exec(&self.exec_name)?.clone();
         let lr_t = HostTensor::scalar_f32(self.lr);
         let step_t = HostTensor::scalar_s32(self.step_idx);
         // Cold-start ablation: pre-generate this step's random factors.
@@ -162,8 +234,12 @@ impl<'e> Trainer<'e> {
         };
 
         let outs = {
+            let frozen_bufs: &[xla::PjRtBuffer] = match &self.frozen {
+                FrozenParams::Shared(set) => &set.dev,
+                FrozenParams::Owned { dev, .. } => dev,
+            };
             let mut trained_it = self.trained.iter();
-            let mut frozen_it = self.frozen_dev.iter();
+            let mut frozen_it = frozen_bufs.iter();
             let mut us_it = self.us.iter();
             let mut cold_it = cold_tmp.iter();
             let mut args: Vec<ExecArg<'_>> =
@@ -190,7 +266,7 @@ impl<'e> Trainer<'e> {
                 };
                 args.push(a);
             }
-            self.engine.run_mixed(&self.exec_name, &args)?
+            engine.run_mixed(&self.exec_name, &args)?
         };
 
         let mut loss = f32::NAN;
@@ -212,6 +288,7 @@ impl<'e> Trainer<'e> {
             self.us = new_us;
         }
         self.step_idx += 1;
+        self.last_loss = Some(loss);
         Ok(loss)
     }
 
@@ -223,51 +300,93 @@ impl<'e> Trainer<'e> {
     }
 
     /// Run one bounded burst of `steps` image steps, pulling each batch
-    /// by the trainer's own *global* step counter; returns the last
-    /// loss. Because batches are keyed off `step_idx` (which a
-    /// [`super::Checkpoint`] restores), a run preempted into bursts
-    /// consumes exactly the batch sequence of an uninterrupted run —
-    /// the streaming service's bit-identity guarantee starts here.
-    pub fn run_burst<F>(&mut self, steps: u64, mut batch_at: F) -> Result<f32>
+    /// by the trainer's own *global* step counter; returns the loss of
+    /// the most recent step — which for a zero-step burst is the last
+    /// *real* loss this trainer (or its restored checkpoint) observed,
+    /// `None` only if no step has ever run. Because batches are keyed
+    /// off `step_idx` (which a [`super::Checkpoint`] restores), a run
+    /// preempted into bursts consumes exactly the batch sequence of an
+    /// uninterrupted run — the streaming service's bit-identity
+    /// guarantee starts here.
+    pub fn run_burst<F>(&mut self, steps: u64, mut batch_at: F)
+        -> Result<Option<f32>>
     where
         F: FnMut(u64) -> ImageBatch,
     {
-        let mut last = f32::NAN;
         for _ in 0..steps {
             let b = batch_at(self.step_idx as u64);
-            last = self.step_image(&b)?;
+            self.step_image(&b)?;
         }
-        Ok(last)
+        Ok(self.last_loss)
     }
 
     /// Full parameter list in `<model>_init` / `<model>_infer` order —
     /// the trained run is re-inserted at its original flatten position.
     pub fn full_params(&self) -> Vec<HostTensor> {
-        let mut v: Vec<HostTensor> =
-            self.frozen[..self.trained_start].to_vec();
+        let frozen = self.frozen_host();
+        let mut v: Vec<HostTensor> = frozen[..self.trained_start]
+            .iter()
+            .map(|t| (*t).clone())
+            .collect();
         v.extend(self.trained.iter().cloned());
-        v.extend(self.frozen[self.trained_start..].iter().cloned());
+        v.extend(frozen[self.trained_start..].iter().map(|t| (*t).clone()));
         v
     }
 
     /// Replace all parameters from an init-order list (e.g. a pretrained
-    /// sibling trainer's `full_params`).
+    /// sibling trainer's `full_params`). Copy-on-write: if the incoming
+    /// frozen run is bit-identical to what this trainer already
+    /// references (the common "restore onto defaults" case), the shared
+    /// set is kept; otherwise the trainer takes a private copy and the
+    /// shared buffers stay untouched for every other tenant.
     pub fn load_full_params(&mut self, full: &[HostTensor]) -> Result<()> {
         let nt = self.trained.len();
-        if full.len() != self.frozen.len() + nt {
+        let nf = self.frozen_host().len();
+        if full.len() != nf + nt {
             bail!("param count mismatch in load_full_params");
         }
         let s = self.trained_start;
-        self.frozen = full[..s]
+        let new_frozen: Vec<HostTensor> = full[..s]
             .iter()
             .chain(full[s + nt..].iter())
             .cloned()
             .collect();
         self.trained = full[s..s + nt].to_vec();
-        // Frozen weights changed: drop the device-resident copies so the
-        // next step re-uploads them.
-        self.frozen_dev.clear();
+        if !tensors_bit_eq(&new_frozen, &self.frozen_host()) {
+            // Frozen weights diverged from the shared defaults: take a
+            // private copy; the next step re-uploads it.
+            self.set_frozen_owned(new_frozen);
+        }
         Ok(())
+    }
+
+    /// Restore the frozen run from a checkpoint: `None` means "model
+    /// defaults" (re-borrow the shared set), `Some` means a diverged
+    /// private copy (shape-checked, then owned).
+    pub(crate) fn restore_frozen(
+        &mut self,
+        frozen: Option<&[HostTensor]>,
+    ) -> Result<()> {
+        match frozen {
+            None => self.reset_frozen_shared(),
+            Some(f) => {
+                let cur = self.frozen_host();
+                if f.len() != cur.len() {
+                    bail!("checkpoint frozen arity {} != trainer {}",
+                          f.len(), cur.len());
+                }
+                for (x, y) in f.iter().zip(cur.iter()) {
+                    if x.shape() != y.shape() {
+                        bail!("checkpoint frozen shape {:?} != trainer {:?}",
+                              x.shape(), y.shape());
+                    }
+                }
+                if !tensors_bit_eq(f, &cur) {
+                    self.set_frozen_owned(f.to_vec());
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Classification accuracy over `n_batches` validation batches.
@@ -302,94 +421,76 @@ impl<'e> Trainer<'e> {
     /// Activation-memory actually threaded between steps for ASI: the
     /// warm-start factors (what Rust must keep resident).
     pub fn state_bytes(&self) -> u64 {
-        self.us.iter().map(|u| 4 * u.len() as u64).sum()
+        self.us.iter().map(HostTensor::byte_len).sum()
     }
 
     /// Per-tenant mutable *training* state: warm-start factors plus the
     /// fine-tuned parameters — the footprint the paper's state-size
     /// argument is about, and what the fleet's resident-state gauge
-    /// charges a tenant for. Frozen weights are excluded from the
-    /// metric because they are value-identical across tenants of one
-    /// model; note that today each trainer still holds its *own copy*
-    /// of them (host + device), so a tenant's total memory is this
-    /// number plus one frozen-set copy — sharing those buffers across
-    /// tenants is a ROADMAP open item.
+    /// charges a tenant for. *Shared* frozen weights are excluded
+    /// because they are genuinely shared: every tenant of one
+    /// model+method views the engine's memoized init blob host-side
+    /// (zero extra copies) and borrows its single device upload (see
+    /// [`FrozenSet`]). A copy-on-write trainer's *private* frozen copy
+    /// IS charged — it is per-tenant residency, and this keeps the
+    /// gauge consistent with [`super::Checkpoint::state_bytes`], which
+    /// counts a serialized divergent copy the same way (no phantom
+    /// memory jump when a COW tenant parks).
     pub fn resident_state_bytes(&self) -> u64 {
+        let cow_frozen = if self.frozen_is_shared() {
+            0
+        } else {
+            self.frozen_bytes()
+        };
         self.state_bytes()
-            + self.trained.iter().map(|t| 4 * t.len() as u64).sum::<u64>()
+            + self.trained.iter().map(HostTensor::byte_len).sum::<u64>()
+            + cow_frozen
     }
 }
 
-/// Recover the (frozen, trained) split of the init-param list by matching
-/// shapes against the train executable's signature. The init list and the
-/// signature contain exactly the same multiset of tensors; we match
-/// role-tagged slots greedily in order, which is unambiguous because the
-/// AOT pipeline flattens both from the same pytrees.
-fn split_params(
-    params: Vec<HostTensor>,
-    entry: &crate::runtime::ExecEntry,
-    n_frozen: usize,
-    n_trained: usize,
-) -> Result<(Vec<HostTensor>, Vec<HostTensor>, usize)> {
-    // CNN convention: frozen tensors flatten first, then trained.
-    let frozen_shapes: Vec<&[usize]> = entry
-        .inputs
-        .iter()
-        .filter(|s| s.role == "frozen" || s.role == "rest")
-        .map(|s| s.shape.as_slice())
-        .collect();
-    let trained_shapes: Vec<&[usize]> = entry
-        .inputs
-        .iter()
-        .filter(|s| s.role == "trained")
-        .map(|s| s.shape.as_slice())
-        .collect();
-
-    // Try the simple prefix split first (CNN layout).
-    let prefix_ok = params.len() == n_frozen + n_trained
-        && params[..n_frozen]
-            .iter()
-            .zip(&frozen_shapes)
-            .all(|(p, s)| p.shape() == *s)
-        && params[n_frozen..]
-            .iter()
-            .zip(&trained_shapes)
-            .all(|(p, s)| p.shape() == *s);
-    if prefix_ok {
-        let mut params = params;
-        let trained = params.split_off(n_frozen);
-        return Ok((params, trained, n_frozen));
-    }
-
-    // General case (LM): greedy in-order matching. Trained slots are the
-    // tail blocks, whose tensors appear as a contiguous run inside the
-    // init flattening; scan for the run that matches all trained shapes.
-    // Blocks are shape-homogeneous, so scan from the END: the trained
-    // blocks are the *last* matching run (the model fine-tunes the tail).
-    let n = params.len();
-    'start: for start in (0..=(n - n_trained)).rev() {
-        for (k, want) in trained_shapes.iter().enumerate() {
-            if params[start + k].shape() != *want {
-                continue 'start;
+/// Bit-exact equality of two tensor lists (f32 payloads compared by bit
+/// pattern, so NaNs and signed zeros can't fool the copy-on-write
+/// check). Generic over owned/borrowed lists because the shared frozen
+/// set is viewed through `&HostTensor`s, never cloned for a compare.
+fn tensors_bit_eq<A, B>(a: &[A], b: &[B]) -> bool
+where
+    A: std::borrow::Borrow<HostTensor>,
+    B: std::borrow::Borrow<HostTensor>,
+{
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            let (x, y) = (x.borrow(), y.borrow());
+            if x.shape() != y.shape() || x.dtype() != y.dtype() {
+                return false;
             }
-        }
-        // Check the remainder matches the frozen shapes in order.
-        let rest: Vec<&HostTensor> = params[..start]
-            .iter()
-            .chain(params[start + n_trained..].iter())
-            .collect();
-        if rest.len() == n_frozen
-            && rest.iter().zip(&frozen_shapes).all(|(p, s)| p.shape() == *s)
-        {
-            let trained =
-                params[start..start + n_trained].to_vec();
-            let frozen: Vec<HostTensor> = params[..start]
-                .iter()
-                .chain(params[start + n_trained..].iter())
-                .cloned()
-                .collect();
-            return Ok((frozen, trained, start));
-        }
+            match (x.as_f32(), y.as_f32()) {
+                (Ok(xa), Ok(ya)) => xa
+                    .iter()
+                    .zip(ya)
+                    .all(|(u, v)| u.to_bits() == v.to_bits()),
+                _ => match (x.as_s32(), y.as_s32()) {
+                    (Ok(xa), Ok(ya)) => xa == ya,
+                    _ => false,
+                },
+            }
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensors_bit_eq_is_bitwise() {
+        let a = vec![HostTensor::f32(vec![2], vec![0.0, 1.0])];
+        let b = vec![HostTensor::f32(vec![2], vec![-0.0, 1.0])];
+        // 0.0 == -0.0 numerically, but the bitwise check must see the
+        // difference (and NaN must equal itself).
+        assert!(!tensors_bit_eq(&a, &b));
+        let n = vec![HostTensor::f32(vec![1], vec![f32::NAN])];
+        assert!(tensors_bit_eq(&n, &n));
+        assert!(tensors_bit_eq(&a, &a));
+        let short = vec![HostTensor::f32(vec![1], vec![0.0])];
+        assert!(!tensors_bit_eq(&a, &short));
     }
-    bail!("could not align init params with executable signature");
 }

@@ -7,8 +7,11 @@
 //! independent on-device learners (per-device continual adaptation à la
 //! LANCE) onto one process. The engine is `Sync`, so tenants share its
 //! compiled-executable cache (each AOT executable XLA-compiles exactly
-//! once, however many tenants use it) and its memoized initial-parameter
-//! blobs (one disk read per model).
+//! once, however many tenants use it), its memoized initial-parameter
+//! blobs (one disk read per model), and its refcounted frozen device
+//! buffers (one host copy + one upload per model+method — `run_fleet`
+//! pins the set for the duration of the run, so weight memory does not
+//! scale with N).
 //!
 //! A fleet = `tenants` independent fine-tuning runs of one model ×
 //! [`Method`], each with its own training seed and synthetic data shard,
@@ -189,6 +192,14 @@ fn run_tenant(
 /// they appear in [`FleetReport::failed`] and the rest of the fleet
 /// completes.
 pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
+    // Pin the fleet's shared frozen set for the whole run: the set is
+    // refcounted and tenants come and go (a moment with every tenant
+    // torn down would otherwise evict it), but one fleet must pay the
+    // device upload exactly once.
+    let exec = spec.method.resolve_exec(&engine.manifest, &spec.model)?;
+    let (frozen_pin, _) = engine
+        .frozen_shared(&exec)
+        .context("pinning the fleet's shared frozen set")?;
     let gauge = StateGauge::new();
     let t0 = Instant::now();
     let (slots, worker_stats) =
@@ -216,6 +227,10 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
         tenants,
         failed,
         peak_state_bytes: gauge.peak_bytes(),
+        // The run's pinned set — exact per-run accounting (one fleet =
+        // one frozen upload, whatever N was). Engine-lifetime residency
+        // peaks live in `engine.frozen_peak_bytes`, which spans runs.
+        shared_frozen_bytes: frozen_pin.bytes,
         worker_stats,
         engine: engine.stats(),
     })

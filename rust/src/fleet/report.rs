@@ -11,15 +11,18 @@ use crate::coordinator::FinetuneReport;
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
 use crate::util::fs::write_atomic_in;
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::{arr, num, obj, push_finite_or_flag, s, Json};
 
 use super::scheduler::WorkerStats;
 
 /// High-water-mark gauge for bytes of tenant *training* state (trained
 /// params + warm-start factors) resident at once — the paper-relevant
-/// packing metric. A tenant's full footprint additionally includes its
-/// private copy of the frozen weights until cross-tenant sharing lands
-/// (see ROADMAP open items).
+/// packing metric, and deliberately the *per-tenant* half of the split
+/// accounting: frozen weights are shared across tenants of one
+/// model+method (one refcounted device upload, tracked by the engine's
+/// `frozen_bytes`/`frozen_peak_bytes` counters), so they are charged
+/// once per set there, never per tenant here. A copy-on-write trainer
+/// that diverged its frozen run is the only per-tenant frozen cost.
 #[derive(Debug, Default)]
 pub struct StateGauge {
     current: AtomicU64,
@@ -94,11 +97,21 @@ pub struct FleetReport {
     pub tenants: Vec<TenantReport>,
     /// Tenants that failed (id, error) — absent from `tenants`.
     pub failed: Vec<(usize, String)>,
+    /// Peak bytes of *per-tenant* mutable training state (trained params
+    /// + warm factors) resident at once. Shared frozen weights are
+    /// accounted separately below — they don't scale with tenants.
     pub peak_state_bytes: u64,
+    /// Bytes of the run's shared frozen set (uploaded once, pinned for
+    /// the run, borrowed by every tenant) — exact per-run accounting.
+    /// Engine-*lifetime* residency and its high-water mark are in
+    /// [`EngineStats::frozen_bytes`] / [`EngineStats::frozen_peak_bytes`],
+    /// which span every run this engine served.
+    pub shared_frozen_bytes: u64,
     pub worker_stats: Vec<WorkerStats>,
     /// Engine counters observed at the end of the run (shared across
-    /// tenants: `compiles` stays at one per distinct executable and
-    /// `param_reads` at one per model, however many tenants ran).
+    /// tenants: `compiles` stays at one per distinct executable,
+    /// `param_reads` at one per model, and `frozen_builds` at one per
+    /// model+method, however many tenants ran).
     pub engine: EngineStats,
 }
 
@@ -157,21 +170,25 @@ impl FleetReport {
             out.push_str(&format!("tenant {id} FAILED: {err}\n"));
         }
         out.push_str(&format!(
-            "aggregate: {:.1} steps/s, {:.2} tenants/s, peak resident state \
-             {} B, {} steals, wall {:.2}s\n",
+            "aggregate: {:.1} steps/s, {:.2} tenants/s, peak tenant state \
+             {} B, shared frozen {} B, {} steals, wall {:.2}s\n",
             self.steps_per_s(),
             self.tenants_per_s(),
             self.peak_state_bytes,
+            self.shared_frozen_bytes,
             self.steals(),
             self.wall_s
         ));
         out.push_str(&format!(
-            "engine: {} compiles ({:.2}s), {} runs ({:.2}s), {} param reads\n",
+            "engine: {} compiles ({:.2}s), {} runs ({:.2}s), {} param reads, \
+             frozen {} builds / {} hits\n",
             self.engine.compiles,
             self.engine.compile_s,
             self.engine.runs,
             self.engine.run_s,
-            self.engine.param_reads
+            self.engine.param_reads,
+            self.engine.frozen_builds,
+            self.engine.frozen_hits
         ));
         out
     }
@@ -186,21 +203,19 @@ impl FleetReport {
             ("steps_per_s", num(self.steps_per_s())),
             ("tenants_per_s", num(self.tenants_per_s())),
             ("peak_state_bytes", num(self.peak_state_bytes as f64)),
-            ("steals", num(self.steals() as f64)),
             (
-                "engine",
-                obj(vec![
-                    ("compiles", num(self.engine.compiles as f64)),
-                    ("compile_s", num(self.engine.compile_s)),
-                    ("runs", num(self.engine.runs as f64)),
-                    ("run_s", num(self.engine.run_s)),
-                    ("param_reads", num(self.engine.param_reads as f64)),
-                ]),
+                "shared_frozen_bytes",
+                num(self.shared_frozen_bytes as f64),
             ),
+            ("steals", num(self.steals() as f64)),
+            // Engine-lifetime counters (they span every run this engine
+            // served, unlike the per-run fields above) — one shared
+            // shape, see EngineStats::to_json.
+            ("engine", self.engine.to_json()),
             (
                 "tenants",
                 arr(self.tenants.iter().map(|t| {
-                    obj(vec![
+                    let mut fields = vec![
                         ("tenant", num(t.tenant as f64)),
                         ("worker", num(t.worker as f64)),
                         // Seeds as decimal strings: golden-ratio-hashed
@@ -210,12 +225,38 @@ impl FleetReport {
                         ("data_seed", s(&t.data_seed.to_string())),
                         ("exec", s(&t.report.exec)),
                         ("steps", num(t.report.steps as f64)),
-                        ("final_loss", num(t.report.final_loss as f64)),
-                        ("accuracy", num(t.report.accuracy as f64)),
-                        ("wall_s", num(t.report.wall_s)),
-                        ("resident_bytes", num(t.resident_bytes as f64)),
-                        ("loss", t.report.loss.to_json()),
-                    ])
+                    ];
+                    // Same contract as serve.json (one shared helper):
+                    // a run that never stepped *omits* the key, a
+                    // diverged run (stepped to a non-finite loss)
+                    // raises the flag — `num(NaN)` -> null never
+                    // reaches the artifact. Caveat: FinetuneReport
+                    // carries f32::NAN as its no-loss sentinel, so a
+                    // zero-step run whose *restored* carried loss was
+                    // genuinely NaN is indistinguishable here and
+                    // classifies as never-stepped; unreachable with
+                    // today's always-stepping fleet specs — threading
+                    // Option<f32> through FinetuneReport is the deeper
+                    // fix (ROADMAP).
+                    let loss = t.report.final_loss;
+                    push_finite_or_flag(
+                        &mut fields,
+                        "final_loss",
+                        "final_loss_non_finite",
+                        if t.report.steps == 0 && !loss.is_finite() {
+                            None
+                        } else {
+                            Some(loss as f64)
+                        },
+                    );
+                    fields.push(("accuracy", num(t.report.accuracy as f64)));
+                    fields.push(("wall_s", num(t.report.wall_s)));
+                    fields.push((
+                        "resident_bytes",
+                        num(t.resident_bytes as f64),
+                    ));
+                    fields.push(("loss", t.report.loss.to_json()));
+                    obj(fields)
                 })),
             ),
             (

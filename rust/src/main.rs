@@ -510,5 +510,10 @@ fn cmd_engine_stats(args: &Args) -> Result<()> {
         st.compiles, st.compile_s, st.runs, st.run_s, st.h2d_bytes,
         st.d2h_bytes, st.param_reads
     );
+    println!(
+        "frozen sets: {} builds, {} hits, {} B resident (peak {} B)",
+        st.frozen_builds, st.frozen_hits, st.frozen_bytes,
+        st.frozen_peak_bytes
+    );
     Ok(())
 }

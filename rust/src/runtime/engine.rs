@@ -10,17 +10,24 @@
 //! compile in parallel; requesters for the *same* one block on its cell,
 //! not on the whole cache). Statistics are plain atomics and initial
 //! parameters are memoized per model, so N tenants cost one disk read.
+//!
+//! Frozen weights are shared at the *device* level too: `frozen_shared`
+//! splits a training executable's frozen tensors from the init params,
+//! uploads them once, and hands every tenant the same refcounted
+//! [`FrozenSet`] — N tenants of one model+method cost one frozen upload,
+//! and the buffers are released when the last holder drops its `Arc`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock, Weak};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::Manifest;
+use super::manifest::{ExecEntry, Manifest};
 use super::value::{DType, HostTensor};
+use crate::util::json::{num, obj, Json};
 
 /// Compile/run statistics snapshot, surfaced in `asi engine-stats`, the
 /// fleet report and the benches.
@@ -35,6 +42,44 @@ pub struct EngineStats {
     /// Times a model's parameter blob was actually read from disk
     /// (cache misses of the memoized `load_params`).
     pub param_reads: usize,
+    /// Times a shared frozen set was actually uploaded to the device
+    /// (cache misses of [`Engine::frozen_shared`]). An N-tenant fleet of
+    /// one model+method should show exactly 1.
+    pub frozen_builds: usize,
+    /// Times a shared frozen set was handed out without an upload
+    /// (cache hits of [`Engine::frozen_shared`]).
+    pub frozen_hits: usize,
+    /// Bytes of shared frozen weights currently resident on the device
+    /// (drops when the last holder releases its set).
+    pub frozen_bytes: u64,
+    /// High-water mark of `frozen_bytes`.
+    pub frozen_peak_bytes: u64,
+}
+
+impl EngineStats {
+    /// The single JSON shape every report embeds as its `engine`
+    /// object — all counters are engine-*lifetime* (they span every run
+    /// the engine served); per-run fields belong to the reports
+    /// themselves. One definition so a new counter can't silently go
+    /// missing from one artifact.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("compiles", num(self.compiles as f64)),
+            ("compile_s", num(self.compile_s)),
+            ("runs", num(self.runs as f64)),
+            ("run_s", num(self.run_s)),
+            ("h2d_bytes", num(self.h2d_bytes as f64)),
+            ("d2h_bytes", num(self.d2h_bytes as f64)),
+            ("param_reads", num(self.param_reads as f64)),
+            ("frozen_builds", num(self.frozen_builds as f64)),
+            ("frozen_hits", num(self.frozen_hits as f64)),
+            ("frozen_bytes", num(self.frozen_bytes as f64)),
+            (
+                "frozen_peak_bytes",
+                num(self.frozen_peak_bytes as f64),
+            ),
+        ])
+    }
 }
 
 /// Internal atomic counters behind [`EngineStats`]. Durations are kept
@@ -48,6 +93,10 @@ struct AtomicStats {
     h2d_bytes: AtomicU64,
     d2h_bytes: AtomicU64,
     param_reads: AtomicUsize,
+    frozen_builds: AtomicUsize,
+    frozen_hits: AtomicUsize,
+    frozen_bytes: AtomicU64,
+    frozen_peak_bytes: AtomicU64,
 }
 
 impl AtomicStats {
@@ -60,8 +109,163 @@ impl AtomicStats {
             h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
             d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
             param_reads: self.param_reads.load(Ordering::Relaxed),
+            frozen_builds: self.frozen_builds.load(Ordering::Relaxed),
+            frozen_hits: self.frozen_hits.load(Ordering::Relaxed),
+            frozen_bytes: self.frozen_bytes.load(Ordering::Relaxed),
+            frozen_peak_bytes: self.frozen_peak_bytes.load(Ordering::Relaxed),
         }
     }
+}
+
+/// The device-resident frozen weights of one training executable, shared
+/// by every concurrent tenant of that model+method: the PJRT buffers
+/// uploaded exactly once, plus the split geometry trainers need to
+/// stitch `full_params` back together. Host-side the set owns *no*
+/// tensor data at all — it holds the same `Arc` as the engine's
+/// memoized init-parameter blob and views the frozen run through
+/// [`FrozenSet::host_at`], so sharing frozen weights adds zero host
+/// copies. Obtained via [`Engine::frozen_shared`]; refcounted by `Arc`
+/// — when the last holder drops its set, the buffers are released and
+/// the engine's residency gauge falls back to zero. A long-running
+/// fleet/serve loop pins one `Arc` for the whole run so a moment with
+/// every tenant parked doesn't evict the set.
+pub struct FrozenSet {
+    /// Training executable this split was derived from.
+    pub exec: String,
+    pub model: String,
+    /// The model's full init-order parameter list (shared with the
+    /// engine's memoized blob — not a copy).
+    full: Arc<Vec<HostTensor>>,
+    /// Device-resident buffers, one per frozen tensor in trainer order,
+    /// uploaded once.
+    pub dev: Vec<xla::PjRtBuffer>,
+    /// Flatten position of the trained run inside the init-order list.
+    pub trained_start: usize,
+    /// Number of trained tensors in the init-order list.
+    pub n_trained: usize,
+    /// Total bytes of the frozen tensors (what the upload cost and the
+    /// device residency gauge are charged).
+    pub bytes: u64,
+    /// Residency bookkeeping on drop (shared with the engine's stats).
+    stats: Arc<AtomicStats>,
+}
+
+impl FrozenSet {
+    /// The full init-order parameter list this split was computed from
+    /// — the same `Arc` as the engine's memoized blob. Trainers slice
+    /// their trained run from here so geometry and data can never come
+    /// from different blob generations.
+    pub(crate) fn init_params(&self) -> &Arc<Vec<HostTensor>> {
+        &self.full
+    }
+
+    /// Number of frozen tensors (== `dev.len()`).
+    pub fn n_frozen(&self) -> usize {
+        self.full.len() - self.n_trained
+    }
+
+    /// The `k`-th frozen tensor in trainer order (init order with the
+    /// trained run skipped) — a view into the shared init blob.
+    pub fn host_at(&self, k: usize) -> &HostTensor {
+        let i = if k < self.trained_start {
+            k
+        } else {
+            k + self.n_trained
+        };
+        &self.full[i]
+    }
+}
+
+impl Drop for FrozenSet {
+    fn drop(&mut self) {
+        self.stats.frozen_bytes.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for FrozenSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FrozenSet")
+            .field("exec", &self.exec)
+            .field("model", &self.model)
+            .field("tensors", &self.n_frozen())
+            .field("trained_start", &self.trained_start)
+            .field("n_trained", &self.n_trained)
+            .field("bytes", &self.bytes)
+            .finish()
+    }
+}
+
+/// Recover the (frozen, trained) split of an init-order parameter list by
+/// matching shapes against a train executable's signature. The init list
+/// and the signature contain exactly the same multiset of tensors; the
+/// trained tensors always form one contiguous run (the fine-tuned tail),
+/// so the split is fully described by `(trained_start, n_trained)` — no
+/// tensor data is copied.
+pub(crate) fn split_frozen(
+    params: &[HostTensor],
+    entry: &ExecEntry,
+) -> Result<(usize, usize)> {
+    let n_trained = entry.input_indices("trained").len();
+    let n_frozen = entry.input_indices("frozen").len()
+        + entry.input_indices("rest").len();
+    if n_trained + n_frozen != params.len() {
+        bail!(
+            "{}: trained({n_trained}) + frozen({n_frozen}) != init params \
+             ({})",
+            entry.name,
+            params.len()
+        );
+    }
+    let frozen_shapes: Vec<&[usize]> = entry
+        .inputs
+        .iter()
+        .filter(|s| s.role == "frozen" || s.role == "rest")
+        .map(|s| s.shape.as_slice())
+        .collect();
+    let trained_shapes: Vec<&[usize]> = entry
+        .inputs
+        .iter()
+        .filter(|s| s.role == "trained")
+        .map(|s| s.shape.as_slice())
+        .collect();
+
+    // CNN convention first: frozen tensors flatten before trained.
+    let prefix_ok = params[..n_frozen]
+        .iter()
+        .zip(&frozen_shapes)
+        .all(|(p, s)| p.shape() == *s)
+        && params[n_frozen..]
+            .iter()
+            .zip(&trained_shapes)
+            .all(|(p, s)| p.shape() == *s);
+    if prefix_ok {
+        return Ok((n_frozen, n_trained));
+    }
+
+    // General case (LM): the trained blocks are a contiguous run inside
+    // the init flattening; blocks are shape-homogeneous, so scan from the
+    // END — the model fine-tunes the tail.
+    let n = params.len();
+    'start: for start in (0..=(n - n_trained)).rev() {
+        for (k, want) in trained_shapes.iter().enumerate() {
+            if params[start + k].shape() != *want {
+                continue 'start;
+            }
+        }
+        let rest: Vec<&HostTensor> = params[..start]
+            .iter()
+            .chain(params[start + n_trained..].iter())
+            .collect();
+        if rest.len() == n_frozen
+            && rest.iter().zip(&frozen_shapes).all(|(p, s)| p.shape() == *s)
+        {
+            return Ok((start, n_trained));
+        }
+    }
+    bail!(
+        "{}: could not align init params with executable signature",
+        entry.name
+    );
 }
 
 /// One cache slot with fallible once-initialization: `init` serializes
@@ -123,7 +327,16 @@ pub struct Engine {
     pub manifest: Manifest,
     exes: RwLock<HashMap<String, Arc<InitCell<xla::PjRtLoadedExecutable>>>>,
     params: RwLock<HashMap<String, Arc<InitCell<Arc<Vec<HostTensor>>>>>>,
-    stats: AtomicStats,
+    /// Shared frozen device buffers, keyed by *training executable* (the
+    /// frozen/trained split is signature-dependent, so two methods of one
+    /// model get distinct sets). Entries hold `Weak`: the engine never
+    /// pins device memory itself — the set lives exactly as long as some
+    /// tenant (or a run-scope pin) holds the `Arc`, and the per-entry
+    /// `Mutex` serializes rebuilds the same way `InitCell` serializes
+    /// compiles, without blocking other entries.
+    frozen: RwLock<HashMap<String, Arc<Mutex<Weak<FrozenSet>>>>>,
+    /// `Arc` so dropped [`FrozenSet`]s can return their residency charge.
+    stats: Arc<AtomicStats>,
 }
 
 // The engine must stay shareable across tenant workers; this fails to
@@ -144,7 +357,8 @@ impl Engine {
             manifest,
             exes: RwLock::new(HashMap::new()),
             params: RwLock::new(HashMap::new()),
-            stats: AtomicStats::default(),
+            frozen: RwLock::new(HashMap::new()),
+            stats: Arc::new(AtomicStats::default()),
         })
     }
 
@@ -271,8 +485,8 @@ impl Engine {
             .collect::<Result<_>>()?;
         self.note_run(
             t0,
-            inputs.iter().map(|t| 4 * t.len() as u64).sum(),
-            outs.iter().map(|t| 4 * t.len() as u64).sum(),
+            inputs.iter().map(HostTensor::byte_len).sum(),
+            outs.iter().map(HostTensor::byte_len).sum(),
         );
         // Sanity: output arity should match the manifest.
         let entry = self.manifest.exec(name)?;
@@ -287,9 +501,10 @@ impl Engine {
     }
 
     /// Upload a host tensor to the device once; the returned buffer can
-    /// be reused across many `run_mixed` calls (the frozen-parameter
-    /// optimization: static weights cross the host-device boundary once
-    /// per session instead of once per step).
+    /// be reused across many `run_mixed` calls. Frozen model weights
+    /// should not come through here directly — [`Engine::frozen_shared`]
+    /// uploads them once per model+method and refcounts the buffers
+    /// across every tenant.
     pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
         let buf = match t {
             HostTensor::F32 { shape, data } => self
@@ -302,7 +517,7 @@ impl Engine {
         .context("uploading host tensor")?;
         self.stats
             .h2d_bytes
-            .fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+            .fetch_add(t.byte_len(), Ordering::Relaxed);
         Ok(buf)
     }
 
@@ -358,7 +573,7 @@ impl Engine {
             .iter()
             .map(HostTensor::from_literal)
             .collect::<Result<_>>()?;
-        self.note_run(t0, 0, outs.iter().map(|t| 4 * t.len() as u64).sum());
+        self.note_run(t0, 0, outs.iter().map(HostTensor::byte_len).sum());
         Ok(outs)
     }
 
@@ -392,6 +607,81 @@ impl Engine {
     /// memoized list, not a disk read).
     pub fn load_params(&self, model: &str) -> Result<Vec<HostTensor>> {
         Ok(self.load_params_shared(model)?.as_ref().clone())
+    }
+
+    /// The shared, device-resident frozen weights for one training
+    /// executable: split from the model's init params and uploaded on
+    /// first use; every later caller gets the same `Arc` for free. The
+    /// returned flag is `true` when *this* call paid the upload (the
+    /// resume-overhead metric keys off it). Refcounted, not engine-pinned:
+    /// when the last `Arc` drops, the buffers are released — long-running
+    /// loops should hold one `Arc` for their whole run so a moment with
+    /// every tenant parked doesn't evict the set.
+    pub fn frozen_shared(&self, exec_name: &str)
+        -> Result<(Arc<FrozenSet>, bool)> {
+        // Same per-entry discipline as the executable cache: map locks
+        // held only for lookup/insert; the upload happens under the
+        // entry's own lock so other entries stay live. Unlike `InitCell`
+        // the slot is a `Weak` — a dropped set leaves an empty cell that
+        // the next tenant refills. (The read guard must drop before the
+        // write lock is requested: std's RwLock self-deadlocks on
+        // read-then-write from one thread.)
+        let cached = self
+            .frozen
+            .read()
+            .expect("frozen cache")
+            .get(exec_name)
+            .cloned();
+        let cell = match cached {
+            Some(c) => c,
+            None => self
+                .frozen
+                .write()
+                .expect("frozen cache")
+                .entry(exec_name.to_string())
+                .or_default()
+                .clone(),
+        };
+        let mut slot = cell.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(set) = slot.upgrade() {
+            self.stats.frozen_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((set, false));
+        }
+        let entry = self.manifest.exec(exec_name)?;
+        let model = entry.model.clone();
+        let full = self
+            .load_params_shared(&model)
+            .with_context(|| format!("loading {model} params"))?;
+        let (trained_start, n_trained) = split_frozen(&full, entry)?;
+        // Frozen tensors in trainer order: init order minus the trained
+        // run. Views into the memoized blob — no host copy.
+        let frozen_view = || {
+            full[..trained_start]
+                .iter()
+                .chain(full[trained_start + n_trained..].iter())
+        };
+        let dev: Vec<xla::PjRtBuffer> = frozen_view()
+            .map(|t| self.upload(t))
+            .collect::<Result<_>>()
+            .with_context(|| format!("uploading {exec_name} frozen set"))?;
+        let bytes: u64 = frozen_view().map(HostTensor::byte_len).sum();
+        self.stats.frozen_builds.fetch_add(1, Ordering::Relaxed);
+        let now =
+            self.stats.frozen_bytes.fetch_add(bytes, Ordering::Relaxed)
+                + bytes;
+        self.stats.frozen_peak_bytes.fetch_max(now, Ordering::Relaxed);
+        let set = Arc::new(FrozenSet {
+            exec: exec_name.to_string(),
+            model,
+            full,
+            dev,
+            trained_start,
+            n_trained,
+            bytes,
+            stats: Arc::clone(&self.stats),
+        });
+        *slot = Arc::downgrade(&set);
+        Ok((set, true))
     }
 
     /// Actually read + decode a model's parameter blob from disk.
@@ -440,5 +730,84 @@ impl Engine {
                 ),
             })
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSig;
+
+    fn sig(role: &str, shape: &[usize]) -> TensorSig {
+        TensorSig {
+            name: format!("{role}{}", shape.len()),
+            role: role.to_string(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+        }
+    }
+
+    fn entry(inputs: Vec<TensorSig>) -> ExecEntry {
+        ExecEntry {
+            name: "m_train".into(),
+            file: "m.hlo.txt".into(),
+            model: "m".into(),
+            kind: "train".into(),
+            method: "asi".into(),
+            depth: 2,
+            ranks: Vec::new(),
+            inputs,
+            outputs: Vec::new(),
+        }
+    }
+
+    fn t(shape: &[usize]) -> HostTensor {
+        HostTensor::f32(shape.to_vec(),
+                        vec![0.0; shape.iter().product()])
+    }
+
+    #[test]
+    fn split_frozen_cnn_prefix_layout() {
+        // CNN convention: frozen flattens first, then trained.
+        let e = entry(vec![
+            sig("frozen", &[3, 3]),
+            sig("frozen", &[8]),
+            sig("trained", &[2, 2]),
+            sig("x", &[1, 4]),
+        ]);
+        let params = vec![t(&[3, 3]), t(&[8]), t(&[2, 2])];
+        let (start, nt) = split_frozen(&params, &e).unwrap();
+        assert_eq!(start, 2);
+        assert_eq!(nt, 1);
+    }
+
+    #[test]
+    fn split_frozen_lm_interior_run() {
+        // LM convention: trained blocks are a contiguous run *inside*
+        // the flattening (rest params appear before and after).
+        let e = entry(vec![
+            sig("rest", &[10, 4]),
+            sig("trained", &[4, 4]),
+            sig("trained", &[4, 4]),
+            sig("rest", &[4]),
+        ]);
+        let params = vec![t(&[10, 4]), t(&[4, 4]), t(&[4, 4]), t(&[4])];
+        let (start, nt) = split_frozen(&params, &e).unwrap();
+        assert_eq!(start, 1);
+        assert_eq!(nt, 2);
+        // The frozen view skips the trained run in trainer order.
+        let frozen: Vec<&HostTensor> = params[..start]
+            .iter()
+            .chain(params[start + nt..].iter())
+            .collect();
+        assert_eq!(frozen[0].shape(), &[10, 4]);
+        assert_eq!(frozen[1].shape(), &[4]);
+    }
+
+    #[test]
+    fn split_frozen_rejects_arity_mismatch() {
+        let e = entry(vec![sig("frozen", &[2]), sig("trained", &[2])]);
+        let err = split_frozen(&[t(&[2])], &e).unwrap_err();
+        assert!(format!("{err:#}").contains("init params"));
     }
 }

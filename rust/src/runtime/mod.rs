@@ -8,7 +8,7 @@ pub mod engine;
 pub mod manifest;
 pub mod value;
 
-pub use engine::{Engine, EngineStats, ExecArg};
+pub use engine::{Engine, EngineStats, ExecArg, FrozenSet};
 pub use manifest::{CnnModel, ExecEntry, LmModel, Manifest, ModelInfo,
                    ParamsFile, TensorSig};
 pub use value::{DType, HostTensor};

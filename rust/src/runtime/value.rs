@@ -17,6 +17,17 @@ impl DType {
             other => bail!("unsupported dtype in manifest: {other}"),
         }
     }
+
+    /// Bytes per element — the single definition every transfer/residency
+    /// accounting site (engine h2d/d2h, frozen-set cache, state gauges)
+    /// must go through, so a future non-4-byte dtype can't silently skew
+    /// the stats.
+    pub fn byte_size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::S32 => 4,
+        }
+    }
 }
 
 /// A host tensor: shape + typed data. The lingua franca between the
@@ -75,6 +86,12 @@ impl HostTensor {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Serialized size of this tensor in bytes (dtype-aware — not a
+    /// hardcoded `4 * len`).
+    pub fn byte_len(&self) -> u64 {
+        (self.dtype().byte_size() * self.len()) as u64
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -152,6 +169,15 @@ mod tests {
         assert_eq!(t.len(), 6);
         assert_eq!(t.dtype(), DType::F32);
         assert!(t.as_s32().is_err());
+    }
+
+    #[test]
+    fn byte_len_is_dtype_aware() {
+        let f = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        let i = HostTensor::s32(vec![5], vec![0; 5]);
+        assert_eq!(f.byte_len(), 6 * DType::F32.byte_size() as u64);
+        assert_eq!(i.byte_len(), 5 * DType::S32.byte_size() as u64);
+        assert_eq!(HostTensor::scalar_f32(1.0).byte_len(), 4);
     }
 
     #[test]

@@ -17,10 +17,13 @@
 //!   rule (no starvation) and a condvar idle/wake (re-enqueues mean
 //!   "all queues empty" is no longer termination).
 //! * Between bursts a tenant exists only as a [`Checkpoint`] — the
-//!   trainer (and its device buffers) is torn down on yield and
-//!   rebuilt on resume, so a preempted tenant is *bit-identical* to an
-//!   uninterrupted one (the batch stream is keyed off the restored
-//!   step counter).
+//!   trainer is torn down on yield and rebuilt on resume, so a
+//!   preempted tenant is *bit-identical* to an uninterrupted one (the
+//!   batch stream is keyed off the restored step counter). The frozen
+//!   device buffers are NOT part of that churn: they live in the
+//!   engine's refcounted shared set, pinned for the whole run, so a
+//!   resume rebuilds host-side bookkeeping only and re-uploads zero
+//!   frozen bytes (`ServeReport` proves it per priority class).
 //! * [`writer::Writer`] absorbs all checkpoint/report disk I/O behind
 //!   a bounded channel on a dedicated thread, so a slow disk never
 //!   stalls a training step.
@@ -41,8 +44,8 @@ use crate::coordinator::{Checkpoint, Session, Trainer};
 use crate::fleet::{derive_plan, StateCharge, StateGauge, TenantPlan};
 use crate::runtime::Engine;
 
-pub use report::{percentile, BurstRecord, LatencySummary, ServeReport,
-                 TenantServe};
+pub use report::{percentile, BurstRecord, LatencySummary, ResumeSummary,
+                 ServeReport, TenantServe};
 pub use scheduler::{run_stream_pool, Outcome, Priority, RunQueue, TaskCtx,
                     WorkerStats};
 pub use stream::{Burst, StreamSource, SyntheticStream};
@@ -225,6 +228,21 @@ enum BurstStep {
     Finished(TenantServe),
 }
 
+/// Per-dispatch telemetry alongside the burst timings: what the resume
+/// path actually cost (the ROADMAP's preemption cost model).
+struct DispatchCost {
+    /// This dispatch restored a parked checkpoint (vs a first build).
+    resume: bool,
+    /// Seconds from dispatch to a ready trainer (session + trainer
+    /// construction + checkpoint restore).
+    rebuild_s: f64,
+    /// Frozen bytes this dispatch pushed across the host-device
+    /// boundary. 0 when the shared set was already resident — which is
+    /// every resume now that frozen buffers are refcounted and the
+    /// serve loop pins them.
+    reupload_bytes: u64,
+}
+
 /// Restore (or freshly build) the tenant's trainer, then run the
 /// dispatch's burst work: one burst under `Policy::Priority`
 /// (snapshot, queue the checkpoint write, yield), the tenant's whole
@@ -235,7 +253,9 @@ enum BurstStep {
 /// evaluated and the tenant finishes. Returns `(burst index, seconds)`
 /// per executed burst — the first includes the rebuild/restore (the
 /// real preemption overhead), later run-to-completion bursts time only
-/// themselves; evaluation is excluded.
+/// themselves; evaluation is excluded — plus the dispatch's
+/// [`DispatchCost`] (resume flag, rebuild seconds, frozen re-upload
+/// bytes) for the per-class resume-overhead report.
 fn run_tenant_burst<'g>(
     engine: &Engine,
     spec: &ServeSpec,
@@ -243,9 +263,10 @@ fn run_tenant_burst<'g>(
     gauge: &'g StateGauge,
     writer: &Writer,
     task: &mut TenantTask<'g>,
-) -> Result<(Vec<(u64, f64)>, BurstStep)> {
+) -> Result<(Vec<(u64, f64)>, BurstStep, DispatchCost)> {
     let id = task.plan.id;
     let mut t0 = Instant::now();
+    let resume = task.ckpt.is_some();
     let session = Session::new(engine, task.plan.data_seed);
     let fspec = session
         .finetune(&spec.model, spec.method.clone())
@@ -255,13 +276,16 @@ fn run_tenant_burst<'g>(
         Some(ck) => fspec.resume(ck)?,
         None => Trainer::new(&fspec)?,
     };
+    // Rebuild cost of this dispatch: everything between dispatch and a
+    // ready trainer. With shared frozen buffers resident this is pure
+    // host-side work (no weight re-upload) — the report proves it.
+    let rebuild_s = t0.elapsed().as_secs_f64();
     let batch = engine.manifest.cnn(&spec.model)?.batch_size;
     let ckpt_dir = spec
         .checkpoint_dir
         .as_ref()
         .map(|base| base.join(format!("tenant-{id:04}")));
 
-    let mut last_loss = f32::NAN;
     let mut resident = 0u64;
     let mut timings: Vec<(u64, f64)> = Vec::new();
     loop {
@@ -283,13 +307,12 @@ fn run_tenant_burst<'g>(
             if task.charge.is_none() {
                 task.charge = Some(gauge.charge(resident));
             }
-            last_loss = tr
-                .run_burst(task.burst.steps, |step| {
-                    stream.batch(id, step, batch)
-                })
-                .with_context(|| {
-                    format!("tenant {id} burst {}", task.burst.index)
-                })?;
+            tr.run_burst(task.burst.steps, |step| {
+                stream.batch(id, step, batch)
+            })
+            .with_context(|| {
+                format!("tenant {id} burst {}", task.burst.index)
+            })?;
             // Snapshot only when something consumes it: the yield/
             // resume handoff (priority policy) or the checkpoint
             // stream. A run-to-completion dispatch with no --ckpt
@@ -318,7 +341,14 @@ fn run_tenant_burst<'g>(
             Some(next) => {
                 task.burst = next;
                 match spec.policy {
-                    Policy::Priority => return Ok((timings, BurstStep::Yield)),
+                    Policy::Priority => {
+                        let cost = DispatchCost {
+                            resume,
+                            rebuild_s,
+                            reupload_bytes: tr.frozen_upload_bytes,
+                        };
+                        return Ok((timings, BurstStep::Yield, cost));
+                    }
                     Policy::FifoRunToCompletion => {
                         // Keep the trainer; only the burst timer resets.
                         t0 = Instant::now();
@@ -341,6 +371,11 @@ fn run_tenant_burst<'g>(
                         ckpt: Arc::clone(ck),
                     })?;
                 }
+                let cost = DispatchCost {
+                    resume,
+                    rebuild_s,
+                    reupload_bytes: tr.frozen_upload_bytes,
+                };
                 return Ok((
                     timings,
                     BurstStep::Finished(TenantServe {
@@ -350,10 +385,13 @@ fn run_tenant_burst<'g>(
                         data_seed: task.plan.data_seed,
                         bursts: task.bursts_done,
                         steps: task.steps_done,
-                        final_loss: last_loss,
+                        // The carried loss: a zero-step stream reports
+                        // `None` (omitted from JSON), never NaN/null.
+                        final_loss: tr.last_loss,
                         accuracy,
                         resident_bytes: resident,
                     }),
+                    cost,
                 ));
             }
         }
@@ -376,6 +414,15 @@ pub fn run_serve_with(
     spec: &ServeSpec,
     stream: &dyn StreamSource,
 ) -> Result<ServeReport> {
+    // Pin the shared frozen set for the whole run. Between bursts every
+    // tenant exists only as a checkpoint (no live trainer), so without
+    // this run-scope refcount an idle instant would drop the last Arc
+    // and the next resume would re-upload the entire frozen set — the
+    // exact per-burst churn this layer is built to avoid.
+    let exec = spec.method.resolve_exec(&engine.manifest, &spec.model)?;
+    let (frozen_pin, _) = engine
+        .frozen_shared(&exec)
+        .context("pinning the serve loop's shared frozen set")?;
     let writer = Writer::spawn(spec.writer_capacity);
     let gauge = StateGauge::new();
     let done: Mutex<Vec<TenantServe>> = Mutex::new(Vec::new());
@@ -424,7 +471,7 @@ pub fn run_serve_with(
         initial,
         |ctx, mut task: TenantTask| {
             let id = task.plan.id;
-            let (timings, step) = match run_tenant_burst(
+            let (timings, step, cost) = match run_tenant_burst(
                 engine, spec, stream, &gauge, &writer, &mut task,
             ) {
                 Ok(r) => r,
@@ -442,7 +489,8 @@ pub fn run_serve_with(
             // predecessor finishes, so it gets wait 0 and its own run
             // time. This keeps the FIFO control arm honestly
             // comparable to the per-burst requeue waits of the
-            // priority arm.
+            // priority arm. The dispatch's rebuild/re-upload cost
+            // follows the same rule: it belongs to the first burst.
             {
                 let mut recs = records.lock().expect("records");
                 for (i, &(burst, run_s)) in timings.iter().enumerate() {
@@ -458,6 +506,13 @@ pub fn run_serve_with(
                         },
                         run_s,
                         aged: ctx.aged && i == 0,
+                        resume: cost.resume && i == 0,
+                        rebuild_s: if i == 0 { cost.rebuild_s } else { 0.0 },
+                        reupload_bytes: if i == 0 {
+                            cost.reupload_bytes
+                        } else {
+                            0
+                        },
                     });
                 }
             }
@@ -499,6 +554,7 @@ pub fn run_serve_with(
         failed,
         bursts,
         peak_state_bytes: gauge.peak_bytes(),
+        shared_frozen_bytes: frozen_pin.bytes,
         worker_stats,
         writer: writer_stats,
         engine: engine.stats(),

@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
 use crate::util::fs::write_atomic_in;
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::{arr, num, obj, push_finite_or_flag, s, Json};
 
 use super::scheduler::{Priority, WorkerStats};
 use super::writer::WriterStats;
@@ -38,6 +38,16 @@ pub struct BurstRecord {
     pub run_s: f64,
     /// Dispatched via an aging promotion.
     pub aged: bool,
+    /// This burst's dispatch resumed a parked checkpoint (first burst
+    /// of the dispatch only; later run-to-completion bursts keep their
+    /// live trainer).
+    pub resume: bool,
+    /// Trainer rebuild/restore time paid by this burst's dispatch
+    /// (charged to the dispatch's first burst, like `wait_s`).
+    pub rebuild_s: f64,
+    /// Frozen bytes the dispatch re-uploaded. 0 when the shared frozen
+    /// set was resident — i.e. every resume under the refcounted cache.
+    pub reupload_bytes: u64,
 }
 
 impl BurstRecord {
@@ -48,10 +58,17 @@ impl BurstRecord {
     }
 }
 
-/// Latency distribution summary for one priority class.
+/// Latency distribution summary for one priority class. Non-finite
+/// samples (a NaN from a poisoned timing path, an Inf from a division)
+/// are *excluded* from the statistics and surfaced in `dropped` — one
+/// bad sample must flag itself, not panic report assembly or poison
+/// every percentile.
 #[derive(Debug, Clone, Default)]
 pub struct LatencySummary {
+    /// Finite samples summarized below.
     pub count: usize,
+    /// Non-finite samples excluded from the statistics.
+    pub dropped: usize,
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -61,13 +78,27 @@ pub struct LatencySummary {
 
 impl LatencySummary {
     pub fn of(latencies_s: impl Iterator<Item = f64>) -> LatencySummary {
-        let mut ms: Vec<f64> = latencies_s.map(|l| l * 1e3).collect();
+        let mut dropped = 0usize;
+        let mut ms: Vec<f64> = latencies_s
+            .filter_map(|l| {
+                if l.is_finite() {
+                    Some(l * 1e3)
+                } else {
+                    dropped += 1;
+                    None
+                }
+            })
+            .collect();
         if ms.is_empty() {
-            return LatencySummary::default();
+            return LatencySummary { dropped, ..LatencySummary::default() };
         }
-        ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        // total order on floats: no partial_cmp expect to panic on — and
+        // even if a non-finite value slipped past the filter, the sort
+        // would still be well-defined.
+        ms.sort_by(|a, b| a.total_cmp(b));
         LatencySummary {
             count: ms.len(),
+            dropped,
             mean_ms: ms.iter().sum::<f64>() / ms.len() as f64,
             p50_ms: percentile(&ms, 0.50),
             p95_ms: percentile(&ms, 0.95),
@@ -79,11 +110,52 @@ impl LatencySummary {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("count", num(self.count as f64)),
+            ("dropped", num(self.dropped as f64)),
             ("mean_ms", num(self.mean_ms)),
             ("p50_ms", num(self.p50_ms)),
             ("p95_ms", num(self.p95_ms)),
             ("p99_ms", num(self.p99_ms)),
             ("max_ms", num(self.max_ms)),
+        ])
+    }
+}
+
+/// Resume-overhead summary for one priority class: what preempted
+/// tenants of that class paid to come back (trainer rebuild + frozen
+/// re-upload) — the data the burst-length/preemption tradeoff is tuned
+/// from.
+#[derive(Debug, Clone, Default)]
+pub struct ResumeSummary {
+    /// Dispatches that restored a parked checkpoint.
+    pub resumes: usize,
+    pub total_rebuild_ms: f64,
+    pub mean_rebuild_ms: f64,
+    /// Frozen bytes re-uploaded across all resumes (0 with the shared
+    /// refcounted frozen cache holding the set resident).
+    pub reupload_bytes: u64,
+}
+
+impl ResumeSummary {
+    pub fn of<'a>(records: impl Iterator<Item = &'a BurstRecord>)
+        -> ResumeSummary {
+        let mut s = ResumeSummary::default();
+        for r in records.filter(|r| r.resume) {
+            s.resumes += 1;
+            s.total_rebuild_ms += r.rebuild_s * 1e3;
+            s.reupload_bytes += r.reupload_bytes;
+        }
+        if s.resumes > 0 {
+            s.mean_rebuild_ms = s.total_rebuild_ms / s.resumes as f64;
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("resumes", num(self.resumes as f64)),
+            ("total_rebuild_ms", num(self.total_rebuild_ms)),
+            ("mean_rebuild_ms", num(self.mean_rebuild_ms)),
+            ("reupload_bytes", num(self.reupload_bytes as f64)),
         ])
     }
 }
@@ -97,7 +169,9 @@ pub struct TenantServe {
     pub data_seed: u64,
     pub bursts: u64,
     pub steps: u64,
-    pub final_loss: f32,
+    /// Loss of the tenant's last real training step — `None` (omitted
+    /// from JSON, never `null`) only if the stream held zero steps.
+    pub final_loss: Option<f32>,
     pub accuracy: f32,
     /// Mutable training state resident while a burst of this tenant ran.
     pub resident_bytes: u64,
@@ -120,7 +194,15 @@ pub struct ServeReport {
     pub failed: Vec<(usize, String)>,
     /// Every dispatched burst, sorted (tenant, burst).
     pub bursts: Vec<BurstRecord>,
+    /// Peak bytes of *per-tenant* mutable training state (trained +
+    /// warm factors, live or parked). Shared frozen weights are the
+    /// separate line below.
     pub peak_state_bytes: u64,
+    /// Bytes of the run's shared frozen set (uploaded once, pinned for
+    /// the run, borrowed by every tenant and every resume) — exact
+    /// per-run accounting; engine-*lifetime* residency peaks are in
+    /// [`EngineStats::frozen_peak_bytes`].
+    pub shared_frozen_bytes: u64,
     pub worker_stats: Vec<WorkerStats>,
     pub writer: WriterStats,
     pub engine: EngineStats,
@@ -150,6 +232,12 @@ impl ServeReport {
         self.bursts.iter().filter(|b| b.aged).count()
     }
 
+    /// Resume-overhead summary for one priority class (the ROADMAP's
+    /// preemption cost model: rebuild ms + re-upload bytes per resume).
+    pub fn resume_overhead(&self, prio: Priority) -> ResumeSummary {
+        ResumeSummary::of(self.bursts.iter().filter(|b| b.prio == prio))
+    }
+
     pub fn render(&self) -> String {
         let mut t = Table::new(
             &format!(
@@ -169,7 +257,10 @@ impl ServeReport {
                 tr.prio.name().to_string(),
                 tr.bursts.to_string(),
                 tr.steps.to_string(),
-                format!("{:.4}", tr.final_loss),
+                match tr.final_loss {
+                    Some(l) => format!("{l:.4}"),
+                    None => "-".to_string(),
+                },
                 format!("{:.4}", tr.accuracy),
                 tr.resident_bytes.to_string(),
             ]);
@@ -180,26 +271,56 @@ impl ServeReport {
         }
         for prio in [Priority::High, Priority::Background] {
             let l = self.latency(prio);
-            if l.count == 0 {
+            if l.count == 0 && l.dropped == 0 {
                 continue;
             }
-            out.push_str(&format!(
-                "{} burst latency: p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} \
-                 ms, max {:.1} ms over {} bursts\n",
-                prio.name(),
-                l.p50_ms,
-                l.p95_ms,
-                l.p99_ms,
-                l.max_ms,
-                l.count
-            ));
+            if l.count == 0 {
+                // Every sample was non-finite: don't print the default
+                // zeros as if they were perfect percentiles.
+                out.push_str(&format!(
+                    "{} burst latency: no finite samples ({} non-finite \
+                     dropped)\n",
+                    prio.name(),
+                    l.dropped
+                ));
+            } else {
+                out.push_str(&format!(
+                    "{} burst latency: p50 {:.1} ms, p95 {:.1} ms, p99 \
+                     {:.1} ms, max {:.1} ms over {} bursts",
+                    prio.name(),
+                    l.p50_ms,
+                    l.p95_ms,
+                    l.p99_ms,
+                    l.max_ms,
+                    l.count
+                ));
+                if l.dropped > 0 {
+                    out.push_str(&format!(
+                        " ({} non-finite samples dropped)",
+                        l.dropped
+                    ));
+                }
+                out.push('\n');
+            }
+            let r = self.resume_overhead(prio);
+            if r.resumes > 0 {
+                out.push_str(&format!(
+                    "{} resume overhead: {} resumes, mean rebuild {:.2} \
+                     ms, {} B frozen re-uploaded\n",
+                    prio.name(),
+                    r.resumes,
+                    r.mean_rebuild_ms,
+                    r.reupload_bytes
+                ));
+            }
         }
         out.push_str(&format!(
-            "aggregate: {:.1} steps/s, {} aged dispatches, peak resident \
-             state {} B, wall {:.2}s\n",
+            "aggregate: {:.1} steps/s, {} aged dispatches, peak tenant \
+             state {} B, shared frozen {} B, wall {:.2}s\n",
             self.steps_per_s(),
             self.aged_dispatches(),
             self.peak_state_bytes,
+            self.shared_frozen_bytes,
             self.wall_s
         ));
         out.push_str(&format!(
@@ -235,10 +356,22 @@ impl ServeReport {
             ("steps_per_s", num(self.steps_per_s())),
             ("aged_dispatches", num(self.aged_dispatches() as f64)),
             ("peak_state_bytes", num(self.peak_state_bytes as f64)),
+            (
+                "shared_frozen_bytes",
+                num(self.shared_frozen_bytes as f64),
+            ),
             ("latency_high", self.latency(Priority::High).to_json()),
             (
                 "latency_background",
                 self.latency(Priority::Background).to_json(),
+            ),
+            (
+                "resume_high",
+                self.resume_overhead(Priority::High).to_json(),
+            ),
+            (
+                "resume_background",
+                self.resume_overhead(Priority::Background).to_json(),
             ),
             (
                 "writer",
@@ -258,18 +391,14 @@ impl ServeReport {
                     ),
                 ]),
             ),
-            (
-                "engine",
-                obj(vec![
-                    ("compiles", num(self.engine.compiles as f64)),
-                    ("runs", num(self.engine.runs as f64)),
-                    ("param_reads", num(self.engine.param_reads as f64)),
-                ]),
-            ),
+            // Engine-lifetime counters (they span every run this engine
+            // served, unlike the per-run fields above) — one shared
+            // shape, see EngineStats::to_json.
+            ("engine", self.engine.to_json()),
             (
                 "tenants",
                 arr(self.tenants.iter().map(|t| {
-                    obj(vec![
+                    let mut fields = vec![
                         ("tenant", num(t.tenant as f64)),
                         ("prio", s(t.prio.name())),
                         // Seeds as decimal strings: golden-ratio-hashed
@@ -279,25 +408,57 @@ impl ServeReport {
                         ("data_seed", s(&t.data_seed.to_string())),
                         ("bursts", num(t.bursts as f64)),
                         ("steps", num(t.steps as f64)),
-                        ("final_loss", num(t.final_loss as f64)),
-                        ("accuracy", num(t.accuracy as f64)),
-                        ("resident_bytes", num(t.resident_bytes as f64)),
-                    ])
+                    ];
+                    // Omitted (not null) for a zero-step stream, and a
+                    // non-finite loss (divergent run) becomes a flag
+                    // instead of `num(NaN)` -> null: report consumers
+                    // must never parse a null loss.
+                    push_finite_or_flag(
+                        &mut fields,
+                        "final_loss",
+                        "final_loss_non_finite",
+                        t.final_loss.map(|l| l as f64),
+                    );
+                    fields.push(("accuracy", num(t.accuracy as f64)));
+                    fields.push((
+                        "resident_bytes",
+                        num(t.resident_bytes as f64),
+                    ));
+                    obj(fields)
                 })),
             ),
             (
                 "bursts",
                 arr(self.bursts.iter().map(|b| {
-                    obj(vec![
+                    let mut fields = vec![
                         ("tenant", num(b.tenant as f64)),
                         ("burst", num(b.burst as f64)),
                         ("prio", s(b.prio.name())),
                         ("worker", num(b.worker as f64)),
-                        ("wait_ms", num(b.wait_s * 1e3)),
-                        ("run_ms", num(b.run_s * 1e3)),
-                        ("latency_ms", num(b.latency_s() * 1e3)),
-                        ("aged", Json::Bool(b.aged)),
-                    ])
+                    ];
+                    // Timings obey the same omit-or-flag contract as
+                    // the loss scalars: a poisoned sample (the case
+                    // LatencySummary filters) flags itself rather than
+                    // serializing `num(NaN)` -> null.
+                    push_finite_or_flag(&mut fields, "wait_ms",
+                                        "wait_ms_non_finite",
+                                        Some(b.wait_s * 1e3));
+                    push_finite_or_flag(&mut fields, "run_ms",
+                                        "run_ms_non_finite",
+                                        Some(b.run_s * 1e3));
+                    push_finite_or_flag(&mut fields, "latency_ms",
+                                        "latency_ms_non_finite",
+                                        Some(b.latency_s() * 1e3));
+                    fields.push(("aged", Json::Bool(b.aged)));
+                    fields.push(("resume", Json::Bool(b.resume)));
+                    push_finite_or_flag(&mut fields, "rebuild_ms",
+                                        "rebuild_ms_non_finite",
+                                        Some(b.rebuild_s * 1e3));
+                    fields.push((
+                        "reupload_bytes",
+                        num(b.reupload_bytes as f64),
+                    ));
+                    obj(fields)
                 })),
             ),
             (
@@ -338,10 +499,36 @@ mod tests {
     fn latency_summary_orders_and_converts() {
         let l = LatencySummary::of([0.300, 0.100, 0.200].into_iter());
         assert_eq!(l.count, 3);
+        assert_eq!(l.dropped, 0);
         assert_eq!(l.p50_ms, 200.0);
         assert_eq!(l.max_ms, 300.0);
         assert!((l.mean_ms - 200.0).abs() < 1e-9);
         assert_eq!(LatencySummary::of(std::iter::empty()).count, 0);
+    }
+
+    #[test]
+    fn latency_summary_survives_non_finite_samples() {
+        // One NaN among real samples must not panic (the old
+        // partial_cmp + expect did) and must not poison the stats —
+        // it is counted in `dropped` instead.
+        let l = LatencySummary::of(
+            [0.100, f64::NAN, 0.300, f64::INFINITY, 0.200,
+             f64::NEG_INFINITY]
+                .into_iter(),
+        );
+        assert_eq!(l.count, 3);
+        assert_eq!(l.dropped, 3);
+        assert_eq!(l.p50_ms, 200.0);
+        assert_eq!(l.max_ms, 300.0);
+        assert!(l.mean_ms.is_finite());
+        // All-NaN input: empty summary that still reports the drops.
+        let all = LatencySummary::of([f64::NAN, f64::NAN].into_iter());
+        assert_eq!(all.count, 0);
+        assert_eq!(all.dropped, 2);
+        assert_eq!(all.mean_ms, 0.0);
+        // And the JSON stays parseable with no nulls.
+        let text = l.to_json().to_string();
+        assert!(!text.contains("null"), "{text}");
     }
 
     fn fake_report() -> ServeReport {
@@ -353,6 +540,11 @@ mod tests {
             wait_s,
             run_s: 0.01,
             aged: tenant == 1 && burst == 1,
+            // Every non-first burst of a tenant is a resume in the
+            // priority policy.
+            resume: burst > 0,
+            rebuild_s: if burst > 0 { 0.004 } else { 0.002 },
+            reupload_bytes: 0,
         };
         ServeReport {
             model: "mcunet".into(),
@@ -369,7 +561,7 @@ mod tests {
                     data_seed: 99,
                     bursts: 2,
                     steps: 8,
-                    final_loss: 1.25,
+                    final_loss: Some(1.25),
                     accuracy: 0.5,
                     resident_bytes: 4096,
                 },
@@ -380,7 +572,7 @@ mod tests {
                     data_seed: 100,
                     bursts: 2,
                     steps: 8,
-                    final_loss: 1.5,
+                    final_loss: Some(1.5),
                     accuracy: 0.25,
                     resident_bytes: 4096,
                 },
@@ -393,6 +585,7 @@ mod tests {
                 burst(1, 1, Priority::Background, 0.120),
             ],
             peak_state_bytes: 8192,
+            shared_frozen_bytes: 65536,
             worker_stats: Vec::new(),
             writer: WriterStats { jobs: 5, checkpoints: 4, reports: 1,
                                   ..Default::default() },
@@ -411,8 +604,44 @@ mod tests {
         assert_eq!(r.aged_dispatches(), 1);
         let rendered = r.render();
         assert!(rendered.contains("high burst latency"), "{rendered}");
+        assert!(rendered.contains("high resume overhead"), "{rendered}");
+        assert!(rendered.contains("shared frozen 65536 B"), "{rendered}");
         assert!(rendered.contains("FAILED: poisoned"), "{rendered}");
         assert!(rendered.contains("writer: 5 jobs"), "{rendered}");
+    }
+
+    #[test]
+    fn all_nan_latency_class_renders_without_fake_zeros() {
+        // If every sample of a class is non-finite, the render must say
+        // so instead of printing default-zero percentiles that read as
+        // perfect latency.
+        let mut r = fake_report();
+        for b in r.bursts.iter_mut().filter(|b| b.prio == Priority::High) {
+            b.wait_s = f64::NAN;
+        }
+        let rendered = r.render();
+        assert!(
+            rendered.contains("high burst latency: no finite samples \
+                               (2 non-finite dropped)"),
+            "{rendered}"
+        );
+        assert!(!rendered.contains("high burst latency: p50"), "{rendered}");
+        // The background class still summarizes normally.
+        assert!(rendered.contains("background burst latency: p50"),
+                "{rendered}");
+    }
+
+    #[test]
+    fn resume_overhead_summarizes_per_class() {
+        let r = fake_report();
+        let high = r.resume_overhead(Priority::High);
+        assert_eq!(high.resumes, 1, "one resumed high dispatch");
+        assert!((high.mean_rebuild_ms - 4.0).abs() < 1e-9);
+        assert_eq!(high.reupload_bytes, 0,
+                   "shared frozen cache means zero re-upload");
+        let bg = r.resume_overhead(Priority::Background);
+        assert_eq!(bg.resumes, 1);
+        assert_eq!(ResumeSummary::of(std::iter::empty()).resumes, 0);
     }
 
     #[test]
@@ -420,14 +649,90 @@ mod tests {
         let j = fake_report().to_json();
         assert_eq!(j.get("policy").as_str(), Some("priority"));
         assert_eq!(j.get("latency_high").get("count").as_usize(), Some(2));
+        assert_eq!(
+            j.get("resume_high").get("resumes").as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            j.get("shared_frozen_bytes").as_usize(),
+            Some(65536)
+        );
         assert_eq!(j.get("tenants").as_arr().unwrap().len(), 2);
         assert_eq!(j.get("bursts").as_arr().unwrap().len(), 4);
         assert_eq!(
             j.get("bursts").as_arr().unwrap()[0].get("prio").as_str(),
             Some("high")
         );
+        assert_eq!(
+            j.get("bursts").as_arr().unwrap()[1].get("resume").as_bool(),
+            Some(true)
+        );
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("model").as_str(), Some("mcunet"));
+    }
+
+    #[test]
+    fn zero_step_tenant_omits_loss_instead_of_null() {
+        // The serve.json contract: a tenant that never stepped has no
+        // final_loss key at all — parsers must never meet a null loss.
+        let mut r = fake_report();
+        r.tenants[0].final_loss = None;
+        let text = r.to_json().to_string();
+        assert!(!text.contains("\"final_loss\":null"), "{text}");
+        let back = Json::parse(&text).unwrap();
+        let tenants = back.get("tenants").as_arr().unwrap().to_vec();
+        assert!(tenants[0].get("final_loss").as_f64().is_none());
+        assert_eq!(tenants[1].get("final_loss").as_f64(), Some(1.5));
+        // The rendered table shows the "-" placeholder, never "NaN".
+        let rendered = r.render();
+        assert!(!rendered.contains("NaN"), "{rendered}");
+    }
+
+    #[test]
+    fn non_finite_burst_timings_never_serialize_as_null() {
+        // The raw bursts array obeys the same omit-or-flag contract as
+        // the summaries: a poisoned timing sample drops the numeric key
+        // and raises `<key>_non_finite: true` — never `num(NaN)` ->
+        // null, never a retyped string field.
+        let mut r = fake_report();
+        r.bursts[0].wait_s = f64::NAN;
+        r.bursts[1].rebuild_s = f64::INFINITY;
+        let text = r.to_json().to_string();
+        assert!(!text.contains("null"), "{text}");
+        let back = Json::parse(&text).unwrap();
+        let bursts = back.get("bursts").as_arr().unwrap().to_vec();
+        assert!(bursts[0].get("wait_ms").as_f64().is_none());
+        assert_eq!(bursts[0].get("wait_ms_non_finite").as_bool(),
+                   Some(true));
+        // latency = wait + run inherits the NaN.
+        assert!(bursts[0].get("latency_ms").as_f64().is_none());
+        assert_eq!(bursts[0].get("latency_ms_non_finite").as_bool(),
+                   Some(true));
+        assert!(bursts[1].get("rebuild_ms").as_f64().is_none());
+        assert_eq!(bursts[1].get("rebuild_ms_non_finite").as_bool(),
+                   Some(true));
+        // Untouched fields of the same records stay numeric.
+        assert!(bursts[0].get("run_ms").as_f64().is_some());
+        assert!(bursts[1].get("wait_ms").as_f64().is_some());
+    }
+
+    #[test]
+    fn nan_loss_tenant_flags_instead_of_null() {
+        // Some(NaN) — a genuinely diverged run — must not serialize as
+        // `"final_loss": null` (num(NaN) -> null would fail the CI
+        // artifact lint); it becomes an explicit flag.
+        let mut r = fake_report();
+        r.tenants[0].final_loss = Some(f32::NAN);
+        let text = r.to_json().to_string();
+        assert!(!text.contains("null"), "{text}");
+        let back = Json::parse(&text).unwrap();
+        let tenants = back.get("tenants").as_arr().unwrap().to_vec();
+        assert!(tenants[0].get("final_loss").as_f64().is_none());
+        assert_eq!(
+            tenants[0].get("final_loss_non_finite").as_bool(),
+            Some(true)
+        );
+        assert_eq!(tenants[1].get("final_loss").as_f64(), Some(1.5));
     }
 
     #[test]

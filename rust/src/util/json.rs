@@ -356,9 +356,46 @@ pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }
 
+/// The reports' no-null-scalar contract, in one place: append
+/// `key: num(v)` for a finite sample, `flag: true` for a non-finite
+/// one (divergent loss, poisoned timing — `num(NaN)` would serialize
+/// as `null`), and nothing at all for `None` ("this never happened",
+/// e.g. a tenant that never stepped). `fleet.json` and `serve.json`
+/// both build their scalar measurements through this helper so the two
+/// artifacts can't drift apart.
+pub fn push_finite_or_flag<'a>(
+    fields: &mut Vec<(&'a str, Json)>,
+    key: &'a str,
+    flag: &'a str,
+    v: Option<f64>,
+) {
+    match v {
+        Some(x) if x.is_finite() => fields.push((key, num(x))),
+        Some(_) => fields.push((flag, Json::Bool(true))),
+        None => {}
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn push_finite_or_flag_contract() {
+        let run = |v: Option<f64>| {
+            let mut f: Vec<(&str, Json)> = Vec::new();
+            push_finite_or_flag(&mut f, "x", "x_non_finite", v);
+            obj(f).to_string()
+        };
+        assert_eq!(run(Some(1.5)), r#"{"x":1.5}"#);
+        assert_eq!(run(Some(f64::NAN)), r#"{"x_non_finite":true}"#);
+        assert_eq!(run(Some(f64::INFINITY)), r#"{"x_non_finite":true}"#);
+        assert_eq!(run(None), "{}");
+        // The whole point: no emission path can produce a null.
+        for v in [Some(1.5), Some(f64::NAN), None] {
+            assert!(!run(v).contains("null"));
+        }
+    }
 
     #[test]
     fn roundtrip_basic() {

@@ -100,6 +100,7 @@ fn fake_report(workers: usize, tenants: usize, wall_s: f64) -> FleetReport {
         tenants: (0..tenants).map(|i| fake_tenant(i, 10)).collect(),
         failed: vec![(tenants, "poisoned".into())],
         peak_state_bytes: 4096 * workers as u64,
+        shared_frozen_bytes: 65536,
         worker_stats: Vec::new(),
         engine: EngineStats::default(),
     }
@@ -123,6 +124,10 @@ fn report_json_shape() {
     let j = r.to_json();
     assert_eq!(j.get("workers").as_usize(), Some(2));
     assert_eq!(j.get("total_steps").as_usize(), Some(30));
+    // The split accounting: per-tenant trained state and the shared
+    // frozen set are separate numbers.
+    assert_eq!(j.get("shared_frozen_bytes").as_usize(), Some(65536));
+    assert_eq!(j.get("engine").get("frozen_builds").as_usize(), Some(0));
     let tenants = j.get("tenants").as_arr().unwrap();
     assert_eq!(tenants.len(), 3);
     assert_eq!(tenants[0].get("exec").as_str(), Some("mcunet_asi_d2_r4"));
@@ -136,6 +141,34 @@ fn report_json_shape() {
     let text = j.to_string();
     let back = asi::util::json::Json::parse(&text).unwrap();
     assert_eq!(back.get("model").as_str(), Some("mcunet"));
+}
+
+#[test]
+fn report_json_never_emits_null_loss() {
+    // A NaN final_loss (zero-step or diverged run) must become an
+    // explicit flag, not `"final_loss": null` — the CI artifact lint
+    // rejects null scalars in fleet.json.
+    let mut r = fake_report(2, 3, 1.0);
+    // Tenant 0 diverged (stepped to NaN) -> flagged; tenant 2 never
+    // stepped -> key simply omitted; tenant 1 is healthy.
+    r.tenants[0].report.final_loss = f32::NAN;
+    r.tenants[2].report.final_loss = f32::NAN;
+    r.tenants[2].report.steps = 0;
+    let text = r.to_json().to_string();
+    assert!(!text.contains("\"final_loss\":null"), "{text}");
+    let back = asi::util::json::Json::parse(&text).unwrap();
+    let tenants = back.get("tenants").as_arr().unwrap();
+    assert!(tenants[0].get("final_loss").as_f64().is_none());
+    assert_eq!(
+        tenants[0].get("final_loss_non_finite").as_bool(),
+        Some(true)
+    );
+    assert_eq!(tenants[1].get("final_loss").as_f64(), Some(1.0));
+    assert!(tenants[2].get("final_loss").as_f64().is_none());
+    assert!(
+        tenants[2].get("final_loss_non_finite").as_bool().is_none(),
+        "zero steps is not divergence"
+    );
 }
 
 #[test]

@@ -268,7 +268,14 @@ fn concurrent_tenants_share_engine_and_match_serial() {
         .collect();
 
     // The same four tenants concurrently against ONE shared engine.
+    // Pin the shared frozen set for the scope (what run_fleet does) so
+    // a degenerate thread schedule can't evict it between tenants.
     let engine = Engine::load(&dir).unwrap();
+    let exec = Method::asi(2, 4)
+        .resolve_exec(&engine.manifest, "mcunet")
+        .unwrap();
+    let (pin, built) = engine.frozen_shared(&exec).unwrap();
+    assert!(built, "fresh engine: the pin pays the one frozen upload");
     let concurrent: Vec<FinetuneReport> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..N)
             .map(|i| {
@@ -292,11 +299,69 @@ fn concurrent_tenants_share_engine_and_match_serial() {
         assert_reports_identical(a, b);
     }
     // Compile-once under contention: all tenants share one train and
-    // one infer executable, and one on-disk parameter read.
+    // one infer executable, one on-disk parameter read — and ONE frozen
+    // upload (every tenant trainer hits the pinned set).
     let st = engine.stats();
     assert_eq!(st.compiles, 2,
                "expected exactly one compile per distinct executable");
     assert_eq!(st.param_reads, 1, "params must be read from disk once");
+    assert_eq!(st.frozen_builds, 1,
+               "N tenants must share one frozen upload");
+    assert_eq!(st.frozen_hits, N,
+               "every tenant trainer must hit the shared set");
+    assert_eq!(st.frozen_bytes, pin.bytes,
+               "exactly one set resident while pinned");
+    drop(pin);
+    assert_eq!(engine.stats().frozen_bytes, 0,
+               "last release must return the residency charge");
+}
+
+#[test]
+fn fleet_frozen_upload_is_once_not_per_tenant() {
+    // The acceptance criterion: a 4-tenant single-model fleet uploads
+    // the frozen set exactly once — h2d frozen traffic is 1x, where the
+    // pre-sharing engine paid 4x (one private device copy per tenant).
+    let Some(dir) = artifacts() else { return };
+    let run = |tenants: usize| {
+        let engine = Engine::load(&dir).unwrap();
+        let spec = FleetSpec::new("mcunet", Method::asi(2, 4))
+            .tenants(tenants)
+            .workers(tenants.min(4))
+            .quick()
+            .base_seed(3);
+        let rep = run_fleet(&engine, &spec).unwrap();
+        assert!(rep.failed.is_empty(), "{:?}", rep.failed);
+        (engine.stats(), rep)
+    };
+    let (st1, rep1) = run(1);
+    let (st4, rep4) = run(4);
+
+    let frozen = rep1.shared_frozen_bytes;
+    assert!(frozen > 0, "mcunet must have frozen weights below depth 2");
+    assert_eq!(rep4.shared_frozen_bytes, frozen,
+               "the shared set does not scale with tenants");
+    assert_eq!(st1.frozen_builds, 1);
+    assert_eq!(st4.frozen_builds, 1,
+               "4 tenants must reuse one frozen upload, not pay 4");
+    assert_eq!(st4.frozen_hits, 4,
+               "every tenant borrows the run-pinned set");
+
+    // Byte-exact 1x assertion on engine.h2d_bytes: per-tenant upload
+    // traffic (batches, trained params, factors, eval) scales linearly,
+    // the frozen set is charged once — so
+    //   h2d(4) = F + 4 * (h2d(1) - F) = 4 * h2d(1) - 3 * F.
+    // The pre-sharing engine satisfied h2d(4) = 4 * h2d(1) instead
+    // (frozen re-uploaded per tenant) — a 4x-to-1x traffic reduction
+    // on the frozen component.
+    assert_eq!(
+        st4.h2d_bytes,
+        4 * st1.h2d_bytes - 3 * frozen,
+        "frozen upload traffic must be 1x, not 4x \
+         (h2d_1 {} h2d_4 {} frozen {})",
+        st1.h2d_bytes,
+        st4.h2d_bytes,
+        frozen
+    );
 }
 
 #[test]
@@ -325,6 +390,12 @@ fn fleet_matches_serial_at_same_seeds() {
 }
 
 // ---- streaming serve (burst preemption + async writer) -----------------
+
+/// Clone a `Trainer::frozen_host()` view into owned tensors for the
+/// bit-identity helper below.
+fn owned(v: Vec<&HostTensor>) -> Vec<HostTensor> {
+    v.into_iter().cloned().collect()
+}
 
 fn assert_tensors_bit_identical(name: &str, a: &[HostTensor],
                                 b: &[HostTensor]) {
@@ -383,7 +454,88 @@ fn preempted_bursts_bit_identical_to_uninterrupted() {
     assert_tensors_bit_identical("trained", &preempted.trained,
                                  &solo.trained);
     assert_tensors_bit_identical("us", &preempted.us, &solo.us);
-    assert_tensors_bit_identical("frozen", &preempted.frozen, &solo.frozen);
+    // Frozen weights never diverged, so every checkpoint carried the
+    // default-frozen marker (no serialized copy) and both sides still
+    // borrow the engine's shared set...
+    assert!(preempted.frozen.is_none(),
+            "undiverged frozen must checkpoint as default, not a copy");
+    assert!(solo.frozen_is_shared());
+    // ...and a trainer restored from the final checkpoint is fully
+    // bit-identical to the uninterrupted one, frozen included.
+    let restored = spec.resume(&preempted).unwrap();
+    assert_tensors_bit_identical("full_params", &restored.full_params(),
+                                 &solo.full_params());
+    assert_eq!(restored.last_loss.map(f32::to_bits),
+               solo.last_loss.map(f32::to_bits),
+               "carried loss must survive the disk round-trip");
+    let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+#[test]
+fn zero_step_burst_carries_last_real_loss() {
+    // `run_burst(0, ..)` used to return NaN, which flowed into
+    // serve.json as null. The carried loss must survive zero-step
+    // bursts AND checkpoint round-trips.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 21);
+    let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(3);
+    let mut tr = Trainer::new(&spec).unwrap();
+    let batch = |i: u64| session.downstream_ds.batch("train", i, 32);
+    assert_eq!(tr.run_burst(0, batch).unwrap(), None,
+               "no step has ever run: no loss to report");
+    let real = tr.run_burst(2, batch).unwrap().unwrap();
+    assert!(real.is_finite());
+    assert_eq!(tr.run_burst(0, batch).unwrap(), Some(real),
+               "a zero-step burst must report the last real loss");
+    // And across a preemption round trip.
+    let ckdir = std::env::temp_dir().join("asi_zero_step_loss_e2e");
+    Checkpoint::of(&tr).save(&ckdir, "z").unwrap();
+    let back = Checkpoint::load(&ckdir, "z").unwrap();
+    let resumed = spec.resume(&back).unwrap();
+    assert_eq!(resumed.last_loss, Some(real));
+    let _ = std::fs::remove_dir_all(&ckdir);
+}
+
+#[test]
+fn pretrained_transplant_takes_private_frozen_copy() {
+    // Copy-on-write: a trainer whose frozen weights diverge from the
+    // model defaults (pretrained transplant) must NOT mutate the shared
+    // set its sibling tenants borrow.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let session = Session::new(&engine, 42);
+    let pre = session.pretrain("mcunet", 3, 0.05, 1).unwrap();
+    let spec = session.finetune("mcunet", Method::asi(2, 4)).lr(0.05).seed(2);
+    let vanilla = Trainer::new(&spec).unwrap();
+    let mut warm = Trainer::new(&spec.clone().pretrained(&pre)).unwrap();
+    assert!(vanilla.frozen_is_shared(), "defaults stay shared");
+    assert!(!warm.frozen_is_shared(),
+            "pretrained frozen weights must fork a private copy");
+    // The shared set still serves the init defaults, bit-for-bit.
+    assert_tensors_bit_identical(
+        "sibling frozen",
+        &owned(vanilla.frozen_host()),
+        &owned(Trainer::new(&spec).unwrap().frozen_host()),
+    );
+    // The diverged copy actually differs and still trains.
+    assert!(warm.frozen_host().iter().zip(vanilla.frozen_host()).any(
+        |(a, b)| a.as_f32().unwrap() != b.as_f32().unwrap()
+    ), "pretraining should have moved the frozen run");
+    warm.step_image(&session.downstream_ds.batch("train", 0, 32)).unwrap();
+    // A copy-on-write trainer checkpoints its private frozen copy...
+    let ck = Checkpoint::of(&warm);
+    assert!(ck.frozen.is_some(),
+            "divergent frozen must be serialized, not defaulted");
+    // ...and restoring it into a fresh (shared) trainer forks again.
+    let ckdir = std::env::temp_dir().join("asi_cow_ckpt_e2e");
+    ck.save(&ckdir, "cow").unwrap();
+    let back = Checkpoint::load(&ckdir, "cow").unwrap();
+    let restored = spec.resume(&back).unwrap();
+    assert!(!restored.frozen_is_shared());
+    assert_tensors_bit_identical("restored frozen",
+                                 &owned(restored.frozen_host()),
+                                 &owned(warm.frozen_host()));
     let _ = std::fs::remove_dir_all(&ckdir);
 }
 
@@ -409,8 +561,32 @@ fn serve_matches_serial_runs_and_streams_checkpoints() {
     // 3 tenants x (2 `latest` + 1 `final`) checkpoint jobs.
     assert_eq!(rep.writer.checkpoints, 9);
 
+    // Preemption cost model: every tenant's second burst resumed a
+    // parked checkpoint, and — with the shared frozen set pinned by the
+    // serve loop — a resume re-uploads ZERO frozen bytes (trained + us
+    // travel per-step regardless; the old engine re-uploaded the whole
+    // frozen set here, every burst).
+    let resumes: Vec<_> = rep.bursts.iter().filter(|b| b.resume).collect();
+    assert_eq!(resumes.len(), 3, "one resume per tenant's second burst");
+    for b in &resumes {
+        assert_eq!(
+            b.reupload_bytes, 0,
+            "tenant {} burst {}: resume must upload only trained bytes",
+            b.tenant, b.burst
+        );
+        assert!(b.rebuild_s >= 0.0);
+    }
+    let overhead = rep.resume_overhead(asi::serve::Priority::High);
+    assert!(overhead.resumes >= 1);
+    assert_eq!(overhead.reupload_bytes, 0);
+    assert_eq!(rep.engine.frozen_builds, 1,
+               "one frozen upload for the whole serve run");
+    assert!(rep.shared_frozen_bytes > 0);
+
     for t in &rep.tenants {
         assert_eq!(t.steps, 6);
+        assert!(t.final_loss.is_some(),
+                "a stepped tenant must report a real loss");
         // Serial reference at the same derived seeds: the streaming
         // schedule must not change training results at all.
         let plan = spec.plan(t.tenant);
@@ -424,8 +600,8 @@ fn serve_matches_serial_runs_and_streams_checkpoints() {
             .run()
             .unwrap();
         assert_eq!(
-            t.final_loss.to_bits(),
-            serial.final_loss.to_bits(),
+            t.final_loss.map(f32::to_bits),
+            Some(serial.final_loss.to_bits()),
             "tenant {} loss diverged from the serial run",
             t.tenant
         );
