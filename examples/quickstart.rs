@@ -52,7 +52,7 @@ fn main() -> Result<()> {
 
     println!("executable : {}", rep.exec);
     println!("loss curve : {}", rep.loss.sparkline(50));
-    println!("final loss : {:.4}", rep.final_loss);
+    println!("final loss : {:.4}", rep.final_loss.unwrap_or(f32::NAN));
     println!("accuracy   : {:.2}%", 100.0 * rep.accuracy);
     println!("per step   : {:.1} ms", 1e3 * rep.wall_s / rep.steps as f64);
     println!("ASI state  : {} bytes (warm-start factors)", rep.state_bytes);

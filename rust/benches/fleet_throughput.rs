@@ -91,8 +91,8 @@ fn main() {
     for (a, b) in serial.tenants.iter().zip(&fleet.tenants) {
         assert_eq!(a.tenant, b.tenant);
         assert_eq!(
-            a.report.final_loss.to_bits(),
-            b.report.final_loss.to_bits(),
+            a.report.final_loss.map(f32::to_bits),
+            b.report.final_loss.map(f32::to_bits),
             "tenant {} loss diverged across worker counts",
             a.tenant
         );

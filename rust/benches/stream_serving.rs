@@ -76,7 +76,9 @@ fn synthetic_arm(preemptive: bool) -> (Vec<f64>, usize) {
         })
         .collect();
     let aging = if preemptive { 8 } else { u64::MAX };
-    run_stream_pool(WORKERS, aging, initial, |ctx, (id, burst)| {
+    run_stream_pool(WORKERS, aging, initial,
+                    |&(id, _)| format!("tenant-{id}"),
+                    |ctx, (id, burst)| {
         if ctx.aged {
             *aged.lock().unwrap() += 1;
         }

@@ -18,6 +18,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::faults::{Boundary, FaultPlan};
 use crate::runtime::HostTensor;
 use crate::util::fs::write_atomic;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -171,6 +172,21 @@ impl Checkpoint {
     }
 
     pub fn load(dir: &Path, stem: &str) -> Result<Checkpoint> {
+        Checkpoint::load_with(dir, stem, None)
+    }
+
+    /// `load` with an optional fault hook: a chaos plan can fail the
+    /// read before any disk I/O (the [`Boundary::CheckpointLoad`]
+    /// boundary), exercising the recovery path without corrupting real
+    /// files.
+    pub fn load_with(
+        dir: &Path,
+        stem: &str,
+        faults: Option<&FaultPlan>,
+    ) -> Result<Checkpoint> {
+        if let Some(p) = faults {
+            p.check(Boundary::CheckpointLoad)?;
+        }
         let meta_text = std::fs::read_to_string(dir.join(format!("{stem}.json")))
             .with_context(|| format!("reading checkpoint {stem}.json"))?;
         let meta = Json::parse(&meta_text)?;

@@ -43,7 +43,12 @@ pub struct FinetuneReport {
     pub exec: String,
     pub steps: u64,
     pub loss: Series,
-    pub final_loss: f32,
+    /// Loss of the last real training step — `None` only if the run
+    /// (including any restored checkpoint) never stepped. `Some(NaN)`
+    /// means a genuinely diverged run; report writers distinguish the
+    /// two (omitted key vs a `final_loss_non_finite` flag) instead of
+    /// collapsing both into one NaN sentinel.
+    pub final_loss: Option<f32>,
     pub accuracy: f32,
     pub wall_s: f64,
     pub state_bytes: u64,
@@ -155,8 +160,9 @@ impl<'a> FinetuneSpec<'a> {
             steps: self.steps,
             loss,
             // The trainer's carried loss, so a zero-step run over a
-            // restored checkpoint reports the last real loss, not NaN.
-            final_loss: tr.last_loss.unwrap_or(f32::NAN),
+            // restored checkpoint reports the last real loss; `None`
+            // only if nothing ever stepped.
+            final_loss: tr.last_loss,
             accuracy,
             wall_s,
             state_bytes: tr.state_bytes(),

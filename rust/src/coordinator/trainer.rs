@@ -19,6 +19,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::data::{ImageBatch, ImageDataset};
+use crate::faults::FaultPlan;
 use crate::runtime::{Engine, ExecArg, FrozenSet, HostTensor};
 use crate::util::rng::Rng;
 
@@ -74,6 +75,9 @@ pub struct Trainer<'e> {
     /// hits the shared cache reports 0.
     pub frozen_upload_bytes: u64,
     rng: Rng,
+    /// Optional chaos hook consulted at burst entry (injected panics /
+    /// slow bursts). Installed per dispatch by the serve/fleet loops.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl<'e> Trainer<'e> {
@@ -146,7 +150,14 @@ impl<'e> Trainer<'e> {
             warm,
             frozen_upload_bytes,
             rng,
+            faults: None,
         })
+    }
+
+    /// Install (or clear) the fault-injection plan this trainer
+    /// consults at [`Trainer::run_burst`] entry.
+    pub fn set_faults(&mut self, plan: Option<Arc<FaultPlan>>) {
+        self.faults = plan;
     }
 
     /// The frozen host tensors, wherever they live (views into the
@@ -313,6 +324,15 @@ impl<'e> Trainer<'e> {
     where
         F: FnMut(u64) -> ImageBatch,
     {
+        if let Some(p) = &self.faults {
+            // Chaos hooks fire before any step mutates state, so a
+            // failed/panicked burst leaves the last good checkpoint as
+            // the whole truth and a retry is a pure replay.
+            p.maybe_panic();
+            if let Some(d) = p.maybe_slow() {
+                std::thread::sleep(d);
+            }
+        }
         for _ in 0..steps {
             let b = batch_at(self.step_idx as u64);
             self.step_image(&b)?;

@@ -85,14 +85,16 @@ pub fn fig3(session: &Session<'_>, model: &str, budget: Budget) -> Result<Table>
                 .eval_batches(budget.eval_batches)
                 .seed(7)
                 .run()?;
+            // Experiment runs always step, so the carried loss is Some.
+            let fin = rep.final_loss.unwrap_or(f32::NAN);
             println!("  fig3 {} {name}: loss {:.3} acc {:.3}  {}",
-                     rep.exec, rep.final_loss, rep.accuracy,
+                     rep.exec, fin, rep.accuracy,
                      rep.loss.sparkline(40));
             t.row(vec![
                 depth.to_string(),
                 rank.to_string(),
                 name.into(),
-                format!("{:.4}", rep.final_loss),
+                format!("{fin:.4}"),
                 format!("{:.4}", rep.accuracy),
             ]);
         }
@@ -139,13 +141,14 @@ pub fn fig4(session: &Session<'_>, model: &str, budget: Budget) -> Result<Table>
                 .map(|r| [r[0], r[1], r[2], r[3]])
                 .collect();
             let cost = train_cost(&layers, &method.clone().with_ranks(baked));
+            let fin = rep.final_loss.unwrap_or(f32::NAN);
             println!("  fig4 {exec}: acc {:.3} loss {:.3}  {}",
-                     rep.accuracy, rep.final_loss, rep.loss.sparkline(40));
+                     rep.accuracy, fin, rep.loss.sparkline(40));
             t.row(vec![
                 depth.to_string(),
                 method.name().into(),
                 format!("{:.4}", rep.accuracy),
-                format!("{:.4}", rep.final_loss),
+                format!("{fin:.4}"),
                 mb(cost.act_bytes),
                 format!("{:.3}", cost.flops as f64 / 1e9),
                 format!("{:.4}", rep.wall_s / rep.steps.max(1) as f64),

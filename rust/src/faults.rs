@@ -1,0 +1,498 @@
+//! Deterministic fault injection + recovery policy.
+//!
+//! On-device continual adaptation runs for days on hardware that loses
+//! power, drops I/O, and preempts aggressively — a serving stack that
+//! only survives *clean* preemption is untested where it matters. This
+//! module provides the two halves of that story:
+//!
+//! * [`FaultPlan`] — a seeded, deterministic chaos source. Every
+//!   injection decision is a pure function of `(seed, boundary, call
+//!   index)` via [`crate::util::rng::Rng`], so a chaos run replays
+//!   exactly: same seed, same set of injected faults. Boundaries are
+//!   named ([`Boundary`]) and threaded as optional hooks into the
+//!   engine (execute, h2d upload), the trainer (injected panics, slow
+//!   bursts), checkpoint load, the stream source, and the writer
+//!   thread.
+//! * [`RetryPolicy`] / [`RetryState`] — the recovery state machine the
+//!   serve and fleet loops drive. A failed or panicked burst is
+//!   retried with bounded attempts and a deterministic backoff
+//!   schedule (no wall-clock randomness), restoring from the last good
+//!   `Arc<Checkpoint>`; `K` *consecutive* failures quarantine the
+//!   tenant so the pool sheds the poison workload and keeps serving
+//!   everyone else.
+//!
+//! Because the batch stream is keyed off the restored step counter,
+//! a retried burst is a pure replay: the e2e chaos test asserts that
+//! every surviving tenant finishes bit-identical to the fault-free run.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// A named injection point. Every hook asks its plan "do I fail this
+/// call?" with one of these, so reports can attribute chaos per
+/// boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Boundary {
+    /// `Engine::run` / `Engine::run_mixed` — a device execution fails.
+    EngineExec,
+    /// `Engine::upload` — a host-to-device transfer fails.
+    H2dUpload,
+    /// `Checkpoint` restore (disk load or in-memory resume) fails.
+    CheckpointLoad,
+    /// The stream source refuses a burst (transient feed outage).
+    StreamSource,
+    /// A writer-thread disk write fails.
+    WriterIo,
+    /// The burst closure panics outright (the ugliest failure mode).
+    Panic,
+    /// The burst stalls (injected latency, not an error).
+    SlowBurst,
+}
+
+/// All boundaries, in report order.
+pub const BOUNDARIES: [Boundary; 7] = [
+    Boundary::EngineExec,
+    Boundary::H2dUpload,
+    Boundary::CheckpointLoad,
+    Boundary::StreamSource,
+    Boundary::WriterIo,
+    Boundary::Panic,
+    Boundary::SlowBurst,
+];
+
+impl Boundary {
+    pub fn idx(self) -> usize {
+        match self {
+            Boundary::EngineExec => 0,
+            Boundary::H2dUpload => 1,
+            Boundary::CheckpointLoad => 2,
+            Boundary::StreamSource => 3,
+            Boundary::WriterIo => 4,
+            Boundary::Panic => 5,
+            Boundary::SlowBurst => 6,
+        }
+    }
+
+    /// Stable key used in JSON reports and error messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            Boundary::EngineExec => "engine_exec",
+            Boundary::H2dUpload => "h2d_upload",
+            Boundary::CheckpointLoad => "checkpoint_load",
+            Boundary::StreamSource => "stream_source",
+            Boundary::WriterIo => "writer_io",
+            Boundary::Panic => "panic",
+            Boundary::SlowBurst => "slow_burst",
+        }
+    }
+}
+
+const NB: usize = BOUNDARIES.len();
+
+/// Prefix of every injected-fault error and panic payload — recovery
+/// code and tests key off it to tell chaos from genuine breakage.
+pub const INJECTED: &str = "injected fault:";
+
+/// A seeded, deterministic chaos schedule.
+///
+/// Each boundary keeps its own call counter; call `n` at boundary `b`
+/// fails iff [`FaultPlan::fails_at`]`(seed, b, n)` — a pure function,
+/// so the *decision sequence per boundary* is identical across runs
+/// with the same seed, however threads interleave. (Under a
+/// multi-worker pool the per-call attribution to tenants may shift
+/// with scheduling; the recovery invariant — surviving tenants are
+/// bit-identical to the fault-free run — holds regardless, because a
+/// retry replays the same step-keyed batches.)
+///
+/// Tests can pin exact failure sequences per boundary with
+/// [`FaultPlan::script`]; scripted decisions are consumed before the
+/// seeded rate applies.
+pub struct FaultPlan {
+    seed: u64,
+    rates: [f32; NB],
+    scripts: [Mutex<VecDeque<bool>>; NB],
+    calls: [AtomicU64; NB],
+    injected: [AtomicU64; NB],
+    slow: Duration,
+}
+
+impl FaultPlan {
+    /// A quiet plan (all rates zero) — inject only via `.rate()` /
+    /// `.script()`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rates: [0.0; NB],
+            scripts: std::array::from_fn(|_| Mutex::new(VecDeque::new())),
+            calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+            slow: Duration::from_millis(2),
+        }
+    }
+
+    /// The `--chaos <seed>` storm: every boundary misbehaves at a low
+    /// rate — high enough that a smoke run sees injections at several
+    /// boundaries, low enough that bounded retry keeps most tenants
+    /// alive.
+    pub fn storm(seed: u64) -> FaultPlan {
+        FaultPlan::new(seed)
+            .rate(Boundary::EngineExec, 0.03)
+            .rate(Boundary::H2dUpload, 0.02)
+            .rate(Boundary::CheckpointLoad, 0.03)
+            .rate(Boundary::StreamSource, 0.03)
+            .rate(Boundary::WriterIo, 0.05)
+            .rate(Boundary::Panic, 0.02)
+            .rate(Boundary::SlowBurst, 0.05)
+    }
+
+    /// Set the injection probability of one boundary.
+    pub fn rate(mut self, b: Boundary, p: f32) -> FaultPlan {
+        self.rates[b.idx()] = p;
+        self
+    }
+
+    /// Pin the first `decisions.len()` outcomes at `b` (test hook);
+    /// later calls fall back to the seeded rate.
+    pub fn script(self, b: Boundary, decisions: &[bool]) -> FaultPlan {
+        self.scripts[b.idx()]
+            .lock()
+            .expect("fault script")
+            .extend(decisions.iter().copied());
+        self
+    }
+
+    /// Injected-latency duration for [`Boundary::SlowBurst`] hits.
+    pub fn slow_burst(mut self, d: Duration) -> FaultPlan {
+        self.slow = d;
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The pure decision function: does call `n` at boundary `b` fail
+    /// under `seed` at probability `rate`? Everything else in this
+    /// type is bookkeeping around this — the determinism test drives
+    /// it directly.
+    pub fn fails_at(seed: u64, b: Boundary, n: u64, rate: f32) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        // Two folds derive an independent stream per (boundary, call):
+        // the +1s keep both fold keys nonzero so distinct boundaries
+        // and calls never collapse onto the base stream.
+        let mut r = Rng::new(seed).fold(b.idx() as u64 + 1).fold(n + 1);
+        r.uniform() < rate
+    }
+
+    /// One injection decision at `b` (advances the boundary's call
+    /// counter; counts the injection if it fires).
+    pub fn decide(&self, b: Boundary) -> bool {
+        let i = b.idx();
+        let n = self.calls[i].fetch_add(1, Ordering::Relaxed);
+        let scripted =
+            self.scripts[i].lock().expect("fault script").pop_front();
+        let fail = match scripted {
+            Some(d) => d,
+            None => Self::fails_at(self.seed, b, n, self.rates[i]),
+        };
+        if fail {
+            self.injected[i].fetch_add(1, Ordering::Relaxed);
+        }
+        fail
+    }
+
+    /// Error-injection hook for fallible boundaries: `Ok(())` to
+    /// proceed, or a distinctive [`INJECTED`]-prefixed error.
+    pub fn check(&self, b: Boundary) -> Result<()> {
+        if self.decide(b) {
+            bail!("{INJECTED} {}", b.name());
+        }
+        Ok(())
+    }
+
+    /// Panic-injection hook ([`Boundary::Panic`]).
+    pub fn maybe_panic(&self) {
+        if self.decide(Boundary::Panic) {
+            panic!("{INJECTED} {}", Boundary::Panic.name());
+        }
+    }
+
+    /// Latency-injection hook ([`Boundary::SlowBurst`]): the duration
+    /// to stall, if this call drew a stall.
+    pub fn maybe_slow(&self) -> Option<Duration> {
+        self.decide(Boundary::SlowBurst).then_some(self.slow)
+    }
+
+    /// Injections fired so far, per boundary (report order).
+    pub fn injected_counts(&self) -> [u64; NB] {
+        std::array::from_fn(|i| self.injected[i].load(Ordering::Relaxed))
+    }
+
+    /// Decisions taken so far, per boundary (report order).
+    pub fn call_counts(&self) -> [u64; NB] {
+        std::array::from_fn(|i| self.calls[i].load(Ordering::Relaxed))
+    }
+
+    /// Total injections across every boundary.
+    pub fn total_injected(&self) -> u64 {
+        self.injected_counts().iter().sum()
+    }
+}
+
+// Manual impl: the interior Mutex/AtomicU64 arrays are bookkeeping,
+// not identity — a plan's debug form is its seed + rates (what you
+// need to replay it), which also lets spec types derive Debug.
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("rates", &self.rates)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Recovery knobs: how hard to try before giving up on a burst, and
+/// how many consecutive failures quarantine the tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries per failed dispatch beyond the first attempt. 0 = fail
+    /// immediately (the pre-fault-layer behavior, minus the silence).
+    pub retries: u32,
+    /// Consecutive failures (across retries) that quarantine the
+    /// tenant. 0 disables quarantine.
+    pub quarantine: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { retries: 2, quarantine: 3 }
+    }
+}
+
+impl RetryPolicy {
+    /// Deterministic backoff before retry `attempt` (1-based):
+    /// 1ms, 2ms, 4ms, ... capped at 32ms. A schedule, not jitter —
+    /// chaos runs must replay exactly.
+    pub fn backoff(attempt: u32) -> Duration {
+        Duration::from_millis(1u64 << attempt.saturating_sub(1).min(5))
+    }
+}
+
+/// What the recovery machinery does with one more failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetryDecision {
+    /// Re-dispatch the same burst from the last good checkpoint after
+    /// the given (deterministic) backoff.
+    Retry(Duration),
+    /// K consecutive failures: shed the tenant, release its state
+    /// charge, keep serving everyone else.
+    Quarantine,
+    /// Retry budget exhausted below the quarantine threshold: the
+    /// tenant fails with an explicit report row.
+    Fail,
+}
+
+/// Per-tenant recovery state. Pure and single-owner (it rides inside
+/// the tenant's task payload), so the quarantine property tests drive
+/// it directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryState {
+    /// Retries consumed for the burst currently being re-dispatched.
+    pub attempt: u32,
+    /// Consecutive failures; any success resets it — quarantine is
+    /// strictly about *unbroken* failure runs.
+    pub consec: u32,
+}
+
+impl RetryState {
+    pub fn new() -> RetryState {
+        RetryState::default()
+    }
+
+    /// Record one failure and decide. Quarantine is checked before the
+    /// retry budget, so `quarantine <= retries + 1` always quarantines
+    /// rather than plain-failing.
+    pub fn on_failure(&mut self, p: &RetryPolicy) -> RetryDecision {
+        self.consec += 1;
+        if p.quarantine > 0 && self.consec >= p.quarantine {
+            return RetryDecision::Quarantine;
+        }
+        if self.attempt >= p.retries {
+            return RetryDecision::Fail;
+        }
+        self.attempt += 1;
+        RetryDecision::Retry(RetryPolicy::backoff(self.attempt))
+    }
+
+    /// Record one successful dispatch: both counters reset.
+    pub fn on_success(&mut self) {
+        self.attempt = 0;
+        self.consec = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_plan_never_injects() {
+        let p = FaultPlan::new(123);
+        for b in BOUNDARIES {
+            for _ in 0..50 {
+                assert!(!p.decide(b));
+            }
+        }
+        assert_eq!(p.total_injected(), 0);
+        assert_eq!(p.call_counts()[0], 50);
+    }
+
+    #[test]
+    fn decision_sequence_replays_per_seed() {
+        // Two plans, same seed: identical decision sequences at every
+        // boundary. A third with another seed must diverge somewhere.
+        let mk = |seed| FaultPlan::storm(seed);
+        let (a, b, c) = (mk(7), mk(7), mk(8));
+        let mut diverged = false;
+        for bd in BOUNDARIES {
+            for _ in 0..200 {
+                let (da, db, dc) = (a.decide(bd), b.decide(bd), c.decide(bd));
+                assert_eq!(da, db, "same seed must replay at {bd:?}");
+                diverged |= da != dc;
+            }
+        }
+        assert_eq!(a.injected_counts(), b.injected_counts());
+        assert!(diverged, "different seeds produced identical storms");
+        assert!(a.total_injected() > 0, "storm rates never fired in 1400 \
+                                         decisions");
+    }
+
+    #[test]
+    fn fails_at_is_pure_and_rate_sensitive() {
+        for n in 0..100 {
+            assert_eq!(
+                FaultPlan::fails_at(5, Boundary::WriterIo, n, 0.3),
+                FaultPlan::fails_at(5, Boundary::WriterIo, n, 0.3),
+            );
+            assert!(!FaultPlan::fails_at(5, Boundary::WriterIo, n, 0.0));
+            assert!(FaultPlan::fails_at(5, Boundary::WriterIo, n, 1.0));
+        }
+    }
+
+    #[test]
+    fn script_overrides_then_rate_resumes() {
+        let p = FaultPlan::new(1)
+            .rate(Boundary::StreamSource, 0.0)
+            .script(Boundary::StreamSource, &[true, false, true]);
+        assert!(p.decide(Boundary::StreamSource));
+        assert!(!p.decide(Boundary::StreamSource));
+        assert!(p.decide(Boundary::StreamSource));
+        // Script exhausted: the zero rate takes over.
+        for _ in 0..20 {
+            assert!(!p.decide(Boundary::StreamSource));
+        }
+        assert_eq!(p.injected_counts()[Boundary::StreamSource.idx()], 2);
+    }
+
+    #[test]
+    fn check_errors_carry_the_injected_prefix() {
+        let p = FaultPlan::new(2).script(Boundary::EngineExec, &[true]);
+        let err = format!("{:#}", p.check(Boundary::EngineExec).unwrap_err());
+        assert!(err.starts_with(INJECTED), "{err}");
+        assert!(err.contains("engine_exec"), "{err}");
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_capped() {
+        assert_eq!(RetryPolicy::backoff(1), Duration::from_millis(1));
+        assert_eq!(RetryPolicy::backoff(2), Duration::from_millis(2));
+        assert_eq!(RetryPolicy::backoff(3), Duration::from_millis(4));
+        assert_eq!(RetryPolicy::backoff(100), Duration::from_millis(32));
+    }
+
+    #[test]
+    fn retry_then_fail_below_quarantine() {
+        // retries=2, quarantine disabled: R, R, F.
+        let p = RetryPolicy { retries: 2, quarantine: 0 };
+        let mut s = RetryState::new();
+        assert!(matches!(s.on_failure(&p), RetryDecision::Retry(_)));
+        assert!(matches!(s.on_failure(&p), RetryDecision::Retry(_)));
+        assert_eq!(s.on_failure(&p), RetryDecision::Fail);
+    }
+
+    #[test]
+    fn prop_quarantine_fires_after_exactly_k_consecutive_failures() {
+        // With retries >= K (so Fail can't preempt), K consecutive
+        // failures quarantine on exactly the K-th — never earlier.
+        crate::util::prop::cases(0xFA17, 200, |g| {
+            let k = g.usize_in(1, 6) as u32;
+            let p = RetryPolicy {
+                retries: k + g.usize_in(0, 3) as u32,
+                quarantine: k,
+            };
+            let mut s = RetryState::new();
+            for i in 1..=k {
+                let d = s.on_failure(&p);
+                if i < k && !matches!(d, RetryDecision::Retry(_)) {
+                    return Err(format!(
+                        "failure {i}/{k} decided {d:?}, want Retry"
+                    ));
+                }
+                if i == k && d != RetryDecision::Quarantine {
+                    return Err(format!(
+                        "failure {k}/{k} decided {d:?}, want Quarantine"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_success_interleaved_runs_of_k_minus_1_never_quarantine() {
+        // Quarantine is strictly about unbroken failure runs: any
+        // number of (up to K-1 failures, then a success) cycles must
+        // never quarantine — or fail, with the budget matched to K.
+        crate::util::prop::cases(0xFA18, 200, |g| {
+            let k = g.usize_in(2, 6) as u32;
+            let p = RetryPolicy { retries: k, quarantine: k };
+            let mut s = RetryState::new();
+            for _ in 0..g.usize_in(1, 30) {
+                let run = g.usize_in(0, k as usize - 1) as u32;
+                for i in 0..run {
+                    match s.on_failure(&p) {
+                        RetryDecision::Retry(_) => {}
+                        d => {
+                            return Err(format!(
+                                "{d:?} after {} consecutive failures \
+                                 (k={k})",
+                                i + 1
+                            ))
+                        }
+                    }
+                }
+                s.on_success();
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn success_resets_both_counters() {
+        let p = RetryPolicy { retries: 1, quarantine: 3 };
+        let mut s = RetryState::new();
+        assert!(matches!(s.on_failure(&p), RetryDecision::Retry(_)));
+        s.on_success();
+        assert_eq!(s, RetryState::new());
+        // Full budget again after the reset.
+        assert!(matches!(s.on_failure(&p), RetryDecision::Retry(_)));
+    }
+}

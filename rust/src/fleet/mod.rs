@@ -25,16 +25,20 @@
 pub mod report;
 pub mod scheduler;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::compress::Method;
 use crate::coordinator::{Checkpoint, Session, Trainer};
+use crate::faults::{FaultPlan, RetryDecision, RetryPolicy, RetryState};
 use crate::runtime::Engine;
 
-pub use report::{FleetReport, StateCharge, StateGauge, TenantReport};
+pub use report::{FleetFaults, FleetReport, StateCharge, StateGauge,
+                 TenantReport};
 pub use scheduler::{run_work_stealing, WorkerStats};
 
 /// Per-tenant identity derived from the fleet spec: which seeds this
@@ -82,6 +86,15 @@ pub struct FleetSpec {
     /// When set, each tenant checkpoints its final state under
     /// `<dir>/tenant-<id>/final.{bin,json}`.
     pub checkpoint_dir: Option<PathBuf>,
+    /// Optional fault-injection plan (`--chaos <seed>`); `None` = no
+    /// chaos hooks fire.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Recovery knobs. Fleet tenants are whole-run granular (no
+    /// between-burst checkpoints), so a retry re-runs the tenant from
+    /// scratch — deterministic, because a tenant is a pure function of
+    /// its plan. Defaults to fail-fast; [`FleetSpec::chaos`] flips it
+    /// to [`RetryPolicy::default`].
+    pub retry: RetryPolicy,
 }
 
 impl FleetSpec {
@@ -101,6 +114,8 @@ impl FleetSpec {
             eval_batches: 4,
             base_seed: 7,
             checkpoint_dir: None,
+            faults: None,
+            retry: RetryPolicy { retries: 0, quarantine: 0 },
         }
     }
 
@@ -141,6 +156,33 @@ impl FleetSpec {
         self
     }
 
+    /// Enable the seeded chaos storm and default recovery knobs (the
+    /// same plan derivation the serve layer uses).
+    pub fn chaos(mut self, seed: u64) -> FleetSpec {
+        self.faults = Some(Arc::new(FaultPlan::storm(seed)));
+        self.retry = RetryPolicy::default();
+        self
+    }
+
+    /// Install an explicit fault plan (test hook for scripted chaos).
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> FleetSpec {
+        self.faults = Some(plan);
+        self.retry = RetryPolicy::default();
+        self
+    }
+
+    /// Whole-tenant retry budget.
+    pub fn retries(mut self, n: u32) -> FleetSpec {
+        self.retry.retries = n;
+        self
+    }
+
+    /// Consecutive-failure quarantine threshold (0 disables).
+    pub fn quarantine(mut self, n: u32) -> FleetSpec {
+        self.retry.quarantine = n;
+        self
+    }
+
     /// Deterministic per-tenant seed derivation (pure function of the
     /// spec — a tenant's plan is identical whether it runs in a fleet of
     /// 1 or 1000, which is what makes serial-vs-fleet runs comparable).
@@ -167,6 +209,7 @@ fn run_tenant(
         .seed(plan.seed);
     let mut tr = Trainer::new(&fspec)
         .with_context(|| format!("tenant {} trainer", plan.id))?;
+    tr.set_faults(spec.faults.clone());
     let resident = tr.resident_state_bytes();
     // RAII: released on every exit path, error and panic included.
     let _charge = gauge.charge(resident);
@@ -200,17 +243,90 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
     let (frozen_pin, _) = engine
         .frozen_shared(&exec)
         .context("pinning the fleet's shared frozen set")?;
+    // Chaos hooks go live only after startup (manifest resolution and
+    // the frozen pin are not the workload under test); cleared again
+    // before the report is assembled.
+    engine.set_faults(spec.faults.clone());
     let gauge = StateGauge::new();
+    let quarantined_ids: Mutex<Vec<(usize, String)>> =
+        Mutex::new(Vec::new());
+    let mut faults =
+        FleetFaults::empty(spec.retry.retries, spec.retry.quarantine);
+    let retried = std::sync::atomic::AtomicU64::new(0);
+    let recovered = std::sync::atomic::AtomicU64::new(0);
     let t0 = Instant::now();
     let (slots, worker_stats) =
         run_work_stealing(spec.workers, spec.tenants, |worker, id| {
-            run_tenant(engine, spec, spec.tenant(id), worker, &gauge)
+            // Whole-tenant bounded retry: a fleet tenant has no
+            // between-burst checkpoints, so the unit of recovery is
+            // the tenant — a re-run from scratch is a pure replay of
+            // its plan. Panics (injected or real) join the same path.
+            let mut state = RetryState::new();
+            loop {
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    run_tenant(engine, spec, spec.tenant(id), worker,
+                               &gauge)
+                }))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| {
+                            payload.downcast_ref::<String>().cloned()
+                        })
+                        .unwrap_or_else(|| {
+                            "non-string panic payload".to_string()
+                        });
+                    Err(anyhow!("tenant panicked: {msg}"))
+                });
+                match result {
+                    Ok(t) => {
+                        if state.consec > 0 {
+                            recovered.fetch_add(
+                                1,
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                        }
+                        return Ok(t);
+                    }
+                    Err(e) => match state.on_failure(&spec.retry) {
+                        RetryDecision::Retry(backoff) => {
+                            retried.fetch_add(
+                                1,
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                            std::thread::sleep(backoff);
+                        }
+                        RetryDecision::Quarantine => {
+                            quarantined_ids
+                                .lock()
+                                .expect("quarantined")
+                                .push((id, format!("{e:#}")));
+                            return Err(e);
+                        }
+                        RetryDecision::Fail => return Err(e),
+                    },
+                }
+            }
         });
     let wall_s = t0.elapsed().as_secs_f64();
+    engine.set_faults(None);
+    if let Some(p) = &spec.faults {
+        faults.record_plan(p);
+    }
+    faults.retried = retried.into_inner();
+    faults.recovered = recovered.into_inner();
 
+    let mut quarantined = quarantined_ids.into_inner().expect("quarantined");
+    quarantined.sort_by_key(|&(id, _)| id);
     let mut tenants = Vec::with_capacity(spec.tenants);
     let mut failed = Vec::new();
     for (id, slot) in slots.into_iter().enumerate() {
+        if quarantined.iter().any(|&(q, _)| q == id) {
+            // Already has its quarantine row (the Err slot is the same
+            // failure the row records).
+            continue;
+        }
         match slot {
             Some(Ok(t)) => tenants.push(t),
             Some(Err(e)) => failed.push((id, format!("{e:#}"))),
@@ -226,6 +342,7 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
         wall_s,
         tenants,
         failed,
+        quarantined,
         peak_state_bytes: gauge.peak_bytes(),
         // The run's pinned set — exact per-run accounting (one fleet =
         // one frozen upload, whatever N was). Engine-lifetime residency
@@ -233,6 +350,7 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
         shared_frozen_bytes: frozen_pin.bytes,
         worker_stats,
         engine: engine.stats(),
+        faults,
     })
 }
 

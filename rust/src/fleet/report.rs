@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::Result;
 
 use crate::coordinator::FinetuneReport;
+use crate::faults::{FaultPlan, BOUNDARIES};
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
 use crate::util::fs::write_atomic_in;
@@ -71,6 +72,83 @@ impl Drop for StateCharge<'_> {
     }
 }
 
+/// The fleet report's fault-injection + recovery section — the batch
+/// fleet's simpler cousin of the serve layer's per-class
+/// `FaultsReport` (fleet tenants have no priority classes and no
+/// burst-granular recovery latency; the unit of retry is the whole
+/// tenant). ALWAYS emitted, zeroed when no chaos ran.
+#[derive(Debug, Clone)]
+pub struct FleetFaults {
+    /// The chaos seed, `None` when no plan was installed.
+    pub chaos_seed: Option<u64>,
+    /// Whole-tenant retry budget.
+    pub retries: u32,
+    /// Consecutive-failure quarantine threshold (0 = disabled).
+    pub quarantine: u32,
+    /// `(boundary name, injections fired)` in report order.
+    pub injected: Vec<(&'static str, u64)>,
+    /// Failed tenant runs that were re-attempted.
+    pub retried: u64,
+    /// Tenants that failed at least once and eventually completed.
+    pub recovered: u64,
+}
+
+impl FleetFaults {
+    /// A zeroed section for the given knobs (counts filled by the run).
+    pub fn empty(retries: u32, quarantine: u32) -> FleetFaults {
+        FleetFaults {
+            chaos_seed: None,
+            retries,
+            quarantine,
+            injected: BOUNDARIES.iter().map(|b| (b.name(), 0)).collect(),
+            retried: 0,
+            recovered: 0,
+        }
+    }
+
+    /// Fill seed + per-boundary injection counts from a finished plan.
+    pub fn record_plan(&mut self, plan: &FaultPlan) {
+        self.chaos_seed = Some(plan.seed());
+        let counts = plan.injected_counts();
+        self.injected = BOUNDARIES
+            .iter()
+            .map(|b| (b.name(), counts[b.idx()]))
+            .collect();
+    }
+
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        // Seed as a decimal string (u64 > 2^53), omitted when no
+        // chaos ran — the no-null-scalar contract.
+        if let Some(seed) = self.chaos_seed {
+            fields.push(("chaos_seed", s(&seed.to_string())));
+        }
+        fields.push(("retries", num(self.retries as f64)));
+        fields.push(("quarantine", num(self.quarantine as f64)));
+        fields.push((
+            "injected",
+            obj(self
+                .injected
+                .iter()
+                .map(|&(name, n)| (name, num(n as f64)))
+                .collect()),
+        ));
+        fields.push(("retried", num(self.retried as f64)));
+        fields.push(("recovered", num(self.recovered as f64)));
+        obj(fields)
+    }
+}
+
+impl Default for FleetFaults {
+    fn default() -> FleetFaults {
+        FleetFaults::empty(0, 0)
+    }
+}
+
 /// One tenant's outcome inside a fleet run.
 #[derive(Debug, Clone)]
 pub struct TenantReport {
@@ -97,6 +175,9 @@ pub struct FleetReport {
     pub tenants: Vec<TenantReport>,
     /// Tenants that failed (id, error) — absent from `tenants`.
     pub failed: Vec<(usize, String)>,
+    /// Tenants quarantined after K consecutive failed runs (id, last
+    /// error) — absent from `tenants`/`failed`.
+    pub quarantined: Vec<(usize, String)>,
     /// Peak bytes of *per-tenant* mutable training state (trained params
     /// + warm factors) resident at once. Shared frozen weights are
     /// accounted separately below — they don't scale with tenants.
@@ -113,6 +194,8 @@ pub struct FleetReport {
     /// `param_reads` at one per model, and `frozen_builds` at one per
     /// model+method, however many tenants ran).
     pub engine: EngineStats,
+    /// Fault-injection + recovery accounting (zeroed when no chaos).
+    pub faults: FleetFaults,
 }
 
 impl FleetReport {
@@ -142,7 +225,9 @@ impl FleetReport {
         let mut t = Table::new(
             &format!(
                 "Fleet: {} tenants x {} ({}), {} workers",
-                self.tenants.len() + self.failed.len(),
+                self.tenants.len()
+                    + self.failed.len()
+                    + self.quarantined.len(),
                 self.model,
                 self.method,
                 self.workers
@@ -156,7 +241,10 @@ impl FleetReport {
                 tr.worker.to_string(),
                 tr.seed.to_string(),
                 tr.report.steps.to_string(),
-                format!("{:.4}", tr.report.final_loss),
+                match tr.report.final_loss {
+                    Some(l) => format!("{l:.4}"),
+                    None => "-".to_string(),
+                },
                 format!("{:.4}", tr.report.accuracy),
                 format!(
                     "{:.1}",
@@ -168,6 +256,9 @@ impl FleetReport {
         let mut out = t.render();
         for (id, err) in &self.failed {
             out.push_str(&format!("tenant {id} FAILED: {err}\n"));
+        }
+        for (id, err) in &self.quarantined {
+            out.push_str(&format!("tenant {id} QUARANTINED: {err}\n"));
         }
         out.push_str(&format!(
             "aggregate: {:.1} steps/s, {:.2} tenants/s, peak tenant state \
@@ -190,6 +281,17 @@ impl FleetReport {
             self.engine.frozen_builds,
             self.engine.frozen_hits
         ));
+        if let Some(seed) = self.faults.chaos_seed {
+            out.push_str(&format!(
+                "faults: chaos seed {seed}, {} injected, {} retried, \
+                 {} recovered, {} quarantined, {} failed\n",
+                self.faults.total_injected(),
+                self.faults.retried,
+                self.faults.recovered,
+                self.quarantined.len(),
+                self.failed.len(),
+            ));
+        }
         out
     }
 
@@ -217,6 +319,9 @@ impl FleetReport {
                 arr(self.tenants.iter().map(|t| {
                     let mut fields = vec![
                         ("tenant", num(t.tenant as f64)),
+                        // Same explicit-outcome contract as serve.json:
+                        // every row says what happened to its tenant.
+                        ("status", s("ok")),
                         ("worker", num(t.worker as f64)),
                         // Seeds as decimal strings: golden-ratio-hashed
                         // u64 shard seeds exceed 2^53 and would round
@@ -227,27 +332,15 @@ impl FleetReport {
                         ("steps", num(t.report.steps as f64)),
                     ];
                     // Same contract as serve.json (one shared helper):
-                    // a run that never stepped *omits* the key, a
-                    // diverged run (stepped to a non-finite loss)
-                    // raises the flag — `num(NaN)` -> null never
-                    // reaches the artifact. Caveat: FinetuneReport
-                    // carries f32::NAN as its no-loss sentinel, so a
-                    // zero-step run whose *restored* carried loss was
-                    // genuinely NaN is indistinguishable here and
-                    // classifies as never-stepped; unreachable with
-                    // today's always-stepping fleet specs — threading
-                    // Option<f32> through FinetuneReport is the deeper
-                    // fix (ROADMAP).
-                    let loss = t.report.final_loss;
+                    // a run that never stepped *omits* the key
+                    // (`final_loss` is `None`), a diverged run
+                    // (`Some(NaN)`) raises the flag — `num(NaN)` ->
+                    // null never reaches the artifact.
                     push_finite_or_flag(
                         &mut fields,
                         "final_loss",
                         "final_loss_non_finite",
-                        if t.report.steps == 0 && !loss.is_finite() {
-                            None
-                        } else {
-                            Some(loss as f64)
-                        },
+                        t.report.final_loss.map(|l| l as f64),
                     );
                     fields.push(("accuracy", num(t.report.accuracy as f64)));
                     fields.push(("wall_s", num(t.report.wall_s)));
@@ -262,9 +355,24 @@ impl FleetReport {
             (
                 "failed",
                 arr(self.failed.iter().map(|(id, e)| {
-                    obj(vec![("tenant", num(*id as f64)), ("error", s(e))])
+                    obj(vec![
+                        ("tenant", num(*id as f64)),
+                        ("status", s("failed")),
+                        ("error", s(e)),
+                    ])
                 })),
             ),
+            (
+                "quarantined",
+                arr(self.quarantined.iter().map(|(id, e)| {
+                    obj(vec![
+                        ("tenant", num(*id as f64)),
+                        ("status", s("quarantined")),
+                        ("error", s(e)),
+                    ])
+                })),
+            ),
+            ("faults", self.faults.to_json()),
         ])
     }
 

@@ -18,6 +18,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod fleet;
 pub mod metrics;
 pub mod models;

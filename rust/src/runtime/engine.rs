@@ -27,6 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{ExecEntry, Manifest};
 use super::value::{DType, HostTensor};
+use crate::faults::{Boundary, FaultPlan};
 use crate::util::json::{num, obj, Json};
 
 /// Compile/run statistics snapshot, surfaced in `asi engine-stats`, the
@@ -337,6 +338,11 @@ pub struct Engine {
     frozen: RwLock<HashMap<String, Arc<Mutex<Weak<FrozenSet>>>>>,
     /// `Arc` so dropped [`FrozenSet`]s can return their residency charge.
     stats: Arc<AtomicStats>,
+    /// Optional chaos hook: when set, device executions and h2d uploads
+    /// consult the plan before doing real work. Installed per run by
+    /// the serve/fleet loops (`set_faults`), never at construction —
+    /// startup work (frozen pin, param reads) stays fault-free.
+    faults: RwLock<Option<Arc<FaultPlan>>>,
 }
 
 // The engine must stay shareable across tenant workers; this fails to
@@ -359,7 +365,24 @@ impl Engine {
             params: RwLock::new(HashMap::new()),
             frozen: RwLock::new(HashMap::new()),
             stats: Arc::new(AtomicStats::default()),
+            faults: RwLock::new(None),
         })
+    }
+
+    /// Install (or clear, with `None`) the fault-injection plan for
+    /// subsequent executions and uploads. Callers that install a plan
+    /// for a run must clear it before returning — the engine outlives
+    /// any single serve/fleet run.
+    pub fn set_faults(&self, plan: Option<Arc<FaultPlan>>) {
+        *self.faults.write().expect("fault plan") = plan;
+    }
+
+    /// Consult the installed plan (if any) at one boundary.
+    fn fault_check(&self, b: Boundary) -> Result<()> {
+        if let Some(p) = self.faults.read().expect("fault plan").as_ref() {
+            p.check(b)?;
+        }
+        Ok(())
     }
 
     pub fn platform(&self) -> String {
@@ -464,6 +487,7 @@ impl Engine {
 
     /// Execute `name` on `inputs`; returns the flat output tuple.
     pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.fault_check(Boundary::EngineExec)?;
         let cell = self.executable(name)?;
         self.validate(name, inputs)?;
         let literals: Vec<xla::Literal> = inputs
@@ -506,6 +530,7 @@ impl Engine {
     /// uploads them once per model+method and refcounts the buffers
     /// across every tenant.
     pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.fault_check(Boundary::H2dUpload)?;
         let buf = match t {
             HostTensor::F32 { shape, data } => self
                 .client
@@ -526,6 +551,7 @@ impl Engine {
     /// passed through without any copy.
     pub fn run_mixed(&self, name: &str, args: &[ExecArg<'_>])
         -> Result<Vec<HostTensor>> {
+        self.fault_check(Boundary::EngineExec)?;
         let cell = self.executable(name)?;
         let entry = self.manifest.exec(name)?;
         if entry.inputs.len() != args.len() {

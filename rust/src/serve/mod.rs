@@ -33,19 +33,22 @@ pub mod scheduler;
 pub mod stream;
 pub mod writer;
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compress::Method;
 use crate::coordinator::{Checkpoint, Session, Trainer};
+use crate::faults::{Boundary, FaultPlan, RetryDecision, RetryPolicy,
+                    RetryState};
 use crate::fleet::{derive_plan, StateCharge, StateGauge, TenantPlan};
 use crate::runtime::Engine;
 
-pub use report::{percentile, BurstRecord, LatencySummary, ResumeSummary,
-                 ServeReport, TenantServe};
+pub use report::{percentile, BurstRecord, FaultClassStats, FaultsReport,
+                 LatencySummary, ResumeSummary, ServeReport, TenantServe};
 pub use scheduler::{run_stream_pool, Outcome, Priority, RunQueue, TaskCtx,
                     WorkerStats};
 pub use stream::{Burst, StreamSource, SyntheticStream};
@@ -98,6 +101,13 @@ pub struct ServeSpec {
     pub checkpoint_dir: Option<PathBuf>,
     /// Bound of the writer thread's job channel.
     pub writer_capacity: usize,
+    /// Optional fault-injection plan (the `--chaos <seed>` storm, or a
+    /// scripted plan in tests). `None` = no chaos hooks fire.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Recovery knobs. Defaults to `{retries: 0, quarantine: 0}` —
+    /// fail a tenant on its first error, the pre-fault-layer behavior
+    /// — and flips to [`RetryPolicy::default`] when chaos is enabled.
+    pub retry: RetryPolicy,
 }
 
 impl ServeSpec {
@@ -123,6 +133,8 @@ impl ServeSpec {
             policy: Policy::Priority,
             checkpoint_dir: None,
             writer_capacity: 64,
+            faults: None,
+            retry: RetryPolicy { retries: 0, quarantine: 0 },
         }
     }
 
@@ -184,6 +196,35 @@ impl ServeSpec {
         self
     }
 
+    /// Enable the seeded chaos storm (`--chaos <seed>`): every
+    /// boundary misbehaves at a low deterministic rate, and the retry
+    /// knobs flip from fail-fast to [`RetryPolicy::default`].
+    pub fn chaos(mut self, seed: u64) -> ServeSpec {
+        self.faults = Some(Arc::new(FaultPlan::storm(seed)));
+        self.retry = RetryPolicy::default();
+        self
+    }
+
+    /// Install an explicit fault plan (test hook for scripted chaos).
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> ServeSpec {
+        self.faults = Some(plan);
+        self.retry = RetryPolicy::default();
+        self
+    }
+
+    /// Retry budget per failed dispatch (applies with or without
+    /// chaos — a genuine transient failure recovers the same way).
+    pub fn retries(mut self, n: u32) -> ServeSpec {
+        self.retry.retries = n;
+        self
+    }
+
+    /// Consecutive-failure quarantine threshold (0 disables).
+    pub fn quarantine(mut self, n: u32) -> ServeSpec {
+        self.retry.quarantine = n;
+        self
+    }
+
     /// Tenant identity — the same pure derivation the batch fleet uses
     /// ([`crate::fleet::derive_plan`]), so a serve tenant can be
     /// replayed as a fleet/serial run for bit-identity checks.
@@ -217,6 +258,12 @@ struct TenantTask<'g> {
     charge: Option<StateCharge<'g>>,
     bursts_done: u64,
     steps_done: u64,
+    /// Recovery state: retries consumed for the burst being
+    /// re-dispatched, and the consecutive-failure run length.
+    retry: RetryState,
+    /// When the current failure run started (first failed dispatch) —
+    /// cleared on success, its elapsed time is the recovery latency.
+    retry_since: Option<Instant>,
 }
 
 /// What one dispatch's burst work decided.
@@ -265,6 +312,12 @@ fn run_tenant_burst<'g>(
     task: &mut TenantTask<'g>,
 ) -> Result<(Vec<(u64, f64)>, BurstStep, DispatchCost)> {
     let id = task.plan.id;
+    // Transient feed outage: the claimed burst stays in `task.burst`,
+    // so a retried dispatch replays it — the source is never asked
+    // twice for the same burst.
+    if let Some(p) = &spec.faults {
+        p.check(Boundary::StreamSource)?;
+    }
     let mut t0 = Instant::now();
     let resume = task.ckpt.is_some();
     let session = Session::new(engine, task.plan.data_seed);
@@ -273,9 +326,15 @@ fn run_tenant_burst<'g>(
         .lr(spec.lr)
         .seed(task.plan.seed);
     let mut tr = match &task.ckpt {
-        Some(ck) => fspec.resume(ck)?,
+        Some(ck) => {
+            if let Some(p) = &spec.faults {
+                p.check(Boundary::CheckpointLoad)?;
+            }
+            fspec.resume(ck)?
+        }
         None => Trainer::new(&fspec)?,
     };
+    tr.set_faults(spec.faults.clone());
     // Rebuild cost of this dispatch: everything between dispatch and a
     // ready trainer. With shared frozen buffers resident this is pure
     // host-side work (no weight re-upload) — the report proves it.
@@ -314,10 +373,18 @@ fn run_tenant_burst<'g>(
                 format!("tenant {id} burst {}", task.burst.index)
             })?;
             // Snapshot only when something consumes it: the yield/
-            // resume handoff (priority policy) or the checkpoint
-            // stream. A run-to-completion dispatch with no --ckpt
-            // keeps its live trainer and skips the tensor copy.
-            if spec.policy == Policy::Priority || ckpt_dir.is_some() {
+            // resume handoff (priority policy), the checkpoint
+            // stream, or recovery (a retried dispatch restores from
+            // the last good snapshot — without one, a failed FIFO
+            // dispatch would replay from step 0 against a stream
+            // cursor that has moved on). A run-to-completion dispatch
+            // with none of those keeps its live trainer and skips the
+            // tensor copy.
+            if spec.policy == Policy::Priority
+                || ckpt_dir.is_some()
+                || spec.faults.is_some()
+                || spec.retry.retries > 0
+            {
                 let ck = Arc::new(Checkpoint::of(&tr));
                 // Stream the burst checkpoint to disk via the writer
                 // thread; the tenant's own state handoff is the same
@@ -335,6 +402,16 @@ fn run_tenant_burst<'g>(
             timings.push((task.burst.index, t0.elapsed().as_secs_f64()));
             task.bursts_done += 1;
             task.steps_done += task.burst.steps;
+            // Mark the burst consumed (zero-step marker at the new
+            // cursor): if a *later* fault fails this dispatch — the
+            // eval, a feed outage on re-entry — its retry must resume
+            // here, not trip the cursor check by replaying a burst
+            // the checkpoint already contains.
+            task.burst = Burst {
+                index: task.burst.index,
+                start_step: tr.step_idx as u64,
+                steps: 0,
+            };
         }
 
         match stream.next_burst(id) {
@@ -423,10 +500,23 @@ pub fn run_serve_with(
     let (frozen_pin, _) = engine
         .frozen_shared(&exec)
         .context("pinning the serve loop's shared frozen set")?;
-    let writer = Writer::spawn(spec.writer_capacity);
+    // Install the chaos hooks only now: artifact/manifest resolution
+    // and the frozen pin above are startup, not the workload under
+    // test — chaos that kills the run before the first burst proves
+    // nothing about recovery. Cleared again before the report.
+    engine.set_faults(spec.faults.clone());
+    let writer = Writer::spawn_with(
+        spec.writer_capacity,
+        None,
+        spec.faults.clone(),
+        spec.retry.retries,
+    );
     let gauge = StateGauge::new();
     let done: Mutex<Vec<TenantServe>> = Mutex::new(Vec::new());
     let failed: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+    let quarantined: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+    let fault_stats: Mutex<Vec<FaultClassStats>> =
+        Mutex::new(vec![FaultClassStats::default(); 2]);
     let records: Mutex<Vec<BurstRecord>> = Mutex::new(Vec::new());
     let t0 = Instant::now();
 
@@ -456,6 +546,8 @@ pub fn run_serve_with(
                 charge: None,
                 bursts_done: 0,
                 steps_done: 0,
+                retry: RetryState::new(),
+                retry_since: None,
             },
             sched,
         ));
@@ -469,18 +561,89 @@ pub fn run_serve_with(
         spec.workers,
         aging,
         initial,
+        |t: &TenantTask| format!("tenant-{}", t.plan.id),
         |ctx, mut task: TenantTask| {
             let id = task.plan.id;
-            let (timings, step, cost) = match run_tenant_burst(
-                engine, spec, stream, &gauge, &writer, &mut task,
-            ) {
-                Ok(r) => r,
+            // Catch injected (and genuine) panics here rather than in
+            // the pool's last-resort net: a panicked burst mutated
+            // nothing (hooks fire before the first step; between
+            // bursts the tenant is only its checkpoint), so it joins
+            // the ordinary retry path instead of vanishing.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                run_tenant_burst(
+                    engine, spec, stream, &gauge, &writer, &mut task,
+                )
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| {
+                        payload.downcast_ref::<String>().cloned()
+                    })
+                    .unwrap_or_else(|| {
+                        "non-string panic payload".to_string()
+                    });
+                Err(anyhow!("burst panicked: {msg}"))
+            });
+            let (timings, step, cost) = match result {
+                Ok(r) => {
+                    // Recovery bookkeeping: a success after failures
+                    // closes the failure run and records its latency.
+                    if let Some(since) = task.retry_since.take() {
+                        let mut fs =
+                            fault_stats.lock().expect("fault stats");
+                        let c = &mut fs[task.prio.class()];
+                        c.recovered += 1;
+                        c.recovery_s
+                            .push(since.elapsed().as_secs_f64());
+                    }
+                    task.retry.on_success();
+                    r
+                }
                 Err(e) => {
-                    failed
-                        .lock()
-                        .expect("failed")
-                        .push((id, format!("{e:#}")));
-                    return Outcome::Done;
+                    let msg = format!("{e:#}");
+                    return match task.retry.on_failure(&spec.retry) {
+                        RetryDecision::Retry(backoff) => {
+                            fault_stats.lock().expect("fault stats")
+                                [task.prio.class()]
+                            .retried += 1;
+                            if task.retry_since.is_none() {
+                                task.retry_since = Some(Instant::now());
+                            }
+                            // Deterministic backoff, then re-enter the
+                            // queue at our class: the last good
+                            // checkpoint rides in `task.ckpt` and the
+                            // stream cursor in `task.burst`, so the
+                            // re-dispatch is a pure replay.
+                            std::thread::sleep(backoff);
+                            let prio = task.prio;
+                            Outcome::Requeue(task, prio)
+                        }
+                        RetryDecision::Quarantine => {
+                            fault_stats.lock().expect("fault stats")
+                                [task.prio.class()]
+                            .quarantined += 1;
+                            quarantined
+                                .lock()
+                                .expect("quarantined")
+                                .push((id, msg));
+                            // Dropping the task here releases its
+                            // StateCharge: the pool sheds the poison
+                            // tenant's memory and keeps serving.
+                            Outcome::Done
+                        }
+                        RetryDecision::Fail => {
+                            fault_stats.lock().expect("fault stats")
+                                [task.prio.class()]
+                            .failed += 1;
+                            failed
+                                .lock()
+                                .expect("failed")
+                                .push((id, msg));
+                            Outcome::Done
+                        }
+                    };
                 }
             };
             // Ready-time latency semantics: the dispatch's queue wait
@@ -534,12 +697,50 @@ pub fn run_serve_with(
 
     let wall_s = t0.elapsed().as_secs_f64();
     let writer_stats = writer.finish();
+    // Chaos ends with the workload: report assembly and whatever the
+    // caller runs on this engine next are not under test.
+    engine.set_faults(None);
     let mut tenants = done.into_inner().expect("done");
     tenants.sort_by_key(|t| t.tenant);
     let mut failed = failed.into_inner().expect("failed");
+    let quarantined = {
+        let mut q = quarantined.into_inner().expect("quarantined");
+        q.sort_by_key(|(id, _)| *id);
+        q
+    };
+    // The zero-dropped-rows invariant: every tenant this run seeded
+    // ends in exactly one of tenants/failed/quarantined. A tenant can
+    // only vanish if the pool's last-resort panic net fired inside
+    // the dispatch bookkeeping itself — synthesize an explicit failed
+    // row (the panic trace is in WorkerStats::panics) rather than
+    // letting the report silently shrink.
+    {
+        let accounted: std::collections::HashSet<usize> = tenants
+            .iter()
+            .map(|t| t.tenant)
+            .chain(failed.iter().map(|&(id, _)| id))
+            .chain(quarantined.iter().map(|&(id, _)| id))
+            .collect();
+        for id in 0..spec.tenants {
+            if !accounted.contains(&id) {
+                failed.push((
+                    id,
+                    "dropped without a report row (worker panic \
+                     outside the burst; see worker panic traces)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
     failed.sort_by_key(|(id, _)| *id);
     let mut bursts = records.into_inner().expect("records");
     bursts.sort_by_key(|b| (b.tenant, b.burst));
+    let mut faults =
+        FaultsReport::empty(spec.retry.retries, spec.retry.quarantine);
+    if let Some(p) = &spec.faults {
+        faults.record_plan(p);
+    }
+    faults.classes = fault_stats.into_inner().expect("fault stats");
 
     Ok(ServeReport {
         model: spec.model.clone(),
@@ -552,12 +753,14 @@ pub fn run_serve_with(
         wall_s,
         tenants,
         failed,
+        quarantined,
         bursts,
         peak_state_bytes: gauge.peak_bytes(),
         shared_frozen_bytes: frozen_pin.bytes,
         worker_stats,
         writer: writer_stats,
         engine: engine.stats(),
+        faults,
     })
 }
 
@@ -594,6 +797,21 @@ mod tests {
         assert_eq!(spec.burst_steps, 4);
         assert_eq!(spec.eval_batches, 2);
         assert!(spec.workers >= 1);
+    }
+
+    #[test]
+    fn chaos_builder_installs_storm_and_default_retry() {
+        // Fail-fast by default (the pre-fault-layer contract)...
+        let spec = ServeSpec::new("m", Method::Full);
+        assert!(spec.faults.is_none());
+        assert_eq!(spec.retry.retries, 0);
+        assert_eq!(spec.retry.quarantine, 0);
+        // ...and the chaos builder flips recovery on, with the knobs
+        // still overridable afterwards.
+        let spec = spec.chaos(9).retries(5).quarantine(7);
+        assert_eq!(spec.faults.as_ref().unwrap().seed(), 9);
+        assert_eq!(spec.retry.retries, 5);
+        assert_eq!(spec.retry.quarantine, 7);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::faults::{FaultPlan, BOUNDARIES};
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
 use crate::util::fs::write_atomic_in;
@@ -160,6 +161,118 @@ impl ResumeSummary {
     }
 }
 
+/// Recovery counters for one priority class.
+#[derive(Debug, Clone, Default)]
+pub struct FaultClassStats {
+    /// Failed dispatches that were re-queued for another attempt.
+    pub retried: u64,
+    /// Bursts that failed at least once and eventually succeeded.
+    pub recovered: u64,
+    /// Tenants shed after K consecutive failures.
+    pub quarantined: u64,
+    /// Tenants that exhausted the retry budget below the quarantine
+    /// threshold.
+    pub failed: u64,
+    /// Seconds from a burst's first failure to the dispatch that
+    /// recovered it — one sample per recovered burst (the
+    /// recovery-latency cost of the class).
+    pub recovery_s: Vec<f64>,
+}
+
+impl FaultClassStats {
+    pub fn to_json(&self, class: Priority) -> Json {
+        obj(vec![
+            ("class", s(class.name())),
+            ("retried", num(self.retried as f64)),
+            ("recovered", num(self.recovered as f64)),
+            ("quarantined", num(self.quarantined as f64)),
+            ("failed", num(self.failed as f64)),
+            (
+                "recovery",
+                LatencySummary::of(self.recovery_s.iter().copied())
+                    .to_json(),
+            ),
+        ])
+    }
+}
+
+/// The report's fault-injection + recovery section. ALWAYS emitted —
+/// a fault-free run carries the section with zero counts, so report
+/// consumers (and the artifact lint) can rely on its presence.
+#[derive(Debug, Clone)]
+pub struct FaultsReport {
+    /// The chaos seed, `None` when no plan was installed.
+    pub chaos_seed: Option<u64>,
+    /// Retry budget per failed dispatch.
+    pub retries: u32,
+    /// Consecutive-failure quarantine threshold (0 = disabled).
+    pub quarantine: u32,
+    /// `(boundary name, injections fired)` in report order.
+    pub injected: Vec<(&'static str, u64)>,
+    /// One entry per priority class, indexed by [`Priority::class`].
+    pub classes: Vec<FaultClassStats>,
+}
+
+impl FaultsReport {
+    /// A zeroed section for the given knobs (counts filled by the run).
+    pub fn empty(retries: u32, quarantine: u32) -> FaultsReport {
+        FaultsReport {
+            chaos_seed: None,
+            retries,
+            quarantine,
+            injected: BOUNDARIES.iter().map(|b| (b.name(), 0)).collect(),
+            classes: vec![FaultClassStats::default(); 2],
+        }
+    }
+
+    /// Fill seed + per-boundary injection counts from a finished plan.
+    pub fn record_plan(&mut self, plan: &FaultPlan) {
+        self.chaos_seed = Some(plan.seed());
+        let counts = plan.injected_counts();
+        self.injected = BOUNDARIES
+            .iter()
+            .map(|b| (b.name(), counts[b.idx()]))
+            .collect();
+    }
+
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        // Seeds serialize as decimal strings everywhere in this crate
+        // (u64 > 2^53 would round through f64); absent = no chaos —
+        // the no-null-scalar contract again.
+        if let Some(seed) = self.chaos_seed {
+            fields.push(("chaos_seed", s(&seed.to_string())));
+        }
+        fields.push(("retries", num(self.retries as f64)));
+        fields.push(("quarantine", num(self.quarantine as f64)));
+        fields.push((
+            "injected",
+            obj(self
+                .injected
+                .iter()
+                .map(|&(name, n)| (name, num(n as f64)))
+                .collect()),
+        ));
+        fields.push((
+            "classes",
+            arr([Priority::High, Priority::Background]
+                .iter()
+                .map(|p| self.classes[p.class()].to_json(*p))),
+        ));
+        obj(fields)
+    }
+}
+
+impl Default for FaultsReport {
+    fn default() -> FaultsReport {
+        FaultsReport::empty(0, 0)
+    }
+}
+
 /// One tenant's completed stream inside a serve run.
 #[derive(Debug, Clone)]
 pub struct TenantServe {
@@ -192,6 +305,9 @@ pub struct ServeReport {
     pub tenants: Vec<TenantServe>,
     /// Tenants that failed (id, error) — absent from `tenants`.
     pub failed: Vec<(usize, String)>,
+    /// Tenants quarantined after K consecutive failures (id, last
+    /// error) — shed from the pool, absent from `tenants`/`failed`.
+    pub quarantined: Vec<(usize, String)>,
     /// Every dispatched burst, sorted (tenant, burst).
     pub bursts: Vec<BurstRecord>,
     /// Peak bytes of *per-tenant* mutable training state (trained +
@@ -206,6 +322,8 @@ pub struct ServeReport {
     pub worker_stats: Vec<WorkerStats>,
     pub writer: WriterStats,
     pub engine: EngineStats,
+    /// Fault-injection + recovery accounting (zeroed when no chaos).
+    pub faults: FaultsReport,
 }
 
 impl ServeReport {
@@ -242,7 +360,9 @@ impl ServeReport {
         let mut t = Table::new(
             &format!(
                 "Serve: {} tenants x {} ({}), {} workers, {} policy",
-                self.tenants.len() + self.failed.len(),
+                self.tenants.len()
+                    + self.failed.len()
+                    + self.quarantined.len(),
                 self.model,
                 self.method,
                 self.workers,
@@ -268,6 +388,9 @@ impl ServeReport {
         let mut out = t.render();
         for (id, err) in &self.failed {
             out.push_str(&format!("tenant {id} FAILED: {err}\n"));
+        }
+        for (id, err) in &self.quarantined {
+            out.push_str(&format!("tenant {id} QUARANTINED: {err}\n"));
         }
         for prio in [Priority::High, Priority::Background] {
             let l = self.latency(prio);
@@ -334,6 +457,20 @@ impl ServeReport {
             self.writer.blocked_sends,
             self.writer.errors.len()
         ));
+        if let Some(seed) = self.faults.chaos_seed {
+            let agg = |f: fn(&FaultClassStats) -> u64| -> u64 {
+                self.faults.classes.iter().map(f).sum()
+            };
+            out.push_str(&format!(
+                "faults: chaos seed {seed}, {} injected, {} retried, \
+                 {} recovered, {} quarantined, {} failed\n",
+                self.faults.total_injected(),
+                agg(|c| c.retried),
+                agg(|c| c.recovered),
+                agg(|c| c.quarantined),
+                agg(|c| c.failed),
+            ));
+        }
         out
     }
 
@@ -400,6 +537,12 @@ impl ServeReport {
                 arr(self.tenants.iter().map(|t| {
                     let mut fields = vec![
                         ("tenant", num(t.tenant as f64)),
+                        // Every tenant row carries an explicit status
+                        // ("ok" / "failed" / "quarantined") so a report
+                        // consumer never has to infer an outcome from
+                        // which array a tenant landed in — and the
+                        // artifact lint can reject rows without one.
+                        ("status", s("ok")),
                         ("prio", s(t.prio.name())),
                         // Seeds as decimal strings: golden-ratio-hashed
                         // u64 shard seeds exceed 2^53 and would round
@@ -464,9 +607,24 @@ impl ServeReport {
             (
                 "failed",
                 arr(self.failed.iter().map(|(id, e)| {
-                    obj(vec![("tenant", num(*id as f64)), ("error", s(e))])
+                    obj(vec![
+                        ("tenant", num(*id as f64)),
+                        ("status", s("failed")),
+                        ("error", s(e)),
+                    ])
                 })),
             ),
+            (
+                "quarantined",
+                arr(self.quarantined.iter().map(|(id, e)| {
+                    obj(vec![
+                        ("tenant", num(*id as f64)),
+                        ("status", s("quarantined")),
+                        ("error", s(e)),
+                    ])
+                })),
+            ),
+            ("faults", self.faults.to_json()),
         ])
     }
 
@@ -578,6 +736,7 @@ mod tests {
                 },
             ],
             failed: vec![(2, "poisoned".into())],
+            quarantined: vec![(3, "injected fault: engine_exec".into())],
             bursts: vec![
                 burst(0, 0, Priority::High, 0.001),
                 burst(0, 1, Priority::High, 0.002),
@@ -590,6 +749,7 @@ mod tests {
             writer: WriterStats { jobs: 5, checkpoints: 4, reports: 1,
                                   ..Default::default() },
             engine: EngineStats::default(),
+            faults: FaultsReport::empty(2, 3),
         }
     }
 
@@ -733,6 +893,93 @@ mod tests {
             Some(true)
         );
         assert_eq!(tenants[1].get("final_loss").as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn every_tenant_row_carries_an_explicit_status() {
+        let j = fake_report().to_json();
+        for t in j.get("tenants").as_arr().unwrap() {
+            assert_eq!(t.get("status").as_str(), Some("ok"));
+        }
+        let failed = j.get("failed").as_arr().unwrap().to_vec();
+        assert_eq!(failed[0].get("status").as_str(), Some("failed"));
+        let q = j.get("quarantined").as_arr().unwrap().to_vec();
+        assert_eq!(q[0].get("tenant").as_usize(), Some(3));
+        assert_eq!(q[0].get("status").as_str(), Some("quarantined"));
+        assert!(q[0].get("error").as_str().unwrap()
+                 .contains("injected fault"));
+        let rendered = fake_report().render();
+        assert!(rendered.contains("tenant 3 QUARANTINED"), "{rendered}");
+        assert!(rendered.contains("Serve: 4 tenants"), "{rendered}");
+    }
+
+    #[test]
+    fn faults_section_is_present_even_without_chaos() {
+        // The lint (and any consumer) may rely on the section existing;
+        // a fault-free run just reports zeros and no chaos_seed.
+        let j = fake_report().to_json();
+        let f = j.get("faults");
+        assert!(f.get("chaos_seed").as_str().is_none());
+        assert_eq!(f.get("retries").as_usize(), Some(2));
+        assert_eq!(f.get("quarantine").as_usize(), Some(3));
+        assert_eq!(
+            f.get("injected").get("engine_exec").as_usize(),
+            Some(0)
+        );
+        let classes = f.get("classes").as_arr().unwrap().to_vec();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("class").as_str(), Some("high"));
+        assert_eq!(classes[1].get("class").as_str(), Some("background"));
+        // No chaos seed -> no faults footer in the rendered report.
+        assert!(!fake_report().render().contains("faults: chaos seed"));
+    }
+
+    #[test]
+    fn faults_section_records_plan_and_class_counters() {
+        use crate::faults::Boundary;
+        let mut r = fake_report();
+        let plan = FaultPlan::new(42)
+            .script(Boundary::EngineExec, &[true, true, false])
+            .script(Boundary::WriterIo, &[true]);
+        for _ in 0..3 {
+            let _ = plan.decide(Boundary::EngineExec);
+        }
+        let _ = plan.decide(Boundary::WriterIo);
+        r.faults.record_plan(&plan);
+        let hi = &mut r.faults.classes[Priority::High.class()];
+        hi.retried = 2;
+        hi.recovered = 1;
+        hi.recovery_s.push(0.125);
+        r.faults.classes[Priority::Background.class()].quarantined = 1;
+        let j = r.to_json();
+        let f = j.get("faults");
+        // Seed serialized as a decimal string, like every other seed.
+        assert_eq!(f.get("chaos_seed").as_str(), Some("42"));
+        assert_eq!(
+            f.get("injected").get("engine_exec").as_usize(),
+            Some(2)
+        );
+        assert_eq!(f.get("injected").get("writer_io").as_usize(), Some(1));
+        let classes = f.get("classes").as_arr().unwrap().to_vec();
+        assert_eq!(classes[0].get("retried").as_usize(), Some(2));
+        assert_eq!(classes[0].get("recovered").as_usize(), Some(1));
+        assert_eq!(
+            classes[0].get("recovery").get("count").as_usize(),
+            Some(1)
+        );
+        assert_eq!(classes[1].get("quarantined").as_usize(), Some(1));
+        let rendered = r.render();
+        assert!(
+            rendered.contains(
+                "faults: chaos seed 42, 3 injected, 2 retried, \
+                 1 recovered, 1 quarantined, 0 failed"
+            ),
+            "{rendered}"
+        );
+        // The whole report still honors the no-null-scalar contract.
+        let mut clean = r.clone();
+        clean.aging = 8;
+        assert!(!clean.to_json().to_string().contains("null"));
     }
 
     #[test]

@@ -194,6 +194,10 @@ pub struct WorkerStats {
     pub aged: usize,
     /// Bursts whose closure panicked (task dropped from the pool).
     pub panicked: usize,
+    /// Per-panic attribution: `(task label, panic message)` for every
+    /// dispatch counted in `panicked` — a dropped task leaves a trace,
+    /// not just a number.
+    pub panics: Vec<(String, String)>,
     /// Times this worker parked on the condvar (idle/wake telemetry).
     pub parks: usize,
 }
@@ -207,18 +211,24 @@ struct State<T> {
 /// Run re-enqueueable tasks on `workers` threads until every task
 /// completes. `f` receives one task per call and decides via
 /// [`Outcome`] whether the task re-enqueues (yield) or leaves. Panics
-/// inside `f` drop the task (recorded in [`WorkerStats::panicked`])
-/// without sinking the pool. Workers are clamped to
-/// `1..=initial.len()` — re-enqueues never raise concurrency above the
-/// live task count, so extra threads could only idle.
-pub fn run_stream_pool<T, F>(
+/// inside `f` drop the task *attributably*: `label` names each task
+/// before dispatch (it is consumed by the closure, so the name must be
+/// taken up front) and a panicking dispatch records
+/// `(label, panic message)` in [`WorkerStats::panics`] alongside the
+/// [`WorkerStats::panicked`] count — without sinking the pool. Workers
+/// are clamped to `1..=initial.len()` — re-enqueues never raise
+/// concurrency above the live task count, so extra threads could only
+/// idle.
+pub fn run_stream_pool<T, L, F>(
     workers: usize,
     aging: u64,
     initial: Vec<(T, Priority)>,
+    label: L,
     f: F,
 ) -> Vec<WorkerStats>
 where
     T: Send,
+    L: Fn(&T) -> String + Sync,
     F: Fn(&TaskCtx, T) -> Outcome<T> + Sync,
 {
     if initial.is_empty() {
@@ -243,6 +253,7 @@ where
             let cv = &cv;
             let stats = &stats;
             let f = &f;
+            let label = &label;
             s.spawn(move || {
                 let mut guard = state.lock().expect("pool state");
                 loop {
@@ -259,6 +270,9 @@ where
                         continue;
                     };
                     drop(guard);
+                    // Name the task before the closure consumes it —
+                    // a panic leaves nothing else to attribute.
+                    let task_label = label(&p.item);
                     let ctx = TaskCtx {
                         worker: w,
                         prio: p.prio,
@@ -285,8 +299,23 @@ where
                                 cv.notify_all();
                             }
                         }
-                        Err(_) => {
-                            stats[w].lock().expect("stats").panicked += 1;
+                        Err(payload) => {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| {
+                                    payload
+                                        .downcast_ref::<String>()
+                                        .cloned()
+                                })
+                                .unwrap_or_else(|| {
+                                    "non-string panic payload".to_string()
+                                });
+                            let mut st =
+                                stats[w].lock().expect("stats");
+                            st.panicked += 1;
+                            st.panics.push((task_label, msg));
+                            drop(st);
                             guard.live -= 1;
                             if guard.live == 0 {
                                 cv.notify_all();
@@ -386,6 +415,7 @@ mod tests {
             3,
             8,
             (0..6).map(|i| ((i, 0u32), Priority::Background)).collect(),
+            |&(id, _)| format!("t{id}"),
             |_, (id, burst)| {
                 bursts.fetch_add(1, Ordering::SeqCst);
                 if burst + 1 < 4 {
@@ -409,6 +439,7 @@ mod tests {
                 ("bg", Priority::Background),
                 ("hi", Priority::High),
             ],
+            |n| n.to_string(),
             |ctx, name| {
                 order.lock().unwrap().push((name, ctx.prio));
                 Outcome::Done
@@ -426,6 +457,7 @@ mod tests {
             2,
             8,
             (0..5).map(|i| (i, Priority::High)).collect(),
+            |i| format!("task-{i}"),
             |_, i| {
                 ran.fetch_add(1, Ordering::SeqCst);
                 assert!(i != 3, "poison task");
@@ -434,6 +466,13 @@ mod tests {
         );
         assert_eq!(ran.load(Ordering::SeqCst), 5);
         assert_eq!(stats.iter().map(|s| s.panicked).sum::<usize>(), 1);
+        // The dropped task is attributable: its label and panic
+        // message survive in the worker's panic trace.
+        let panics: Vec<_> =
+            stats.iter().flat_map(|s| s.panics.iter()).collect();
+        assert_eq!(panics.len(), 1);
+        assert_eq!(panics[0].0, "task-3");
+        assert!(panics[0].1.contains("poison task"), "{:?}", panics[0]);
     }
 
     #[test]
@@ -445,6 +484,7 @@ mod tests {
             3,
             8,
             vec![(0u32, Priority::High)],
+            |b| format!("burst{b}"),
             |_, burst| {
                 bursts.fetch_add(1, Ordering::SeqCst);
                 std::thread::sleep(Duration::from_millis(1));
@@ -471,6 +511,7 @@ mod tests {
             8,
             vec![(("a", 0u32), Priority::High),
                  (("b", 0u32), Priority::Background)],
+            |&(name, _)| name.to_string(),
             |_, (name, burst)| {
                 if name == "a" || burst >= 6 {
                     Outcome::Done
@@ -488,6 +529,7 @@ mod tests {
     #[test]
     fn empty_pool_returns_immediately() {
         let stats = run_stream_pool(4, 8, Vec::<(u32, Priority)>::new(),
+                                    |b| b.to_string(),
                                     |_, _| Outcome::Done);
         assert!(stats.is_empty());
     }

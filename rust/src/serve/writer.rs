@@ -7,9 +7,11 @@
 //! channel's bound is reached (at which point `submit` blocks — the
 //! back-pressure is deliberate and counted, not silent). All file
 //! output goes through the atomic tmp+rename path, and write *errors*
-//! are collected into [`WriterStats::errors`] rather than panicking
-//! the writer: a failed checkpoint write must not take the serving
-//! loop down with it.
+//! get a bounded, deterministic retry (the same backoff schedule the
+//! burst-recovery path uses) before being collected into
+//! [`WriterStats::errors`] rather than panicking the writer: a
+//! transient disk hiccup costs a retry, and even a permanently failed
+//! checkpoint write must not take the serving loop down with it.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,6 +23,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coordinator::Checkpoint;
+use crate::faults::{Boundary, FaultPlan, RetryPolicy};
 use crate::util::fs::write_atomic_in;
 
 /// One unit of deferred I/O.
@@ -47,7 +50,11 @@ pub struct WriterStats {
     /// Submissions that found the channel full and had to block — the
     /// back-pressure indicator (0 on a healthy disk).
     pub blocked_sends: u64,
-    /// Write failures (job description + error); never panics the pool.
+    /// Write attempts that failed and were retried (bounded; a job
+    /// that eventually succeeds leaves no `errors` entry).
+    pub retried: u64,
+    /// Write failures that exhausted their retry budget (job
+    /// description + error); never panics the pool.
     pub errors: Vec<String>,
 }
 
@@ -60,7 +67,8 @@ pub struct Writer {
 }
 
 impl Writer {
-    /// Spawn the writer with a channel bound of `capacity` jobs.
+    /// Spawn the writer with a channel bound of `capacity` jobs and the
+    /// default retry budget.
     pub fn spawn(capacity: usize) -> Writer {
         Writer::spawn_throttled(capacity, None)
     }
@@ -69,9 +77,22 @@ impl Writer {
     /// slow disk so back-pressure paths can be exercised on a fast one.
     pub fn spawn_throttled(capacity: usize, throttle: Option<Duration>)
         -> Writer {
+        Writer::spawn_with(capacity, throttle, None,
+                           RetryPolicy::default().retries)
+    }
+
+    /// Full-control constructor: optional chaos plan (consulted at
+    /// [`Boundary::WriterIo`] before every write attempt) and the
+    /// bounded per-job retry budget.
+    pub fn spawn_with(
+        capacity: usize,
+        throttle: Option<Duration>,
+        faults: Option<Arc<FaultPlan>>,
+        retries: u32,
+    ) -> Writer {
         let (tx, rx) = sync_channel::<WriteJob>(capacity.max(1));
         let handle =
-            std::thread::spawn(move || drain(rx, throttle));
+            std::thread::spawn(move || drain(rx, throttle, faults, retries));
         Writer { tx: Some(tx), handle: Some(handle), blocked: AtomicU64::new(0) }
     }
 
@@ -123,7 +144,12 @@ impl Drop for Writer {
     }
 }
 
-fn drain(rx: Receiver<WriteJob>, throttle: Option<Duration>) -> WriterStats {
+fn drain(
+    rx: Receiver<WriteJob>,
+    throttle: Option<Duration>,
+    faults: Option<Arc<FaultPlan>>,
+    retries: u32,
+) -> WriterStats {
     let mut st = WriterStats::default();
     while let Ok(job) = rx.recv() {
         if let Some(d) = throttle {
@@ -131,23 +157,53 @@ fn drain(rx: Receiver<WriteJob>, throttle: Option<Duration>) -> WriterStats {
         }
         let t0 = Instant::now();
         st.jobs += 1;
-        let outcome = match job {
-            WriteJob::Checkpoint { dir, stem, ckpt } => {
+        match &job {
+            WriteJob::Checkpoint { ckpt, .. } => {
                 st.checkpoints += 1;
                 st.bytes += ckpt.state_bytes();
-                ckpt.save(&dir, &stem).map_err(|e| {
-                    format!("checkpoint {}/{stem}: {e:#}", dir.display())
-                })
             }
-            WriteJob::Report { dir, name, text } => {
+            WriteJob::Report { text, .. } => {
                 st.reports += 1;
                 st.bytes += text.len() as u64;
-                write_atomic_in(&dir, &name, text.as_bytes())
-                    .map_err(|e| format!("report {name}: {e:#}"))
             }
-        };
-        if let Err(msg) = outcome {
-            st.errors.push(msg);
+        }
+        // Bounded retry: a transient failure (injected or real) costs
+        // a deterministic backoff + one more attempt; only an
+        // exhausted budget lands in `errors`. Writes are atomic
+        // (tmp+rename), so a failed attempt leaves nothing partial to
+        // clean up before retrying.
+        let mut attempt = 0u32;
+        loop {
+            let outcome = (|| -> Result<(), String> {
+                if let Some(p) = &faults {
+                    p.check(Boundary::WriterIo)
+                        .map_err(|e| format!("{e:#}"))?;
+                }
+                match &job {
+                    WriteJob::Checkpoint { dir, stem, ckpt } => {
+                        ckpt.save(dir, stem).map_err(|e| {
+                            format!("checkpoint {}/{stem}: {e:#}",
+                                    dir.display())
+                        })
+                    }
+                    WriteJob::Report { dir, name, text } => {
+                        write_atomic_in(dir, name, text.as_bytes())
+                            .map_err(|e| format!("report {name}: {e:#}"))
+                    }
+                }
+            })();
+            match outcome {
+                Ok(()) => break,
+                Err(_) if attempt < retries => {
+                    attempt += 1;
+                    st.retried += 1;
+                    std::thread::sleep(RetryPolicy::backoff(attempt));
+                }
+                Err(msg) => {
+                    st.errors.push(msg);
+                    break;
+                }
+            }
         }
         st.busy_s += t0.elapsed().as_secs_f64();
     }
@@ -233,6 +289,51 @@ mod tests {
         assert!(st.errors[0].contains("occupied"), "{:?}", st.errors);
         assert_eq!(std::fs::read_to_string(dir.join("fine.txt")).unwrap(),
                    "ok");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_write_failure_retries_to_success() {
+        let dir = scratch("transient");
+        // Scripted sink: the first two attempts fail, the third
+        // succeeds — inside the budget, so the job lands with no error.
+        let plan = Arc::new(
+            FaultPlan::new(0).script(Boundary::WriterIo, &[true, true]),
+        );
+        let w = Writer::spawn_with(4, None, Some(plan), 2);
+        w.submit(WriteJob::Report {
+            dir: dir.clone(),
+            name: "t.txt".into(),
+            text: "ok".into(),
+        })
+        .unwrap();
+        let st = w.finish();
+        assert_eq!(st.retried, 2, "two failed attempts must be counted");
+        assert!(st.errors.is_empty(), "{:?}", st.errors);
+        assert_eq!(std::fs::read_to_string(dir.join("t.txt")).unwrap(),
+                   "ok");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_lands_in_errors() {
+        let dir = scratch("exhausted");
+        // Every attempt fails: budget 1 means one retry, then an error
+        // row; the file must not exist.
+        let plan =
+            Arc::new(FaultPlan::new(0).rate(Boundary::WriterIo, 1.0));
+        let w = Writer::spawn_with(4, None, Some(plan), 1);
+        w.submit(WriteJob::Report {
+            dir: dir.clone(),
+            name: "never.txt".into(),
+            text: "x".into(),
+        })
+        .unwrap();
+        let st = w.finish();
+        assert_eq!(st.retried, 1);
+        assert_eq!(st.errors.len(), 1, "{:?}", st.errors);
+        assert!(st.errors[0].contains("injected fault"), "{:?}", st.errors);
+        assert!(!dir.join("never.txt").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

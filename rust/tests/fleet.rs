@@ -8,8 +8,8 @@ use std::sync::Mutex;
 
 use asi::compress::Method;
 use asi::coordinator::FinetuneReport;
-use asi::fleet::{run_work_stealing, FleetReport, FleetSpec, StateGauge,
-                 TenantReport};
+use asi::fleet::{run_work_stealing, FleetFaults, FleetReport, FleetSpec,
+                 StateGauge, TenantReport};
 use asi::metrics::Series;
 use asi::runtime::{Engine, EngineStats};
 use asi::util::cli::Args;
@@ -83,7 +83,7 @@ fn fake_tenant(id: usize, steps: u64) -> TenantReport {
             exec: "mcunet_asi_d2_r4".into(),
             steps,
             loss,
-            final_loss: 1.0,
+            final_loss: Some(1.0),
             accuracy: 0.5,
             wall_s: 0.5,
             state_bytes: 1024,
@@ -99,10 +99,12 @@ fn fake_report(workers: usize, tenants: usize, wall_s: f64) -> FleetReport {
         wall_s,
         tenants: (0..tenants).map(|i| fake_tenant(i, 10)).collect(),
         failed: vec![(tenants, "poisoned".into())],
+        quarantined: Vec::new(),
         peak_state_bytes: 4096 * workers as u64,
         shared_frozen_bytes: 65536,
         worker_stats: Vec::new(),
         engine: EngineStats::default(),
+        faults: FleetFaults::default(),
     }
 }
 
@@ -151,8 +153,8 @@ fn report_json_never_emits_null_loss() {
     let mut r = fake_report(2, 3, 1.0);
     // Tenant 0 diverged (stepped to NaN) -> flagged; tenant 2 never
     // stepped -> key simply omitted; tenant 1 is healthy.
-    r.tenants[0].report.final_loss = f32::NAN;
-    r.tenants[2].report.final_loss = f32::NAN;
+    r.tenants[0].report.final_loss = Some(f32::NAN);
+    r.tenants[2].report.final_loss = None;
     r.tenants[2].report.steps = 0;
     let text = r.to_json().to_string();
     assert!(!text.contains("\"final_loss\":null"), "{text}");
@@ -169,6 +171,34 @@ fn report_json_never_emits_null_loss() {
         tenants[2].get("final_loss_non_finite").as_bool().is_none(),
         "zero steps is not divergence"
     );
+}
+
+#[test]
+fn report_rows_carry_status_and_faults_section() {
+    // The artifact lint's contract: every tenant row (ok, failed, or
+    // quarantined) carries an explicit status, and the faults section
+    // is present even for fault-free runs.
+    let mut r = fake_report(2, 2, 1.0);
+    r.quarantined = vec![(3, "injected fault: engine_exec".into())];
+    let rendered = r.render();
+    assert!(rendered.contains("Fleet: 4 tenants"), "{rendered}");
+    assert!(rendered.contains("tenant 3 QUARANTINED"), "{rendered}");
+    let j = r.to_json();
+    for t in j.get("tenants").as_arr().unwrap() {
+        assert_eq!(t.get("status").as_str(), Some("ok"));
+    }
+    let failed = j.get("failed").as_arr().unwrap();
+    assert_eq!(failed[0].get("status").as_str(), Some("failed"));
+    let quarantined = j.get("quarantined").as_arr().unwrap();
+    assert_eq!(quarantined[0].get("status").as_str(), Some("quarantined"));
+    assert_eq!(quarantined[0].get("tenant").as_usize(), Some(3));
+    // Fault-free: no chaos seed key, zero injected, but the section and
+    // its retry policy knobs are still there.
+    let f = j.get("faults");
+    assert!(f.get("chaos_seed").as_str().is_none());
+    assert_eq!(f.get("retries").as_usize(), Some(0));
+    assert_eq!(f.get("quarantine").as_usize(), Some(0));
+    assert!(!j.to_string().contains("null"), "no null scalars");
 }
 
 #[test]
@@ -240,7 +270,8 @@ fn cli_accepts_fleet_flag_set() {
     args.expect_known(
         "fleet",
         &["tenants", "workers", "model", "method", "depth", "rank",
-          "steps", "lr", "seed", "quick", "ckpt", "out", "artifacts"],
+          "steps", "lr", "seed", "quick", "ckpt", "out", "artifacts",
+          "chaos", "retries", "quarantine"],
     )
     .unwrap();
     assert_eq!(args.get("tenants", "4"), "8");

@@ -245,9 +245,9 @@ fn serial_reference(dir: &Path, seed: u64, data_seed: u64) -> FinetuneReport {
 fn assert_reports_identical(a: &FinetuneReport, b: &FinetuneReport) {
     assert_eq!(a.exec, b.exec);
     assert_eq!(
-        a.final_loss.to_bits(),
-        b.final_loss.to_bits(),
-        "final loss diverged: {} vs {}",
+        a.final_loss.map(f32::to_bits),
+        b.final_loss.map(f32::to_bits),
+        "final loss diverged: {:?} vs {:?}",
         a.final_loss,
         b.final_loss
     );
@@ -601,7 +601,7 @@ fn serve_matches_serial_runs_and_streams_checkpoints() {
             .unwrap();
         assert_eq!(
             t.final_loss.map(f32::to_bits),
-            Some(serial.final_loss.to_bits()),
+            serial.final_loss.map(f32::to_bits),
             "tenant {} loss diverged from the serial run",
             t.tenant
         );
@@ -613,6 +613,95 @@ fn serve_matches_serial_runs_and_streams_checkpoints() {
         assert_eq!(Checkpoint::load(&td, "latest").unwrap().step_idx, 6);
     }
     let _ = std::fs::remove_dir_all(&ck);
+}
+
+#[test]
+fn chaos_storm_survivors_bit_identical_to_fault_free() {
+    // The fault layer's headline invariant: under an injected-fault
+    // storm (engine errors, upload failures, checkpoint-load errors,
+    // stream faults, writer I/O errors, panics, stalls), every tenant
+    // that survives retry + recovery finishes with a final checkpoint
+    // BIT-IDENTICAL to the same tenant in a fault-free run — and no
+    // tenant vanishes without an explicit report row.
+    let Some(dir) = artifacts() else { return };
+    use std::collections::HashSet;
+    let engine = Engine::load(&dir).unwrap();
+    let ck_clean = std::env::temp_dir().join("asi_chaos_clean_e2e");
+    let ck_chaos = std::env::temp_dir().join("asi_chaos_storm_e2e");
+    let _ = std::fs::remove_dir_all(&ck_clean);
+    let _ = std::fs::remove_dir_all(&ck_chaos);
+    const TENANTS: usize = 4;
+    let base = ServeSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(TENANTS)
+        .workers(2)
+        .bursts(2)
+        .burst_steps(3)
+        .high_every(2)
+        .base_seed(11);
+
+    let clean = run_serve(
+        &engine,
+        &base.clone().checkpoint_dir(ck_clean.clone()),
+    )
+    .unwrap();
+    assert!(clean.failed.is_empty(), "{:?}", clean.failed);
+    assert_eq!(clean.faults.total_injected(), 0);
+
+    let chaos = run_serve(
+        &engine,
+        &base
+            .checkpoint_dir(ck_chaos.clone())
+            .chaos(9)
+            .retries(6)
+            .quarantine(4),
+    )
+    .unwrap();
+    assert!(
+        chaos.faults.total_injected() > 0,
+        "the storm never fired; raise rates or bursts"
+    );
+
+    // Zero dropped-without-a-row: every tenant id appears in exactly
+    // one of tenants / failed / quarantined.
+    let mut seen = HashSet::new();
+    for id in chaos
+        .tenants
+        .iter()
+        .map(|t| t.tenant)
+        .chain(chaos.failed.iter().map(|(id, _)| *id))
+        .chain(chaos.quarantined.iter().map(|(id, _)| *id))
+    {
+        assert!(seen.insert(id), "tenant {id} reported in two buckets");
+    }
+    assert_eq!(
+        seen,
+        (0..TENANTS).collect::<HashSet<_>>(),
+        "every tenant must land in exactly one report bucket"
+    );
+
+    // Survivors: recovery replayed the exact same training trajectory.
+    for t in &chaos.tenants {
+        let clean_row = clean
+            .tenants
+            .iter()
+            .find(|c| c.tenant == t.tenant)
+            .unwrap();
+        assert_eq!(
+            t.final_loss.map(f32::to_bits),
+            clean_row.final_loss.map(f32::to_bits),
+            "tenant {} loss diverged under chaos",
+            t.tenant
+        );
+        assert_eq!(t.accuracy.to_bits(), clean_row.accuracy.to_bits());
+        let sub = format!("tenant-{:04}", t.tenant);
+        let a = Checkpoint::load(&ck_clean.join(&sub), "final").unwrap();
+        let b = Checkpoint::load(&ck_chaos.join(&sub), "final").unwrap();
+        assert_eq!(a.step_idx, b.step_idx);
+        assert_tensors_bit_identical("trained", &a.trained, &b.trained);
+        assert_tensors_bit_identical("us", &a.us, &b.us);
+    }
+    let _ = std::fs::remove_dir_all(&ck_clean);
+    let _ = std::fs::remove_dir_all(&ck_chaos);
 }
 
 #[test]

@@ -159,6 +159,7 @@ fn prop_pool_completes_every_burst_under_random_interleavings() {
             .collect();
         let total = &bursts;
         let stats = run_stream_pool(workers, aging, initial,
+            |&(id, _)| format!("tenant-{id}"),
             |ctx, (id, b)| {
                 ran[id].fetch_add(1, Ordering::SeqCst);
                 if b + 1 < total[id] {
@@ -198,7 +199,8 @@ fn high_class_preempts_backlogged_background() {
         (("bg-b", 0), Priority::Background),
         (("bg-c", 0), Priority::Background),
     ];
-    run_stream_pool(1, u64::MAX, initial, |_, (name, b)| {
+    run_stream_pool(1, u64::MAX, initial, |&(name, _)| name.to_string(),
+                    |_, (name, b)| {
         order.lock().unwrap().push(name);
         if name == "seed" && b < 2 {
             // The seed task keeps yielding at High: it must re-enter
@@ -225,6 +227,7 @@ fn preempted_task_carries_state_across_dispatches() {
         2,
         4,
         vec![((0u64, VecDeque::from(vec![1, 2, 3])), Priority::High)],
+        |(sum, _)| format!("sum-{sum}"),
         |_, (sum, mut rest): (u64, VecDeque<u64>)| {
             match rest.pop_front() {
                 Some(x) => Outcome::Requeue((sum + x, rest),
@@ -248,7 +251,8 @@ fn pool_workers_share_one_writer_without_loss() {
     let w = Writer::spawn_throttled(2, Some(Duration::from_millis(1)));
     let initial: Vec<((usize, u64), Priority)> =
         (0..6).map(|i| ((i, 0u64), Priority::Background)).collect();
-    run_stream_pool(3, 8, initial, |_, (id, b)| {
+    run_stream_pool(3, 8, initial, |&(id, _)| format!("t{id}"),
+                    |_, (id, b)| {
         w.submit(WriteJob::Report {
             dir: dir.clone(),
             name: format!("t{id}-b{b}.txt"),
@@ -282,17 +286,22 @@ fn pool_workers_share_one_writer_without_loss() {
 fn cli_accepts_serve_flag_set() {
     let args = Args::parse_from(
         ["serve", "--tenants", "8", "--bursts", "4", "--burst-steps",
-         "10", "--high-every", "4", "--aging", "8", "--fifo", "--quick"]
+         "10", "--high-every", "4", "--aging", "8", "--fifo", "--quick",
+         "--chaos", "1", "--retries", "3", "--quarantine", "5"]
             .map(String::from),
     );
     args.expect_known(
         "serve",
         &["tenants", "workers", "bursts", "burst-steps", "high-every",
           "aging", "fifo", "model", "method", "depth", "rank", "lr",
-          "seed", "quick", "ckpt", "out", "artifacts"],
+          "seed", "quick", "ckpt", "out", "artifacts", "chaos",
+          "retries", "quarantine"],
     )
     .unwrap();
     assert_eq!(args.get("bursts", "1"), "4");
+    assert_eq!(args.get("chaos", ""), "1");
+    assert_eq!(args.get("retries", "2"), "3");
+    assert_eq!(args.get("quarantine", "3"), "5");
     assert!(args.has("fifo"));
 }
 

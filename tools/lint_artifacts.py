@@ -19,6 +19,7 @@ nulls outside the allowlist. Exit code 1 on any violation.
 
 import glob
 import json
+import os
 import sys
 
 # Keys where `null` is a documented sentinel, not data corruption.
@@ -51,6 +52,35 @@ def find_nulls(node, path, bad):
             find_nulls(v, f"{path}[{i}]", bad)
 
 
+# Reports produced by the serve/fleet runners (not the benches'
+# BENCH_*.json, which predate the fault layer's schema): each must
+# carry the fault-injection section and explicit per-row statuses, so
+# a shed tenant can never disappear from the artifact silently.
+FAULTED_REPORTS = {"serve.json", "fleet.json"}
+
+
+def check_fault_schema(path, doc):
+    """Schema checks for serve.json / fleet.json: a top-level `faults`
+    object, and an explicit `status` on every tenant row (ok, failed,
+    or quarantined)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    if not isinstance(doc.get("faults"), dict):
+        errs.append(f"{path}: missing top-level 'faults' section")
+    for bucket in ("tenants", "failed", "quarantined"):
+        rows = doc.get(bucket)
+        if not isinstance(rows, list):
+            errs.append(f"{path}: missing '{bucket}' array")
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict) or "status" not in row:
+                errs.append(
+                    f"{path}: {bucket}[{i}] has no 'status' field"
+                )
+    return errs
+
+
 def lint(path):
     """Returns a list of violation strings for one existing file."""
     try:
@@ -60,7 +90,10 @@ def lint(path):
         return [f"{path}: unparseable JSON ({e})"]
     bad = []
     find_nulls(doc, "", bad)
-    return [f"{path}: null value at '{p}'" for p in bad]
+    errs = [f"{path}: null value at '{p}'" for p in bad]
+    if os.path.basename(path) in FAULTED_REPORTS:
+        errs.extend(check_fault_schema(path, doc))
+    return errs
 
 
 def main(argv):
