@@ -143,6 +143,7 @@ impl<'a> FinetuneSpec<'a> {
     pub fn run_trainer(&self, tr: &mut Trainer<'_>) -> Result<FinetuneReport> {
         let batch = self.session.batch_size(&self.model)?;
         let mut loss = Series::new("loss");
+        // lint: allow(measurement: steps/s telemetry only)
         let t0 = std::time::Instant::now();
         for i in 0..self.steps {
             let b = self.session.downstream_ds.batch("train", i, batch);

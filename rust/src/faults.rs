@@ -33,6 +33,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;
+use crate::util::sync::MutexExt;
 
 /// A named injection point. Every hook asks its plan "do I fail this
 /// call?" with one of these, so reports can attribute chaos per
@@ -153,6 +154,7 @@ impl FaultPlan {
 
     /// Set the injection probability of one boundary.
     pub fn rate(mut self, b: Boundary, p: f32) -> FaultPlan {
+        // lint: allow(bounds: Boundary::idx() < NB by construction)
         self.rates[b.idx()] = p;
         self
     }
@@ -160,9 +162,9 @@ impl FaultPlan {
     /// Pin the first `decisions.len()` outcomes at `b` (test hook);
     /// later calls fall back to the seeded rate.
     pub fn script(self, b: Boundary, decisions: &[bool]) -> FaultPlan {
+        // lint: allow(bounds: Boundary::idx() < NB by construction)
         self.scripts[b.idx()]
-            .lock()
-            .expect("fault script")
+            .lock_ok()
             .extend(decisions.iter().copied());
         self
     }
@@ -195,15 +197,19 @@ impl FaultPlan {
     /// One injection decision at `b` (advances the boundary's call
     /// counter; counts the injection if it fires).
     pub fn decide(&self, b: Boundary) -> bool {
+        // lint: allow(bounds: Boundary::idx() < NB by construction)
         let i = b.idx();
+        // lint: allow(bounds: i < NB, see above)
         let n = self.calls[i].fetch_add(1, Ordering::Relaxed);
-        let scripted =
-            self.scripts[i].lock().expect("fault script").pop_front();
+        // lint: allow(bounds: i < NB, see above)
+        let scripted = self.scripts[i].lock_ok().pop_front();
         let fail = match scripted {
             Some(d) => d,
+            // lint: allow(bounds: i < NB, see above)
             None => Self::fails_at(self.seed, b, n, self.rates[i]),
         };
         if fail {
+            // lint: allow(bounds: i < NB, see above)
             self.injected[i].fetch_add(1, Ordering::Relaxed);
         }
         fail
@@ -233,11 +239,13 @@ impl FaultPlan {
 
     /// Injections fired so far, per boundary (report order).
     pub fn injected_counts(&self) -> [u64; NB] {
+        // lint: allow(bounds: from_fn indices range over 0..NB)
         std::array::from_fn(|i| self.injected[i].load(Ordering::Relaxed))
     }
 
     /// Decisions taken so far, per boundary (report order).
     pub fn call_counts(&self) -> [u64; NB] {
+        // lint: allow(bounds: from_fn indices range over 0..NB)
         std::array::from_fn(|i| self.calls[i].load(Ordering::Relaxed))
     }
 
@@ -340,6 +348,7 @@ impl RetryState {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -36,6 +36,7 @@ use crate::compress::Method;
 use crate::coordinator::{Checkpoint, Session, Trainer};
 use crate::faults::{FaultPlan, RetryDecision, RetryPolicy, RetryState};
 use crate::runtime::Engine;
+use crate::util::sync::{into_inner_ok, MutexExt};
 
 pub use report::{FleetFaults, FleetReport, StateCharge, StateGauge,
                  TenantReport};
@@ -254,6 +255,7 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
         FleetFaults::empty(spec.retry.retries, spec.retry.quarantine);
     let retried = std::sync::atomic::AtomicU64::new(0);
     let recovered = std::sync::atomic::AtomicU64::new(0);
+    // lint: allow(measurement: fleet wall-clock telemetry only)
     let t0 = Instant::now();
     let (slots, worker_stats) =
         run_work_stealing(spec.workers, spec.tenants, |worker, id| {
@@ -299,8 +301,7 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
                         }
                         RetryDecision::Quarantine => {
                             quarantined_ids
-                                .lock()
-                                .expect("quarantined")
+                                .lock_ok()
                                 .push((id, format!("{e:#}")));
                             return Err(e);
                         }
@@ -317,7 +318,7 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
     faults.retried = retried.into_inner();
     faults.recovered = recovered.into_inner();
 
-    let mut quarantined = quarantined_ids.into_inner().expect("quarantined");
+    let mut quarantined = into_inner_ok(quarantined_ids);
     quarantined.sort_by_key(|&(id, _)| id);
     let mut tenants = Vec::with_capacity(spec.tenants);
     let mut failed = Vec::new();
@@ -355,6 +356,7 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -112,6 +112,7 @@ impl FleetFaults {
         let counts = plan.injected_counts();
         self.injected = BOUNDARIES
             .iter()
+            // lint: allow(bounds: Boundary::idx() < NB == counts.len())
             .map(|b| (b.name(), counts[b.idx()]))
             .collect();
     }
@@ -389,6 +390,7 @@ impl FleetReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -15,6 +15,8 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
+use crate::util::sync::{into_inner_ok, MutexExt};
+
 /// Per-worker execution counters, surfaced in the fleet report.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
@@ -53,7 +55,8 @@ where
     let deques: Vec<Mutex<VecDeque<usize>>> =
         (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
     for i in 0..items {
-        deques[i % workers].lock().expect("deque").push_back(i);
+        // lint: allow(bounds: i % workers < workers == deques.len())
+        deques[i % workers].lock_ok().push_back(i);
     }
 
     let results: Vec<Mutex<Option<T>>> =
@@ -71,16 +74,16 @@ where
             s.spawn(move || loop {
                 // Own deque first (front), then steal (back), scanning
                 // siblings starting after ourselves to spread pressure.
+                // lint: allow(bounds: w < workers == deques.len())
                 let mut task: Option<(usize, bool)> = deques[w]
-                    .lock()
-                    .expect("deque")
+                    .lock_ok()
                     .pop_front()
                     .map(|i| (i, false));
                 if task.is_none() {
                     for k in 1..workers {
                         let victim = (w + k) % workers;
-                        if let Some(i) =
-                            deques[victim].lock().expect("deque").pop_back()
+                        // lint: allow(bounds: victim < workers)
+                        if let Some(i) = deques[victim].lock_ok().pop_back()
                         {
                             task = Some((i, true));
                             break;
@@ -89,12 +92,14 @@ where
                 }
                 let Some((i, stolen)) = task else { break };
                 let out = catch_unwind(AssertUnwindSafe(|| f(w, i)));
-                let mut st = stats[w].lock().expect("stats");
+                // lint: allow(bounds: w < workers == stats.len())
+                let mut st = stats[w].lock_ok();
                 st.executed += 1;
                 st.stolen += usize::from(stolen);
                 match out {
                     Ok(v) => {
-                        *results[i].lock().expect("result slot") = Some(v);
+                        // lint: allow(bounds: i < items == results.len())
+                        *results[i].lock_ok() = Some(v);
                     }
                     Err(_) => st.panicked += 1,
                 }
@@ -103,18 +108,13 @@ where
     });
 
     (
-        results
-            .into_iter()
-            .map(|m| m.into_inner().expect("result slot"))
-            .collect(),
-        stats
-            .into_iter()
-            .map(|m| m.into_inner().expect("stats"))
-            .collect(),
+        results.into_iter().map(into_inner_ok).collect(),
+        stats.into_iter().map(into_inner_ok).collect(),
     )
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};

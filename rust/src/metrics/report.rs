@@ -183,6 +183,7 @@ impl Series {
             (
                 "points",
                 arr(self.points.iter().map(|&(step, v)| {
+                    // lint: allow(finite: `points` is a documented NULL_OK sentinel)
                     arr([Json::Num(step as f64), Json::Num(v)])
                 })),
             ),

@@ -29,6 +29,7 @@ use super::manifest::{ExecEntry, Manifest};
 use super::value::{DType, HostTensor};
 use crate::faults::{Boundary, FaultPlan};
 use crate::util::json::{num, obj, Json};
+use crate::util::sync::RwLockExt;
 
 /// Compile/run statistics snapshot, surfaced in `asi engine-stats`, the
 /// fleet report and the benches.
@@ -68,6 +69,7 @@ impl EngineStats {
             ("compiles", num(self.compiles as f64)),
             ("compile_s", num(self.compile_s)),
             ("runs", num(self.runs as f64)),
+            // lint: allow(finite: accumulated Instant::elapsed sums)
             ("run_s", num(self.run_s)),
             ("h2d_bytes", num(self.h2d_bytes as f64)),
             ("d2h_bytes", num(self.d2h_bytes as f64)),
@@ -173,6 +175,7 @@ impl FrozenSet {
         } else {
             k + self.n_trained
         };
+        // lint: allow(bounds: k < n_frozen() keeps i < full.len())
         &self.full[i]
     }
 }
@@ -231,10 +234,12 @@ pub(crate) fn split_frozen(
         .collect();
 
     // CNN convention first: frozen tensors flatten before trained.
+    // lint: allow(bounds: arity == n_frozen + n_trained checked above)
     let prefix_ok = params[..n_frozen]
         .iter()
         .zip(&frozen_shapes)
         .all(|(p, s)| p.shape() == *s)
+        // lint: allow(bounds: arity checked above)
         && params[n_frozen..]
             .iter()
             .zip(&trained_shapes)
@@ -249,12 +254,15 @@ pub(crate) fn split_frozen(
     let n = params.len();
     'start: for start in (0..=(n - n_trained)).rev() {
         for (k, want) in trained_shapes.iter().enumerate() {
+            // lint: allow(bounds: start + k < start + n_trained <= n)
             if params[start + k].shape() != *want {
                 continue 'start;
             }
         }
+        // lint: allow(bounds: start + n_trained <= n by loop range)
         let rest: Vec<&HostTensor> = params[..start]
             .iter()
+            // lint: allow(bounds: start + n_trained <= n by loop range)
             .chain(params[start + n_trained..].iter())
             .collect();
         if rest.len() == n_frozen
@@ -267,6 +275,17 @@ pub(crate) fn split_frozen(
         "{}: could not align init params with executable signature",
         entry.name
     );
+}
+
+/// First element of a PJRT execution result (replica 0, output 0) as
+/// a typed error instead of a panicking index: a client that returns
+/// no replicas is an engine bug to surface as an `Err`, not an abort
+/// that takes every tenant on the pool down with it.
+fn first_result<T>(result: &[Vec<T>]) -> Result<&T> {
+    result
+        .first()
+        .and_then(|r| r.first())
+        .context("execution returned no replicas/outputs")
 }
 
 /// One cache slot with fallible once-initialization: `init` serializes
@@ -294,6 +313,7 @@ impl<T> InitCell<T> {
         self.slot.get()
     }
 
+    #[allow(clippy::expect_used)]
     fn get_or_try_init(&self, fill: impl FnOnce() -> Result<T>) -> Result<&T> {
         if self.slot.get().is_none() {
             // Recover a poisoned guard: the OnceLock slot (not the
@@ -308,6 +328,7 @@ impl<T> InitCell<T> {
                 let _ = self.slot.set(v);
             }
         }
+        // lint: allow(invariant: slot filled above under the init mutex)
         Ok(self.slot.get().expect("just populated"))
     }
 }
@@ -374,12 +395,12 @@ impl Engine {
     /// for a run must clear it before returning — the engine outlives
     /// any single serve/fleet run.
     pub fn set_faults(&self, plan: Option<Arc<FaultPlan>>) {
-        *self.faults.write().expect("fault plan") = plan;
+        *self.faults.write_ok() = plan;
     }
 
     /// Consult the installed plan (if any) at one boundary.
     fn fault_check(&self, b: Boundary) -> Result<()> {
-        if let Some(p) = self.faults.read().expect("fault plan").as_ref() {
+        if let Some(p) = self.faults.read_ok().as_ref() {
             p.check(b)?;
         }
         Ok(())
@@ -398,7 +419,7 @@ impl Engine {
     fn executable(&self, name: &str)
         -> Result<Arc<InitCell<xla::PjRtLoadedExecutable>>> {
         // Warm path: a read lock and a map hit.
-        if let Some(cell) = self.exes.read().expect("exe cache").get(name) {
+        if let Some(cell) = self.exes.read_ok().get(name) {
             if cell.get().is_some() {
                 return Ok(cell.clone());
             }
@@ -406,12 +427,13 @@ impl Engine {
         // Cold path: install the cell under the write lock (cheap), then
         // compile under the cell's own lock so other entries stay live.
         let cell = {
-            let mut map = self.exes.write().expect("exe cache");
+            let mut map = self.exes.write_ok();
             map.entry(name.to_string()).or_default().clone()
         };
         cell.get_or_try_init(|| {
             let entry = self.manifest.exec(name)?;
             let path = self.dir.join(&entry.file);
+            // lint: allow(measurement: compile_s telemetry only)
             let t0 = Instant::now();
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().context("artifact path not utf-8")?,
@@ -486,6 +508,7 @@ impl Engine {
     }
 
     /// Execute `name` on `inputs`; returns the flat output tuple.
+    #[allow(clippy::expect_used)]
     pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.fault_check(Boundary::EngineExec)?;
         let cell = self.executable(name)?;
@@ -494,12 +517,15 @@ impl Engine {
             .iter()
             .map(|t| t.to_literal())
             .collect::<Result<_>>()?;
+        // lint: allow(measurement: run_s telemetry only)
         let t0 = Instant::now();
+        // lint: allow(invariant: executable() only returns populated cells)
         let exe = cell.get().expect("populated by executable()");
         let result = exe
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("executing {name}"))?;
-        let tuple = result[0][0]
+        let tuple = first_result(&result)
+            .with_context(|| format!("empty result executing {name}"))?
             .to_literal_sync()
             .context("fetching result literal")?;
         let parts = tuple.to_tuple().context("decomposing result tuple")?;
@@ -549,6 +575,7 @@ impl Engine {
     /// Execute with a mix of resident device buffers and host tensors.
     /// Host arguments are uploaded on the fly; buffer arguments are
     /// passed through without any copy.
+    #[allow(clippy::expect_used)]
     pub fn run_mixed(&self, name: &str, args: &[ExecArg<'_>])
         -> Result<Vec<HostTensor>> {
         self.fault_check(Boundary::EngineExec)?;
@@ -583,15 +610,19 @@ impl Engine {
             .into_iter()
             .map(|s| match s {
                 Ok(b) => b,
+                // lint: allow(bounds: idx enumerates owned's own entries)
                 Err(idx) => &owned[idx],
             })
             .collect();
+        // lint: allow(measurement: run_s telemetry only)
         let t0 = Instant::now();
+        // lint: allow(invariant: executable() only returns populated cells)
         let exe = cell.get().expect("populated by executable()");
         let result = exe
             .execute_b::<&xla::PjRtBuffer>(&bufs)
             .with_context(|| format!("executing {name} (buffers)"))?;
-        let tuple = result[0][0]
+        let tuple = first_result(&result)
+            .with_context(|| format!("empty result executing {name}"))?
             .to_literal_sync()
             .context("fetching result literal")?;
         let parts = tuple.to_tuple().context("decomposing result tuple")?;
@@ -614,14 +645,13 @@ impl Engine {
         // happens under the model's own cell lock — concurrent tenants
         // of one model trigger exactly one read, and warm lookups of
         // other models never block behind it.
-        if let Some(cell) = self.params.read().expect("param cache").get(model)
-        {
+        if let Some(cell) = self.params.read_ok().get(model) {
             if let Some(p) = cell.get() {
                 return Ok(p.clone());
             }
         }
         let cell = {
-            let mut map = self.params.write().expect("param cache");
+            let mut map = self.params.write_ok();
             map.entry(model.to_string()).or_default().clone()
         };
         let p = cell
@@ -652,18 +682,12 @@ impl Engine {
         // the next tenant refills. (The read guard must drop before the
         // write lock is requested: std's RwLock self-deadlocks on
         // read-then-write from one thread.)
-        let cached = self
-            .frozen
-            .read()
-            .expect("frozen cache")
-            .get(exec_name)
-            .cloned();
+        let cached = self.frozen.read_ok().get(exec_name).cloned();
         let cell = match cached {
             Some(c) => c,
             None => self
                 .frozen
-                .write()
-                .expect("frozen cache")
+                .write_ok()
                 .entry(exec_name.to_string())
                 .or_default()
                 .clone(),
@@ -682,8 +706,10 @@ impl Engine {
         // Frozen tensors in trainer order: init order minus the trained
         // run. Views into the memoized blob — no host copy.
         let frozen_view = || {
+            // lint: allow(bounds: split_frozen validated the geometry)
             full[..trained_start]
                 .iter()
+                // lint: allow(bounds: split_frozen validated the geometry)
                 .chain(full[trained_start + n_trained..].iter())
         };
         let dev: Vec<xla::PjRtBuffer> = frozen_view()
@@ -728,8 +754,19 @@ impl Engine {
         let mut off = 0usize;
         for sig in &pf.tensors {
             let n = sig.elements();
-            let data: Vec<f32> = bytes[off..off + 4 * n]
+            let end = off + 4 * n;
+            if bytes.len() < end {
+                bail!(
+                    "params file for {model} truncated: need {end} bytes \
+                     for {}, have {}",
+                    sig.name,
+                    bytes.len()
+                );
+            }
+            // lint: allow(bounds: length checked above)
+            let data: Vec<f32> = bytes[off..end]
                 .chunks_exact(4)
+                // lint: allow(bounds: chunks_exact(4) yields 4-byte chunks)
                 .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
             out.push(HostTensor::f32(sig.shape.clone(), data));
@@ -760,6 +797,7 @@ impl Engine {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::runtime::manifest::TensorSig;

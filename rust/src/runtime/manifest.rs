@@ -227,7 +227,11 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
                     .iter()
                     .map(|s| {
                         let u = s.usize_vec();
-                        [u[0], u[1], u[2], u[3]]
+                        // Short entries default like the scalar fields
+                        // below (malformed manifests fail in shape
+                        // checks, not here with an abort).
+                        let d = |i| u.get(i).copied().unwrap_or(1);
+                        [d(0), d(1), d(2), d(3)]
                     })
                     .collect()
             };
@@ -288,6 +292,7 @@ fn parse_exec(name: &str, e: &Json) -> Result<ExecEntry> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

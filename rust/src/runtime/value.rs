@@ -114,6 +114,7 @@ impl HostTensor {
         if d.len() != 1 {
             bail!("expected scalar, got {} elements", d.len());
         }
+        // lint: allow(bounds: length checked above)
         Ok(d[0])
     }
 
@@ -124,6 +125,7 @@ impl HostTensor {
         match self {
             HostTensor::F32 { shape, data } => {
                 if shape.is_empty() {
+                    // lint: allow(bounds: rank-0 tensors hold one element)
                     return Ok(xla::Literal::scalar(data[0]));
                 }
                 xla::Literal::vec1(data)
@@ -132,6 +134,7 @@ impl HostTensor {
             }
             HostTensor::S32 { shape, data } => {
                 if shape.is_empty() {
+                    // lint: allow(bounds: rank-0 tensors hold one element)
                     return Ok(xla::Literal::scalar(data[0]));
                 }
                 xla::Literal::vec1(data)
@@ -159,6 +162,7 @@ impl HostTensor {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -46,6 +46,7 @@ use crate::faults::{Boundary, FaultPlan, RetryDecision, RetryPolicy,
                     RetryState};
 use crate::fleet::{derive_plan, StateCharge, StateGauge, TenantPlan};
 use crate::runtime::Engine;
+use crate::util::sync::{into_inner_ok, MutexExt};
 
 pub use report::{percentile, BurstRecord, FaultClassStats, FaultsReport,
                  LatencySummary, ResumeSummary, ServeReport, TenantServe};
@@ -276,7 +277,10 @@ enum BurstStep {
 }
 
 /// Per-dispatch telemetry alongside the burst timings: what the resume
-/// path actually cost (the ROADMAP's preemption cost model).
+/// path actually cost (the ROADMAP's preemption cost model). `Default`
+/// is the never-got-a-trainer dispatch (failed before build) — the
+/// out-param starts there so a partial dispatch still reports honestly.
+#[derive(Default)]
 struct DispatchCost {
     /// This dispatch restored a parked checkpoint (vs a first build).
     resume: bool,
@@ -297,12 +301,19 @@ struct DispatchCost {
 /// *same* live trainer throughout, so the control arm pays the
 /// rebuild/restore cost once per dispatch exactly like a PR-3 run,
 /// not once per burst. On exhaustion the still-live trainer is
-/// evaluated and the tenant finishes. Returns `(burst index, seconds)`
-/// per executed burst — the first includes the rebuild/restore (the
-/// real preemption overhead), later run-to-completion bursts time only
-/// themselves; evaluation is excluded — plus the dispatch's
-/// [`DispatchCost`] (resume flag, rebuild seconds, frozen re-upload
-/// bytes) for the per-class resume-overhead report.
+/// evaluated and the tenant finishes.
+///
+/// Burst timings and the dispatch's [`DispatchCost`] are *out-params*,
+/// not part of the `Ok` value: `timings` gets one
+/// `(burst index, seconds)` entry the moment each burst completes —
+/// the first includes the rebuild/restore (the real preemption
+/// overhead), later run-to-completion bursts time only themselves,
+/// evaluation is excluded — and `cost` is filled as soon as a trainer
+/// exists. A dispatch that fails *after* completing bursts (eval
+/// fault, feed outage between bursts) therefore still hands its
+/// finished work to the caller: those bursts are checkpointed and
+/// consumed, a retry resumes past them, and their records must not
+/// vanish with the `Err` (the ROADMAP fault-telemetry gap).
 fn run_tenant_burst<'g>(
     engine: &Engine,
     spec: &ServeSpec,
@@ -310,7 +321,9 @@ fn run_tenant_burst<'g>(
     gauge: &'g StateGauge,
     writer: &Writer,
     task: &mut TenantTask<'g>,
-) -> Result<(Vec<(u64, f64)>, BurstStep, DispatchCost)> {
+    timings: &mut Vec<(u64, f64)>,
+    cost: &mut DispatchCost,
+) -> Result<BurstStep> {
     let id = task.plan.id;
     // Transient feed outage: the claimed burst stays in `task.burst`,
     // so a retried dispatch replays it — the source is never asked
@@ -318,6 +331,7 @@ fn run_tenant_burst<'g>(
     if let Some(p) = &spec.faults {
         p.check(Boundary::StreamSource)?;
     }
+    // lint: allow(measurement: burst run_s telemetry only)
     let mut t0 = Instant::now();
     let resume = task.ckpt.is_some();
     let session = Session::new(engine, task.plan.data_seed);
@@ -338,7 +352,11 @@ fn run_tenant_burst<'g>(
     // Rebuild cost of this dispatch: everything between dispatch and a
     // ready trainer. With shared frozen buffers resident this is pure
     // host-side work (no weight re-upload) — the report proves it.
-    let rebuild_s = t0.elapsed().as_secs_f64();
+    *cost = DispatchCost {
+        resume,
+        rebuild_s: t0.elapsed().as_secs_f64(),
+        reupload_bytes: tr.frozen_upload_bytes,
+    };
     let batch = engine.manifest.cnn(&spec.model)?.batch_size;
     let ckpt_dir = spec
         .checkpoint_dir
@@ -346,7 +364,6 @@ fn run_tenant_burst<'g>(
         .map(|base| base.join(format!("tenant-{id:04}")));
 
     let mut resident = 0u64;
-    let mut timings: Vec<(u64, f64)> = Vec::new();
     loop {
         if task.burst.steps > 0 {
             if tr.step_idx as u64 != task.burst.start_step {
@@ -400,6 +417,7 @@ fn run_tenant_burst<'g>(
                 task.ckpt = Some(ck);
             }
             timings.push((task.burst.index, t0.elapsed().as_secs_f64()));
+            cost.reupload_bytes = tr.frozen_upload_bytes;
             task.bursts_done += 1;
             task.steps_done += task.burst.steps;
             // Mark the burst consumed (zero-step marker at the new
@@ -419,15 +437,11 @@ fn run_tenant_burst<'g>(
                 task.burst = next;
                 match spec.policy {
                     Policy::Priority => {
-                        let cost = DispatchCost {
-                            resume,
-                            rebuild_s,
-                            reupload_bytes: tr.frozen_upload_bytes,
-                        };
-                        return Ok((timings, BurstStep::Yield, cost));
+                        return Ok(BurstStep::Yield);
                     }
                     Policy::FifoRunToCompletion => {
                         // Keep the trainer; only the burst timer resets.
+                        // lint: allow(measurement: burst run_s telemetry only)
                         t0 = Instant::now();
                         continue;
                     }
@@ -448,28 +462,19 @@ fn run_tenant_burst<'g>(
                         ckpt: Arc::clone(ck),
                     })?;
                 }
-                let cost = DispatchCost {
-                    resume,
-                    rebuild_s,
-                    reupload_bytes: tr.frozen_upload_bytes,
-                };
-                return Ok((
-                    timings,
-                    BurstStep::Finished(TenantServe {
-                        tenant: id,
-                        prio: task.prio,
-                        seed: task.plan.seed,
-                        data_seed: task.plan.data_seed,
-                        bursts: task.bursts_done,
-                        steps: task.steps_done,
-                        // The carried loss: a zero-step stream reports
-                        // `None` (omitted from JSON), never NaN/null.
-                        final_loss: tr.last_loss,
-                        accuracy,
-                        resident_bytes: resident,
-                    }),
-                    cost,
-                ));
+                return Ok(BurstStep::Finished(TenantServe {
+                    tenant: id,
+                    prio: task.prio,
+                    seed: task.plan.seed,
+                    data_seed: task.plan.data_seed,
+                    bursts: task.bursts_done,
+                    steps: task.steps_done,
+                    // The carried loss: a zero-step stream reports
+                    // `None` (omitted from JSON), never NaN/null.
+                    final_loss: tr.last_loss,
+                    accuracy,
+                    resident_bytes: resident,
+                }));
             }
         }
     }
@@ -518,6 +523,7 @@ pub fn run_serve_with(
     let fault_stats: Mutex<Vec<FaultClassStats>> =
         Mutex::new(vec![FaultClassStats::default(); 2]);
     let records: Mutex<Vec<BurstRecord>> = Mutex::new(Vec::new());
+    // lint: allow(measurement: serve wall-clock telemetry only)
     let t0 = Instant::now();
 
     // Seed the pool: each tenant claims its first burst up front.
@@ -569,9 +575,14 @@ pub fn run_serve_with(
             // nothing (hooks fire before the first step; between
             // bursts the tenant is only its checkpoint), so it joins
             // the ordinary retry path instead of vanishing.
+            // Out-params survive the closure: bursts completed before
+            // a later failure (or panic) keep their timings.
+            let mut timings: Vec<(u64, f64)> = Vec::new();
+            let mut cost = DispatchCost::default();
             let result = catch_unwind(AssertUnwindSafe(|| {
                 run_tenant_burst(
                     engine, spec, stream, &gauge, &writer, &mut task,
+                    &mut timings, &mut cost,
                 )
             }))
             .unwrap_or_else(|payload| {
@@ -586,66 +597,6 @@ pub fn run_serve_with(
                     });
                 Err(anyhow!("burst panicked: {msg}"))
             });
-            let (timings, step, cost) = match result {
-                Ok(r) => {
-                    // Recovery bookkeeping: a success after failures
-                    // closes the failure run and records its latency.
-                    if let Some(since) = task.retry_since.take() {
-                        let mut fs =
-                            fault_stats.lock().expect("fault stats");
-                        let c = &mut fs[task.prio.class()];
-                        c.recovered += 1;
-                        c.recovery_s
-                            .push(since.elapsed().as_secs_f64());
-                    }
-                    task.retry.on_success();
-                    r
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    return match task.retry.on_failure(&spec.retry) {
-                        RetryDecision::Retry(backoff) => {
-                            fault_stats.lock().expect("fault stats")
-                                [task.prio.class()]
-                            .retried += 1;
-                            if task.retry_since.is_none() {
-                                task.retry_since = Some(Instant::now());
-                            }
-                            // Deterministic backoff, then re-enter the
-                            // queue at our class: the last good
-                            // checkpoint rides in `task.ckpt` and the
-                            // stream cursor in `task.burst`, so the
-                            // re-dispatch is a pure replay.
-                            std::thread::sleep(backoff);
-                            let prio = task.prio;
-                            Outcome::Requeue(task, prio)
-                        }
-                        RetryDecision::Quarantine => {
-                            fault_stats.lock().expect("fault stats")
-                                [task.prio.class()]
-                            .quarantined += 1;
-                            quarantined
-                                .lock()
-                                .expect("quarantined")
-                                .push((id, msg));
-                            // Dropping the task here releases its
-                            // StateCharge: the pool sheds the poison
-                            // tenant's memory and keeps serving.
-                            Outcome::Done
-                        }
-                        RetryDecision::Fail => {
-                            fault_stats.lock().expect("fault stats")
-                                [task.prio.class()]
-                            .failed += 1;
-                            failed
-                                .lock()
-                                .expect("failed")
-                                .push((id, msg));
-                            Outcome::Done
-                        }
-                    };
-                }
-            };
             // Ready-time latency semantics: the dispatch's queue wait
             // belongs to its *first* burst only — every later burst in
             // a run-to-completion dispatch starts the moment its
@@ -654,8 +605,14 @@ pub fn run_serve_with(
             // comparable to the per-burst requeue waits of the
             // priority arm. The dispatch's rebuild/re-upload cost
             // follows the same rule: it belongs to the first burst.
+            //
+            // Pushed before the Ok/Err split: a dispatch that fails
+            // *after* completing bursts already checkpointed and
+            // consumed them (its retry resumes past them), so their
+            // records land here instead of vanishing with the `Err` —
+            // run-to-completion timings under chaos stay complete.
             {
-                let mut recs = records.lock().expect("records");
+                let mut recs = records.lock_ok();
                 for (i, &(burst, run_s)) in timings.iter().enumerate() {
                     recs.push(BurstRecord {
                         tenant: id,
@@ -679,6 +636,61 @@ pub fn run_serve_with(
                     });
                 }
             }
+            let step = match result {
+                Ok(step) => {
+                    // Recovery bookkeeping: a success after failures
+                    // closes the failure run and records its latency.
+                    if let Some(since) = task.retry_since.take() {
+                        let mut fs = fault_stats.lock_ok();
+                        // lint: allow(bounds: class() < CLASSES)
+                        let c = &mut fs[task.prio.class()];
+                        c.recovered += 1;
+                        c.recovery_s
+                            .push(since.elapsed().as_secs_f64());
+                    }
+                    task.retry.on_success();
+                    step
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    return match task.retry.on_failure(&spec.retry) {
+                        RetryDecision::Retry(backoff) => {
+                            // lint: allow(bounds: class() < CLASSES)
+                            fault_stats.lock_ok()[task.prio.class()]
+                                .retried += 1;
+                            if task.retry_since.is_none() {
+                                // lint: allow(measurement: recovery-latency telemetry)
+                                task.retry_since = Some(Instant::now());
+                            }
+                            // Deterministic backoff, then re-enter the
+                            // queue at our class: the last good
+                            // checkpoint rides in `task.ckpt` and the
+                            // stream cursor in `task.burst`, so the
+                            // re-dispatch is a pure replay.
+                            std::thread::sleep(backoff);
+                            let prio = task.prio;
+                            Outcome::Requeue(task, prio)
+                        }
+                        RetryDecision::Quarantine => {
+                            // lint: allow(bounds: class() < CLASSES)
+                            fault_stats.lock_ok()[task.prio.class()]
+                                .quarantined += 1;
+                            quarantined.lock_ok().push((id, msg));
+                            // Dropping the task here releases its
+                            // StateCharge: the pool sheds the poison
+                            // tenant's memory and keeps serving.
+                            Outcome::Done
+                        }
+                        RetryDecision::Fail => {
+                            // lint: allow(bounds: class() < CLASSES)
+                            fault_stats.lock_ok()[task.prio.class()]
+                                .failed += 1;
+                            failed.lock_ok().push((id, msg));
+                            Outcome::Done
+                        }
+                    };
+                }
+            };
             match step {
                 BurstStep::Yield => {
                     // Yield: drop the worker back into the pool,
@@ -688,7 +700,7 @@ pub fn run_serve_with(
                     Outcome::Requeue(task, prio)
                 }
                 BurstStep::Finished(t) => {
-                    done.lock().expect("done").push(t);
+                    done.lock_ok().push(t);
                     Outcome::Done
                 }
             }
@@ -700,11 +712,11 @@ pub fn run_serve_with(
     // Chaos ends with the workload: report assembly and whatever the
     // caller runs on this engine next are not under test.
     engine.set_faults(None);
-    let mut tenants = done.into_inner().expect("done");
+    let mut tenants = into_inner_ok(done);
     tenants.sort_by_key(|t| t.tenant);
-    let mut failed = failed.into_inner().expect("failed");
+    let mut failed = into_inner_ok(failed);
     let quarantined = {
-        let mut q = quarantined.into_inner().expect("quarantined");
+        let mut q = into_inner_ok(quarantined);
         q.sort_by_key(|(id, _)| *id);
         q
     };
@@ -733,14 +745,14 @@ pub fn run_serve_with(
         }
     }
     failed.sort_by_key(|(id, _)| *id);
-    let mut bursts = records.into_inner().expect("records");
+    let mut bursts = into_inner_ok(records);
     bursts.sort_by_key(|b| (b.tenant, b.burst));
     let mut faults =
         FaultsReport::empty(spec.retry.retries, spec.retry.quarantine);
     if let Some(p) = &spec.faults {
         faults.record_plan(p);
     }
-    faults.classes = fault_stats.into_inner().expect("fault stats");
+    faults.classes = into_inner_ok(fault_stats);
 
     Ok(ServeReport {
         model: spec.model.clone(),
@@ -765,6 +777,7 @@ pub fn run_serve_with(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::fleet::FleetSpec;

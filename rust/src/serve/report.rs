@@ -23,6 +23,7 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
     let n = sorted.len();
     let rank = (q * n as f64).ceil() as usize;
+    // lint: allow(bounds: rank clamped into 1..=n)
     sorted[rank.clamp(1, n) - 1]
 }
 
@@ -78,6 +79,7 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
+    #[allow(clippy::expect_used)]
     pub fn of(latencies_s: impl Iterator<Item = f64>) -> LatencySummary {
         let mut dropped = 0usize;
         let mut ms: Vec<f64> = latencies_s
@@ -104,6 +106,7 @@ impl LatencySummary {
             p50_ms: percentile(&ms, 0.50),
             p95_ms: percentile(&ms, 0.95),
             p99_ms: percentile(&ms, 0.99),
+            // lint: allow(invariant: the empty case returns above)
             max_ms: *ms.last().expect("non-empty"),
         }
     }
@@ -231,6 +234,7 @@ impl FaultsReport {
         let counts = plan.injected_counts();
         self.injected = BOUNDARIES
             .iter()
+            // lint: allow(bounds: Boundary::idx() < NB == counts.len())
             .map(|b| (b.name(), counts[b.idx()]))
             .collect();
     }
@@ -261,6 +265,7 @@ impl FaultsReport {
             "classes",
             arr([Priority::High, Priority::Background]
                 .iter()
+                // lint: allow(bounds: class() < CLASSES == classes.len())
                 .map(|p| self.classes[p.class()].to_json(*p))),
         ));
         obj(fields)
@@ -639,6 +644,7 @@ impl ServeReport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

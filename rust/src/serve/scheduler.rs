@@ -30,6 +30,8 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{into_inner_ok, MutexExt};
+
 /// Scheduling class of a stream task. Order is meaningful: lower
 /// discriminant = scheduled first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -124,6 +126,7 @@ impl<T> RunQueue<T> {
             prio,
             seq: self.pushes,
             born: self.pops,
+            // lint: allow(measurement: queue-wait telemetry only)
             at: Instant::now(),
         });
     }
@@ -136,6 +139,7 @@ impl<T> RunQueue<T> {
         e.prio.class().saturating_sub(boost)
     }
 
+    #[allow(clippy::expect_used)]
     pub fn pop(&mut self) -> Option<Popped<T>> {
         if self.entries.is_empty() {
             return None;
@@ -151,7 +155,9 @@ impl<T> RunQueue<T> {
             .enumerate()
             .min_by_key(|(_, e)| (self.effective_class(e), e.seq))
             .map(|(i, _)| i)
+            // lint: allow(invariant: early return above on empty queue)
             .expect("non-empty queue");
+        // lint: allow(invariant: best is an index from enumerate())
         let e = self.entries.remove(best).expect("indexed entry");
         let popped = Popped {
             aged: self.effective_class(&e) < e.prio.class(),
@@ -255,7 +261,7 @@ where
             let f = &f;
             let label = &label;
             s.spawn(move || {
-                let mut guard = state.lock().expect("pool state");
+                let mut guard = state.lock_ok();
                 loop {
                     if guard.live == 0 {
                         // Drained: release everyone still parked.
@@ -265,8 +271,10 @@ where
                     let Some(p) = guard.queue.pop() else {
                         // Live tasks exist but are all running on other
                         // workers; park until a yield or the drain.
-                        stats[w].lock().expect("stats").parks += 1;
-                        guard = cv.wait(guard).expect("pool state");
+                        // lint: allow(bounds: w < workers == stats.len())
+                        stats[w].lock_ok().parks += 1;
+                        guard = cv.wait(guard)
+                            .unwrap_or_else(|p| p.into_inner());
                         continue;
                     };
                     drop(guard);
@@ -280,14 +288,15 @@ where
                         aged: p.aged,
                     };
                     {
-                        let mut st = stats[w].lock().expect("stats");
+                        // lint: allow(bounds: w < workers == stats.len())
+                        let mut st = stats[w].lock_ok();
                         st.executed += 1;
                         st.high += usize::from(p.prio == Priority::High);
                         st.aged += usize::from(p.aged);
                     }
                     let out =
                         catch_unwind(AssertUnwindSafe(|| f(&ctx, p.item)));
-                    guard = state.lock().expect("pool state");
+                    guard = state.lock_ok();
                     match out {
                         Ok(Outcome::Requeue(item, prio)) => {
                             guard.queue.push(item, prio);
@@ -311,8 +320,8 @@ where
                                 .unwrap_or_else(|| {
                                     "non-string panic payload".to_string()
                                 });
-                            let mut st =
-                                stats[w].lock().expect("stats");
+                            // lint: allow(bounds: w < stats.len())
+                            let mut st = stats[w].lock_ok();
                             st.panicked += 1;
                             st.panics.push((task_label, msg));
                             drop(st);
@@ -327,10 +336,11 @@ where
         }
     });
 
-    stats.into_iter().map(|m| m.into_inner().expect("stats")).collect()
+    stats.into_iter().map(into_inner_ok).collect()
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};

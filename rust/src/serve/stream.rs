@@ -80,6 +80,7 @@ impl SyntheticStream {
 
 impl StreamSource for SyntheticStream {
     fn next_burst(&self, tenant: usize) -> Option<Burst> {
+        // lint: allow(bounds: tenant ids are dense 0..tenants.len())
         let index = self.tenants[tenant].cursor.fetch_add(1, Ordering::SeqCst);
         if index >= self.bursts {
             return None;
@@ -92,11 +93,13 @@ impl StreamSource for SyntheticStream {
     }
 
     fn batch(&self, tenant: usize, step: u64, batch: usize) -> ImageBatch {
+        // lint: allow(bounds: tenant ids are dense 0..tenants.len())
         self.tenants[tenant].ds.batch("train", step, batch)
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::fleet::derive_plan;

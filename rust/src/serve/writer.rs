@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Checkpoint;
 use crate::faults::{Boundary, FaultPlan, RetryPolicy};
@@ -100,7 +100,7 @@ impl Writer {
     /// (and counts the stall) when the writer is `capacity` jobs
     /// behind. Errors only if the writer thread is gone.
     pub fn submit(&self, job: WriteJob) -> Result<()> {
-        let tx = self.tx.as_ref().expect("writer already finished");
+        let tx = self.tx.as_ref().context("writer already finished")?;
         match tx.try_send(job) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(job)) => {
@@ -117,11 +117,13 @@ impl Writer {
     }
 
     /// Close the channel, drain every queued job, and join the thread.
+    #[allow(clippy::expect_used)]
     pub fn finish(mut self) -> WriterStats {
         drop(self.tx.take());
         let mut stats = self
             .handle
             .take()
+            // lint: allow(invariant: handle is Some until finish/drop consumes it)
             .expect("writer already finished")
             .join()
             .unwrap_or_else(|_| WriterStats {
@@ -155,6 +157,7 @@ fn drain(
         if let Some(d) = throttle {
             std::thread::sleep(d);
         }
+        // lint: allow(measurement: busy_s telemetry only)
         let t0 = Instant::now();
         st.jobs += 1;
         match &job {
@@ -211,6 +214,7 @@ fn drain(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -1,0 +1,86 @@
+//! Poison-recovering lock acquisition.
+//!
+//! Every runtime-path lock in this crate guards either (a) telemetry
+//! counters and report accumulators, or (b) slot caches whose source
+//! of truth is a separate `OnceLock` (the engine's per-entry init
+//! cells). In both cases the data is valid after a panic elsewhere:
+//! panics are contained at dispatch boundaries by `catch_unwind`
+//! *before* report assembly runs, so a poisoned mutex here means "a
+//! worker died mid-update of a counter", not "the protected state is
+//! torn". Propagating the poison would turn one already-contained
+//! tenant panic into a whole-run abort during report assembly — the
+//! exact cascade the serve layer exists to prevent.
+//!
+//! These helpers recover the guard from a poisoned lock (the same
+//! `unwrap_or_else(|p| p.into_inner())` idiom the engine's `InitCell`
+//! has used since PR 3) and are the only sanctioned way to acquire a
+//! lock in `serve/`, `fleet/`, `runtime/` and `faults.rs` — asi-lint's
+//! panic-hygiene pass flags bare `.lock().expect(..)` there.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// [`Mutex`] acquisition that survives poisoning.
+pub trait MutexExt<T> {
+    /// Like `lock().unwrap()`, but a poisoned lock yields its guard
+    /// instead of propagating the panic.
+    fn lock_ok(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> MutexExt<T> for Mutex<T> {
+    fn lock_ok(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// [`RwLock`] acquisition that survives poisoning.
+pub trait RwLockExt<T> {
+    fn read_ok(&self) -> RwLockReadGuard<'_, T>;
+    fn write_ok(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn read_ok(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write_ok(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Consume a [`Mutex`], recovering the value even if poisoned — the
+/// end-of-run pattern (`records.into_inner()`) where every worker has
+/// already been joined.
+pub fn into_inner_ok<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn poisoned_mutex_still_yields_its_value() {
+        let m = Mutex::new(7u32);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.is_poisoned());
+        assert_eq!(*m.lock_ok(), 7);
+        assert_eq!(into_inner_ok(m), 7);
+    }
+
+    #[test]
+    fn poisoned_rwlock_still_yields_guards() {
+        let l = RwLock::new(3u32);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = l.write().unwrap();
+            panic!("poison it");
+        }));
+        assert_eq!(*l.read_ok(), 3);
+        *l.write_ok() = 4;
+        assert_eq!(*l.read_ok(), 4);
+    }
+}

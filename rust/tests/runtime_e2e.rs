@@ -724,3 +724,53 @@ fn fleet_writes_per_tenant_checkpoints() {
     }
     let _ = std::fs::remove_dir_all(&ck);
 }
+
+#[test]
+fn failed_dispatch_keeps_records_of_its_completed_bursts() {
+    // The ROADMAP fault-telemetry gap, closed: under run-to-completion
+    // a dispatch runs many bursts, and one that fails *between* bursts
+    // used to drop the timings of everything it had already finished —
+    // the retry resumes past those bursts (they are checkpointed and
+    // consumed), so their records were gone for good. Script the third
+    // training step to fail: burst 0 completes inside the first
+    // dispatch, burst 1's first step kills it, and the retried
+    // dispatch finishes the stream. Burst 0's record must come from
+    // the *failed* dispatch.
+    let Some(dir) = artifacts() else { return };
+    use asi::faults::{Boundary, FaultPlan};
+    use asi::serve::Policy;
+    use std::sync::Arc;
+    let engine = Engine::load(&dir).unwrap();
+    let plan = Arc::new(
+        FaultPlan::new(0).script(Boundary::EngineExec,
+                                 &[false, false, true]),
+    );
+    let rep = run_serve(
+        &engine,
+        &ServeSpec::new("mcunet", Method::asi(2, 4))
+            .tenants(1)
+            .workers(1)
+            .bursts(2)
+            .burst_steps(2)
+            .policy(Policy::FifoRunToCompletion)
+            .base_seed(5)
+            .faults(plan)
+            .retries(2)
+            .quarantine(3),
+    )
+    .unwrap();
+    assert_eq!(rep.faults.total_injected(), 1);
+    let retried: u64 =
+        rep.faults.classes.iter().map(|c| c.retried).sum();
+    assert_eq!(retried, 1, "the scripted fault must cost one retry");
+    assert_eq!(rep.tenants.len(), 1, "tenant must survive via retry");
+    assert!(rep.failed.is_empty() && rep.quarantined.is_empty());
+    // Both bursts have exactly one record each: burst 0 from the
+    // dispatch that later failed, burst 1 from the retry.
+    let indices: Vec<u64> = rep.bursts.iter().map(|b| b.burst).collect();
+    assert_eq!(
+        indices,
+        vec![0, 1],
+        "completed bursts of a failed dispatch must keep their records"
+    );
+}

@@ -1,0 +1,577 @@
+//! Offline stub of `proc-macro2`.
+//!
+//! Mirrors the subset of the real API that `asi-lint` (via the vendored
+//! `syn` stub) consumes: lexing Rust source into a [`TokenStream`] of
+//! [`TokenTree`]s — grouped by delimiter, with `span-locations`-style
+//! line/column positions. It is a *lexer*, not a macro bridge: there is
+//! no compiler handoff, no `Spacing` fidelity beyond `Alone`, and
+//! literals keep their raw text. That is exactly enough to walk
+//! functions and token-match lint patterns, which is all the analysis
+//! needs, while keeping the build fully offline (the same vendoring
+//! discipline as the `anyhow`/`xla` stubs).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Lex error: byte offset + 1-based line of the offending character.
+#[derive(Debug, Clone)]
+pub struct LexError {
+    pub line: usize,
+    msg: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+/// `span-locations` surface: 1-based line, 0-based column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LineColumn {
+    pub line: usize,
+    pub column: usize,
+}
+
+/// A source position. Only `start()` is meaningful in this stub.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    start: LineColumn,
+}
+
+impl Span {
+    pub fn start(&self) -> LineColumn {
+        self.start
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delimiter {
+    Parenthesis,
+    Brace,
+    Bracket,
+}
+
+#[derive(Debug, Clone)]
+pub enum TokenTree {
+    Group(Group),
+    Ident(Ident),
+    Punct(Punct),
+    Literal(Literal),
+}
+
+impl TokenTree {
+    pub fn span(&self) -> Span {
+        match self {
+            TokenTree::Group(g) => g.span_open(),
+            TokenTree::Ident(i) => i.span(),
+            TokenTree::Punct(p) => p.span(),
+            TokenTree::Literal(l) => l.span(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Group {
+    delimiter: Delimiter,
+    stream: TokenStream,
+    span: Span,
+    span_close: Span,
+}
+
+impl Group {
+    pub fn delimiter(&self) -> Delimiter {
+        self.delimiter
+    }
+
+    pub fn stream(&self) -> TokenStream {
+        self.stream.clone()
+    }
+
+    pub fn span_open(&self) -> Span {
+        self.span
+    }
+
+    pub fn span_close(&self) -> Span {
+        self.span_close
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Ident {
+    text: String,
+    span: Span,
+}
+
+impl Ident {
+    pub fn span(&self) -> Span {
+        self.span
+    }
+}
+
+impl fmt::Display for Ident {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.text)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Punct {
+    ch: char,
+    span: Span,
+}
+
+impl Punct {
+    pub fn as_char(&self) -> char {
+        self.ch
+    }
+
+    pub fn span(&self) -> Span {
+        self.span
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Literal {
+    text: String,
+    span: Span,
+}
+
+impl Literal {
+    pub fn span(&self) -> Span {
+        self.span
+    }
+}
+
+impl fmt::Display for Literal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.text)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TokenStream {
+    trees: Vec<TokenTree>,
+}
+
+impl TokenStream {
+    pub fn is_empty(&self) -> bool {
+        self.trees.is_empty()
+    }
+}
+
+impl IntoIterator for TokenStream {
+    type Item = TokenTree;
+    type IntoIter = std::vec::IntoIter<TokenTree>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.trees.into_iter()
+    }
+}
+
+impl<'a> IntoIterator for &'a TokenStream {
+    type Item = &'a TokenTree;
+    type IntoIter = std::slice::Iter<'a, TokenTree>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.trees.iter()
+    }
+}
+
+impl FromStr for TokenStream {
+    type Err = LexError;
+
+    fn from_str(src: &str) -> Result<TokenStream, LexError> {
+        let mut lexer = Lexer::new(src);
+        let (trees, _) = lexer.lex_until(None)?;
+        Ok(TokenStream { trees })
+    }
+}
+
+impl FromIterator<TokenTree> for TokenStream {
+    fn from_iter<I: IntoIterator<Item = TokenTree>>(iter: I) -> Self {
+        TokenStream {
+            trees: iter.into_iter().collect(),
+        }
+    }
+}
+
+struct Lexer<'a> {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    col: usize,
+    src: std::marker::PhantomData<&'a str>,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Lexer<'a> {
+        Lexer {
+            chars: src.chars().collect(),
+            pos: 0,
+            line: 1,
+            col: 0,
+            src: std::marker::PhantomData,
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 0;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn here(&self) -> Span {
+        Span {
+            start: LineColumn {
+                line: self.line,
+                column: self.col,
+            },
+        }
+    }
+
+    fn err(&self, msg: &str) -> LexError {
+        LexError {
+            line: self.line,
+            msg: msg.to_string(),
+        }
+    }
+
+    /// Skip `// ...` and (nested) `/* ... */` comments plus whitespace.
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_whitespace() => {
+                    self.bump();
+                }
+                Some('/') if self.peek_at(1) == Some('/') => {
+                    while let Some(c) = self.peek() {
+                        if c == '\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                Some('/') if self.peek_at(1) == Some('*') => {
+                    self.bump();
+                    self.bump();
+                    let mut depth = 1usize;
+                    while depth > 0 {
+                        match (self.peek(), self.peek_at(1)) {
+                            (Some('/'), Some('*')) => {
+                                self.bump();
+                                self.bump();
+                                depth += 1;
+                            }
+                            (Some('*'), Some('/')) => {
+                                self.bump();
+                                self.bump();
+                                depth -= 1;
+                            }
+                            (Some(_), _) => {
+                                self.bump();
+                            }
+                            (None, _) => return,
+                        }
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// Consume a `"..."` body after the opening quote was bumped.
+    fn finish_string(&mut self) {
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => return,
+                _ => {}
+            }
+        }
+    }
+
+    /// Consume `r"..."` / `r#"..."#` after the `r` was bumped.
+    fn finish_raw_string(&mut self) -> Result<(), LexError> {
+        let mut hashes = 0usize;
+        while self.peek() == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek() != Some('"') {
+            return Err(self.err("malformed raw string"));
+        }
+        self.bump();
+        loop {
+            match self.bump() {
+                Some('"') => {
+                    let mut got = 0usize;
+                    while got < hashes && self.peek() == Some('#') {
+                        got += 1;
+                        self.bump();
+                    }
+                    if got == hashes {
+                        return Ok(());
+                    }
+                }
+                Some(_) => {}
+                None => return Err(self.err("unterminated raw string")),
+            }
+        }
+    }
+
+    /// Lex until the matching close delimiter (or EOF for the top
+    /// level); returns the trees plus the span of the close position.
+    fn lex_until(
+        &mut self,
+        close: Option<char>,
+    ) -> Result<(Vec<TokenTree>, Span), LexError> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_trivia();
+            let span = self.here();
+            let Some(c) = self.peek() else {
+                return if close.is_none() {
+                    Ok((out, span))
+                } else {
+                    Err(self.err("unbalanced delimiter"))
+                };
+            };
+            match c {
+                '(' | '{' | '[' => {
+                    let (close_ch, delim) = match c {
+                        '(' => (')', Delimiter::Parenthesis),
+                        '{' => ('}', Delimiter::Brace),
+                        _ => (']', Delimiter::Bracket),
+                    };
+                    self.bump();
+                    let (trees, span_close) =
+                        self.lex_until(Some(close_ch))?;
+                    out.push(TokenTree::Group(Group {
+                        delimiter: delim,
+                        stream: TokenStream { trees },
+                        span,
+                        span_close,
+                    }));
+                }
+                ')' | '}' | ']' => {
+                    if Some(c) == close {
+                        self.bump();
+                        return Ok((out, span));
+                    }
+                    return Err(self.err("unbalanced closing delimiter"));
+                }
+                '"' => {
+                    self.bump();
+                    self.finish_string();
+                    out.push(TokenTree::Literal(Literal {
+                        text: String::from("\"\""),
+                        span,
+                    }));
+                }
+                '\'' => {
+                    // Char literal vs lifetime: 'x' has a closing quote
+                    // right after one (possibly escaped) char;
+                    // otherwise it is a lifetime tick + identifier.
+                    let is_char = match (self.peek_at(1), self.peek_at(2)) {
+                        (Some('\\'), _) => true,
+                        (Some(_), Some('\'')) => true,
+                        _ => false,
+                    };
+                    if is_char {
+                        self.bump();
+                        while let Some(c2) = self.bump() {
+                            if c2 == '\\' {
+                                self.bump();
+                            } else if c2 == '\'' {
+                                break;
+                            }
+                        }
+                        out.push(TokenTree::Literal(Literal {
+                            text: String::from("''"),
+                            span,
+                        }));
+                    } else {
+                        self.bump();
+                        out.push(TokenTree::Punct(Punct { ch: '\'', span }));
+                    }
+                }
+                _ if c == '_' || c.is_alphabetic() => {
+                    let mut text = String::new();
+                    while let Some(c2) = self.peek() {
+                        if c2 == '_' || c2.is_alphanumeric() {
+                            text.push(c2);
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    // String-ish prefixes: r"", r#""#, b"", br"".
+                    if self.peek() == Some('"') || self.peek() == Some('#') {
+                        let raw = matches!(text.as_str(), "r" | "br");
+                        let plain = matches!(text.as_str(), "b");
+                        // `r#ident` is a raw identifier, not a raw
+                        // string: only commit when a quote follows
+                        // the hashes.
+                        let mut k = 0usize;
+                        while self.peek_at(k) == Some('#') {
+                            k += 1;
+                        }
+                        if raw && self.peek_at(k) == Some('"') {
+                            self.finish_raw_string()?;
+                            out.push(TokenTree::Literal(Literal {
+                                text: String::from("\"\""),
+                                span,
+                            }));
+                            continue;
+                        }
+                        if plain && self.peek() == Some('"') {
+                            self.bump();
+                            self.finish_string();
+                            out.push(TokenTree::Literal(Literal {
+                                text: String::from("\"\""),
+                                span,
+                            }));
+                            continue;
+                        }
+                    }
+                    out.push(TokenTree::Ident(Ident { text, span }));
+                }
+                _ if c.is_ascii_digit() => {
+                    let mut text = String::new();
+                    while let Some(c2) = self.peek() {
+                        let take = c2.is_ascii_alphanumeric()
+                            || c2 == '_'
+                            || (c2 == '.'
+                                && self
+                                    .peek_at(1)
+                                    .is_some_and(|n| n.is_ascii_digit())
+                                && !text.contains('.'))
+                            || ((c2 == '+' || c2 == '-')
+                                && matches!(
+                                    text.chars().last(),
+                                    Some('e') | Some('E')
+                                )
+                                && text.starts_with(|f: char| {
+                                    f.is_ascii_digit()
+                                }));
+                        if take {
+                            text.push(c2);
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    out.push(TokenTree::Literal(Literal { text, span }));
+                }
+                _ => {
+                    self.bump();
+                    out.push(TokenTree::Punct(Punct { ch: c, span }));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(src: &str) -> Vec<String> {
+        fn walk(ts: &TokenStream, out: &mut Vec<String>) {
+            for t in ts {
+                match t {
+                    TokenTree::Group(g) => {
+                        let (o, c) = match g.delimiter() {
+                            Delimiter::Parenthesis => ("(", ")"),
+                            Delimiter::Brace => ("{", "}"),
+                            Delimiter::Bracket => ("[", "]"),
+                        };
+                        out.push(o.to_string());
+                        walk(&g.stream(), out);
+                        out.push(c.to_string());
+                    }
+                    TokenTree::Ident(i) => out.push(i.to_string()),
+                    TokenTree::Punct(p) => out.push(p.as_char().to_string()),
+                    TokenTree::Literal(l) => out.push(l.to_string()),
+                }
+            }
+        }
+        let ts: TokenStream = src.parse().unwrap();
+        let mut out = Vec::new();
+        walk(&ts, &mut out);
+        out
+    }
+
+    #[test]
+    fn lexes_idents_groups_and_puncts() {
+        assert_eq!(
+            flat("fn f(x: u32) { x + 1 }"),
+            ["fn", "f", "(", "x", ":", "u32", ")", "{", "x", "+", "1", "}"]
+        );
+    }
+
+    #[test]
+    fn comments_strings_and_lifetimes_vanish_or_collapse() {
+        let toks = flat(
+            "let s = \"a // not a comment\"; // real\n/* block */ 'a: \
+             loop {} let c = 'x';",
+        );
+        assert_eq!(
+            toks,
+            ["let", "s", "=", "\"\"", ";", "'", "a", ":", "loop", "{",
+             "}", "let", "c", "=", "''", ";"]
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_numbers() {
+        assert_eq!(
+            flat("r#\"hi \" there\"# 1.5e-3 0..2"),
+            ["\"\"", "1.5e-3", "0", ".", ".", "2"]
+        );
+    }
+
+    #[test]
+    fn spans_carry_lines() {
+        let ts: TokenStream = "a\nb\n  c".parse().unwrap();
+        let lines: Vec<usize> =
+            (&ts).into_iter().map(|t| t.span().start().line).collect();
+        assert_eq!(lines, [1, 2, 3]);
+    }
+
+    #[test]
+    fn group_close_span_is_the_closing_delimiter() {
+        let ts: TokenStream = "fn f() {\n  1\n}".parse().unwrap();
+        let close = (&ts)
+            .into_iter()
+            .find_map(|t| match t {
+                TokenTree::Group(g)
+                    if g.delimiter() == Delimiter::Brace =>
+                {
+                    Some(g.span_close().start())
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!((close.line, close.column), (3, 0));
+    }
+}

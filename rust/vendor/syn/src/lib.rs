@@ -1,0 +1,284 @@
+//! Offline stub of `syn`.
+//!
+//! Exposes [`parse_file`] over the vendored `proc-macro2` lexer: it
+//! discovers every function item in a source file (walking through
+//! `mod`/`impl`/`trait` braces), recording its name, the span of the
+//! `fn` keyword, its signature and body tokens, and whether it sits
+//! inside a `#[cfg(test)]` region or carries `#[test]`. This is not an
+//! AST — the real `syn` item/expr tree is far more than the lint
+//! passes need, which token-match inside function bodies. Same offline
+//! vendoring discipline as the `anyhow`/`xla` stubs.
+
+use std::fmt;
+
+pub use proc_macro2;
+use proc_macro2::{Delimiter, Group, LexError, Span, TokenStream, TokenTree};
+
+/// Parse failure: the lexer hit malformed input.
+#[derive(Debug)]
+pub struct Error {
+    inner: LexError,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// A parsed source file: the raw token stream, every discovered
+/// function item (including those nested in `impl`/`mod`/`trait`
+/// blocks; bodiless trait declarations are skipped), and the
+/// inclusive line ranges covered by `#[cfg(test)]`/`#[test]` items.
+pub struct File {
+    pub tokens: TokenStream,
+    pub functions: Vec<ItemFn>,
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl File {
+    /// True when `line` falls inside a test-only item.
+    pub fn in_tests(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// One `fn` item with a body.
+pub struct ItemFn {
+    /// Function name.
+    pub name: String,
+    /// Span of the `fn` keyword.
+    pub span: Span,
+    /// Tokens between the name and the body (generics, params,
+    /// return type, where-clause).
+    pub sig: TokenStream,
+    /// The `{ ... }` body group (its open/close spans delimit the
+    /// body's line range).
+    pub body: Group,
+    /// True when the item carries `#[test]` or lives under a
+    /// `#[cfg(test)]` item (transitively).
+    pub in_tests: bool,
+}
+
+/// Lex `src` and discover its function items and test regions.
+pub fn parse_file(src: &str) -> Result<File, Error> {
+    let tokens: TokenStream =
+        src.parse().map_err(|e| Error { inner: e })?;
+    let trees: Vec<TokenTree> = tokens.clone().into_iter().collect();
+    let mut functions = Vec::new();
+    let mut test_regions = Vec::new();
+    walk(&trees, false, &mut functions, &mut test_regions);
+    Ok(File {
+        tokens,
+        functions,
+        test_regions,
+    })
+}
+
+/// True when an attribute body (`test`, `cfg(test)`,
+/// `cfg(all(test, ..))`) marks the following item as test-only.
+fn attr_marks_test(attr: &TokenStream) -> bool {
+    let mut iter = attr.into_iter();
+    match iter.next() {
+        Some(TokenTree::Ident(id)) if id.to_string() == "test" => true,
+        Some(TokenTree::Ident(id)) if id.to_string() == "cfg" => {
+            match iter.next() {
+                Some(TokenTree::Group(g)) => contains_test(&g.stream()),
+                _ => false,
+            }
+        }
+        _ => false,
+    }
+}
+
+fn contains_test(ts: &TokenStream) -> bool {
+    ts.into_iter().any(|t| match t {
+        TokenTree::Ident(id) => id.to_string() == "test",
+        TokenTree::Group(g) => contains_test(&g.stream()),
+        _ => false,
+    })
+}
+
+/// Scan one delimiter level. `fn` bodies are consumed whole (their
+/// tokens belong to the discovered item, so nested helper fns are
+/// scanned as part of the enclosing body, not re-emitted); every other
+/// brace group — `mod`, `impl`, `trait` — is recursed into, inheriting
+/// `in_tests` from any pending `#[cfg(test)]`/`#[test]` attribute.
+/// Items whose test-ness comes from their *own* pending attribute open
+/// a test region spanning attribute line through closing brace.
+fn walk(
+    trees: &[TokenTree],
+    in_tests: bool,
+    out: &mut Vec<ItemFn>,
+    regions: &mut Vec<(usize, usize)>,
+) {
+    let mut pending_test_attr = false;
+    let mut pending_attr_line = None;
+    let mut i = 0;
+    while i < trees.len() {
+        match &trees[i] {
+            TokenTree::Punct(p) if p.as_char() == '#' => {
+                // `#[attr]` / `#![attr]`: fold the bracket body into
+                // the pending-attr flag for the next item.
+                let attr_line = p.span().start().line;
+                let mut j = i + 1;
+                if let Some(TokenTree::Punct(q)) = trees.get(j) {
+                    if q.as_char() == '!' {
+                        j += 1;
+                    }
+                }
+                if let Some(TokenTree::Group(g)) = trees.get(j) {
+                    if g.delimiter() == Delimiter::Bracket {
+                        if attr_marks_test(&g.stream())
+                            && !pending_test_attr
+                        {
+                            pending_test_attr = true;
+                            pending_attr_line = Some(attr_line);
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            TokenTree::Ident(id) if id.to_string() == "fn" => {
+                let span = trees[i].span();
+                // `fn` not followed by a name is a fn-pointer type
+                // (`fn(usize) -> f64`), not an item.
+                let Some(TokenTree::Ident(name)) = trees.get(i + 1)
+                else {
+                    i += 1;
+                    continue;
+                };
+                // The body is the first brace group at this level; a
+                // `;` first means a bodiless trait declaration.
+                let mut j = i + 2;
+                let mut body = None;
+                while let Some(t) = trees.get(j) {
+                    match t {
+                        TokenTree::Group(g)
+                            if g.delimiter() == Delimiter::Brace =>
+                        {
+                            body = Some(g.clone());
+                            break;
+                        }
+                        TokenTree::Punct(p) if p.as_char() == ';' => {
+                            break;
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if let Some(body) = body {
+                    if pending_test_attr && !in_tests {
+                        let start = pending_attr_line
+                            .unwrap_or(span.start().line);
+                        regions.push((
+                            start,
+                            body.span_close().start().line,
+                        ));
+                    }
+                    out.push(ItemFn {
+                        name: name.to_string(),
+                        span,
+                        sig: trees[i + 2..j].iter().cloned().collect(),
+                        body,
+                        in_tests: in_tests || pending_test_attr,
+                    });
+                }
+                pending_test_attr = false;
+                pending_attr_line = None;
+                i = j + 1;
+            }
+            TokenTree::Group(g) if g.delimiter() == Delimiter::Brace => {
+                if pending_test_attr && !in_tests {
+                    let start = pending_attr_line
+                        .unwrap_or_else(|| g.span_open().start().line);
+                    regions
+                        .push((start, g.span_close().start().line));
+                }
+                let inner: Vec<TokenTree> =
+                    g.stream().into_iter().collect();
+                walk(&inner, in_tests || pending_test_attr, out, regions);
+                pending_test_attr = false;
+                pending_attr_line = None;
+                i += 1;
+            }
+            TokenTree::Punct(p) if p.as_char() == ';' => {
+                pending_test_attr = false;
+                pending_attr_line = None;
+                i += 1;
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+pub struct S { cb: fn(usize) -> u64 }
+
+impl S {
+    pub fn hot(&self) -> u64 { (self.cb)(1) }
+}
+
+pub trait T {
+    fn decl(&self);
+    fn with_default(&self) -> u32 { 7 }
+}
+
+#[cfg(test)]
+mod tests {
+    fn helper() -> u32 { 3 }
+
+    #[test]
+    fn check() { assert_eq!(helper(), 3); }
+}
+
+#[test]
+fn top_level_test() {}
+"#;
+
+    #[test]
+    fn discovers_functions_and_test_regions() {
+        let file = parse_file(SRC).unwrap();
+        let got: Vec<(String, bool)> = file
+            .functions
+            .iter()
+            .map(|f| (f.name.clone(), f.in_tests))
+            .collect();
+        assert_eq!(
+            got,
+            [
+                ("hot".to_string(), false),
+                ("with_default".to_string(), false),
+                ("helper".to_string(), true),
+                ("check".to_string(), true),
+                ("top_level_test".to_string(), true),
+            ]
+        );
+        // One region for the cfg(test) mod (attr line 13 through its
+        // closing brace on line 19), one for the #[test] fn.
+        assert_eq!(file.test_regions, [(13, 19), (21, 22)]);
+        assert!(file.in_tests(15));
+        assert!(!file.in_tests(5));
+    }
+
+    #[test]
+    fn spans_point_at_the_fn_keyword() {
+        let file = parse_file("fn a() {}\n\nfn b() {}\n").unwrap();
+        let lines: Vec<usize> = file
+            .functions
+            .iter()
+            .map(|f| f.span.start().line)
+            .collect();
+        assert_eq!(lines, [1, 3]);
+    }
+}

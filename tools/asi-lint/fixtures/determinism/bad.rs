@@ -1,0 +1,48 @@
+//! Seeded-bad fixture for the determinism pass: wall-clock reads,
+//! unseeded randomness, and HashMap iteration order leaking into
+//! report construction.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Instant, SystemTime};
+
+use crate::util::json::{num, obj, Json};
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now(); //~ ERROR determinism
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn wall() -> u64 {
+    let now = SystemTime::now(); //~ ERROR determinism
+    now.elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}
+
+pub fn shuffle_seed() -> u64 {
+    let mut rng = thread_rng(); //~ ERROR determinism
+    rng.next_u64()
+}
+
+/// Iteration order of `samples` decides the JSON field order — two
+/// identical runs serialize the same data differently.
+pub fn to_json(samples: &HashMap<String, f64>) -> Json {
+    let mut fields = Vec::new();
+    for (k, v) in samples { //~ ERROR determinism
+        fields.push((k.as_str(), num(*v)));
+    }
+    let first = samples.keys().next(); //~ ERROR determinism
+    let _ = first;
+    obj(fields)
+}
+
+/// Same leak through a locally-built set.
+pub fn render(rows: &[(String, f64)]) -> String {
+    let mut seen = HashSet::new();
+    for (name, _) in rows {
+        seen.insert(name.clone());
+    }
+    let mut out = String::new();
+    for name in seen.iter() { //~ ERROR determinism
+        out.push_str(name);
+    }
+    out
+}

@@ -1,0 +1,45 @@
+//! Known-good fixture for the determinism pass: annotated measurement
+//! sites, seeded randomness, and order-stable (sorted / BTreeMap)
+//! collection traversal feeding the report.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Rng;
+
+pub struct Report {
+    samples: BTreeMap<String, f64>,
+    tags: HashMap<String, u64>,
+}
+
+impl Report {
+    /// Wall-clock is fine when it only feeds telemetry and says so.
+    pub fn timed_run(&self) -> f64 {
+        // lint: allow(measurement: bench wall-clock telemetry only)
+        let t0 = Instant::now();
+        t0.elapsed().as_secs_f64()
+    }
+
+    pub fn draw(&self, seed: u64) -> u64 {
+        let mut rng = Rng::new(seed);
+        rng.next_u64()
+    }
+
+    /// BTreeMap iterates in key order; the HashMap is sorted into a
+    /// Vec before anything reaches the serializer.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = self
+            .samples
+            .iter()
+            .map(|(k, v)| (k.as_str(), num(*v)))
+            .collect();
+        let mut tags: Vec<(&String, &u64)> = self.tags.iter().collect();
+        tags.sort();
+        for (k, v) in tags {
+            fields.push((k.as_str(), num(*v as f64)));
+        }
+        obj(fields)
+    }
+}

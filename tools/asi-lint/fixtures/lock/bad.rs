@@ -1,0 +1,56 @@
+//! Seeded-bad fixture for the lock-discipline pass.
+//!
+//! `reacquire_same_cell` is a line-for-line re-creation of the PR-5
+//! deadlock: a `RwLock` read guard bound to a local stays live while
+//! the same cell's write lock is acquired on the same thread — with
+//! `std::sync::RwLock` that self-deadlocks (or panics under some
+//! platforms' writer-preference). The other functions seed the two
+//! boundary rules (guard across `catch_unwind` / channel send) and the
+//! interprocedural re-acquisition.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::Sender;
+use std::sync::{Mutex, RwLock};
+
+pub struct Cache {
+    frozen: RwLock<HashMap<String, u64>>,
+    stats: Mutex<u64>,
+}
+
+impl Cache {
+    /// The PR-5 bug: read guard still live at the write acquisition.
+    pub fn reacquire_same_cell(&self, key: &str) -> u64 {
+        let cached = self.frozen.read().unwrap();
+        if let Some(v) = cached.get(key) {
+            return *v;
+        }
+        let mut w = self.frozen.write().unwrap(); //~ ERROR lock
+        w.insert(key.to_string(), 1);
+        1
+    }
+
+    pub fn guard_across_unwind(&self) {
+        let g = self.stats.lock().unwrap();
+        let _ = catch_unwind(AssertUnwindSafe(|| *g + 1)); //~ ERROR lock
+    }
+
+    pub fn guard_across_send(&self, tx: &Sender<u64>) {
+        let g = self.stats.lock().unwrap();
+        tx.send(*g).ok(); //~ ERROR lock
+    }
+
+    /// Transitively locks `self.frozen` — the summary target.
+    pub fn frozen_len_inner(&self) -> usize {
+        let g = self.frozen.read().unwrap();
+        g.len()
+    }
+
+    /// Interprocedural re-acquisition: calls a function whose summary
+    /// says it locks the cell we already hold.
+    pub fn reacquire_through_call(&self) -> usize {
+        let g = self.frozen.read().unwrap();
+        let n = self.frozen_len_inner(); //~ ERROR lock
+        n + g.len()
+    }
+}

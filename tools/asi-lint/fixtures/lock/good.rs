@@ -1,0 +1,44 @@
+//! Known-good fixture for the lock-discipline pass: the *fixed* forms
+//! of everything `bad.rs` seeds, in the idiom the crate actually uses
+//! (the engine's read-then-separate-write `frozen_shared` pattern).
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::Sender;
+use std::sync::{Mutex, RwLock};
+
+pub struct FixedCache {
+    frozen: RwLock<HashMap<String, u64>>,
+    stats: Mutex<u64>,
+}
+
+impl FixedCache {
+    /// PR-5 fix: the read guard is a statement-scoped temporary; it is
+    /// dead before the write acquisition starts.
+    pub fn read_then_write(&self, key: &str) -> u64 {
+        let cached = self.frozen.read().unwrap().get(key).copied();
+        if let Some(v) = cached {
+            return v;
+        }
+        let mut w = self.frozen.write().unwrap();
+        *w.entry(key.to_string()).or_insert(1)
+    }
+
+    /// Explicit `drop` ends the guard before the next acquisition.
+    pub fn dropped_guard_then_write(&self) {
+        let g = self.frozen.read().unwrap();
+        let _n = g.len();
+        drop(g);
+        self.frozen.write().unwrap().clear();
+    }
+
+    /// Copy the value out; the boundary runs guard-free.
+    pub fn send_after_release(&self, tx: &Sender<u64>) {
+        let v = {
+            let g = self.stats.lock().unwrap();
+            *g
+        };
+        tx.send(v).ok();
+        let _ = catch_unwind(AssertUnwindSafe(|| v + 1));
+    }
+}

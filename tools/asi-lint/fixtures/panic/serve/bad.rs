@@ -1,0 +1,17 @@
+//! Seeded-bad fixture for the panic-hygiene pass. This file lints as
+//! `rust/src/serve/bad.rs` (the fixture harness strips the pass-dir
+//! prefix), so runtime-module rules apply: no unwrap/expect/indexing.
+
+use std::collections::HashMap;
+
+pub fn first_latency(ms: &[f64]) -> f64 {
+    ms[0] //~ ERROR panic
+}
+
+pub fn tenant_row(rows: &HashMap<usize, String>, id: usize) -> String {
+    rows.get(&id).cloned().unwrap() //~ ERROR panic
+}
+
+pub fn parse_burst(text: &str) -> u64 {
+    text.parse().expect("burst id") //~ ERROR panic
+}

@@ -1,0 +1,35 @@
+//! Known-good fixture for the panic-hygiene pass: typed errors where
+//! failure is reachable, documented `lint: allow` where the invariant
+//! is real. Lints as `rust/src/serve/good.rs`.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+pub fn first_latency(ms: &[f64]) -> Result<f64> {
+    ms.first().copied().context("empty latency set")
+}
+
+pub fn tenant_row(rows: &HashMap<usize, String>, id: usize) -> Result<String> {
+    rows.get(&id).cloned().with_context(|| format!("no row for tenant {id}"))
+}
+
+pub fn parse_burst(text: &str) -> Result<u64> {
+    text.parse().context("burst id")
+}
+
+pub fn checked_pick(xs: &[u64]) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    // lint: allow(bounds: emptiness checked above)
+    xs[0]
+}
+
+pub fn array_literals_are_not_indexing() -> [u64; 3] {
+    let mut sum = 0;
+    for v in [1u64, 2, 3] {
+        sum += v;
+    }
+    [sum, 0, 0]
+}

@@ -1,0 +1,34 @@
+//! Seeded-bad fixture for the report-schema pass: floats reaching
+//! `Json::Num` without the omit-or-flag non-finite scheme.
+
+use crate::util::json::{num, obj, push_finite_or_flag, Json};
+
+pub struct Row {
+    pub steps: u64,
+    pub final_loss: Option<f64>,
+    pub p99_ms: f64,
+}
+
+impl Row {
+    pub fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        fields.push(("steps", Json::Num(self.steps as f64))); //~ ERROR schema
+        fields.push(("loss", num(self.final_loss.unwrap()))); //~ ERROR schema
+        fields.push(("p99_ms", num(self.p99_ms))); //~ ERROR schema
+        obj(fields)
+    }
+
+    /// The field classification source: `p99_ms` goes through the
+    /// omit-or-flag scheme here, so raw `num(self.p99_ms)` above is a
+    /// schema break.
+    pub fn to_json_flagged(&self) -> Json {
+        let mut fields = vec![("steps", num(self.steps as f64))];
+        push_finite_or_flag(
+            &mut fields,
+            "p99_ms",
+            "p99_nonfinite",
+            Some(self.p99_ms),
+        );
+        obj(fields)
+    }
+}

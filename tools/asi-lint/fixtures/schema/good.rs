@@ -1,0 +1,30 @@
+//! Known-good fixture for the report-schema pass: every float goes
+//! through `num()` (finite-by-construction values) or
+//! `push_finite_or_flag` (raw measurements), matching PRs 5–6.
+
+use crate::util::json::{num, obj, push_finite_or_flag, Json};
+
+pub struct GoodRow {
+    pub steps: u64,
+    pub final_loss: Option<f64>,
+    pub mean_ms: f64,
+}
+
+impl GoodRow {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("steps", num(self.steps as f64))];
+        push_finite_or_flag(
+            &mut fields,
+            "loss",
+            "loss_nonfinite",
+            self.final_loss,
+        );
+        push_finite_or_flag(
+            &mut fields,
+            "mean_ms",
+            "mean_nonfinite",
+            Some(self.mean_ms),
+        );
+        obj(fields)
+    }
+}

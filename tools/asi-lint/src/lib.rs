@@ -1,0 +1,390 @@
+//! asi-lint: repo-invariant static analysis for the asi crate.
+//!
+//! Rust mirror of `tools/asi_lint.py` (the canonical, toolchain-free
+//! driver — see its module docstring for the full pass catalogue).
+//! Both implementations run the same four passes over the same
+//! fixtures and must agree on every `(file, line, pass)` finding:
+//!
+//! - `lock`: guard-liveness tracking, the PR-5 read-guard-across-
+//!   write-lock self-deadlock class, guards across `catch_unwind` /
+//!   channel sends, interprocedural re-acquisition.
+//! - `determinism`: wall-clock reads outside util::timer, unseeded
+//!   randomness, HashMap/HashSet iteration feeding artifacts.
+//! - `panic`: no unwrap/expect/slice-indexing in serve/, fleet/,
+//!   runtime/, faults.rs non-test code.
+//! - `schema`: `Json::Num` only inside util::json; raw float fields
+//!   go through the omit-or-flag scheme, never bare `num()`.
+//!
+//! Source is lexed by the vendored `proc-macro2`/`syn` stubs into flat
+//! `(text, line)` token lists, so each pass is a token-sequence port
+//! of the Python driver's regex pass. `// lint: allow(reason)` on the
+//! finding line (or alone on the line above) suppresses a site;
+//! fixture files mark expected findings with `//~ ERROR <pass>`.
+
+use std::collections::{BTreeMap, HashSet};
+
+use proc_macro2::{Delimiter, TokenStream, TokenTree};
+
+pub mod passes;
+
+/// One flattened token: text plus 1-based source line. Delimiters
+/// appear as `(`/`)`-style tokens; two-char operators the Python
+/// tokenizer treats as units (`::`, `->`, `=>`, `<=`, `>=`, `==`,
+/// `!=`, `&&`, `||`) are merged when source-adjacent.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+}
+
+const MERGE_PAIRS: [&str; 9] =
+    ["::", "->", "=>", "<=", ">=", "==", "!=", "&&", "||"];
+
+/// Flatten a token stream, merging adjacent punct pairs. `last_pos`
+/// carries (line, column-after) of the previous punct so only
+/// source-adjacent pairs merge.
+fn flatten_into(
+    ts: &TokenStream,
+    out: &mut Vec<Tok>,
+    last_pos: &mut Option<(usize, usize)>,
+) {
+    for tree in ts {
+        match tree {
+            TokenTree::Group(g) => {
+                let (open, close) = match g.delimiter() {
+                    Delimiter::Parenthesis => ("(", ")"),
+                    Delimiter::Brace => ("{", "}"),
+                    Delimiter::Bracket => ("[", "]"),
+                };
+                out.push(Tok {
+                    text: open.to_string(),
+                    line: g.span_open().start().line,
+                });
+                *last_pos = None;
+                flatten_into(&g.stream(), out, last_pos);
+                out.push(Tok {
+                    text: close.to_string(),
+                    line: g.span_close().start().line,
+                });
+                *last_pos = None;
+            }
+            TokenTree::Ident(id) => {
+                out.push(Tok {
+                    text: id.to_string(),
+                    line: id.span().start().line,
+                });
+                *last_pos = None;
+            }
+            TokenTree::Literal(l) => {
+                out.push(Tok {
+                    text: l.to_string(),
+                    line: l.span().start().line,
+                });
+                *last_pos = None;
+            }
+            TokenTree::Punct(p) => {
+                let lc = p.span().start();
+                let ch = p.as_char();
+                let adjacent =
+                    *last_pos == Some((lc.line, lc.column));
+                if adjacent {
+                    if let Some(last) = out.last_mut() {
+                        let mut joined = last.text.clone();
+                        joined.push(ch);
+                        if MERGE_PAIRS.contains(&joined.as_str()) {
+                            last.text = joined;
+                            *last_pos = None;
+                            continue;
+                        }
+                    }
+                }
+                out.push(Tok {
+                    text: ch.to_string(),
+                    line: lc.line,
+                });
+                *last_pos = Some((lc.line, lc.column + 1));
+            }
+        }
+    }
+}
+
+pub fn flatten(ts: &TokenStream) -> Vec<Tok> {
+    let mut out = Vec::new();
+    let mut last_pos = None;
+    flatten_into(ts, &mut out, &mut last_pos);
+    out
+}
+
+/// One discovered function: flattened signature and body tokens (the
+/// body includes its outer braces, matching the Python tokenizer's
+/// body window).
+pub struct FnInfo {
+    pub name: String,
+    pub line: usize,
+    pub sig_toks: Vec<Tok>,
+    pub body_toks: Vec<Tok>,
+    pub in_tests: bool,
+}
+
+/// A linted source file.
+pub struct Source {
+    /// Forward-slash path used in diagnostics and scope checks.
+    pub rel: String,
+    /// Flattened tokens of the whole file.
+    pub file_toks: Vec<Tok>,
+    pub fns: Vec<FnInfo>,
+    /// Line -> reason for `// lint: allow(reason)`. A lone
+    /// allow-comment line also registers the next line.
+    pub allows: BTreeMap<usize, String>,
+    /// Line -> pass name for fixture `//~ ERROR <pass>` markers.
+    pub markers: BTreeMap<usize, String>,
+    test_regions: Vec<(usize, usize)>,
+}
+
+impl Source {
+    pub fn parse(rel: &str, text: &str) -> Result<Source, syn::Error> {
+        let file = syn::parse_file(text)?;
+        let file_toks = flatten(&file.tokens);
+        let fns = file
+            .functions
+            .iter()
+            .map(|f| {
+                let mut body_toks = vec![Tok {
+                    text: "{".to_string(),
+                    line: f.body.span_open().start().line,
+                }];
+                let mut last_pos = None;
+                flatten_into(
+                    &f.body.stream(),
+                    &mut body_toks,
+                    &mut last_pos,
+                );
+                body_toks.push(Tok {
+                    text: "}".to_string(),
+                    line: f.body.span_close().start().line,
+                });
+                FnInfo {
+                    name: f.name.clone(),
+                    line: f.span.start().line,
+                    sig_toks: flatten(&f.sig),
+                    body_toks,
+                    in_tests: f.in_tests,
+                }
+            })
+            .collect();
+        let (allows, markers) = scan_comments(text);
+        Ok(Source {
+            rel: rel.replace('\\', "/"),
+            file_toks,
+            fns,
+            allows,
+            markers,
+            test_regions: file.test_regions,
+        })
+    }
+
+    pub fn allowed(&self, line: usize) -> bool {
+        self.allows.contains_key(&line)
+    }
+
+    pub fn in_tests(&self, line: usize) -> bool {
+        self.test_regions
+            .iter()
+            .any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// `file:line: [pass] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rel: String,
+    pub line: usize,
+    pub pass: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.rel, self.line, self.pass, self.msg
+        )
+    }
+}
+
+/// Per-line comment scan for allow/marker comments. A tiny in-string
+/// state machine finds the real `//` (string literals spanning lines
+/// can in principle fool a per-line scan, but an accidental
+/// `lint: allow(` inside one does not occur in practice).
+fn scan_comments(
+    text: &str,
+) -> (BTreeMap<usize, String>, BTreeMap<usize, String>) {
+    let mut allows = BTreeMap::new();
+    let mut markers = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let Some(rest) = comment_tail(raw) else {
+            continue;
+        };
+        let lone = raw.trim_start().starts_with("//");
+        if let Some(reason) = parse_allow(rest) {
+            allows.insert(ln, reason.clone());
+            if lone {
+                allows.insert(ln + 1, reason);
+            }
+        }
+        if let Some(pass) = parse_marker(rest) {
+            markers.insert(ln, pass);
+        }
+    }
+    (allows, markers)
+}
+
+/// Text after the first `//` that is outside a string/char literal,
+/// or None when the line has no comment.
+fn comment_tail(line: &str) -> Option<&str> {
+    let chars: Vec<(usize, char)> = line.char_indices().collect();
+    let mut i = 0;
+    let mut in_str = false;
+    while i < chars.len() {
+        let (pos, c) = chars[i];
+        if in_str {
+            if c == '\\' {
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                in_str = false;
+            }
+            i += 1;
+            continue;
+        }
+        match c {
+            '"' => {
+                in_str = true;
+                i += 1;
+            }
+            '\'' => {
+                // Char literal vs lifetime: a literal closes within a
+                // couple of chars; a lifetime is just a tick.
+                if chars.get(i + 1).map(|&(_, c2)| c2) == Some('\\') {
+                    i += 2;
+                    while i < chars.len() && chars[i].1 != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else if chars.get(i + 2).map(|&(_, c2)| c2)
+                    == Some('\'')
+                {
+                    i += 3;
+                } else {
+                    i += 1;
+                }
+            }
+            '/' if chars.get(i + 1).map(|&(_, c2)| c2) == Some('/') => {
+                return Some(&line[pos + 2..]);
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+    None
+}
+
+/// `lint: allow(<reason>)` at the start of a comment body.
+fn parse_allow(comment: &str) -> Option<String> {
+    let rest = comment.trim_start().strip_prefix("lint:")?;
+    let rest = rest.trim_start().strip_prefix("allow(")?;
+    let end = rest.find(')')?;
+    Some(rest[..end].trim().to_string())
+}
+
+/// `~ ERROR <pass>` right after `//` (fixture marker syntax).
+fn parse_marker(comment: &str) -> Option<String> {
+    let rest = comment.strip_prefix('~')?;
+    let rest = rest.trim_start().strip_prefix("ERROR")?;
+    let word: String = rest
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if word.is_empty() {
+        None
+    } else {
+        Some(word)
+    }
+}
+
+/// Run all four passes over a set of sources (one analysis group:
+/// interprocedural lock summaries and the raw-float-field
+/// classification are computed across the whole group), filter
+/// allow-listed and test-region findings, dedupe by
+/// `(file, line, pass)`, and sort.
+pub fn run_passes(sources: &[Source]) -> Vec<Finding> {
+    let summaries = passes::build_lock_summaries(sources);
+    let fn_names: HashSet<String> = sources
+        .iter()
+        .flat_map(|s| s.fns.iter().map(|f| f.name.clone()))
+        .collect();
+    let raw_fields = passes::collect_raw_float_fields(sources);
+    let mut out = Vec::new();
+    for src in sources {
+        let mut fs = Vec::new();
+        fs.extend(passes::lock(src, &summaries, &fn_names));
+        fs.extend(passes::determinism(src));
+        fs.extend(passes::panic_hygiene(src));
+        fs.extend(passes::schema(src, &raw_fields));
+        fs.retain(|f| !src.allowed(f.line) && !src.in_tests(f.line));
+        out.extend(fs);
+    }
+    out.sort_by(|a, b| {
+        (&a.rel, a.line, a.pass).cmp(&(&b.rel, b.line, b.pass))
+    });
+    out.dedup_by(|a, b| {
+        a.rel == b.rel && a.line == b.line && a.pass == b.pass
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_merges_adjacent_operator_pairs() {
+        let ts: TokenStream =
+            "a::b -> c => d <= e; x = = y".parse().unwrap();
+        let texts: Vec<&str> = flatten(&ts)
+            .iter()
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(
+            texts,
+            ["a", "::", "b", "->", "c", "=>", "d", "<=", "e", ";",
+             "x", "=", "=", "y"]
+        );
+    }
+
+    #[test]
+    fn allow_comment_alone_covers_next_line() {
+        let (allows, _) = scan_comments(
+            "// lint: allow(bounds: checked)\nxs[0];\nlet y = 1; \
+             // lint: allow(other: reason)\nz;\n",
+        );
+        assert!(allows.contains_key(&1));
+        assert!(allows.contains_key(&2));
+        assert!(allows.contains_key(&3));
+        assert!(!allows.contains_key(&4));
+    }
+
+    #[test]
+    fn markers_and_strings_do_not_confuse_the_scanner() {
+        let (allows, markers) = scan_comments(
+            "let s = \"// lint: allow(fake)\"; //~ ERROR panic\n",
+        );
+        assert!(allows.is_empty());
+        assert_eq!(markers.get(&1).map(String::as_str), Some("panic"));
+    }
+}

@@ -1,0 +1,138 @@
+//! CLI mirror of `python3 tools/asi_lint.py`: lint `rust/src/` (or
+//! `--root DIR`), print one `asi-lint: file:line: [pass] message` row
+//! per finding plus a tally line, exit 1 when anything was found.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use asi_lint::{run_passes, Source};
+
+/// Recursively collect `.rs` files under `root` in sorted order
+/// (directories and files both sorted, like the Python driver's
+/// `sorted(os.walk(...))`).
+fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut dirs = vec![root.to_path_buf()];
+    let mut out = Vec::new();
+    while let Some(dir) = dirs.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)?
+            .collect::<std::io::Result<Vec<_>>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                dirs.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn main() -> ExitCode {
+    let mut root = String::from("rust/src");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(r) => root = r,
+                None => {
+                    eprintln!("asi-lint: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                println!(
+                    "asi-lint [--root DIR]\n\nStatic analysis for \
+                     the asi crate (lock discipline, determinism, \
+                     panic hygiene, report-schema discipline). \
+                     Mirrors tools/asi_lint.py; DIR defaults to \
+                     rust/src, resolved against the repo root."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("asi-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // tools/asi-lint/ -> repo root is two levels up.
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..");
+    let root_path = Path::new(&root);
+    let root_abs = if root_path.is_absolute() {
+        root_path.to_path_buf()
+    } else {
+        repo.join(root_path)
+    };
+    if !root_abs.is_dir() {
+        eprintln!("asi-lint: no such directory {}", root_abs.display());
+        return ExitCode::from(2);
+    }
+    let files = match rs_files(&root_abs) {
+        Ok(fs) => fs,
+        Err(e) => {
+            eprintln!("asi-lint: walking {root}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut sources = Vec::new();
+    for path in &files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("asi-lint: reading {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = path
+            .strip_prefix(&root_abs)
+            .map(|suffix| {
+                Path::new(&root).join(suffix).display().to_string()
+            })
+            .unwrap_or_else(|_| path.display().to_string());
+        match Source::parse(&rel, &text) {
+            Ok(src) => sources.push(src),
+            Err(e) => {
+                eprintln!("asi-lint: parse error in {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let findings = run_passes(&sources);
+    for f in &findings {
+        println!("asi-lint: {f}");
+    }
+    let mut by_pass: Vec<(&str, usize)> = Vec::new();
+    for f in &findings {
+        match by_pass.iter_mut().find(|(p, _)| *p == f.pass) {
+            Some((_, n)) => *n += 1,
+            None => by_pass.push((f.pass, 1)),
+        }
+    }
+    by_pass.sort();
+    let tally = if by_pass.is_empty() {
+        "clean".to_string()
+    } else {
+        by_pass
+            .iter()
+            .map(|(p, n)| format!("{p}: {n}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    println!(
+        "asi-lint: {} file(s), {} finding(s) ({tally})",
+        sources.len(),
+        findings.len()
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

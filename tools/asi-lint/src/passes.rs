@@ -1,0 +1,983 @@
+//! The four lint passes, ported token-for-token from
+//! `tools/asi_lint.py` (which stays the canonical driver — it runs in
+//! toolchain-less containers). Findings are raw here: the caller
+//! (`run_passes`) applies allow-comment and test-region filtering and
+//! the `(file, line, pass)` dedupe, exactly like the Python driver.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use crate::{Finding, FnInfo, Source, Tok};
+
+const ACQUIRE_METHODS: [&str; 9] = [
+    "read", "write", "lock", "try_read", "try_write", "try_lock",
+    "read_ok", "write_ok", "lock_ok",
+];
+
+/// Chain suffixes that return the guard itself (the binding is still
+/// a live guard); anything else consumes the guard in-statement.
+const GUARD_SUFFIXES: [&str; 3] = ["expect", "unwrap", "unwrap_or_else"];
+
+const ITER_METHODS: [&str; 5] =
+    ["iter", "keys", "values", "into_iter", "drain"];
+
+/// Body tokens that mark a function as output construction.
+const OUTPUT_MARKS: [&str; 5] =
+    ["Json", "to_json", "push_finite_or_flag", "write_atomic", "save"];
+
+/// A `[` after one of these keywords opens an array literal (`for x
+/// in [a, b]`, `return [0; 4]`), not an index expression.
+const NONINDEX_KEYWORDS: [&str; 17] = [
+    "in", "return", "match", "if", "else", "break", "continue", "let",
+    "while", "loop", "for", "move", "ref", "mut", "as", "where",
+    "yield",
+];
+
+fn is_ident(t: &str) -> bool {
+    let mut chars = t.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Python's `[a-z_][a-z0-9_]*` (strictly lowercase).
+fn is_lower_ident(t: &str) -> bool {
+    let mut chars = t.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_lowercase() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| {
+        c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+    })
+}
+
+fn finding(
+    src: &Source,
+    line: usize,
+    pass: &'static str,
+    msg: String,
+) -> Finding {
+    Finding {
+        rel: src.rel.clone(),
+        line,
+        pass,
+        msg,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: lock discipline
+// ---------------------------------------------------------------------------
+
+/// Walk back from `toks[i]` (an acquire method) to the start of the
+/// receiver chain; return its normalized textual root (`self.frozen`
+/// for `self.frozen[k].read()`, `state` for `state.lock()`). None for
+/// call-result receivers with no stable cell identity.
+fn receiver_root(toks: &[Tok], i: usize) -> Option<String> {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut j = i as isize - 1;
+    let mut depth = 0i32;
+    while j >= 0 {
+        let t = toks[j as usize].text.as_str();
+        if t == ")" || t == "]" {
+            depth += 1;
+            j -= 1;
+            continue;
+        }
+        if t == "(" || t == "[" {
+            depth -= 1;
+            if depth < 0 {
+                break;
+            }
+            j -= 1;
+            continue;
+        }
+        if depth > 0 {
+            j -= 1;
+            continue;
+        }
+        if t == "." || t == "::" {
+            j -= 1;
+            continue;
+        }
+        if is_ident(t) {
+            let prev_sep = j > 0 && {
+                let p = toks[(j - 1) as usize].text.as_str();
+                p == "." || p == "::"
+            };
+            parts.push(t);
+            if !prev_sep {
+                break;
+            }
+            j -= 1;
+            continue;
+        }
+        break;
+    }
+    if parts.is_empty() {
+        return None;
+    }
+    parts.reverse();
+    Some(parts.join("."))
+}
+
+/// Index just past the current statement, scanning from token `i`:
+/// the first `;` at depth 0, or — if a `{` block opens first (if-let
+/// / match scrutinee) — past that block and any else-chain.
+fn stmt_extent(toks: &[Tok], i: usize) -> usize {
+    let n = toks.len();
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < n {
+        let t = toks[j].text.as_str();
+        if t == "(" || t == "[" {
+            depth += 1;
+        } else if t == ")" || t == "]" {
+            depth -= 1;
+        } else if t == ";" && depth <= 0 {
+            return j + 1;
+        } else if t == "{" && depth <= 0 {
+            let mut bd = 0i32;
+            let mut chained = false;
+            while j < n {
+                let u = toks[j].text.as_str();
+                if u == "{" {
+                    bd += 1;
+                } else if u == "}" {
+                    bd -= 1;
+                    if bd == 0 {
+                        if j + 1 < n && toks[j + 1].text == "else" {
+                            j += 1;
+                            chained = true;
+                            break;
+                        }
+                        return j + 1;
+                    }
+                }
+                j += 1;
+            }
+            if !chained {
+                return n;
+            }
+        }
+        j += 1;
+    }
+    n
+}
+
+/// When the acquisition chain at `toks[i]` is the full right-hand
+/// side of a `let [mut] NAME = ...;` (modulo guard-returning
+/// suffixes), return NAME — the guard is bound and stays live.
+fn binding_var(toks: &[Tok], i: usize) -> Option<String> {
+    let n = toks.len();
+    // Backward: find the start of the receiver chain.
+    let mut j = i as isize - 1;
+    let mut d = 0i32;
+    while j >= 0 {
+        let tt = toks[j as usize].text.as_str();
+        if tt == ")" || tt == "]" {
+            d += 1;
+        } else if tt == "(" || tt == "[" {
+            d -= 1;
+            if d < 0 {
+                break;
+            }
+        } else if d == 0
+            && !(tt == "."
+                || tt == "::"
+                || tt == "&"
+                || tt == "*"
+                || is_ident(tt))
+        {
+            break;
+        }
+        j -= 1;
+    }
+    if j < 1 {
+        return None;
+    }
+    let j = j as usize;
+    if toks[j].text != "=" || !is_ident(&toks[j - 1].text) {
+        return None;
+    }
+    let after_let = (j >= 2 && toks[j - 2].text == "let")
+        || (j >= 3
+            && toks[j - 2].text == "mut"
+            && toks[j - 3].text == "let");
+    if !after_let {
+        return None;
+    }
+    // Forward: the chain must end at the guard. Skip the call's
+    // parens, then any guard-returning suffixes.
+    let mut k = i + 1; // at '('
+    let mut pd = 0i32;
+    while k < n {
+        if toks[k].text == "(" {
+            pd += 1;
+        } else if toks[k].text == ")" {
+            pd -= 1;
+            if pd == 0 {
+                k += 1;
+                break;
+            }
+        }
+        k += 1;
+    }
+    while k + 1 < n
+        && toks[k].text == "."
+        && GUARD_SUFFIXES.contains(&toks[k + 1].text.as_str())
+    {
+        k += 2;
+        if k < n && toks[k].text == "(" {
+            let mut pd = 0i32;
+            while k < n {
+                if toks[k].text == "(" {
+                    pd += 1;
+                } else if toks[k].text == ")" {
+                    pd -= 1;
+                    if pd == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                k += 1;
+            }
+        }
+    }
+    if k < n && (toks[k].text == ";" || toks[k].text == "?") {
+        Some(toks[j - 1].text.clone())
+    } else {
+        None
+    }
+}
+
+struct LiveGuard {
+    root: String,
+    var: Option<String>,
+    until: Option<usize>,
+    depth: i32,
+    line: usize,
+}
+
+fn is_acquire(toks: &[Tok], i: usize) -> bool {
+    ACQUIRE_METHODS.contains(&toks[i].text.as_str())
+        && i + 1 < toks.len()
+        && toks[i + 1].text == "("
+        && i >= 1
+        && toks[i - 1].text == "."
+}
+
+pub fn lock(
+    src: &Source,
+    summaries: &HashMap<String, BTreeSet<String>>,
+    fn_names: &HashSet<String>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in &src.fns {
+        let toks = &f.body_toks;
+        let n = toks.len();
+        let mut live: Vec<LiveGuard> = Vec::new();
+        let mut depth = 0i32;
+        let mut i = 0usize;
+        while i < n {
+            let t = toks[i].text.as_str();
+            let ln = toks[i].line;
+            if t == "{" {
+                depth += 1;
+            } else if t == "}" {
+                depth -= 1;
+                live.retain(|g| g.var.is_none() || g.depth <= depth);
+            }
+            // Expiry of statement-scoped temporaries.
+            live.retain(|g| g.until.map_or(true, |u| i < u));
+
+            if t == "drop" && i + 2 < n && toks[i + 1].text == "(" {
+                let var = toks[i + 2].text.clone();
+                live.retain(|g| g.var.as_deref() != Some(var.as_str()));
+                i += 1;
+                continue;
+            }
+
+            if is_acquire(toks, i) {
+                if let Some(root) = receiver_root(toks, i) {
+                    for g in &live {
+                        if g.root == root {
+                            findings.push(finding(
+                                src,
+                                ln,
+                                "lock",
+                                format!(
+                                    "`{}` is locked here while the \
+                                     guard taken on line {} is still \
+                                     live (std read/write locks \
+                                     self-deadlock when re-acquired \
+                                     on one thread)",
+                                    root, g.line
+                                ),
+                            ));
+                        }
+                    }
+                    match binding_var(toks, i) {
+                        Some(var) => {
+                            // Reassignment to a var already holding
+                            // a guard releases the old one.
+                            live.retain(|g| {
+                                g.var.as_deref() != Some(var.as_str())
+                            });
+                            live.push(LiveGuard {
+                                root,
+                                var: Some(var),
+                                until: None,
+                                depth,
+                                line: ln,
+                            });
+                        }
+                        None => live.push(LiveGuard {
+                            root,
+                            var: None,
+                            until: Some(stmt_extent(toks, i)),
+                            depth,
+                            line: ln,
+                        }),
+                    }
+                }
+                i += 1;
+                continue;
+            }
+
+            // Guards across panic/channel boundaries.
+            if !live.is_empty() {
+                let boundary = if t == "catch_unwind" {
+                    Some("catch_unwind".to_string())
+                } else if (t == "send" || t == "try_send")
+                    && i >= 1
+                    && toks[i - 1].text == "."
+                    && i + 1 < n
+                    && toks[i + 1].text == "("
+                {
+                    Some(format!(".{t}()"))
+                } else {
+                    None
+                };
+                if let Some(b) = boundary {
+                    let roots: BTreeSet<&str> =
+                        live.iter().map(|g| g.root.as_str()).collect();
+                    let roots: Vec<&str> = roots.into_iter().collect();
+                    findings.push(finding(
+                        src,
+                        ln,
+                        "lock",
+                        format!(
+                            "guard on `{}` held across {} — a \
+                             blocked send or unwind boundary must \
+                             not own a lock",
+                            roots.join(", "),
+                            b
+                        ),
+                    ));
+                }
+            }
+
+            // Interprocedural: call to a function that (transitively)
+            // locks a held root.
+            if !live.is_empty()
+                && is_ident(t)
+                && i + 1 < n
+                && toks[i + 1].text == "("
+                && fn_names.contains(t)
+                && t != f.name
+            {
+                if let Some(inner) = summaries.get(t) {
+                    let hit: BTreeSet<&str> = live
+                        .iter()
+                        .map(|g| g.root.as_str())
+                        .filter(|r| inner.contains(*r))
+                        .collect();
+                    if !hit.is_empty() {
+                        let hit: Vec<&str> = hit.into_iter().collect();
+                        findings.push(finding(
+                            src,
+                            ln,
+                            "lock",
+                            format!(
+                                "call to `{t}()` while holding a \
+                                 guard on `{}` — `{t}` \
+                                 (transitively) locks the same cell",
+                                hit.join(", ")
+                            ),
+                        ));
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+    findings
+}
+
+/// One scan of a function body: `self.*` acquisition roots plus the
+/// set of callee names (for the call-graph fixpoint).
+fn local_lock_info(f: &FnInfo) -> (Vec<String>, BTreeSet<String>) {
+    let toks = &f.body_toks;
+    let n = toks.len();
+    let mut roots = Vec::new();
+    let mut callees = BTreeSet::new();
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        if is_acquire(toks, i) {
+            if let Some(r) = receiver_root(toks, i) {
+                roots.push(r);
+            }
+        } else if is_ident(t)
+            && i + 1 < n
+            && toks[i + 1].text == "("
+            && !ACQUIRE_METHODS.contains(&t)
+        {
+            callees.insert(t.to_string());
+        }
+    }
+    (roots, callees)
+}
+
+/// fn name -> set of `self.*` roots it acquires, transitively. Only
+/// uniquely named functions get a summary (no type-based method
+/// resolution here — every `new` in the crate would collapse into
+/// one), and only `self.`-rooted cells propagate (a local guard
+/// variable's name means nothing in another function).
+pub fn build_lock_summaries(
+    sources: &[Source],
+) -> HashMap<String, BTreeSet<String>> {
+    let mut local: HashMap<String, BTreeSet<String>> = HashMap::new();
+    let mut calls: HashMap<String, BTreeSet<String>> = HashMap::new();
+    let mut def_count: HashMap<String, usize> = HashMap::new();
+    for src in sources {
+        for f in &src.fns {
+            *def_count.entry(f.name.clone()).or_insert(0) += 1;
+            let (roots, callees) = local_lock_info(f);
+            local.entry(f.name.clone()).or_default().extend(
+                roots.into_iter().filter(|r| r.starts_with("self.")),
+            );
+            calls.entry(f.name.clone()).or_default().extend(callees);
+        }
+    }
+    let unique: HashSet<String> = def_count
+        .iter()
+        .filter(|&(_, &c)| c == 1)
+        .map(|(n, _)| n.clone())
+        .collect();
+    let mut summaries: HashMap<String, BTreeSet<String>> = local
+        .into_iter()
+        .filter(|(k, _)| unique.contains(k))
+        .collect();
+    let call_list: Vec<(String, BTreeSet<String>)> =
+        calls.into_iter().collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (name, callees) in &call_list {
+            if !unique.contains(name) {
+                continue;
+            }
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for c in callees {
+                if c != name {
+                    if let Some(s) = summaries.get(c) {
+                        add.extend(s.iter().cloned());
+                    }
+                }
+            }
+            let cur = summaries.entry(name.clone()).or_default();
+            let before = cur.len();
+            cur.extend(add);
+            if cur.len() != before {
+                changed = true;
+            }
+        }
+    }
+    summaries.retain(|_, v| !v.is_empty());
+    summaries
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2: determinism
+// ---------------------------------------------------------------------------
+
+fn collect_hash_decls(toks: &[Tok], out: &mut BTreeSet<String>) {
+    for i in 0..toks.len() {
+        let t = toks[i].text.as_str();
+        if (t != "HashMap" && t != "HashSet")
+            || toks.get(i + 1).map(|u| u.text.as_str()) != Some("<")
+        {
+            continue;
+        }
+        let mut j = i as isize - 1;
+        // Skip `std :: collections ::`-style path prefixes.
+        while j >= 1
+            && toks[j as usize].text == "::"
+            && is_ident(&toks[(j - 1) as usize].text)
+        {
+            j -= 2;
+        }
+        if j >= 0 && toks[j as usize].text == "mut" {
+            j -= 1;
+        }
+        if j >= 0 && toks[j as usize].text == "&" {
+            j -= 1;
+        }
+        if j >= 1
+            && toks[j as usize].text == ":"
+            && is_lower_ident(&toks[(j - 1) as usize].text)
+        {
+            out.insert(toks[(j - 1) as usize].text.clone());
+        }
+    }
+}
+
+fn collect_hash_binds(toks: &[Tok], out: &mut BTreeSet<String>) {
+    let n = toks.len();
+    for i in 0..n {
+        if toks[i].text != "let" {
+            continue;
+        }
+        let mut j = i + 1;
+        if j < n && toks[j].text == "mut" {
+            j += 1;
+        }
+        if j >= n || !is_lower_ident(&toks[j].text) {
+            continue;
+        }
+        let mut k = j + 1;
+        while k < n && toks[k].text != "=" && toks[k].text != ";" {
+            k += 1;
+        }
+        if k >= n || toks[k].text != "=" {
+            continue;
+        }
+        let mut m = k + 1;
+        while m < n && toks[m].text != ";" {
+            let t = toks[m].text.as_str();
+            if (t == "HashMap" || t == "HashSet")
+                && toks.get(m + 1).map(|u| u.text.as_str())
+                    == Some("::")
+            {
+                out.insert(toks[j].text.clone());
+                break;
+            }
+            m += 1;
+        }
+    }
+}
+
+pub fn determinism(src: &Source) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let toks = &src.file_toks;
+    let n = toks.len();
+    let timer_file = src.rel.ends_with("util/timer.rs");
+    // `use std::time::SystemTime;` names the type without reading the
+    // clock — only expression sites are findings.
+    let mut in_use = false;
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        if t == "use" {
+            in_use = true;
+        } else if t == ";" {
+            in_use = false;
+        }
+        if !timer_file && !in_use {
+            let wallclock = if t == "Instant"
+                && toks.get(i + 1).map(|u| u.text.as_str())
+                    == Some("::")
+                && toks.get(i + 2).map(|u| u.text.as_str())
+                    == Some("now")
+            {
+                Some("Instant::now")
+            } else if t == "SystemTime" {
+                Some("SystemTime")
+            } else {
+                None
+            };
+            if let Some(what) = wallclock {
+                findings.push(finding(
+                    src,
+                    toks[i].line,
+                    "determinism",
+                    format!(
+                        "`{what}` outside util::timer — wall-clock \
+                         reads are measurement-only; annotate the \
+                         site with `// lint: allow(measurement: \
+                         ...)` if this one is"
+                    ),
+                ));
+            }
+        }
+        let random = if t == "thread_rng" || t == "from_entropy" {
+            Some(t.to_string())
+        } else if (t == "rand" || t == "RandomState")
+            && toks.get(i + 1).map(|u| u.text.as_str()) == Some("::")
+            && toks.get(i + 2).map(|u| u.text.as_str())
+                == Some(if t == "rand" { "random" } else { "new" })
+        {
+            Some(format!(
+                "{t}::{}",
+                if t == "rand" { "random" } else { "new" }
+            ))
+        } else {
+            None
+        };
+        if let Some(what) = random {
+            findings.push(finding(
+                src,
+                toks[i].line,
+                "determinism",
+                format!(
+                    "unseeded randomness (`{what}`) — every random \
+                     draw must come from the seeded util::rng fold"
+                ),
+            ));
+        }
+    }
+
+    // HashMap/HashSet iteration inside output construction.
+    for f in &src.fns {
+        let body = &f.body_toks;
+        let marked = body.iter().enumerate().any(|(i, t)| {
+            OUTPUT_MARKS.contains(&t.text.as_str())
+                || (t.text == "Checkpoint"
+                    && body.get(i + 1).map(|u| u.text.as_str())
+                        == Some("::"))
+        }) || f.name == "to_json"
+            || f.name == "render"
+            || src.rel.contains("report");
+        if !marked {
+            continue;
+        }
+        let mut tainted: BTreeSet<String> = BTreeSet::new();
+        collect_hash_decls(&f.sig_toks, &mut tainted);
+        collect_hash_decls(body, &mut tainted);
+        collect_hash_binds(body, &mut tainted);
+        if tainted.is_empty() {
+            continue;
+        }
+        let nb = body.len();
+        for i in 0..nb {
+            let t = toks_text(body, i);
+            if tainted.contains(t)
+                && toks_text(body, i + 1) == "."
+                && ITER_METHODS.contains(&toks_text(body, i + 2))
+                && toks_text(body, i + 3) == "("
+            {
+                findings.push(finding(
+                    src,
+                    body[i].line,
+                    "determinism",
+                    format!(
+                        "iterating Hash{{Map,Set}} `{t}` inside \
+                         output construction — iteration order is \
+                         nondeterministic; collect into a sorted \
+                         Vec first"
+                    ),
+                ));
+            }
+            if t == "for" {
+                let mut k = i + 1;
+                while k < nb
+                    && body[k].text != ";"
+                    && body[k].text != "{"
+                    && body[k].text != "in"
+                {
+                    k += 1;
+                }
+                if k >= nb || body[k].text != "in" {
+                    continue;
+                }
+                let mut m = k + 1;
+                if m < nb && body[m].text == "&" {
+                    m += 1;
+                }
+                if m < nb && body[m].text == "mut" {
+                    m += 1;
+                }
+                if m < nb
+                    && tainted.contains(&body[m].text)
+                    && toks_text(body, m + 1) == "{"
+                {
+                    findings.push(finding(
+                        src,
+                        body[m].line,
+                        "determinism",
+                        format!(
+                            "for-loop over Hash{{Map,Set}} `{}` \
+                             inside output construction — iteration \
+                             order is nondeterministic; collect \
+                             into a sorted Vec first",
+                            body[m].text
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// Bounds-safe token text (empty string past the end).
+fn toks_text(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3: panic hygiene
+// ---------------------------------------------------------------------------
+
+fn in_panic_scope(rel: &str) -> bool {
+    let tail = rel.split("rust/src/").last().unwrap_or(rel);
+    tail.starts_with("serve/")
+        || tail.starts_with("fleet/")
+        || tail.starts_with("runtime/")
+        || tail == "faults.rs"
+}
+
+pub fn panic_hygiene(src: &Source) -> Vec<Finding> {
+    if !in_panic_scope(&src.rel) {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    let toks = &src.file_toks;
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        if t == "."
+            && (toks_text(toks, i + 1) == "unwrap"
+                || toks_text(toks, i + 1) == "expect")
+            && toks_text(toks, i + 2) == "("
+        {
+            findings.push(finding(
+                src,
+                toks[i].line,
+                "panic",
+                format!(
+                    "`.{}(...)` in a runtime module — return a typed \
+                     error (tenant failures are report rows, not \
+                     aborts) or document the invariant with \
+                     `// lint: allow(reason)`",
+                    toks[i + 1].text
+                ),
+            ));
+        }
+        if t == "[" && i >= 1 {
+            // `expr[` — indexing can panic. The previous token
+            // decides: after an identifier (that is not an
+            // array-literal keyword), a literal, `)`, `]` or `?` the
+            // bracket indexes; after anything else it opens an
+            // attribute, macro, array literal/type or slice pattern.
+            let prev = toks[i - 1].text.as_str();
+            let last = prev.chars().last().unwrap_or(' ');
+            let indexes = if last == ')' || last == ']' || last == '?'
+            {
+                true
+            } else if last.is_ascii_alphanumeric() || last == '_' {
+                !(is_ident(prev) && NONINDEX_KEYWORDS.contains(&prev))
+            } else {
+                false
+            };
+            if indexes {
+                findings.push(finding(
+                    src,
+                    toks[i].line,
+                    "panic",
+                    "slice/array indexing in a runtime module — use \
+                     `.get()` with a typed error, or document the \
+                     bounds invariant with `// lint: allow(bounds: \
+                     ...)`"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Pass 4: report-schema discipline
+// ---------------------------------------------------------------------------
+
+/// Tokens inside the paren group opening at `toks[open]`.
+fn paren_group(toks: &[Tok], open: usize) -> &[Tok] {
+    let mut depth = 0i32;
+    for k in open..toks.len() {
+        match toks[k].text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return &toks[open + 1..k];
+                }
+            }
+            _ => {}
+        }
+    }
+    &toks[open + 1..]
+}
+
+/// Split a flattened argument list on top-level commas. Depth is
+/// counted per character over the token texts (including `<`/`>`),
+/// mirroring the Python splitter exactly.
+fn split_top_commas(toks: &[Tok]) -> Vec<Vec<&Tok>> {
+    let mut parts: Vec<Vec<&'a Tok>> = vec![Vec::new()];
+    let mut depth = 0i64;
+    for t in toks {
+        if t.text == "," && depth == 0 {
+            parts.push(Vec::new());
+            continue;
+        }
+        for c in t.text.chars() {
+            match c {
+                '(' | '[' | '{' | '<' => depth += 1,
+                ')' | ']' | '}' | '>' => depth -= 1,
+                _ => {}
+            }
+        }
+        parts.last_mut().expect("non-empty by construction").push(t);
+    }
+    parts
+}
+
+/// Field accesses that name *data*, not methods: `.f` not followed by
+/// `(`; if another `.g` follows, `g` must be a call (so
+/// `t.report.final_loss.map(..)` yields `final_loss`, not `report`).
+fn terminal_fields(part: &[&Tok], out: &mut BTreeSet<String>) {
+    for idx in 0..part.len() {
+        if part[idx].text != "." {
+            continue;
+        }
+        let Some(f) = part.get(idx + 1) else {
+            continue;
+        };
+        if !is_lower_ident(&f.text) {
+            continue;
+        }
+        match part.get(idx + 2).map(|t| t.text.as_str()) {
+            Some("(") => {}
+            Some(".") => {
+                let call_next = part
+                    .get(idx + 3)
+                    .map_or(false, |g| is_lower_ident(&g.text))
+                    && part
+                        .get(idx + 4)
+                        .map_or(false, |p| p.text == "(");
+                if call_next {
+                    out.insert(f.text.clone());
+                }
+            }
+            _ => {
+                out.insert(f.text.clone());
+            }
+        }
+    }
+}
+
+/// Field names the crate already classifies as raw/possibly-non-
+/// finite: whatever is passed as the *value* argument (the last one)
+/// of `push_finite_or_flag`. Those must never reach `num()` directly.
+pub fn collect_raw_float_fields(sources: &[Source]) -> BTreeSet<String> {
+    let mut raw = BTreeSet::new();
+    for src in sources {
+        let toks = &src.file_toks;
+        for i in 0..toks.len() {
+            if toks[i].text == "push_finite_or_flag"
+                && toks_text(toks, i + 1) == "("
+            {
+                let arg = paren_group(toks, i + 1);
+                let parts = split_top_commas(arg);
+                if let Some(last) =
+                    parts.iter().rev().find(|p| !p.is_empty())
+                {
+                    terminal_fields(last, &mut raw);
+                }
+            }
+        }
+    }
+    raw
+}
+
+pub fn schema(
+    src: &Source,
+    raw_fields: &BTreeSet<String>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let json_file = src.rel.ends_with("util/json.rs");
+    if json_file {
+        return findings;
+    }
+    let toks = &src.file_toks;
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        if t == "Json"
+            && toks_text(toks, i + 1) == "::"
+            && toks_text(toks, i + 2) == "Num"
+            && toks_text(toks, i + 3) == "("
+        {
+            findings.push(finding(
+                src,
+                toks[i].line,
+                "schema",
+                "`Json::Num` constructed outside util::json — go \
+                 through `num()` / `push_finite_or_flag()` so \
+                 non-finite floats hit the omit-or-flag scheme, or \
+                 document the sentinel with `// lint: allow(...)`"
+                    .to_string(),
+            ));
+        }
+        if t == "num"
+            && toks_text(toks, i + 1) == "("
+            && (i == 0 || toks[i - 1].text != ".")
+        {
+            let arg = paren_group(toks, i + 1);
+            let has_unwrap = (0..arg.len()).any(|k| {
+                arg[k].text == "."
+                    && (toks_text(arg, k + 1) == "unwrap"
+                        || toks_text(arg, k + 1) == "expect")
+                    && toks_text(arg, k + 2) == "("
+            });
+            if has_unwrap {
+                findings.push(finding(
+                    src,
+                    toks[i].line,
+                    "schema",
+                    "`num(...)` over an unwrapped Option — a \
+                     non-finite or absent value must be omitted or \
+                     flagged (push_finite_or_flag), never unwrapped \
+                     into Json::Num"
+                        .to_string(),
+                ));
+                continue;
+            }
+            let mut hits: Vec<&str> = arg
+                .iter()
+                .filter(|a| {
+                    is_lower_ident(&a.text)
+                        && raw_fields.contains(&a.text)
+                })
+                .map(|a| a.text.as_str())
+                .collect();
+            hits.sort_unstable();
+            if let Some(first) = hits.first() {
+                findings.push(finding(
+                    src,
+                    toks[i].line,
+                    "schema",
+                    format!(
+                        "`num(...)` over raw float field `{first}` \
+                         — this field goes through the omit-or-flag \
+                         scheme elsewhere; use push_finite_or_flag \
+                         here too"
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}

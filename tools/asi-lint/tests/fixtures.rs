@@ -1,0 +1,176 @@
+//! Fixture contract, shared verbatim with `tools/asi_lint.py
+//! --self-test`: every `bad*.rs` fixture must produce exactly the
+//! findings its `//~ ERROR <pass>` markers declare (same line, same
+//! pass), and every `good*.rs` fixture must be clean. All passes run
+//! on all fixtures — a bad file for one pass must not trip another by
+//! accident.
+
+use std::path::{Path, PathBuf};
+
+use asi_lint::{run_passes, Source};
+
+/// Directories under the fixture root, depth-first in sorted order
+/// (mirrors Python's `sorted(os.walk(...))` grouping: each directory
+/// is one analysis group).
+fn fixture_dirs(root: &Path) -> Vec<PathBuf> {
+    let mut out = vec![root.to_path_buf()];
+    let mut i = 0;
+    while i < out.len() {
+        let mut subs: Vec<PathBuf> = std::fs::read_dir(&out[i])
+            .expect("fixture dir readable")
+            .map(|e| e.expect("fixture entry").path())
+            .filter(|p| p.is_dir())
+            .collect();
+        subs.sort();
+        out.extend(subs);
+        i += 1;
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn fixtures_match_their_markers() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    let mut failures: Vec<String> = Vec::new();
+    let mut n_files = 0usize;
+    for dir in fixture_dirs(&root) {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .expect("fixture dir readable")
+            .map(|e| e.expect("fixture entry").path())
+            .filter(|p| {
+                p.is_file()
+                    && p.extension().is_some_and(|e| e == "rs")
+            })
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            continue;
+        }
+        let mut srcs = Vec::new();
+        for path in &files {
+            // Module scoping (the panic pass) keys off the path
+            // *below* the per-pass fixture dir:
+            // fixtures/panic/serve/bad.rs lints like
+            // rust/src/serve/bad.rs. Strip the pass-dir prefix so it
+            // can't satisfy (or dodge) the scope check by accident.
+            let rel_full = path
+                .strip_prefix(&root)
+                .expect("fixture under fixture root");
+            let parts: Vec<&std::ffi::OsStr> =
+                rel_full.iter().collect();
+            let scoped: PathBuf = if parts.len() > 1 {
+                parts[1..].iter().collect()
+            } else {
+                rel_full.to_path_buf()
+            };
+            let text = std::fs::read_to_string(path)
+                .expect("fixture readable");
+            let rel = scoped.display().to_string();
+            match Source::parse(&rel, &text) {
+                Ok(src) => srcs.push(src),
+                Err(e) => failures
+                    .push(format!("parse error in {rel}: {e}")),
+            }
+        }
+        let findings = run_passes(&srcs);
+        for (src, path) in srcs.iter().zip(&files) {
+            n_files += 1;
+            let mine: Vec<_> = findings
+                .iter()
+                .filter(|f| f.rel == src.rel)
+                .collect();
+            let good = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("good"));
+            if good {
+                for f in &mine {
+                    failures.push(format!(
+                        "unexpected finding in good fixture: {f}"
+                    ));
+                }
+                continue;
+            }
+            let got: std::collections::BTreeSet<(usize, String)> =
+                mine.iter()
+                    .map(|f| (f.line, f.pass.to_string()))
+                    .collect();
+            let want: std::collections::BTreeSet<(usize, String)> =
+                src.markers
+                    .iter()
+                    .map(|(ln, p)| (*ln, p.clone()))
+                    .collect();
+            for (ln, p) in want.difference(&got) {
+                failures.push(format!(
+                    "{}:{ln}: expected [{p}] finding not produced",
+                    src.rel
+                ));
+            }
+            for (ln, p) in got.difference(&want) {
+                failures.push(format!(
+                    "{}:{ln}: unexpected [{p}] finding in bad \
+                     fixture (add a //~ ERROR marker or fix the \
+                     pass)",
+                    src.rel
+                ));
+            }
+        }
+    }
+    assert!(
+        n_files >= 8,
+        "expected at least 8 fixture files, walked {n_files}"
+    );
+    assert!(
+        failures.is_empty(),
+        "fixture contract violations:\n{}",
+        failures.join("\n")
+    );
+}
+
+/// The binary's whole-crate run must be clean: the same guarantee CI
+/// gets from `cargo run -p asi-lint`, minus process spawning.
+#[test]
+fn real_crate_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..")
+        .join("rust")
+        .join("src");
+    let mut dirs = fixture_dirs(&root);
+    dirs.sort();
+    let mut sources = Vec::new();
+    for dir in dirs {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .expect("src dir readable")
+            .map(|e| e.expect("src entry").path())
+            .filter(|p| {
+                p.is_file()
+                    && p.extension().is_some_and(|e| e == "rs")
+            })
+            .collect();
+        files.sort();
+        for path in files {
+            let rel = format!(
+                "rust/src/{}",
+                path.strip_prefix(&root)
+                    .expect("under rust/src")
+                    .display()
+            );
+            let text = std::fs::read_to_string(&path)
+                .expect("source readable");
+            sources.push(
+                Source::parse(&rel, &text).expect("source parses"),
+            );
+        }
+    }
+    assert!(sources.len() >= 40, "walked {} files", sources.len());
+    let findings = run_passes(&sources);
+    let rendered: Vec<String> =
+        findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        rendered.is_empty(),
+        "the crate must lint clean:\n{}",
+        rendered.join("\n")
+    );
+}

@@ -1,0 +1,1078 @@
+#!/usr/bin/env python3
+"""asi-lint: repo-invariant static analysis for the asi crate.
+
+The crate's acceptance story is bit-identical replay under concurrency
+and chaos. Four invariants carry it, and all four have been enforced
+only by hand review until now. This driver makes them machine-checked
+in any container (stdlib-only, no toolchain needed); the Rust crate at
+tools/asi-lint mirrors the same passes for toolchain-bearing sessions.
+
+Passes (each finding is `file:line: [pass] message`):
+
+  lock    Lock discipline. Per-function acquired-guard tracking with
+          interprocedural propagation: flags a lock acquisition while a
+          guard on the same cell/map is still live (the PR-5
+          read-guard-across-write-lock std::RwLock self-deadlock
+          class), and guards held across `catch_unwind` or channel
+          sends (a panicking/blocking boundary must never own a lock).
+
+  determinism
+          Wall-clock and iteration-order hygiene. `Instant::now` /
+          `SystemTime` are forbidden outside util/timer.rs and
+          annotated measurement sites; unseeded randomness
+          (`thread_rng`, `from_entropy`, `rand::random`,
+          `RandomState::new`) is forbidden everywhere; iterating a
+          `HashMap`/`HashSet` inside report/Json/checkpoint
+          construction is forbidden (iteration order would leak into
+          artifacts that must be bit-stable across runs).
+
+  panic   Panic hygiene. In serve/, fleet/, runtime/ and faults.rs,
+          non-test code must not `.unwrap()`, `.expect(...)` or
+          slice-index: runtime paths return typed errors (tenant
+          failures are report rows, not process aborts). Sites whose
+          safety is a local invariant carry a documented
+          `// lint: allow(reason)` instead.
+
+  schema  Report-schema discipline. `Json::Num` is constructed only
+          inside util/json.rs (callers go through `num()` /
+          `push_finite_or_flag()`); a float field the crate classifies
+          as *raw* (it goes through the omit-or-flag scheme anywhere)
+          must never reach `num()` directly, and no `unwrap`/`expect`
+          may appear inside a `num(...)` argument (an unwrapped
+          `Option<f32>` loss is exactly how NaN->null leaked in PR 5).
+
+Escape hatch: `// lint: allow(reason)` on the offending line, or alone
+on the line above it, suppresses every pass at that site. The reason is
+mandatory and is echoed in --list-allows so reviewers can audit them.
+
+Usage:
+  python3 tools/asi_lint.py                 # lint rust/src (default)
+  python3 tools/asi_lint.py --root DIR ...  # lint another tree
+  python3 tools/asi_lint.py --self-test     # run the fixture suite
+  python3 tools/asi_lint.py --list-allows   # audit allow sites
+
+Exit code 1 on any finding (or fixture mismatch), 0 on a clean run.
+
+Adding a pass: write `pass_<name>(src: Source) -> list[Finding]`,
+register it in PASSES, add good/bad fixtures under
+tools/asi-lint/fixtures/<name>/ (mark expected lines in bad files with
+`//~ ERROR <pass>`), and mirror it in tools/asi-lint/src/passes.rs.
+"""
+
+import os
+import re
+import sys
+
+# ---------------------------------------------------------------------------
+# Source model: comment/string stripping, allow-comments, test regions,
+# function extraction. Everything downstream works on the *stripped*
+# text (same line numbering as the original) so string literals and
+# comments can never fake or hide a finding.
+# ---------------------------------------------------------------------------
+
+ALLOW_RE = re.compile(r"//\s*lint:\s*allow\(([^)]*)\)")
+MARKER_RE = re.compile(r"//~\s*ERROR\s+(\w+)")
+
+
+def strip_source(text):
+    """Blank out comments and string/char literal bodies, preserving
+    line structure and byte positions. Returns (stripped, allows,
+    markers): allows maps line -> reason for `// lint: allow(...)`,
+    markers maps line -> pass name for fixture `//~ ERROR p` comments.
+    """
+    out = []
+    allows = {}
+    markers = {}
+    i, n = 0, len(text)
+    line = 1
+    comment_only_since_newline = True
+
+    def blank(ch):
+        return ch if ch == "\n" else " "
+
+    while i < n:
+        ch = text[i]
+        if ch == "\n":
+            line += 1
+            comment_only_since_newline = True
+            out.append("\n")
+            i += 1
+            continue
+        if ch == "/" and i + 1 < n and text[i + 1] == "/":
+            j = text.find("\n", i)
+            j = n if j < 0 else j
+            comment = text[i:j]
+            m = ALLOW_RE.search(comment)
+            if m:
+                # A lone allow-comment line covers the next line too.
+                target = line + 1 if comment_only_since_newline else line
+                allows[line] = m.group(1).strip()
+                if comment_only_since_newline:
+                    allows[target] = m.group(1).strip()
+            m = MARKER_RE.search(comment)
+            if m:
+                markers[line] = m.group(1)
+            out.append(" " * (j - i))
+            i = j
+            continue
+        if ch == "/" and i + 1 < n and text[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if text[j] == "/" and j + 1 < n and text[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif text[j] == "*" and j + 1 < n and text[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            seg = text[i:j]
+            out.append("".join(blank(c) for c in seg))
+            line += seg.count("\n")
+            i = j
+            continue
+        # Raw strings: r"..", r#".."#, br#".."# etc.
+        m = re.match(r'b?r(#*)"', text[i:])
+        if m and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_")):
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = text.find(close, i + len(m.group(0)))
+            j = n if j < 0 else j + len(close)
+            seg = text[i:j]
+            out.append('""' + "".join(blank(c) for c in seg[2:]))
+            line += seg.count("\n")
+            i = j
+            comment_only_since_newline = False
+            continue
+        if ch == '"' or (
+            ch == "b" and i + 1 < n and text[i + 1] == '"'
+            and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_"))
+        ):
+            j = i + (2 if ch == "b" else 1)
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                elif text[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            seg = text[i:j]
+            out.append('""' + "".join(blank(c) for c in seg[2:]))
+            line += seg.count("\n")
+            i = j
+            comment_only_since_newline = False
+            continue
+        if ch == "'":
+            # Char literal vs lifetime. 'x' / '\n' / '\u{..}' are
+            # literals; 'ident (no closing quote right after) is a
+            # lifetime and passes through.
+            if i + 1 < n and text[i + 1] == "\\":
+                j = i + 2
+                while j < n and text[j] != "'":
+                    j += 1
+                out.append("' '" + " " * max(0, j - i - 3))
+                i = j + 1
+                comment_only_since_newline = False
+                continue
+            if i + 2 < n and text[i + 2] == "'":
+                out.append("' '")
+                i = i + 3
+                comment_only_since_newline = False
+                continue
+            out.append(ch)
+            i += 1
+            comment_only_since_newline = False
+            continue
+        if not ch.isspace():
+            comment_only_since_newline = False
+        out.append(ch)
+        i += 1
+    return "".join(out), allows, markers
+
+
+def line_starts(text):
+    starts = [0]
+    for i, ch in enumerate(text):
+        if ch == "\n":
+            starts.append(i + 1)
+    return starts
+
+
+def line_of(starts, pos):
+    lo, hi = 0, len(starts) - 1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if starts[mid] <= pos:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo + 1
+
+
+def match_brace(text, open_pos):
+    """Index just past the brace that closes text[open_pos] ('{')."""
+    depth = 0
+    i = open_pos
+    n = len(text)
+    while i < n:
+        c = text[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return n
+
+
+def test_region_lines(stripped, starts):
+    """Lines covered by #[cfg(test)] items and #[test] functions."""
+    lines = set()
+    for m in re.finditer(r"#\[cfg\(test\)\]|#\[test\]", stripped):
+        brace = stripped.find("{", m.end())
+        semi = stripped.find(";", m.end())
+        if brace < 0 or (0 <= semi < brace):
+            continue
+        end = match_brace(stripped, brace)
+        for ln in range(line_of(starts, m.start()), line_of(starts, end - 1) + 1):
+            lines.add(ln)
+    return lines
+
+
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_][A-Za-z0-9_]*)")
+
+
+class Function:
+    def __init__(self, name, start, body_start, body_end, start_line):
+        self.name = name
+        self.start = start
+        self.body_start = body_start  # position of the opening '{'
+        self.body_end = body_end      # position just past the closing '}'
+        self.start_line = start_line
+
+
+def extract_functions(stripped, starts):
+    fns = []
+    for m in FN_RE.finditer(stripped):
+        i = m.end()
+        n = len(stripped)
+        depth = 0
+        body = -1
+        while i < n:
+            c = stripped[i]
+            if c in "(<[":
+                depth += 1
+            elif c in ")>]":
+                depth -= 1
+            elif c == "{" and depth <= 0:
+                body = i
+                break
+            elif c == ";" and depth <= 0:
+                break  # trait method declaration, no body
+            elif c == "-" and i + 1 < n and stripped[i + 1] == ">":
+                i += 1  # don't count '>' of '->' as a closer
+            i += 1
+        if body < 0:
+            continue
+        end = match_brace(stripped, body)
+        fns.append(Function(m.group(1), m.start(), body, end,
+                            line_of(starts, m.start())))
+    return fns
+
+
+class Source:
+    def __init__(self, path, rel, text):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.text = text
+        self.stripped, self.allows, self.markers = strip_source(text)
+        self.starts = line_starts(self.stripped)
+        self.test_lines = test_region_lines(self.stripped, self.starts)
+        self.functions = extract_functions(self.stripped, self.starts)
+        self.lines = self.stripped.split("\n")
+
+    def line(self, pos):
+        return line_of(self.starts, pos)
+
+    def allowed(self, ln):
+        return ln in self.allows
+
+    def in_tests(self, ln):
+        return ln in self.test_lines
+
+
+class Finding:
+    def __init__(self, src, ln, pass_name, msg):
+        self.rel = src.rel
+        self.line = ln
+        self.pass_name = pass_name
+        self.msg = msg
+
+    def __str__(self):
+        return f"{self.rel}:{self.line}: [{self.pass_name}] {self.msg}"
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: lock discipline
+# ---------------------------------------------------------------------------
+
+ACQUIRE_METHODS = {
+    "read", "write", "lock",
+    "try_read", "try_write", "try_lock",
+    "read_ok", "write_ok", "lock_ok",
+}
+# Chain suffixes that return the guard itself (the binding is still a
+# live guard); anything else consumes the guard within the statement.
+GUARD_SUFFIXES = {"expect", "unwrap", "unwrap_or_else"}
+
+TOKEN_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*|::|->|=>|<=|>=|==|!=|&&|\|\||[^\sA-Za-z0-9_]")
+
+
+def tokenize(stripped, start, end, starts):
+    toks = []
+    for m in TOKEN_RE.finditer(stripped, start, end):
+        toks.append((m.group(0), line_of(starts, m.start())))
+    return toks
+
+
+def receiver_root(toks, i):
+    """Walk back from toks[i] (the '.' before an acquire method) to the
+    start of the receiver chain; return its normalized textual root,
+    e.g. `self.frozen` for `self.frozen [k] .read()`, `state` for
+    `state.lock()`. Returns None for call-result receivers like
+    `foo().lock()` (no stable cell identity)."""
+    parts = []
+    j = i - 1
+    depth = 0
+    while j >= 0:
+        t = toks[j][0]
+        if t in ")]":
+            depth += 1
+            j -= 1
+            continue
+        if t in "([":
+            depth -= 1
+            if depth < 0:
+                break
+            j -= 1
+            continue
+        if depth > 0:
+            j -= 1
+            continue
+        if t == "." or t == "::":
+            j -= 1
+            continue
+        if re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t):
+            prev_sep = j > 0 and toks[j - 1][0] in {".", "::"}
+            parts.append(t)
+            if not prev_sep:
+                break
+            j -= 1
+            continue
+        break
+    if not parts:
+        return None
+    parts.reverse()
+    # `foo().lock()`: receiver is a call result, not a named cell.
+    k = i - 1
+    if k >= 0 and toks[k][0] == ")":
+        # Find the matching '(' and check the token before it is part
+        # of the same chain (a method call) — then the *chain* still
+        # names the cell (e.g. `self.stats()` would, but plain calls
+        # don't occur before locks here); keep the textual root anyway.
+        pass
+    return ".".join(parts)
+
+
+def stmt_extent(toks, i):
+    """Index just past the current statement, starting the scan at
+    token i: the first `;` at depth 0, or — if a `{` block opens first
+    (if-let/match scrutinee) — past that block and any else-chain."""
+    depth = 0
+    n = len(toks)
+    j = i
+    while j < n:
+        t = toks[j][0]
+        if t in "([":
+            depth += 1
+        elif t in ")]":
+            depth -= 1
+        elif t == ";" and depth <= 0:
+            return j + 1
+        elif t == "{" and depth <= 0:
+            # consume the block (and else-chains)
+            bd = 0
+            while j < n:
+                if toks[j][0] == "{":
+                    bd += 1
+                elif toks[j][0] == "}":
+                    bd -= 1
+                    if bd == 0:
+                        if j + 1 < n and toks[j + 1][0] == "else":
+                            j += 1
+                            break  # continue outer scan into else
+                        return j + 1
+                j += 1
+            else:
+                return n
+        j += 1
+    return n
+
+
+def fn_key(src, fn):
+    return f"{src.rel}::{fn.name}"
+
+
+def local_lock_info(src, fn):
+    """One scan of a function body: returns (acquisitions, calls) where
+    acquisitions = [(root, tok_index, line)], calls = {callee names}."""
+    toks = tokenize(src.stripped, fn.body_start, fn.body_end, src.starts)
+    acqs = []
+    calls = set()
+    for i, (t, ln) in enumerate(toks):
+        if (
+            t in ACQUIRE_METHODS
+            and i + 1 < len(toks)
+            and toks[i + 1][0] == "("
+            and i >= 1
+            and toks[i - 1][0] == "."
+        ):
+            root = receiver_root(toks, i - 1)
+            if root:
+                acqs.append((root, i, ln))
+        elif (
+            re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t)
+            and i + 1 < len(toks)
+            and toks[i + 1][0] == "("
+            and t not in ACQUIRE_METHODS
+        ):
+            calls.add(t)
+    return toks, acqs, calls
+
+
+def pass_lock(src, summaries=None, fn_names=None):
+    """summaries: fn name -> set of roots it (transitively) locks.
+    fn_names: names defined in the linted tree (call-graph domain)."""
+    findings = []
+    summaries = summaries or {}
+    for fn in src.functions:
+        toks = tokenize(src.stripped, fn.body_start, fn.body_end, src.starts)
+        n = len(toks)
+        # live guards: list of dicts {root, var, until(tok idx or None),
+        # depth, line}
+        live = []
+        depth = 0
+        i = 0
+        while i < n:
+            t, ln = toks[i]
+            if t == "{":
+                depth += 1
+            elif t == "}":
+                depth -= 1
+                live = [g for g in live
+                        if g["var"] is None or g["depth"] <= depth]
+            # expiry of statement-scoped temporaries
+            live = [g for g in live if g["until"] is None or i < g["until"]]
+
+            if t == "drop" and i + 2 < n and toks[i + 1][0] == "(":
+                var = toks[i + 2][0]
+                live = [g for g in live if g["var"] != var]
+                i += 1
+                continue
+
+            is_acquire = (
+                t in ACQUIRE_METHODS
+                and i + 1 < n
+                and toks[i + 1][0] == "("
+                and i >= 1
+                and toks[i - 1][0] == "."
+            )
+            if is_acquire:
+                root = receiver_root(toks, i - 1)
+                if root:
+                    for g in live:
+                        if g["root"] == root:
+                            findings.append(Finding(
+                                src, ln, "lock",
+                                f"`{root}` is locked here while the guard "
+                                f"taken on line {g['line']} is still live "
+                                "(std read/write locks self-deadlock when "
+                                "re-acquired on one thread)",
+                            ))
+                    # Identify binding: `let [mut] NAME = <chain>` where the
+                    # chain ends at the acquisition (+ guard-returning
+                    # suffixes). Walk back to chain start:
+                    j = i - 1
+                    d = 0
+                    while j >= 0:
+                        tt = toks[j][0]
+                        if tt in ")]":
+                            d += 1
+                        elif tt in "([":
+                            d -= 1
+                            if d < 0:
+                                break
+                        elif d == 0 and not (
+                            tt in {".", "::", "&", "*"}
+                            or re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", tt)
+                        ):
+                            break
+                        j -= 1
+                    var = None
+                    if (
+                        j >= 1
+                        and toks[j][0] == "="
+                        and re.fullmatch(
+                            r"[A-Za-z_][A-Za-z0-9_]*", toks[j - 1][0])
+                        and (
+                            toks[j - 2][0] == "let"
+                            or (toks[j - 2][0] == "mut"
+                                and j >= 3 and toks[j - 3][0] == "let")
+                        )
+                    ):
+                        # does the chain end at the guard? scan forward
+                        # past the call's parens and guard suffixes.
+                        k = i + 1  # at '('
+                        pd = 0
+                        while k < n:
+                            if toks[k][0] == "(":
+                                pd += 1
+                            elif toks[k][0] == ")":
+                                pd -= 1
+                                if pd == 0:
+                                    k += 1
+                                    break
+                            k += 1
+                        while (
+                            k + 1 < n
+                            and toks[k][0] == "."
+                            and toks[k + 1][0] in GUARD_SUFFIXES
+                        ):
+                            k += 2  # method name
+                            if k < n and toks[k][0] == "(":
+                                pd = 0
+                                while k < n:
+                                    if toks[k][0] == "(":
+                                        pd += 1
+                                    elif toks[k][0] == ")":
+                                        pd -= 1
+                                        if pd == 0:
+                                            k += 1
+                                            break
+                                    k += 1
+                        if k < n and toks[k][0] in {";", "?"}:
+                            var = toks[j - 1][0]
+                    if var is not None:
+                        # reassignment to a var already holding a guard
+                        live = [g for g in live if g["var"] != var]
+                        live.append({"root": root, "var": var,
+                                     "until": None, "depth": depth,
+                                     "line": ln})
+                    else:
+                        live.append({"root": root, "var": None,
+                                     "until": stmt_extent(toks, i),
+                                     "depth": depth, "line": ln})
+                i += 1
+                continue
+
+            # guards across panic/channel boundaries
+            if live and not src.allowed(ln):
+                boundary = None
+                if t == "catch_unwind":
+                    boundary = "catch_unwind"
+                elif (
+                    t in {"send", "try_send"}
+                    and i >= 1
+                    and toks[i - 1][0] == "."
+                    and i + 1 < n
+                    and toks[i + 1][0] == "("
+                ):
+                    boundary = f".{t}()"
+                if boundary:
+                    roots = ", ".join(sorted({g["root"] for g in live}))
+                    findings.append(Finding(
+                        src, ln, "lock",
+                        f"guard on `{roots}` held across {boundary} — a "
+                        "blocked send or unwind boundary must not own a "
+                        "lock",
+                    ))
+
+            # interprocedural: call to a function that locks a held root
+            if (
+                live
+                and re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t)
+                and i + 1 < n
+                and toks[i + 1][0] == "("
+                and t in summaries
+                and (fn_names is None or t in fn_names)
+                and t != fn.name
+            ):
+                held = {g["root"] for g in live}
+                inner = summaries[t]
+                hit = held & inner
+                if hit:
+                    r = ", ".join(sorted(hit))
+                    findings.append(Finding(
+                        src, ln, "lock",
+                        f"call to `{t}()` while holding a guard on `{r}` "
+                        f"— `{t}` (transitively) locks the same cell",
+                    ))
+            i += 1
+    return [f for f in findings if not src.allowed(f.line)
+            and not src.in_tests(f.line)]
+
+
+def build_lock_summaries(sources):
+    """fn name -> set of `self.*` roots it acquires, transitively.
+
+    Scope limits that keep the over-approximation honest: only
+    *uniquely named* functions get a summary (without type-based
+    method resolution, every `new` in the crate would collapse into
+    one), and only `self.`-rooted cells propagate (a local guard
+    variable's name means nothing in another function). The PR-5
+    deadlock class — re-acquiring a cell you already hold — is
+    intra-procedural and unaffected by either limit."""
+    local = {}
+    calls = {}
+    def_count = {}
+    for src in sources:
+        for fn in src.functions:
+            def_count[fn.name] = def_count.get(fn.name, 0) + 1
+            _, acqs, callees = local_lock_info(src, fn)
+            local.setdefault(fn.name, set()).update(
+                r for (r, _, _) in acqs if r.startswith("self."))
+            calls.setdefault(fn.name, set()).update(callees)
+    unique = {n for n, c in def_count.items() if c == 1}
+    summaries = {k: set(v) for k, v in local.items() if k in unique}
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in calls.items():
+            if name not in unique:
+                continue
+            cur = summaries.setdefault(name, set())
+            before = len(cur)
+            for c in callees:
+                if c in summaries and c != name:
+                    cur |= summaries[c]
+            if len(cur) != before:
+                changed = True
+    return {k: v for k, v in summaries.items() if v}
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: determinism
+# ---------------------------------------------------------------------------
+
+WALLCLOCK_RE = re.compile(r"\bInstant\s*::\s*now\b|\bSystemTime\b")
+RANDOM_RE = re.compile(
+    r"\bthread_rng\b|\bfrom_entropy\b|\brand\s*::\s*random\b|"
+    r"\bRandomState\s*::\s*new\b")
+TIMER_ALLOW_FILES = ("util/timer.rs",)
+HASH_DECL_RE = re.compile(
+    r"\b([a-z_][a-z0-9_]*)\s*:\s*&?\s*(?:mut\s+)?(?:std\s*::\s*collections\s*::\s*)?Hash(?:Map|Set)\s*<")
+HASH_BIND_RE = re.compile(
+    r"\blet\s+(?:mut\s+)?([a-z_][a-z0-9_]*)\b[^;=]*=\s*[^;]*\bHash(?:Map|Set)\s*::")
+OUTPUT_MARK_RE = re.compile(
+    r"\bJson\b|\bto_json\b|\bpush_finite_or_flag\b|\bCheckpoint\s*::|\bwrite_atomic\b|\bsave\b")
+
+
+def pass_determinism(src):
+    findings = []
+    for m in WALLCLOCK_RE.finditer(src.stripped):
+        ln = src.line(m.start())
+        if src.rel.endswith(TIMER_ALLOW_FILES):
+            continue
+        if src.allowed(ln) or src.in_tests(ln):
+            continue
+        # `use std::time::SystemTime;` names the type without reading
+        # the clock — only expression sites are findings.
+        line_text = src.stripped[src.starts[ln - 1]:].split("\n", 1)[0]
+        if line_text.lstrip().startswith("use "):
+            continue
+        findings.append(Finding(
+            src, ln, "determinism",
+            f"`{m.group(0)}` outside util::timer — wall-clock reads are "
+            "measurement-only; annotate the site with "
+            "`// lint: allow(measurement: ...)` if this one is",
+        ))
+    for m in RANDOM_RE.finditer(src.stripped):
+        ln = src.line(m.start())
+        if src.allowed(ln) or src.in_tests(ln):
+            continue
+        findings.append(Finding(
+            src, ln, "determinism",
+            f"unseeded randomness (`{m.group(0)}`) — every random draw "
+            "must come from the seeded util::rng fold",
+        ))
+    # HashMap/HashSet iteration inside output construction.
+    for fn in src.functions:
+        body = src.stripped[fn.body_start:fn.body_end]
+        sig = src.stripped[fn.start:fn.body_start]
+        if not (OUTPUT_MARK_RE.search(body)
+                or fn.name in ("to_json", "render")
+                or "report" in src.rel):
+            continue
+        tainted = set(HASH_DECL_RE.findall(sig))
+        tainted |= set(HASH_DECL_RE.findall(body))
+        tainted |= set(HASH_BIND_RE.findall(body))
+        if not tainted:
+            continue
+        iter_re = re.compile(
+            r"(?:\bin\s+&?(?:mut\s+)?|\.)?\b(" + "|".join(
+                re.escape(t) for t in sorted(tainted)) +
+            r")\s*\.\s*(iter|keys|values|into_iter|drain)\s*\(")
+        for m in iter_re.finditer(body):
+            ln = src.line(fn.body_start + m.start())
+            if src.allowed(ln) or src.in_tests(ln):
+                continue
+            findings.append(Finding(
+                src, ln, "determinism",
+                f"iterating Hash{{Map,Set}} `{m.group(1)}` inside "
+                "output construction — iteration order is "
+                "nondeterministic; collect into a sorted Vec first",
+            ))
+        for m in re.finditer(
+            r"\bfor\s+[^;{]*?\bin\s+&?(?:mut\s+)?(" + "|".join(
+                re.escape(t) for t in sorted(tainted)) + r")\b[\s{]",
+            body,
+        ):
+            ln = src.line(fn.body_start + m.start(1))
+            if src.allowed(ln) or src.in_tests(ln):
+                continue
+            findings.append(Finding(
+                src, ln, "determinism",
+                f"for-loop over Hash{{Map,Set}} `{m.group(1)}` inside "
+                "output construction — iteration order is "
+                "nondeterministic; collect into a sorted Vec first",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: panic hygiene
+# ---------------------------------------------------------------------------
+
+PANIC_SCOPE = ("serve/", "fleet/", "runtime/", "faults.rs")
+UNWRAP_RE = re.compile(r"\.(unwrap|expect)\s*\(")
+# `expr[` — indexing can panic. The previous non-space char decides:
+# after an identifier, `)`, `]` or `?` the bracket indexes; after
+# `# ! = ( [ { : ; , < > & | + - * / %` it opens an attribute, macro,
+# array literal/type, or slice pattern.
+INDEX_PREV_OK = set(")]?") | set("ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+                                "abcdefghijklmnopqrstuvwxyz0123456789_")
+
+# A `[` after one of these keywords opens an array literal (`for x in
+# [a, b]`, `return [0; 4]`), not an index expression.
+NONINDEX_KEYWORDS = {
+    "in", "return", "match", "if", "else", "break", "continue", "let",
+    "while", "loop", "for", "move", "ref", "mut", "as", "where", "yield",
+}
+
+
+def in_panic_scope(rel):
+    rel = rel.split("rust/src/")[-1]
+    return rel.startswith(("serve/", "fleet/", "runtime/")) or rel == "faults.rs"
+
+
+def pass_panic(src):
+    if not in_panic_scope(src.rel):
+        return []
+    findings = []
+    for m in UNWRAP_RE.finditer(src.stripped):
+        ln = src.line(m.start())
+        if src.allowed(ln) or src.in_tests(ln):
+            continue
+        findings.append(Finding(
+            src, ln, "panic",
+            f"`.{m.group(1)}(...)` in a runtime module — return a typed "
+            "error (tenant failures are report rows, not aborts) or "
+            "document the invariant with `// lint: allow(reason)`",
+        ))
+    text = src.stripped
+    for i, ch in enumerate(text):
+        if ch != "[":
+            continue
+        j = i - 1
+        while j >= 0 and text[j] in " \t":
+            j -= 1
+        if j < 0 or text[j] not in INDEX_PREV_OK:
+            continue
+        if text[j] not in ")]?":
+            k = j
+            while k >= 0 and text[k] in INDEX_PREV_OK and text[k] not in ")]?":
+                k -= 1
+            if text[k + 1:j + 1] in NONINDEX_KEYWORDS:
+                continue
+        # `self.b[` style macro? attributes were stripped of nothing —
+        # attribute brackets follow '#' or '!', already excluded.
+        ln = src.line(i)
+        if src.allowed(ln) or src.in_tests(ln):
+            continue
+        findings.append(Finding(
+            src, ln, "panic",
+            "slice/array indexing in a runtime module — use `.get()` "
+            "with a typed error, or document the bounds invariant with "
+            "`// lint: allow(bounds: ...)`",
+        ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: report-schema discipline
+# ---------------------------------------------------------------------------
+
+JSON_NUM_RE = re.compile(r"\bJson\s*::\s*Num\s*\(")
+NUM_CALL_RE = re.compile(r"(?<![A-Za-z0-9_.])num\s*\(")
+FLAG_CALL_RE = re.compile(r"\bpush_finite_or_flag\s*\(")
+
+
+def balanced_arg(text, open_pos):
+    depth = 0
+    i = open_pos
+    while i < len(text):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return text[open_pos + 1:i]
+        i += 1
+    return text[open_pos + 1:]
+
+
+def split_top_commas(arg):
+    parts = []
+    depth = 0
+    cur = []
+    for ch in arg:
+        if ch in "([{<":
+            depth += 1
+        elif ch in ")]}>":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return parts
+
+
+def terminal_fields(expr):
+    """Field accesses in `expr` that name *data*, not methods: `.f` not
+    followed by `(`, and if another `.g` follows, `g` must be a call
+    (so `t.report.final_loss.map(..)` yields final_loss, not report)."""
+    out = set()
+    for m in re.finditer(r"\.([a-z_][a-z0-9_]*)\b(?!\s*\()", expr):
+        rest = expr[m.end():].lstrip()
+        if rest.startswith("."):
+            nxt = re.match(r"\.\s*[a-z_][a-z0-9_]*\s*\(", rest)
+            if not nxt:
+                continue
+        out.add(m.group(1))
+    return out
+
+
+def collect_raw_float_fields(sources):
+    """Field names the crate already classifies as raw/possibly-non-
+    finite: whatever is passed as the *value* argument (the last one)
+    of push_finite_or_flag. Those must never reach num() directly."""
+    raw = set()
+    for src in sources:
+        for m in FLAG_CALL_RE.finditer(src.stripped):
+            arg = balanced_arg(src.stripped, src.stripped.find("(", m.start()))
+            parts = [p for p in split_top_commas(arg) if p.strip()]
+            if parts:
+                raw |= terminal_fields(parts[-1])
+    return raw
+
+
+def pass_schema(src, raw_fields=frozenset()):
+    findings = []
+    if not src.rel.endswith("util/json.rs"):
+        for m in JSON_NUM_RE.finditer(src.stripped):
+            ln = src.line(m.start())
+            if src.allowed(ln) or src.in_tests(ln):
+                continue
+            findings.append(Finding(
+                src, ln, "schema",
+                "`Json::Num` constructed outside util::json — go through "
+                "`num()` / `push_finite_or_flag()` so non-finite floats "
+                "hit the omit-or-flag scheme, or document the sentinel "
+                "with `// lint: allow(...)`",
+            ))
+    for m in NUM_CALL_RE.finditer(src.stripped):
+        ln = src.line(m.start())
+        if src.allowed(ln) or src.in_tests(ln):
+            continue
+        if src.rel.endswith("util/json.rs"):
+            continue
+        arg = balanced_arg(src.stripped, src.stripped.find("(", m.start()))
+        if re.search(r"\.(unwrap|expect)\s*\(", arg):
+            findings.append(Finding(
+                src, ln, "schema",
+                "`num(...)` over an unwrapped Option — a non-finite or "
+                "absent value must be omitted or flagged "
+                "(push_finite_or_flag), never unwrapped into Json::Num",
+            ))
+            continue
+        hits = sorted(
+            f for f in re.findall(r"\b([a-z_][a-z0-9_]*)\b", arg)
+            if f in raw_fields)
+        if hits:
+            findings.append(Finding(
+                src, ln, "schema",
+                f"`num(...)` over raw float field `{hits[0]}` — this "
+                "field goes through the omit-or-flag scheme elsewhere; "
+                "use push_finite_or_flag here too",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run_passes(sources):
+    summaries = build_lock_summaries(sources)
+    fn_names = {fn.name for s in sources for fn in s.functions}
+    raw_fields = collect_raw_float_fields(sources)
+    findings = []
+    for src in sources:
+        findings.extend(pass_lock(src, summaries, fn_names))
+        findings.extend(pass_determinism(src))
+        findings.extend(pass_panic(src))
+        findings.extend(pass_schema(src, raw_fields))
+    seen = set()
+    deduped = []
+    for f in findings:
+        key = (f.rel, f.line, f.pass_name)
+        if key not in seen:
+            seen.add(key)
+            deduped.append(f)
+    deduped.sort(key=lambda f: (f.rel, f.line, f.pass_name))
+    return deduped
+
+
+def list_allows(sources):
+    n = 0
+    seen = set()
+    for src in sources:
+        for ln in sorted(src.allows):
+            reason = src.allows[ln]
+            key = (src.rel, reason)
+            if key in seen:
+                continue  # a lone allow-comment registers two lines
+            seen.add(key)
+            print(f"{src.rel}:{ln}: allow({reason})")
+            n += 1
+    print(f"asi-lint: {n} allow site(s)")
+
+
+def self_test(fixture_root):
+    """Every fixture file named bad*.rs must produce exactly the
+    findings its `//~ ERROR <pass>` markers declare (same line, same
+    pass); good*.rs files must be clean. Fixture dirs are named after
+    the pass they exercise but all passes run on all fixtures — a bad
+    file for one pass must not trip another by accident."""
+    failures = []
+    n_files = 0
+    for dirpath, _, files in sorted(os.walk(fixture_root)):
+        rs = [f for f in sorted(files) if f.endswith(".rs")]
+        if not rs:
+            continue
+        srcs = []
+        for f in rs:
+            path = os.path.join(dirpath, f)
+            with open(path, "r", encoding="utf-8") as fh:
+                # Module scoping (pass 3) keys off the path *below* the
+                # per-pass fixture dir: fixtures/panic/serve/bad.rs
+                # lints like rust/src/serve/bad.rs. The pass-dir prefix
+                # is stripped so it can't satisfy (or dodge) the scope
+                # check by accident.
+                rel = os.path.relpath(path, fixture_root)
+                parts = rel.split(os.sep)
+                scoped = os.path.join(*parts[1:]) if len(parts) > 1 else rel
+                srcs.append(Source(path, scoped, fh.read()))
+        findings = run_passes(srcs)
+        for src in srcs:
+            n_files += 1
+            mine = [f for f in findings if f.rel == src.rel]
+            expected = src.markers  # line -> pass
+            if os.path.basename(src.path).startswith("good"):
+                for f in mine:
+                    failures.append(f"unexpected finding in good "
+                                    f"fixture: {f}")
+                continue
+            got = {(f.line, f.pass_name) for f in mine}
+            want = {(ln, p) for ln, p in expected.items()}
+            for ln, p in sorted(want - got):
+                failures.append(
+                    f"{src.rel}:{ln}: expected [{p}] finding not "
+                    "produced")
+            for ln, p in sorted(got - want):
+                failures.append(
+                    f"{src.rel}:{ln}: unexpected [{p}] finding in bad "
+                    "fixture (add a //~ ERROR marker or fix the pass)")
+    for f in failures:
+        print(f"asi-lint self-test: FAIL: {f}", file=sys.stderr)
+    print(f"asi-lint self-test: {n_files} fixture file(s), "
+          f"{len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+def main(argv):
+    root = "rust/src"
+    mode = "lint"
+    args = list(argv)
+    while args:
+        a = args.pop(0)
+        if a == "--root":
+            root = args.pop(0)
+        elif a == "--self-test":
+            mode = "self-test"
+        elif a == "--list-allows":
+            mode = "list-allows"
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        else:
+            print(f"asi-lint: unknown argument {a!r}", file=sys.stderr)
+            return 2
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(here)
+    if mode == "self-test":
+        return self_test(os.path.join(here, "asi-lint", "fixtures"))
+    root_abs = root if os.path.isabs(root) else os.path.join(repo, root)
+    if not os.path.isdir(root_abs):
+        print(f"asi-lint: no such directory {root_abs}", file=sys.stderr)
+        return 2
+    sources = []
+    for dirpath, _, files in sorted(os.walk(root_abs)):
+        for f in sorted(files):
+            if f.endswith(".rs"):
+                path = os.path.join(dirpath, f)
+                rel = os.path.join(root, os.path.relpath(path, root_abs))
+                with open(path, "r", encoding="utf-8") as fh:
+                    sources.append(Source(path, rel, fh.read()))
+    if mode == "list-allows":
+        list_allows(sources)
+        return 0
+    findings = run_passes(sources)
+    for f in findings:
+        print(f"asi-lint: {f}")
+    by_pass = {}
+    for f in findings:
+        by_pass[f.pass_name] = by_pass.get(f.pass_name, 0) + 1
+    tally = ", ".join(f"{k}: {v}" for k, v in sorted(by_pass.items())) or "clean"
+    print(f"asi-lint: {len(sources)} file(s), {len(findings)} finding(s) "
+          f"({tally})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -59,6 +59,15 @@ def find_nulls(node, path, bad):
 FAULTED_REPORTS = {"serve.json", "fleet.json"}
 
 
+# Each bucket's rows must carry the matching status value — the row's
+# own label and the array it landed in must never disagree.
+BUCKET_STATUS = (
+    ("tenants", "ok"),
+    ("failed", "failed"),
+    ("quarantined", "quarantined"),
+)
+
+
 def check_fault_schema(path, doc):
     """Schema checks for serve.json / fleet.json: a top-level `faults`
     object, and an explicit `status` on every tenant row (ok, failed,
@@ -68,7 +77,7 @@ def check_fault_schema(path, doc):
         return [f"{path}: top level is not an object"]
     if not isinstance(doc.get("faults"), dict):
         errs.append(f"{path}: missing top-level 'faults' section")
-    for bucket in ("tenants", "failed", "quarantined"):
+    for bucket, _ in BUCKET_STATUS:
         rows = doc.get(bucket)
         if not isinstance(rows, list):
             errs.append(f"{path}: missing '{bucket}' array")
@@ -77,6 +86,92 @@ def check_fault_schema(path, doc):
             if not isinstance(row, dict) or "status" not in row:
                 errs.append(
                     f"{path}: {bucket}[{i}] has no 'status' field"
+                )
+    return errs
+
+
+def _int_or_none(v):
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None
+    if v != int(v):
+        return None
+    return int(v)
+
+
+def check_fault_partition(path, doc):
+    """The ok/failed/quarantined buckets must *partition* the tenant
+    id space: every row's status matches its bucket, no id appears
+    twice (within or across buckets), ids are dense in 0..N-1 (a shed
+    tenant can vanish from every array only by breaking this), and —
+    where the faults section carries per-class counters (serve.json) —
+    the class sums agree with the bucket sizes."""
+    if not isinstance(doc, dict):
+        return []  # check_fault_schema already reported it
+    errs = []
+    buckets = {}
+    for bucket, want_status in BUCKET_STATUS:
+        rows = doc.get(bucket)
+        if not isinstance(rows, list):
+            continue  # already reported by check_fault_schema
+        ids = []
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                continue
+            if "status" in row and row.get("status") != want_status:
+                errs.append(
+                    f"{path}: {bucket}[{i}] has status "
+                    f"{row.get('status')!r}, want '{want_status}'"
+                )
+            tid = _int_or_none(row.get("tenant"))
+            if tid is None:
+                errs.append(
+                    f"{path}: {bucket}[{i}] has no integral "
+                    "'tenant' id"
+                )
+                continue
+            ids.append(tid)
+        buckets[bucket] = ids
+    all_ids = [t for ids in buckets.values() for t in ids]
+    seen = set()
+    dups = sorted({t for t in all_ids if t in seen or seen.add(t)})
+    if dups:
+        errs.append(
+            f"{path}: tenant id(s) {dups} appear in more than one "
+            "tenant row"
+        )
+    elif all_ids:
+        want = set(range(len(all_ids)))
+        got = set(all_ids)
+        if got != want:
+            errs.append(
+                f"{path}: tenant ids do not cover "
+                f"0..{len(all_ids) - 1} (missing "
+                f"{sorted(want - got)}, unexpected "
+                f"{sorted(got - want)})"
+            )
+    classes = (doc.get("faults") or {}).get("classes") \
+        if isinstance(doc.get("faults"), dict) else None
+    if isinstance(classes, list):
+        for key in ("failed", "quarantined"):
+            if key not in buckets:
+                continue
+            counts = [
+                _int_or_none(c.get(key))
+                for c in classes
+                if isinstance(c, dict)
+            ]
+            if len(counts) != len(classes) or None in counts:
+                errs.append(
+                    f"{path}: faults.classes rows lack an integral "
+                    f"'{key}' counter"
+                )
+                continue
+            total = sum(counts)
+            if total != len(buckets[key]):
+                errs.append(
+                    f"{path}: faults.classes '{key}' counters sum "
+                    f"to {total} but the '{key}' array has "
+                    f"{len(buckets[key])} row(s)"
                 )
     return errs
 
@@ -93,7 +188,38 @@ def lint(path):
     errs = [f"{path}: null value at '{p}'" for p in bad]
     if os.path.basename(path) in FAULTED_REPORTS:
         errs.extend(check_fault_schema(path, doc))
+        errs.extend(check_fault_partition(path, doc))
     return errs
+
+
+def self_test():
+    """Fixture contract, shared with the asi-lint test tree: every
+    artifact under tools/asi-lint/fixtures/artifacts/good*/ must lint
+    clean, every one under bad*/ must produce at least one violation
+    (the seeded inconsistency its directory name describes)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    fix_root = os.path.join(here, "asi-lint", "fixtures", "artifacts")
+    failures = []
+    n_files = 0
+    for dirpath, _, files in sorted(os.walk(fix_root)):
+        case = os.path.basename(dirpath)
+        for f in sorted(files):
+            if not f.endswith(".json"):
+                continue
+            n_files += 1
+            path = os.path.join(dirpath, f)
+            errs = lint(path)
+            if case.startswith("good") and errs:
+                failures.extend(
+                    f"good fixture not clean: {e}" for e in errs)
+            elif case.startswith("bad") and not errs:
+                failures.append(
+                    f"{path}: bad fixture produced no violation")
+    for f in failures:
+        print(f"lint-artifacts self-test: FAIL: {f}", file=sys.stderr)
+    print(f"lint-artifacts self-test: {n_files} fixture file(s), "
+          f"{len(failures)} failure(s)")
+    return 1 if failures or not n_files else 0
 
 
 def main(argv):
@@ -101,6 +227,8 @@ def main(argv):
     optional = []
     it = iter(argv)
     for a in it:
+        if a == "--self-test":
+            return self_test()
         if a == "--require":
             required.append(next(it, None) or "")
         else:
