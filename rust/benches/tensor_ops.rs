@@ -2,9 +2,12 @@
 //! retained scalar references across matmul, t_matmul, gram, MGS,
 //! im2col conv, the fused unfold contraction, and end-to-end
 //! `asi_compress`. Emits machine-readable results to
-//! `BENCH_tensor_ops.json` so later PRs can track the perf trajectory,
-//! and asserts the acceptance floors (>= 4x on the 256^3 matmul, >= 2x
-//! end-to-end ASI at the B32 C48 8x8 probe shape).
+//! `BENCH_tensor_ops.json` (including which microkernel `dispatch` ran:
+//! avx2+fma / neon / scalar) so later PRs can track the perf
+//! trajectory, and asserts the acceptance floors (>= 4x on the 256^3
+//! matmul, >= 2x end-to-end ASI at the B32 C48 8x8 probe shape, and
+//! >= 2x SIMD vs forced-scalar on the 256^3 matmul whenever a SIMD
+//! path is live).
 //!
 //! Run: `cargo bench --bench tensor_ops`
 
@@ -93,6 +96,12 @@ fn ref_asi_compress(a: &Tensor4, state: &mut AsiState) -> Tensor4 {
 }
 
 fn main() {
+    // Which microkernel family this host selected (avx2+fma / neon /
+    // scalar) — recorded in the JSON artifact so perf numbers are
+    // attributable, and used to gate the SIMD-vs-scalar floor below.
+    let dispatch = kernels::dispatch_name();
+    println!("kernel dispatch: {dispatch}");
+
     let mut rows: Vec<Row> = Vec::new();
 
     // ---- matmul: small, non-tile-divisible, and the acceptance shape.
@@ -114,6 +123,40 @@ fn main() {
         rows.push(Row {
             name,
             kernel_ms: fast.mean_s * 1e3,
+            reference_ms: slow.mean_s * 1e3,
+        });
+    }
+
+    // ---- SIMD dispatch vs forced-scalar at the acceptance shape: the
+    // same tiled/threaded loop, only the microkernel family differs.
+    {
+        let (m, k, n) = (256usize, 256, 256);
+        let mut rng = Rng::new(1);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut c_native = vec![0.0f32; m * n];
+        kernels::matmul(m, k, n, &a, &b, &mut c_native);
+        kernels::set_force_scalar(true);
+        assert_eq!(
+            kernels::dispatch_name(),
+            "scalar",
+            "set_force_scalar must pin the scalar path"
+        );
+        let mut c_scalar = vec![0.0f32; m * n];
+        let slow = timer::bench("matmul 256^3 forced scalar", 1, 4, || {
+            kernels::matmul(m, k, n, &a, &b, &mut c_scalar);
+        });
+        kernels::set_force_scalar(false);
+        close(&c_native, &c_scalar, 1e-3, "matmul 256^3 simd vs scalar");
+        println!("{}", slow.report());
+        let native_ms = rows
+            .iter()
+            .find(|r| r.name == "matmul 256x256x256")
+            .expect("256^3 row benched above")
+            .kernel_ms;
+        rows.push(Row {
+            name: "matmul 256^3 simd vs forced-scalar".into(),
+            kernel_ms: native_ms,
             reference_ms: slow.mean_s * 1e3,
         });
     }
@@ -290,6 +333,7 @@ fn main() {
     }
 
     let json = Json::Obj(BTreeMap::from([
+        ("dispatch".to_string(), Json::Str(dispatch.to_string())),
         (
             "threads".to_string(),
             Json::Num(
@@ -322,4 +366,13 @@ fn main() {
     timer::assert_speedup("256^3 matmul", mm.speedup(), 4.0);
     let e2e = rows.iter().find(|r| r.name == "asi_compress B32 C48 8x8").unwrap();
     timer::assert_speedup("end-to-end asi_compress", e2e.speedup(), 2.0);
+    let sv = rows
+        .iter()
+        .find(|r| r.name == "matmul 256^3 simd vs forced-scalar")
+        .unwrap();
+    if dispatch == "scalar" {
+        println!("dispatch=scalar: skipping the SIMD-vs-scalar floor (no SIMD path this run)");
+    } else {
+        timer::assert_speedup("256^3 matmul simd vs forced-scalar", sv.speedup(), 2.0);
+    }
 }

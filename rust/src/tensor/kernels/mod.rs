@@ -1,0 +1,1072 @@
+//! The host compute substrate: cache-blocked, register-tiled f32 GEMM
+//! microkernels plus a `std::thread::scope` row-sharding layer with a size
+//! cutoff. Every hot matrix/tensor/conv path in the crate lowers onto the
+//! entry points here; the original clarity-first scalar loops live on in
+//! [`reference`] as oracles for property tests and the `tensor_ops` bench.
+//!
+//! Design (see `DESIGN.md` for the full write-up):
+//!
+//! * The inner microkernel computes an `MR x NR` block of C with all
+//!   `MR * NR` accumulators held in locals. Three microkernel families
+//!   exist: [`scalar`] (safe code, the universal fallback *and* the test
+//!   oracle), [`simd_avx2`] (x86-64, selected at runtime via
+//!   `is_x86_feature_detected!`) and [`simd_neon`] (aarch64, baseline
+//!   there). [`dispatch`] picks once per process, cached in a `OnceLock`;
+//!   `ASI_FORCE_SCALAR=1` (or [`set_force_scalar`]) pins the scalar path
+//!   for differential testing and benchmarking.
+//! * Outer loops block over K (`KC`), N (`NC`) and M (`MC`) so the B
+//!   panel stays L1/L2-resident across row blocks. On the SIMD path the
+//!   B panel is additionally *packed* into contiguous, zero-padded
+//!   NR-wide column panels (thread-local `Workspace` pool, 32-byte
+//!   aligned) so the FMA rows load without gather or edge masks.
+//! * Matrices below `PAR_CUTOFF` fused multiply-adds stay single-threaded;
+//!   larger ones shard disjoint row ranges of C across scoped threads
+//!   (no work queue, no new dependencies). `unsafe` exists only inside
+//!   the SIMD microkernel bodies, each site under a `// SAFETY:`
+//!   contract — machine-checked by asi-lint's unsafe-discipline pass.
+
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod simd_avx2;
+#[cfg(target_arch = "aarch64")]
+mod simd_neon;
+
+#[cfg(target_arch = "x86_64")]
+use simd_avx2 as simd;
+#[cfg(target_arch = "aarch64")]
+use simd_neon as simd;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use std::cell::RefCell;
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use super::workspace::Workspace;
+
+/// Microkernel register-tile height (rows of C per block).
+pub const MR: usize = 4;
+/// Microkernel register-tile width (columns of C per block).
+pub const NR: usize = 16;
+/// Row-panel blocking (rows of A kept hot per K-panel).
+const MC: usize = 64;
+/// K-panel blocking (depth of the multiply kept L1-resident).
+const KC: usize = 256;
+/// Column-panel blocking (columns of B kept cache-resident).
+const NC: usize = 512;
+
+/// Fused multiply-add count below which GEMMs stay single-threaded: at
+/// this size thread spawn/join overhead rivals the compute itself.
+pub const PAR_CUTOFF: usize = 1 << 21;
+
+// ---------------------------------------------------------------------------
+// Runtime dispatch: which microkernel family this process uses.
+// ---------------------------------------------------------------------------
+
+/// The microkernel family the GEMM substrate selected.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dispatch {
+    /// Safe scalar microkernels — universal fallback and test oracle.
+    Scalar,
+    /// 256-bit AVX2+FMA microkernels (x86-64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2Fma,
+    /// 128-bit NEON microkernels (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Process-wide scalar pin for differential benches/tests; unlike the
+/// env override it can be flipped at runtime and is seen by the scoped
+/// worker threads (an atomic, not a thread-local).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+#[cfg(target_arch = "x86_64")]
+fn native_dispatch() -> Dispatch {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Dispatch::Avx2Fma
+    } else {
+        Dispatch::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn native_dispatch() -> Dispatch {
+    // NEON is architecturally baseline on aarch64; no probe needed.
+    Dispatch::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn native_dispatch() -> Dispatch {
+    Dispatch::Scalar
+}
+
+/// Feature probe + `ASI_FORCE_SCALAR` env override, evaluated once per
+/// process and cached.
+fn detected() -> Dispatch {
+    static D: OnceLock<Dispatch> = OnceLock::new();
+    *D.get_or_init(|| {
+        // ASI_FORCE_SCALAR=1 pins the scalar path for differential
+        // testing and benchmarking (any value but "0" counts).
+        let forced = std::env::var_os("ASI_FORCE_SCALAR").is_some_and(|v| v != "0");
+        if forced {
+            Dispatch::Scalar
+        } else {
+            native_dispatch()
+        }
+    })
+}
+
+/// The microkernel family GEMMs entered right now will use.
+pub fn dispatch() -> Dispatch {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        Dispatch::Scalar
+    } else {
+        detected()
+    }
+}
+
+/// Stable name of the current dispatch path, as recorded in
+/// `BENCH_tensor_ops.json` (`"avx2+fma"`, `"neon"` or `"scalar"`).
+pub fn dispatch_name() -> &'static str {
+    match dispatch() {
+        Dispatch::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Dispatch::Avx2Fma => "avx2+fma",
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => "neon",
+    }
+}
+
+/// Pin (or unpin) the scalar path process-wide. The `tensor_ops` bench
+/// uses this to time SIMD against forced-scalar in one process.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let default = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16);
+        // ASI_THREADS lifts (or lowers) the 16-thread ceiling; it does
+        // not change PAR_CUTOFF, so small GEMMs stay single-threaded
+        // regardless. Invalid values fall back with a warning rather
+        // than panicking in a library init path.
+        match std::env::var("ASI_THREADS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) if (1..=512).contains(&n) => n,
+                _ => {
+                    eprintln!(
+                        "kernels: ASI_THREADS={v:?} invalid (want an integer in 1..=512); \
+                         using {default}"
+                    );
+                    default
+                }
+            },
+            Err(_) => default,
+        }
+    })
+}
+
+/// Number of worker threads for a GEMM of `work` fused multiply-adds
+/// whose output can be sharded into at most `rows` row chunks.
+pub fn threads_for(work: usize, rows: usize) -> usize {
+    if work < PAR_CUTOFF {
+        1
+    } else {
+        max_threads().min(rows).max(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// B-panel packing for the SIMD path. Scratch comes from a thread-local
+// `Workspace` pool so steady-state packing is allocation-free; each
+// scoped worker thread owns its own pool (no sharing, no locks).
+// ---------------------------------------------------------------------------
+
+/// Elements of slack reserved so the packed panel can start on a
+/// 32-byte boundary regardless of where the allocator put the buffer.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const PACK_SLACK: usize = 8;
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+thread_local! {
+    static PACK_POOL: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Fresh allocations made by this thread's packing pool. Stable across
+/// repeated GEMM calls == the SIMD path is allocation-free after
+/// warmup (asserted in tests).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub fn pack_pool_allocs() -> usize {
+    PACK_POOL.with(|w| w.borrow().alloc_count())
+}
+
+/// No SIMD path on this architecture — nothing is ever packed.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pack_pool_allocs() -> usize {
+    0
+}
+
+/// Pack the `kc x nc` panel of B (element (p, j) at `b[p * ldb + j]`)
+/// into NR-wide column panels: panel `jp` holds columns
+/// `jp * NR .. jp * NR + w` as `kc` contiguous NR-float rows at
+/// `dst[jp * kc * NR ..]`, zero-padded to NR when `w < NR`, so the
+/// SIMD microkernels always load full vectors with no edge masks.
+/// Packing touches only B — it is identical across the row-sharded
+/// worker threads, which keeps threaded results bit-equal to the
+/// single-threaded path.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn pack_b(kc: usize, nc: usize, b: &[f32], ldb: usize, dst: &mut [f32]) {
+    let panels = nc.div_ceil(NR);
+    for jp in 0..panels {
+        let j0 = jp * NR;
+        let w = NR.min(nc - j0);
+        let base = jp * kc * NR;
+        for p in 0..kc {
+            let src = &b[p * ldb + j0..p * ldb + j0 + w];
+            let row = &mut dst[base + p * NR..base + (p + 1) * NR];
+            row[..w].copy_from_slice(src);
+            // The pool recycles buffers; stale tail lanes must read 0.
+            row[w..].fill(0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-threaded blocked GEMMs (strided, accumulating). These are the
+// building blocks the batched tensor kernels call per outer slice; each
+// dispatches to the selected microkernel family once per call.
+// ---------------------------------------------------------------------------
+
+/// `C (m x n, ldc) += A (m x k, lda) @ B (k x n, ldb)`, single-threaded.
+///
+/// Requires `a.len() >= (m - 1) * lda + k`, `b.len() >= (k - 1) * ldb + n`,
+/// `c.len() >= (m - 1) * ldc + n`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_st(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if dispatch() != Dispatch::Scalar {
+        gemm_nn_simd(m, k, n, a, lda, b, ldb, c, ldc);
+        return;
+    }
+    gemm_nn_scalar(m, k, n, a, lda, b, ldb, c, ldc);
+}
+
+/// `C (m x n, ldc) += A^T @ B` with A stored `(k x m, lda)`,
+/// single-threaded. A is read down its columns — no transpose is ever
+/// materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_st(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if dispatch() != Dispatch::Scalar {
+        gemm_tn_simd(m, k, n, a, lda, b, ldb, c, ldc);
+        return;
+    }
+    gemm_tn_scalar(m, k, n, a, lda, b, ldb, c, ldc);
+}
+
+/// The scalar blocked loop — PR 1's `gemm_nn_st` body, kept verbatim
+/// (unpacked B, strided microkernel reads) as fallback and oracle.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    let aoff = (ic + ir) * lda + pc;
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let boff = pc * ldb + jc + jr;
+                        let coff = (ic + ir) * ldc + jc + jr;
+                        if mr == MR && nr == NR {
+                            scalar::micro_nn(
+                                kc,
+                                &a[aoff..],
+                                lda,
+                                &b[boff..],
+                                ldb,
+                                &mut c[coff..],
+                                ldc,
+                            );
+                        } else {
+                            scalar::micro_nn_edge(
+                                kc,
+                                mr,
+                                nr,
+                                &a[aoff..],
+                                lda,
+                                &b[boff..],
+                                ldb,
+                                &mut c[coff..],
+                                ldc,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scalar blocked loop for the transposed-A family; see
+/// [`gemm_nn_scalar`].
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_scalar(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    let aoff = pc * lda + ic + ir;
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let boff = pc * ldb + jc + jr;
+                        let coff = (ic + ir) * ldc + jc + jr;
+                        if mr == MR && nr == NR {
+                            scalar::micro_tn(
+                                kc,
+                                &a[aoff..],
+                                lda,
+                                &b[boff..],
+                                ldb,
+                                &mut c[coff..],
+                                ldc,
+                            );
+                        } else {
+                            scalar::micro_tn_edge(
+                                kc,
+                                mr,
+                                nr,
+                                &a[aoff..],
+                                lda,
+                                &b[boff..],
+                                ldb,
+                                &mut c[coff..],
+                                ldc,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SIMD blocked loop: same tiling as [`gemm_nn_scalar`], plus each
+/// `(pc, jc)` B panel is packed once into pooled scratch before the
+/// row blocks sweep it. Full tiles and edge tiles both run the SIMD
+/// microkernels (edge tiles narrow only at writeback).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_simd(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let kc_max = KC.min(k);
+    let panels_max = NC.min(n).div_ceil(NR);
+    let mut buf = PACK_POOL.with(|w| w.borrow_mut().take(kc_max * panels_max * NR + PACK_SLACK));
+    // `align_offset` is in elements for f32 pointers, so 0..=7 here;
+    // min() only guards the pathological usize::MAX "impossible" case.
+    let off = buf.as_ptr().align_offset(32).min(PACK_SLACK);
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let panel_len = kc * nc.div_ceil(NR) * NR;
+            pack_b(kc, nc, &b[pc * ldb + jc..], ldb, &mut buf[off..off + panel_len]);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    let aoff = (ic + ir) * lda + pc;
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let boff = off + (jr / NR) * kc * NR;
+                        let coff = (ic + ir) * ldc + jc + jr;
+                        let bp = &buf[boff..boff + kc * NR];
+                        if mr == MR && nr == NR {
+                            // SAFETY: this loop only runs after
+                            // `dispatch()` selected the SIMD family
+                            // (runtime feature detection on x86-64;
+                            // NEON is baseline on aarch64), and the
+                            // tile slices carry the same bounds the
+                            // scalar microkernels index safely.
+                            unsafe { simd::nn(kc, &a[aoff..], lda, bp, &mut c[coff..], ldc) }
+                        } else {
+                            // SAFETY: as above; mr/nr are clamped to
+                            // 1..=MR / 1..=NR by the tile loop.
+                            unsafe {
+                                simd::nn_edge(kc, mr, nr, &a[aoff..], lda, bp, &mut c[coff..], ldc)
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    PACK_POOL.with(|w| w.borrow_mut().give(buf));
+}
+
+/// SIMD blocked loop for the transposed-A family; see
+/// [`gemm_nn_simd`].
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_simd(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let kc_max = KC.min(k);
+    let panels_max = NC.min(n).div_ceil(NR);
+    let mut buf = PACK_POOL.with(|w| w.borrow_mut().take(kc_max * panels_max * NR + PACK_SLACK));
+    let off = buf.as_ptr().align_offset(32).min(PACK_SLACK);
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let panel_len = kc * nc.div_ceil(NR) * NR;
+            pack_b(kc, nc, &b[pc * ldb + jc..], ldb, &mut buf[off..off + panel_len]);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                for ir in (0..mc).step_by(MR) {
+                    let mr = MR.min(mc - ir);
+                    let aoff = pc * lda + ic + ir;
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let boff = off + (jr / NR) * kc * NR;
+                        let coff = (ic + ir) * ldc + jc + jr;
+                        let bp = &buf[boff..boff + kc * NR];
+                        if mr == MR && nr == NR {
+                            // SAFETY: SIMD family runtime-selected by
+                            // `dispatch()`; tile slices carry the same
+                            // bounds the scalar microkernels index
+                            // safely.
+                            unsafe { simd::tn(kc, &a[aoff..], lda, bp, &mut c[coff..], ldc) }
+                        } else {
+                            // SAFETY: as above; mr/nr are clamped to
+                            // 1..=MR / 1..=NR by the tile loop.
+                            unsafe {
+                                simd::tn_edge(kc, mr, nr, &a[aoff..], lda, bp, &mut c[coff..], ldc)
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    PACK_POOL.with(|w| w.borrow_mut().give(buf));
+}
+
+/// Unrolled dot product with eight independent accumulators — the serial
+/// dependency chain of a single-accumulator loop caps at one FMA per
+/// float-add latency; eight parallel chains let the compiler vectorize.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    let mut acc = [0.0f32; 8];
+    let chunked = n - n % 8;
+    for (xs, ys) in x[..chunked].chunks_exact(8).zip(y[..chunked].chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (xv, yv) in x[chunked..n].iter().zip(&y[chunked..n]) {
+        tail += xv * yv;
+    }
+    tail + acc.iter().sum::<f32>()
+}
+
+/// `C (m x m) += A (m x k) @ A^T` — symmetric Gram update; only the upper
+/// triangle is computed, then mirrored. Single-threaded. Stays in
+/// dot-product form (as does [`gemm_nt_acc_st`]): both operands stream
+/// along contiguous rows, which the 8-lane [`dot`] already saturates —
+/// there is no strided B panel to pack, so they have no SIMD twin.
+pub fn gram_acc_st(m: usize, k: usize, a: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let ri = &a[i * k..(i + 1) * k];
+        for j in i..m {
+            let d = dot(ri, &a[j * k..(j + 1) * k]);
+            c[i * m + j] += d;
+            if j != i {
+                c[j * m + i] += d;
+            }
+        }
+    }
+}
+
+/// `C (m x n, tight) += A (m x k) @ B^T` with B stored `(n x k)` — both
+/// operands are streamed along contiguous rows (dot-product form).
+/// Single-threaded; used by the im2col weight-gradient lowering.
+pub fn gemm_nt_acc_st(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    // Block over B rows so a tile of B stays cache-resident while the
+    // whole of A streams past it.
+    const JB: usize = 32;
+    for jb in (0..n).step_by(JB) {
+        let je = (jb + JB).min(n);
+        for i in 0..m {
+            let ri = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in jb..je {
+                crow[j] += dot(ri, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded entry points for tightly-packed row-major matrices.
+// ---------------------------------------------------------------------------
+
+/// `C (m x n) = A (m x k) @ B (k x n)`, all tightly packed row-major.
+/// Shards disjoint row ranges of C across scoped threads above the size
+/// cutoff.
+pub fn matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "kernels::matmul: A size");
+    assert_eq!(b.len(), k * n, "kernels::matmul: B size");
+    assert_eq!(c.len(), m * n, "kernels::matmul: C size");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nt = threads_for(m * k * n, m);
+    if nt <= 1 {
+        gemm_nn_st(m, k, n, a, k, b, n, c, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ti, cch) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ti * rows_per;
+            let rows = cch.len() / n;
+            let ach = &a[i0 * k..(i0 + rows) * k];
+            s.spawn(move || gemm_nn_st(rows, k, n, ach, k, b, n, cch, n));
+        }
+    });
+}
+
+/// `C (m x n) = A^T @ B` with A stored `(k x m)`, B `(k x n)`, tightly
+/// packed. No transpose is materialized.
+pub fn t_matmul(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "kernels::t_matmul: A size");
+    assert_eq!(b.len(), k * n, "kernels::t_matmul: B size");
+    assert_eq!(c.len(), m * n, "kernels::t_matmul: C size");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nt = threads_for(m * k * n, m);
+    if nt <= 1 {
+        gemm_tn_st(m, k, n, a, m, b, n, c, n);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ti, cch) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ti * rows_per;
+            let rows = cch.len() / n;
+            // Shard A by column range: thread `ti` reads columns
+            // i0..i0+rows, i.e. the strided sub-matrix starting at a[i0].
+            let ach = &a[i0..];
+            s.spawn(move || gemm_tn_st(rows, k, n, ach, m, b, n, cch, n));
+        }
+    });
+}
+
+/// `C (m x n) = A (m x k) @ B^T` with B stored `(n x k)`, tightly packed.
+pub fn matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "kernels::matmul_nt: A size");
+    assert_eq!(b.len(), n * k, "kernels::matmul_nt: B size");
+    assert_eq!(c.len(), m * n, "kernels::matmul_nt: C size");
+    c.fill(0.0);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let nt = threads_for(m * k * n, m);
+    if nt <= 1 {
+        gemm_nt_acc_st(m, k, n, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ti, cch) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = ti * rows_per;
+            let rows = cch.len() / n;
+            let ach = &a[i0 * k..(i0 + rows) * k];
+            s.spawn(move || gemm_nt_acc_st(rows, k, n, ach, b, cch));
+        }
+    });
+}
+
+/// `C (m x m) = A (m x k) @ A^T` — full symmetric Gram matrix.
+pub fn gram(m: usize, k: usize, a: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "kernels::gram: A size");
+    assert_eq!(c.len(), m * m, "kernels::gram: C size");
+    c.fill(0.0);
+    gram_acc_st(m, k, a, c);
+}
+
+// ---------------------------------------------------------------------------
+// Transpose + MGS on contiguous vectors.
+// ---------------------------------------------------------------------------
+
+/// Transpose `src` (rows x cols, row-major) into `dst` (cols x rows),
+/// blocked for cache locality.
+pub fn transpose_into(rows: usize, cols: usize, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), rows * cols, "transpose_into: src size");
+    assert_eq!(dst.len(), rows * cols, "transpose_into: dst size");
+    const TB: usize = 32;
+    for ib in (0..rows).step_by(TB) {
+        let ie = (ib + TB).min(rows);
+        for jb in (0..cols).step_by(TB) {
+            let je = (jb + TB).min(cols);
+            for i in ib..ie {
+                for j in jb..je {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+        }
+    }
+}
+
+/// In-place modified Gram-Schmidt over the `r` rows of `qt` (r x n,
+/// row-major) — i.e. over *contiguous* vectors. [`crate::tensor::Mat::mgs`]
+/// transposes its column vectors into this layout, orthonormalizes, and
+/// transposes back; same algorithm and eps floor as the Pallas MGS kernel.
+pub fn mgs_rows(qt: &mut [f32], r: usize, n: usize) {
+    const EPS: f32 = 1e-8;
+    assert_eq!(qt.len(), r * n, "mgs_rows: size");
+    for j in 0..r {
+        for k in 0..j {
+            let (head, tail) = qt.split_at_mut(j * n);
+            let qk = &head[k * n..(k + 1) * n];
+            let qj = &mut tail[..n];
+            let d = dot(qk, qj);
+            for (x, &y) in qj.iter_mut().zip(qk) {
+                *x -= d * y;
+            }
+        }
+        let qj = &mut qt[j * n..(j + 1) * n];
+        let inv = 1.0 / dot(qj, qj).sqrt().max(EPS);
+        for x in qj.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference oracles — the seed's original clarity-first loops,
+// retained verbatim so property tests and the `tensor_ops` bench can
+// cross-check (and time) the tiled kernels against them.
+// ---------------------------------------------------------------------------
+
+pub mod reference {
+    /// Seed `Mat::matmul`: blocked ikj loop, single accumulator row.
+    pub fn matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            let arow = &a[i * k..(i + 1) * k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Seed `Mat::t_matmul`: `A^T @ B` with A stored `(k x m)`.
+    pub fn t_matmul(k: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for p in 0..k {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Seed `Mat::gram`: triangle of single-accumulator dots.
+    pub fn gram(m: usize, k: usize, a: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * m];
+        for i in 0..m {
+            for j in i..m {
+                let mut s = 0.0;
+                for (x, y) in a[i * k..(i + 1) * k].iter().zip(&a[j * k..(j + 1) * k]) {
+                    s += x * y;
+                }
+                out[i * m + j] = s;
+                out[j * m + i] = s;
+            }
+        }
+        out
+    }
+
+    /// Seed `Mat::mgs`: column-strided modified Gram-Schmidt over an
+    /// `(n x r)` row-major matrix.
+    pub fn mgs(n: usize, r: usize, data: &[f32]) -> Vec<f32> {
+        const EPS: f32 = 1e-8;
+        let mut q = data.to_vec();
+        for j in 0..r {
+            for k in 0..j {
+                let mut d = 0.0;
+                for i in 0..n {
+                    d += q[i * r + k] * q[i * r + j];
+                }
+                for i in 0..n {
+                    let qk = q[i * r + k];
+                    q[i * r + j] -= d * qk;
+                }
+            }
+            let mut norm = 0.0;
+            for i in 0..n {
+                let v = q[i * r + j];
+                norm += v * v;
+            }
+            let norm = norm.sqrt().max(EPS);
+            for i in 0..n {
+                q[i * r + j] /= norm;
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_matches_reference_over_shapes() {
+        // Includes shapes not divisible by MR/NR/KC and degenerate dims.
+        cases(11, 24, |g| {
+            let m = g.usize_in(1, 70);
+            let k = g.usize_in(1, 70);
+            let n = g.usize_in(1, 40);
+            let a = g.normals(m * k);
+            let b = g.normals(k * n);
+            let mut c = vec![0.0f32; m * n];
+            matmul(m, k, n, &a, &b, &mut c);
+            let want = reference::matmul(m, k, n, &a, &b);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn t_matmul_matches_reference_over_shapes() {
+        cases(12, 24, |g| {
+            let k = g.usize_in(1, 70);
+            let m = g.usize_in(1, 50);
+            let n = g.usize_in(1, 40);
+            let a = g.normals(k * m);
+            let b = g.normals(k * n);
+            let mut c = vec![0.0f32; m * n];
+            t_matmul(k, m, n, &a, &b, &mut c);
+            let want = reference::t_matmul(k, m, n, &a, &b);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn matmul_nt_matches_reference() {
+        cases(13, 16, |g| {
+            let m = g.usize_in(1, 30);
+            let k = g.usize_in(1, 90);
+            let n = g.usize_in(1, 30);
+            let a = g.normals(m * k);
+            let b = g.normals(n * k);
+            let mut c = vec![0.0f32; m * n];
+            matmul_nt(m, k, n, &a, &b, &mut c);
+            // B^T materialized, then the reference NN product.
+            let mut bt = vec![0.0f32; k * n];
+            transpose_into(n, k, &b, &mut bt);
+            let want = reference::matmul(m, k, n, &a, &bt);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn gram_matches_reference() {
+        cases(14, 16, |g| {
+            let m = g.usize_in(1, 25);
+            let k = g.usize_in(1, 120);
+            let a = g.normals(m * k);
+            let mut c = vec![0.0f32; m * m];
+            gram(m, k, &a, &mut c);
+            let want = reference::gram(m, k, &a);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn mgs_rows_matches_reference() {
+        cases(15, 12, |g| {
+            let n = g.usize_in(2, 40);
+            let r = g.usize_in(1, 6.min(n));
+            let data = g.normals(n * r);
+            // Kernel path: transpose -> row MGS -> transpose back.
+            let mut qt = vec![0.0f32; r * n];
+            transpose_into(n, r, &data, &mut qt);
+            mgs_rows(&mut qt, r, n);
+            let mut q = vec![0.0f32; n * r];
+            transpose_into(r, n, &qt, &mut q);
+            let want = reference::mgs(n, r, &data);
+            assert_close(&q, &want, 1e-3, 1e-4)
+        });
+    }
+
+    #[test]
+    fn threaded_path_matches_single_thread() {
+        // Big enough to clear PAR_CUTOFF so the scoped-thread shard runs.
+        // Must stay bit-exact under every dispatch family: packing is
+        // row-independent, so each worker's tiles see identical packed
+        // panels.
+        let (m, k, n) = (160, 130, 128);
+        assert!(m * k * n >= PAR_CUTOFF);
+        let mut rng = Rng::new(16);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut c = vec![0.0f32; m * n];
+        matmul(m, k, n, &a, &b, &mut c);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_nn_st(m, k, n, &a, k, &b, n, &mut c1, n);
+        assert_eq!(c, c1, "threaded and single-thread results must be identical");
+    }
+
+    #[test]
+    fn strided_gemm_blocks() {
+        // Write into an offset block of a larger C to exercise ld* != n.
+        let (m, k, n, ldc) = (5, 7, 6, 10);
+        let mut rng = Rng::new(17);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut cbig = vec![0.0f32; m * ldc];
+        gemm_nn_st(m, k, n, &a, k, &b, n, &mut cbig, ldc);
+        let want = reference::matmul(m, k, n, &a, &b);
+        for i in 0..m {
+            for j in 0..n {
+                let d = (cbig[i * ldc + j] - want[i * n + j]).abs();
+                assert!(d < 1e-4, "({i},{j})");
+            }
+            for j in n..ldc {
+                assert_eq!(cbig[i * ldc + j], 0.0, "spill past block");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(18);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 100] {
+            let x = rng.normal_vec(n);
+            let y = rng.normal_vec(n);
+            let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - naive).abs() < 1e-3 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatch_reports_a_known_family() {
+        assert!(
+            ["avx2+fma", "neon", "scalar"].contains(&dispatch_name()),
+            "unknown dispatch name {:?}",
+            dispatch_name()
+        );
+    }
+
+    #[test]
+    fn simd_nn_matches_scalar_oracle_on_edge_shapes() {
+        // Every m/n straddle of the MR/NR register tiles (full tiles,
+        // row edges, column edges, both) including odd sizes and 1.
+        // Under a scalar dispatch the two paths coincide and the test
+        // degenerates to reflexivity — CI's native run is the one that
+        // exercises the differential.
+        cases(21, 40, |g| {
+            let m = g.usize_in(1, 2 * NR + 1);
+            let k = g.usize_in(1, 2 * NR + 1);
+            let n = g.usize_in(1, 2 * NR + 1);
+            let a = g.normals(m * k);
+            let b = g.normals(k * n);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn_st(m, k, n, &a, k, &b, n, &mut c, n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_nn_scalar(m, k, n, &a, k, &b, n, &mut want, n);
+            // FMA rounds once where mul+add rounds twice: ulp-bounded,
+            // not bit-equal — and near-cancelling sums need the atol.
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn simd_tn_matches_scalar_oracle_on_edge_shapes() {
+        cases(22, 40, |g| {
+            let m = g.usize_in(1, 2 * NR + 1);
+            let k = g.usize_in(1, 2 * NR + 1);
+            let n = g.usize_in(1, 2 * NR + 1);
+            let a = g.normals(k * m);
+            let b = g.normals(k * n);
+            let mut c = vec![0.0f32; m * n];
+            gemm_tn_st(m, k, n, &a, m, &b, n, &mut c, n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_tn_scalar(m, k, n, &a, m, &b, n, &mut want, n);
+            assert_close(&c, &want, 1e-4, 1e-5)
+        });
+    }
+
+    #[test]
+    fn nonfinite_inputs_classify_identically() {
+        // Injected NaN/±inf among unit normals must classify the same
+        // on both paths. (Only true specials are injected: a *finite*
+        // product can overflow differently under fused vs two-rounding
+        // arithmetic, which is a rounding question, not a propagation
+        // one.)
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        cases(23, 24, |g| {
+            let m = g.usize_in(1, 12);
+            let k = g.usize_in(1, 24);
+            let n = g.usize_in(1, 2 * NR + 1);
+            let mut a = g.normals(m * k);
+            let mut b = g.normals(k * n);
+            for _ in 0..3 {
+                let ia = g.usize_in(0, m * k - 1);
+                a[ia] = *g.choose(&specials);
+                let ib = g.usize_in(0, k * n - 1);
+                b[ib] = *g.choose(&specials);
+            }
+            let mut got = vec![0.0f32; m * n];
+            gemm_nn_st(m, k, n, &a, k, &b, n, &mut got, n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_nn_scalar(m, k, n, &a, k, &b, n, &mut want, n);
+            for (i, (&x, &y)) in got.iter().zip(want.iter()).enumerate() {
+                if x.is_nan() != y.is_nan() {
+                    return Err(format!("NaN class mismatch at {i}: {x} vs {y}"));
+                }
+                if x.is_nan() {
+                    continue;
+                }
+                if x.is_infinite() || y.is_infinite() {
+                    if x != y {
+                        return Err(format!("inf mismatch at {i}: {x} vs {y}"));
+                    }
+                    continue;
+                }
+                let tol = 1e-4 + 1e-4 * y.abs().max(x.abs());
+                if (x - y).abs() > tol {
+                    return Err(format!("finite mismatch at {i}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packing_pool_is_allocation_free_after_warmup() {
+        // Multiple K-panels (k > KC) and an NR-edge column panel, but
+        // below PAR_CUTOFF so the GEMM stays on this test's thread and
+        // its thread-local pool. Under a scalar dispatch nothing packs
+        // and the count just stays 0.
+        let (m, k, n) = (48, 280, 140);
+        assert!(m * k * n < PAR_CUTOFF);
+        let mut rng = Rng::new(24);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut c = vec![0.0f32; m * n];
+        matmul(m, k, n, &a, &b, &mut c);
+        let after_warmup = pack_pool_allocs();
+        for _ in 0..3 {
+            matmul(m, k, n, &a, &b, &mut c);
+        }
+        assert_eq!(
+            pack_pool_allocs(),
+            after_warmup,
+            "B-panel packing must reuse its pooled scratch after warmup"
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! Safe scalar microkernels — the universal fallback and the test
+//! oracle for the SIMD twins in `simd_avx2.rs` / `simd_neon.rs`.
+//!
+//! These are PR 1's original register-tiled kernels, moved verbatim:
+//! all `MR * NR` accumulators live in locals so the compiler keeps
+//! them in registers and autovectorizes the contiguous NR-wide FMA
+//! rows. The differential property tests in `mod.rs` hold the SIMD
+//! kernels to these results within ulp-level tolerances.
+
+use super::{MR, NR};
+
+/// `C[MR x NR] += A_block @ B_panel`, A row-major (element (i, p) at
+/// `a[i * lda + p]`).
+#[inline(always)]
+pub(crate) fn micro_nn(
+    kc: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let brow = &b[p * ldb..p * ldb + NR];
+        for i in 0..MR {
+            let av = a[i * lda + p];
+            let acci = &mut acc[i];
+            for j in 0..NR {
+                acci[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..MR {
+        let crow = &mut c[i * ldc..i * ldc + NR];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Edge-tile variant of [`micro_nn`] for `mr <= MR`, `nr <= NR`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn micro_nn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let brow = &b[p * ldb..p * ldb + nr];
+        for i in 0..mr {
+            let av = a[i * lda + p];
+            let acci = &mut acc[i];
+            for (j, &bv) in brow.iter().enumerate() {
+                acci[j] += av * bv;
+            }
+        }
+    }
+    for i in 0..mr {
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// `C[MR x NR] += A_block^T @ B_panel`, A stored transposed (element
+/// (p, i) at `a[p * lda + i]`).
+#[inline(always)]
+pub(crate) fn micro_tn(
+    kc: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let arow = &a[p * lda..p * lda + MR];
+        let brow = &b[p * ldb..p * ldb + NR];
+        for i in 0..MR {
+            let av = arow[i];
+            let acci = &mut acc[i];
+            for j in 0..NR {
+                acci[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..MR {
+        let crow = &mut c[i * ldc..i * ldc + NR];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Edge-tile variant of [`micro_tn`] for `mr <= MR`, `nr <= NR`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn micro_tn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let arow = &a[p * lda..p * lda + mr];
+        let brow = &b[p * ldb..p * ldb + nr];
+        for (i, &av) in arow.iter().enumerate() {
+            let acci = &mut acc[i];
+            for (j, &bv) in brow.iter().enumerate() {
+                acci[j] += av * bv;
+            }
+        }
+    }
+    for i in 0..mr {
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (o, v) in crow.iter_mut().zip(acc[i].iter()) {
+            *o += v;
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! AVX2+FMA microkernels (x86-64). Compiled whenever the target is
+//! x86-64, *selected* only after `is_x86_feature_detected!` confirms
+//! the CPU has both features (see `detected()` in `mod.rs`) — so every
+//! call site inherits the "features verified" obligation below.
+//!
+//! Layout contract: the B operand is no longer the strided matrix the
+//! scalar kernels read — it is one NR-wide column panel packed by
+//! `pack_b` (row `p` of the panel at `bp[p * NR]`, zero-padded to NR
+//! on the column edge), so the two 256-bit rows load unconditionally
+//! with no gather and no edge masks. The register budget per tile is
+//! MR * 2 = 8 accumulator ymm registers + 2 B-row vectors + 1
+//! broadcast, inside the 16 available.
+//!
+//! Numerics: `_mm256_fmadd_ps` rounds once where the scalar oracle's
+//! `mul` + `add` rounds twice, so results are ulp-close to — not
+//! bit-equal with — `scalar::micro_nn`; the differential tests bound
+//! the difference. NaN/inf inputs classify identically (the term
+//! sequence per output is the same).
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_storeu_ps,
+};
+
+use super::{MR, NR};
+
+/// `C[MR x NR] += A_block @ B_panel` over a packed B panel.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (runtime-verified by `detected()`
+/// before this module is ever selected). Bounds: `a` holds
+/// `(MR - 1) * lda + kc` elements, `bp` holds `kc * NR`, `c` holds
+/// `(MR - 1) * ldc + NR` — the same tile invariants the blocked loop
+/// maintains for the scalar microkernels.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn nn(kc: usize, a: &[f32], lda: usize, bp: &[f32], c: &mut [f32], ldc: usize) {
+    debug_assert!(kc >= 1);
+    debug_assert!(a.len() >= (MR - 1) * lda + kc);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (MR - 1) * ldc + NR);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    for p in 0..kc {
+        let b0 = _mm256_loadu_ps(bpp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bpp.add(p * NR + 8));
+        for i in 0..MR {
+            let av = _mm256_set1_ps(*ap.add(i * lda + p));
+            acc[i][0] = _mm256_fmadd_ps(av, b0, acc[i][0]);
+            acc[i][1] = _mm256_fmadd_ps(av, b1, acc[i][1]);
+        }
+    }
+    let cp = c.as_mut_ptr();
+    for i in 0..MR {
+        let row = cp.add(i * ldc);
+        _mm256_storeu_ps(row, _mm256_add_ps(_mm256_loadu_ps(row), acc[i][0]));
+        let row8 = row.add(8);
+        _mm256_storeu_ps(row8, _mm256_add_ps(_mm256_loadu_ps(row8), acc[i][1]));
+    }
+}
+
+/// Edge-tile twin of [`nn`] for `mr <= MR`, `nr <= NR`: the FMA body
+/// still runs full NR-wide over the zero-padded panel (no masks), and
+/// only the writeback narrows — spilled to a stack row, then added
+/// scalar-wise into the `nr` live columns.
+///
+/// # Safety
+/// As for [`nn`], with bounds `a.len() >= (mr - 1) * lda + kc` and
+/// `c.len() >= (mr - 1) * ldc + nr`; `1 <= mr <= MR`, `1 <= nr <= NR`.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn nn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(kc >= 1 && (1..=MR).contains(&mr) && (1..=NR).contains(&nr));
+    debug_assert!(a.len() >= (mr - 1) * lda + kc);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (mr - 1) * ldc + nr);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    for p in 0..kc {
+        let b0 = _mm256_loadu_ps(bpp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bpp.add(p * NR + 8));
+        for (i, acci) in acc.iter_mut().enumerate().take(mr) {
+            let av = _mm256_set1_ps(*ap.add(i * lda + p));
+            acci[0] = _mm256_fmadd_ps(av, b0, acci[0]);
+            acci[1] = _mm256_fmadd_ps(av, b1, acci[1]);
+        }
+    }
+    spill_rows(&acc, mr, nr, c, ldc);
+}
+
+/// `C[MR x NR] += A_block^T @ B_panel` over a packed B panel, A stored
+/// transposed (element (p, i) at `a[p * lda + i]`).
+///
+/// # Safety
+/// As for [`nn`], with the A bound `a.len() >= (kc - 1) * lda + MR`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn tn(kc: usize, a: &[f32], lda: usize, bp: &[f32], c: &mut [f32], ldc: usize) {
+    debug_assert!(kc >= 1);
+    debug_assert!(a.len() >= (kc - 1) * lda + MR);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (MR - 1) * ldc + NR);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    for p in 0..kc {
+        let b0 = _mm256_loadu_ps(bpp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bpp.add(p * NR + 8));
+        for i in 0..MR {
+            let av = _mm256_set1_ps(*ap.add(p * lda + i));
+            acc[i][0] = _mm256_fmadd_ps(av, b0, acc[i][0]);
+            acc[i][1] = _mm256_fmadd_ps(av, b1, acc[i][1]);
+        }
+    }
+    let cp = c.as_mut_ptr();
+    for i in 0..MR {
+        let row = cp.add(i * ldc);
+        _mm256_storeu_ps(row, _mm256_add_ps(_mm256_loadu_ps(row), acc[i][0]));
+        let row8 = row.add(8);
+        _mm256_storeu_ps(row8, _mm256_add_ps(_mm256_loadu_ps(row8), acc[i][1]));
+    }
+}
+
+/// Edge-tile twin of [`tn`]; see [`nn_edge`] for the writeback scheme.
+///
+/// # Safety
+/// As for [`tn`], with bounds `a.len() >= (kc - 1) * lda + mr` and
+/// `c.len() >= (mr - 1) * ldc + nr`; `1 <= mr <= MR`, `1 <= nr <= NR`.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn tn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(kc >= 1 && (1..=MR).contains(&mr) && (1..=NR).contains(&nr));
+    debug_assert!(a.len() >= (kc - 1) * lda + mr);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (mr - 1) * ldc + nr);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    for p in 0..kc {
+        let b0 = _mm256_loadu_ps(bpp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bpp.add(p * NR + 8));
+        for (i, acci) in acc.iter_mut().enumerate().take(mr) {
+            let av = _mm256_set1_ps(*ap.add(p * lda + i));
+            acci[0] = _mm256_fmadd_ps(av, b0, acci[0]);
+            acci[1] = _mm256_fmadd_ps(av, b1, acci[1]);
+        }
+    }
+    spill_rows(&acc, mr, nr, c, ldc);
+}
+
+/// Narrow writeback shared by the edge twins: each accumulator row is
+/// spilled full-width to the stack, then its first `nr` lanes are
+/// added into C. Keeps the FMA body mask-free; the scalar tail is
+/// bounded by one tile.
+///
+/// # Safety
+/// AVX2 must be available and `c` must hold `(mr - 1) * ldc + nr`
+/// elements; `mr <= MR`.
+#[target_feature(enable = "avx2")]
+unsafe fn spill_rows(acc: &[[__m256; 2]; MR], mr: usize, nr: usize, c: &mut [f32], ldc: usize) {
+    let mut tmp = [0.0f32; NR];
+    for (i, acci) in acc.iter().enumerate().take(mr) {
+        _mm256_storeu_ps(tmp.as_mut_ptr(), acci[0]);
+        _mm256_storeu_ps(tmp.as_mut_ptr().add(8), acci[1]);
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (o, v) in crow.iter_mut().zip(tmp.iter()) {
+            *o += v;
+        }
+    }
+}

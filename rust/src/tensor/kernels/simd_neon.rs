@@ -1,0 +1,206 @@
+//! NEON microkernels (aarch64, where NEON is architecturally
+//! baseline — `detected()` selects this module unconditionally there).
+//!
+//! Same layout contract as `simd_avx2.rs`: B arrives as one NR-wide
+//! column panel packed by `pack_b` (row `p` at `bp[p * NR]`,
+//! zero-padded on the column edge), so the four 128-bit rows load
+//! unconditionally. Register budget per tile: MR * 4 = 16 accumulator
+//! q-registers + 4 B-row vectors + 1 broadcast, inside the 32
+//! available.
+//!
+//! Numerics: `vfmaq_f32` fuses where the scalar oracle rounds twice,
+//! so results are ulp-close, not bit-equal; the differential tests
+//! bound the difference.
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32,
+};
+
+use super::{MR, NR};
+
+/// `C[MR x NR] += A_block @ B_panel` over a packed B panel.
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64). Bounds: `a` holds
+/// `(MR - 1) * lda + kc` elements, `bp` holds `kc * NR`, `c` holds
+/// `(MR - 1) * ldc + NR` — the same tile invariants the blocked loop
+/// maintains for the scalar microkernels.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn nn(kc: usize, a: &[f32], lda: usize, bp: &[f32], c: &mut [f32], ldc: usize) {
+    debug_assert!(kc >= 1);
+    debug_assert!(a.len() >= (MR - 1) * lda + kc);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (MR - 1) * ldc + NR);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+    for p in 0..kc {
+        let b0 = vld1q_f32(bpp.add(p * NR));
+        let b1 = vld1q_f32(bpp.add(p * NR + 4));
+        let b2 = vld1q_f32(bpp.add(p * NR + 8));
+        let b3 = vld1q_f32(bpp.add(p * NR + 12));
+        for i in 0..MR {
+            let av = vdupq_n_f32(*ap.add(i * lda + p));
+            acc[i][0] = vfmaq_f32(acc[i][0], b0, av);
+            acc[i][1] = vfmaq_f32(acc[i][1], b1, av);
+            acc[i][2] = vfmaq_f32(acc[i][2], b2, av);
+            acc[i][3] = vfmaq_f32(acc[i][3], b3, av);
+        }
+    }
+    let cp = c.as_mut_ptr();
+    for i in 0..MR {
+        let row = cp.add(i * ldc);
+        for (q, accq) in acc[i].iter().enumerate() {
+            let lane = row.add(4 * q);
+            vst1q_f32(lane, vaddq_f32(vld1q_f32(lane), *accq));
+        }
+    }
+}
+
+/// Edge-tile twin of [`nn`] for `mr <= MR`, `nr <= NR`: full-width FMA
+/// over the zero-padded panel, narrow scalar writeback via a stack
+/// spill.
+///
+/// # Safety
+/// As for [`nn`], with bounds `a.len() >= (mr - 1) * lda + kc` and
+/// `c.len() >= (mr - 1) * ldc + nr`; `1 <= mr <= MR`, `1 <= nr <= NR`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn nn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(kc >= 1 && (1..=MR).contains(&mr) && (1..=NR).contains(&nr));
+    debug_assert!(a.len() >= (mr - 1) * lda + kc);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (mr - 1) * ldc + nr);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+    for p in 0..kc {
+        let b0 = vld1q_f32(bpp.add(p * NR));
+        let b1 = vld1q_f32(bpp.add(p * NR + 4));
+        let b2 = vld1q_f32(bpp.add(p * NR + 8));
+        let b3 = vld1q_f32(bpp.add(p * NR + 12));
+        for (i, acci) in acc.iter_mut().enumerate().take(mr) {
+            let av = vdupq_n_f32(*ap.add(i * lda + p));
+            acci[0] = vfmaq_f32(acci[0], b0, av);
+            acci[1] = vfmaq_f32(acci[1], b1, av);
+            acci[2] = vfmaq_f32(acci[2], b2, av);
+            acci[3] = vfmaq_f32(acci[3], b3, av);
+        }
+    }
+    spill_rows(&acc, mr, nr, c, ldc);
+}
+
+/// `C[MR x NR] += A_block^T @ B_panel` over a packed B panel, A stored
+/// transposed (element (p, i) at `a[p * lda + i]`).
+///
+/// # Safety
+/// As for [`nn`], with the A bound `a.len() >= (kc - 1) * lda + MR`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn tn(kc: usize, a: &[f32], lda: usize, bp: &[f32], c: &mut [f32], ldc: usize) {
+    debug_assert!(kc >= 1);
+    debug_assert!(a.len() >= (kc - 1) * lda + MR);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (MR - 1) * ldc + NR);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+    for p in 0..kc {
+        let b0 = vld1q_f32(bpp.add(p * NR));
+        let b1 = vld1q_f32(bpp.add(p * NR + 4));
+        let b2 = vld1q_f32(bpp.add(p * NR + 8));
+        let b3 = vld1q_f32(bpp.add(p * NR + 12));
+        for i in 0..MR {
+            let av = vdupq_n_f32(*ap.add(p * lda + i));
+            acc[i][0] = vfmaq_f32(acc[i][0], b0, av);
+            acc[i][1] = vfmaq_f32(acc[i][1], b1, av);
+            acc[i][2] = vfmaq_f32(acc[i][2], b2, av);
+            acc[i][3] = vfmaq_f32(acc[i][3], b3, av);
+        }
+    }
+    let cp = c.as_mut_ptr();
+    for i in 0..MR {
+        let row = cp.add(i * ldc);
+        for (q, accq) in acc[i].iter().enumerate() {
+            let lane = row.add(4 * q);
+            vst1q_f32(lane, vaddq_f32(vld1q_f32(lane), *accq));
+        }
+    }
+}
+
+/// Edge-tile twin of [`tn`]; see [`nn_edge`] for the writeback scheme.
+///
+/// # Safety
+/// As for [`tn`], with bounds `a.len() >= (kc - 1) * lda + mr` and
+/// `c.len() >= (mr - 1) * ldc + nr`; `1 <= mr <= MR`, `1 <= nr <= NR`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn tn_edge(
+    kc: usize,
+    mr: usize,
+    nr: usize,
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    debug_assert!(kc >= 1 && (1..=MR).contains(&mr) && (1..=NR).contains(&nr));
+    debug_assert!(a.len() >= (kc - 1) * lda + mr);
+    debug_assert!(bp.len() >= kc * NR);
+    debug_assert!(c.len() >= (mr - 1) * ldc + nr);
+    let ap = a.as_ptr();
+    let bpp = bp.as_ptr();
+    let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+    for p in 0..kc {
+        let b0 = vld1q_f32(bpp.add(p * NR));
+        let b1 = vld1q_f32(bpp.add(p * NR + 4));
+        let b2 = vld1q_f32(bpp.add(p * NR + 8));
+        let b3 = vld1q_f32(bpp.add(p * NR + 12));
+        for (i, acci) in acc.iter_mut().enumerate().take(mr) {
+            let av = vdupq_n_f32(*ap.add(p * lda + i));
+            acci[0] = vfmaq_f32(acci[0], b0, av);
+            acci[1] = vfmaq_f32(acci[1], b1, av);
+            acci[2] = vfmaq_f32(acci[2], b2, av);
+            acci[3] = vfmaq_f32(acci[3], b3, av);
+        }
+    }
+    spill_rows(&acc, mr, nr, c, ldc);
+}
+
+/// Narrow writeback shared by the edge twins: each accumulator row is
+/// spilled full-width to the stack, then its first `nr` lanes are
+/// added into C.
+///
+/// # Safety
+/// NEON must be available and `c` must hold `(mr - 1) * ldc + nr`
+/// elements; `mr <= MR`.
+#[target_feature(enable = "neon")]
+unsafe fn spill_rows(
+    acc: &[[float32x4_t; 4]; MR],
+    mr: usize,
+    nr: usize,
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut tmp = [0.0f32; NR];
+    for (i, acci) in acc.iter().enumerate().take(mr) {
+        for (q, accq) in acci.iter().enumerate() {
+            vst1q_f32(tmp.as_mut_ptr().add(4 * q), *accq);
+        }
+        let crow = &mut c[i * ldc..i * ldc + nr];
+        for (o, v) in crow.iter_mut().zip(tmp.iter()) {
+            *o += v;
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Bad fixture for the unsafe-discipline pass: outside
+//! `tensor/kernels/` the keyword is banned outright — a safety
+//! contract does not make the location sanctioned.
+
+pub fn sneaky(buf: &[f32]) -> f32 {
+    assert!(!buf.is_empty());
+    // SAFETY: a contract does not make the location sanctioned.
+    unsafe { *buf.as_ptr() } //~ ERROR unsafe
+}

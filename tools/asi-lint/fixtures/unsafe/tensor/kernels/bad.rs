@@ -1,0 +1,21 @@
+//! Bad fixture for the unsafe-discipline pass: `unsafe` inside the
+//! sanctioned scope but without a safety contract, including one whose
+//! contract is detached by a blank line (the run of comment/attribute
+//! lines above the site must be contiguous).
+
+unsafe fn raw_read(p: *const f32) -> f32 { //~ ERROR unsafe
+    *p
+}
+
+pub fn missing(buf: &[f32]) -> f32 {
+    assert!(!buf.is_empty());
+    unsafe { raw_read(buf.as_ptr()) } //~ ERROR unsafe
+}
+
+// SAFETY: stale contract — the blank line below detaches it from the
+// site, so it must not count as coverage.
+
+pub fn detached(buf: &[f32]) -> f32 {
+    assert!(!buf.is_empty());
+    unsafe { raw_read(buf.as_ptr()) } //~ ERROR unsafe
+}

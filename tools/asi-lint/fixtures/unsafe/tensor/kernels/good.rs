@@ -1,0 +1,26 @@
+//! Good fixture for the unsafe-discipline pass: inside the sanctioned
+//! `tensor/kernels/` scope, every `unsafe` carries a safety contract —
+//! as a `/// # Safety` doc section (bridging across attributes), as a
+//! comment block directly above the site, or on the site's own line.
+
+/// Reads one float through `p`.
+///
+/// # Safety
+/// `p` must point at least one readable, properly aligned `f32`; the
+/// caller checks bounds before dispatching here.
+#[inline]
+unsafe fn load_one(p: *const f32) -> f32 {
+    *p
+}
+
+pub fn block_above(buf: &[f32]) -> f32 {
+    assert!(!buf.is_empty());
+    // SAFETY: the assert above guarantees one readable element, and a
+    // slice pointer is always properly aligned for its element type.
+    unsafe { load_one(buf.as_ptr()) }
+}
+
+pub fn same_line(buf: &[f32]) -> f32 {
+    assert!(!buf.is_empty());
+    unsafe { load_one(buf.as_ptr()) } // SAFETY: asserted non-empty.
+}

@@ -2,7 +2,7 @@
 //!
 //! Rust mirror of `tools/asi_lint.py` (the canonical, toolchain-free
 //! driver — see its module docstring for the full pass catalogue).
-//! Both implementations run the same four passes over the same
+//! Both implementations run the same five passes over the same
 //! fixtures and must agree on every `(file, line, pass)` finding:
 //!
 //! - `lock`: guard-liveness tracking, the PR-5 read-guard-across-
@@ -14,6 +14,11 @@
 //!   runtime/, faults.rs non-test code.
 //! - `schema`: `Json::Num` only inside util::json; raw float fields
 //!   go through the omit-or-flag scheme, never bare `num()`.
+//! - `unsafe`: `unsafe` is banned outside `tensor/kernels/` (the SIMD
+//!   microkernel layer), and inside it every occurrence needs a
+//!   `// SAFETY:` / `/// # Safety` contract on the same line or in
+//!   the comment/attribute block directly above. The vendored stubs
+//!   under `rust/vendor/` sit outside the lint root.
 //!
 //! Source is lexed by the vendored `proc-macro2`/`syn` stubs into flat
 //! `(text, line)` token lists, so each pass is a token-sequence port
@@ -138,6 +143,12 @@ pub struct Source {
     pub allows: BTreeMap<usize, String>,
     /// Line -> pass name for fixture `//~ ERROR <pass>` markers.
     pub markers: BTreeMap<usize, String>,
+    /// Lines whose `//` comment carries a safety contract
+    /// (`SAFETY:` or `# Safety`).
+    pub safety_lines: std::collections::BTreeSet<usize>,
+    /// Comment-only or attribute lines — the contiguous runs a safety
+    /// contract may sit in above an `unsafe` occurrence.
+    pub bridge_lines: std::collections::BTreeSet<usize>,
     test_regions: Vec<(usize, usize)>,
 }
 
@@ -173,12 +184,29 @@ impl Source {
             })
             .collect();
         let (allows, markers) = scan_comments(text);
+        let mut safety_lines = std::collections::BTreeSet::new();
+        let mut bridge_lines = std::collections::BTreeSet::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let ln = idx + 1;
+            let s = raw.trim_start();
+            if s.starts_with("//") || s.starts_with('#') {
+                bridge_lines.insert(ln);
+            }
+            if let Some(rest) = comment_tail(raw) {
+                if rest.contains("SAFETY:") || rest.contains("# Safety")
+                {
+                    safety_lines.insert(ln);
+                }
+            }
+        }
         Ok(Source {
             rel: rel.replace('\\', "/"),
             file_toks,
             fns,
             allows,
             markers,
+            safety_lines,
+            bridge_lines,
             test_regions: file.test_regions,
         })
     }
@@ -317,7 +345,7 @@ fn parse_marker(comment: &str) -> Option<String> {
     }
 }
 
-/// Run all four passes over a set of sources (one analysis group:
+/// Run all five passes over a set of sources (one analysis group:
 /// interprocedural lock summaries and the raw-float-field
 /// classification are computed across the whole group), filter
 /// allow-listed and test-region findings, dedupe by
@@ -336,6 +364,7 @@ pub fn run_passes(sources: &[Source]) -> Vec<Finding> {
         fs.extend(passes::determinism(src));
         fs.extend(passes::panic_hygiene(src));
         fs.extend(passes::schema(src, &raw_fields));
+        fs.extend(passes::unsafe_discipline(src));
         fs.retain(|f| !src.allowed(f.line) && !src.in_tests(f.line));
         out.extend(fs);
     }

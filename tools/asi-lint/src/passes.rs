@@ -1,4 +1,4 @@
-//! The four lint passes, ported token-for-token from
+//! The five lint passes, ported token-for-token from
 //! `tools/asi_lint.py` (which stays the canonical driver — it runs in
 //! toolchain-less containers). Findings are raw here: the caller
 //! (`run_passes`) applies allow-comment and test-region filtering and
@@ -825,7 +825,7 @@ fn paren_group(toks: &[Tok], open: usize) -> &[Tok] {
 /// counted per character over the token texts (including `<`/`>`),
 /// mirroring the Python splitter exactly.
 fn split_top_commas(toks: &[Tok]) -> Vec<Vec<&Tok>> {
-    let mut parts: Vec<Vec<&'a Tok>> = vec![Vec::new()];
+    let mut parts: Vec<Vec<&Tok>> = vec![Vec::new()];
     let mut depth = 0i64;
     for t in toks {
         if t.text == "," && depth == 0 {
@@ -977,6 +977,71 @@ pub fn schema(
                     ),
                 ));
             }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Pass 5: unsafe discipline
+// ---------------------------------------------------------------------------
+
+/// `tensor/kernels/` is the crate's only sanctioned `unsafe` surface
+/// (the SIMD microkernels). Everywhere else under the lint root,
+/// `unsafe` is banned outright; the vendored stubs under `rust/vendor/`
+/// are outside the lint root and never scanned.
+fn in_unsafe_scope(rel: &str) -> bool {
+    let tail = rel.split("rust/src/").last().unwrap_or(rel);
+    tail.starts_with("tensor/kernels/")
+}
+
+/// An `unsafe` occurrence inside the sanctioned scope is covered when
+/// its own line carries a safety comment, or when one appears in the
+/// contiguous run of comment/attribute lines directly above (so a
+/// `/// # Safety` section stays attached across `#[target_feature]`
+/// and `#[inline]` attributes). Blank lines break the run.
+fn safety_covered(src: &Source, line: usize) -> bool {
+    if src.safety_lines.contains(&line) {
+        return true;
+    }
+    let mut k = line.saturating_sub(1);
+    while k >= 1 && src.bridge_lines.contains(&k) {
+        if src.safety_lines.contains(&k) {
+            return true;
+        }
+        k -= 1;
+    }
+    false
+}
+
+pub fn unsafe_discipline(src: &Source) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let sanctioned = in_unsafe_scope(&src.rel);
+    for t in &src.file_toks {
+        if t.text != "unsafe" {
+            continue;
+        }
+        if !sanctioned {
+            findings.push(finding(
+                src,
+                t.line,
+                "unsafe",
+                "`unsafe` outside tensor/kernels/ — the SIMD \
+                 microkernel layer is the crate's only sanctioned \
+                 unsafe surface; write safe code here or move the \
+                 intrinsics into the kernel layer"
+                    .to_string(),
+            ));
+        } else if !safety_covered(src, t.line) {
+            findings.push(finding(
+                src,
+                t.line,
+                "unsafe",
+                "`unsafe` without a `// SAFETY:` contract — state \
+                 the invariants on the same line or in the comment \
+                 block directly above"
+                    .to_string(),
+            ));
         }
     }
     findings

@@ -2,9 +2,9 @@
 """asi-lint: repo-invariant static analysis for the asi crate.
 
 The crate's acceptance story is bit-identical replay under concurrency
-and chaos. Four invariants carry it, and all four have been enforced
-only by hand review until now. This driver makes them machine-checked
-in any container (stdlib-only, no toolchain needed); the Rust crate at
+and chaos. Five invariants carry it, and they were enforced only by
+hand review until now. This driver makes them machine-checked in any
+container (stdlib-only, no toolchain needed); the Rust crate at
 tools/asi-lint mirrors the same passes for toolchain-bearing sessions.
 
 Passes (each finding is `file:line: [pass] message`):
@@ -40,6 +40,17 @@ Passes (each finding is `file:line: [pass] message`):
           must never reach `num()` directly, and no `unwrap`/`expect`
           may appear inside a `num(...)` argument (an unwrapped
           `Option<f32>` loss is exactly how NaN->null leaked in PR 5).
+
+  unsafe  Unsafe discipline. `unsafe` is banned everywhere under the
+          lint root except `tensor/kernels/` (the SIMD microkernel
+          layer, the crate's only sanctioned unsafe surface), and
+          inside it every `unsafe` occurrence must carry a safety
+          contract — `// SAFETY:` or a `/// # Safety` doc section on
+          the same line or in the contiguous comment/attribute block
+          directly above (attributes bridge, so the contract stays
+          attached across `#[target_feature]`/`#[inline]`). The
+          vendored stubs under rust/vendor/ sit outside the lint root
+          and are never scanned.
 
 Escape hatch: `// lint: allow(reason)` on the offending line, or alone
 on the line above it, suppresses every pass at that site. The reason is
@@ -77,12 +88,15 @@ MARKER_RE = re.compile(r"//~\s*ERROR\s+(\w+)")
 def strip_source(text):
     """Blank out comments and string/char literal bodies, preserving
     line structure and byte positions. Returns (stripped, allows,
-    markers): allows maps line -> reason for `// lint: allow(...)`,
-    markers maps line -> pass name for fixture `//~ ERROR p` comments.
+    markers, safety): allows maps line -> reason for
+    `// lint: allow(...)`, markers maps line -> pass name for fixture
+    `//~ ERROR p` comments, safety is the set of lines whose `//`
+    comment carries a safety contract (`SAFETY:` or `# Safety`).
     """
     out = []
     allows = {}
     markers = {}
+    safety = set()
     i, n = 0, len(text)
     line = 1
     comment_only_since_newline = True
@@ -112,6 +126,8 @@ def strip_source(text):
             m = MARKER_RE.search(comment)
             if m:
                 markers[line] = m.group(1)
+            if "SAFETY:" in comment or "# Safety" in comment:
+                safety.add(line)
             out.append(" " * (j - i))
             i = j
             continue
@@ -189,7 +205,7 @@ def strip_source(text):
             comment_only_since_newline = False
         out.append(ch)
         i += 1
-    return "".join(out), allows, markers
+    return "".join(out), allows, markers, safety
 
 
 def line_starts(text):
@@ -288,11 +304,19 @@ class Source:
         self.path = path
         self.rel = rel.replace(os.sep, "/")
         self.text = text
-        self.stripped, self.allows, self.markers = strip_source(text)
+        (self.stripped, self.allows, self.markers,
+         self.safety_lines) = strip_source(text)
         self.starts = line_starts(self.stripped)
         self.test_lines = test_region_lines(self.stripped, self.starts)
         self.functions = extract_functions(self.stripped, self.starts)
         self.lines = self.stripped.split("\n")
+        # Comment-only or attribute lines: the contiguous runs a safety
+        # contract may sit in above an `unsafe` occurrence (pass 5).
+        self.bridge_lines = set()
+        for idx, raw in enumerate(text.split("\n")):
+            s = raw.lstrip()
+            if s.startswith("//") or s.startswith("#"):
+                self.bridge_lines.add(idx + 1)
 
     def line(self, pos):
         return line_of(self.starts, pos)
@@ -934,6 +958,62 @@ def pass_schema(src, raw_fields=frozenset()):
 
 
 # ---------------------------------------------------------------------------
+# Pass 5: unsafe discipline
+# ---------------------------------------------------------------------------
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+
+
+def in_unsafe_scope(rel):
+    """tensor/kernels/ (the SIMD microkernel layer) is the crate's only
+    sanctioned unsafe surface. rust/vendor/ is outside the lint root
+    and never reaches this check."""
+    tail = rel.split("rust/src/")[-1]
+    return tail.startswith("tensor/kernels/")
+
+
+def safety_covered(src, ln):
+    """An `unsafe` occurrence is covered when its own line carries a
+    safety comment, or when one appears in the contiguous run of
+    comment/attribute lines directly above (so a `/// # Safety`
+    section stays attached across `#[target_feature]`/`#[inline]`
+    attributes). Blank lines break the run."""
+    if ln in src.safety_lines:
+        return True
+    k = ln - 1
+    while k >= 1 and k in src.bridge_lines:
+        if k in src.safety_lines:
+            return True
+        k -= 1
+    return False
+
+
+def pass_unsafe(src):
+    findings = []
+    sanctioned = in_unsafe_scope(src.rel)
+    for m in UNSAFE_RE.finditer(src.stripped):
+        ln = src.line(m.start())
+        if src.allowed(ln) or src.in_tests(ln):
+            continue
+        if not sanctioned:
+            findings.append(Finding(
+                src, ln, "unsafe",
+                "`unsafe` outside tensor/kernels/ — the SIMD "
+                "microkernel layer is the crate's only sanctioned "
+                "unsafe surface; write safe code here or move the "
+                "intrinsics into the kernel layer",
+            ))
+        elif not safety_covered(src, ln):
+            findings.append(Finding(
+                src, ln, "unsafe",
+                "`unsafe` without a `// SAFETY:` contract — state the "
+                "invariants on the same line or in the comment block "
+                "directly above",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -947,6 +1027,7 @@ def run_passes(sources):
         findings.extend(pass_determinism(src))
         findings.extend(pass_panic(src))
         findings.extend(pass_schema(src, raw_fields))
+        findings.extend(pass_unsafe(src))
     seen = set()
     deduped = []
     for f in findings:

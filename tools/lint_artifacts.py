@@ -176,6 +176,31 @@ def check_fault_partition(path, doc):
     return errs
 
 
+# Microkernel families the GEMM dispatch layer can report (must track
+# `dispatch_name()` in rust/src/tensor/kernels/mod.rs).
+DISPATCH_NAMES = {"avx2+fma", "neon", "scalar"}
+
+
+def check_tensor_ops_schema(path, doc):
+    """Schema checks for BENCH_tensor_ops.json: the bench must record
+    which microkernel family ran (`dispatch`) — perf numbers without it
+    are unattributable — plus the usual results array."""
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    errs = []
+    disp = doc.get("dispatch")
+    if not isinstance(disp, str):
+        errs.append(f"{path}: missing top-level 'dispatch' string")
+    elif disp not in DISPATCH_NAMES:
+        errs.append(
+            f"{path}: unknown dispatch {disp!r} "
+            f"(want one of {sorted(DISPATCH_NAMES)})"
+        )
+    if not isinstance(doc.get("results"), list):
+        errs.append(f"{path}: missing 'results' array")
+    return errs
+
+
 def lint(path):
     """Returns a list of violation strings for one existing file."""
     try:
@@ -189,6 +214,8 @@ def lint(path):
     if os.path.basename(path) in FAULTED_REPORTS:
         errs.extend(check_fault_schema(path, doc))
         errs.extend(check_fault_partition(path, doc))
+    if os.path.basename(path) == "BENCH_tensor_ops.json":
+        errs.extend(check_tensor_ops_schema(path, doc))
     return errs
 
 
