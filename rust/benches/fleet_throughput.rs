@@ -126,6 +126,38 @@ fn main() {
         "every tenant of both runs must borrow the shared set"
     );
 
+    // Enabled-mode arm (after the frozen-counter assertions — those
+    // read the second run's snapshot): a traced fleet run must stay
+    // bit-identical to the untraced one and actually record fleet
+    // events; its counts land in BENCH_fleet.json.
+    let traced = run_fleet(&engine, &spec().workers(4).trace(true))
+        .expect("traced fleet");
+    assert!(traced.failed.is_empty(), "{:?}", traced.failed);
+    for (a, b) in fleet.tenants.iter().zip(&traced.tenants) {
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(
+            a.report.final_loss.map(f32::to_bits),
+            b.report.final_loss.map(f32::to_bits),
+            "tenant {} loss diverged under tracing",
+            a.tenant
+        );
+        assert_eq!(a.report.accuracy.to_bits(), b.report.accuracy.to_bits());
+    }
+    assert!(traced.metrics.events > 0, "traced fleet recorded nothing");
+    assert!(
+        traced
+            .metrics
+            .cats
+            .iter()
+            .any(|&(k, n)| k == "fleet" && n > 0),
+        "traced fleet must record fleet-category events: {:?}",
+        traced.metrics
+    );
+    println!(
+        "traced run: {} events ({} dropped)",
+        traced.metrics.events, traced.metrics.dropped
+    );
+
     write_json(vec![
         ("tenants", Json::Num(TENANTS as f64)),
         ("steps_per_tenant", Json::Num(STEPS as f64)),
@@ -145,6 +177,8 @@ fn main() {
         ("steals", Json::Num(fleet.steals() as f64)),
         ("compiles", Json::Num(fleet.engine.compiles as f64)),
         ("param_reads", Json::Num(fleet.engine.param_reads as f64)),
+        ("trace_events", Json::Num(traced.metrics.events as f64)),
+        ("trace_dropped", Json::Num(traced.metrics.dropped as f64)),
     ]);
 
     // The acceptance floor: 4 workers must beat serial by >1.5x on

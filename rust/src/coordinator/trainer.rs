@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 use crate::data::{ImageBatch, ImageDataset};
 use crate::faults::FaultPlan;
 use crate::runtime::{Engine, ExecArg, FrozenSet, HostTensor};
+use crate::trace;
 use crate::util::rng::Rng;
 
 use super::session::FinetuneSpec;
@@ -212,6 +213,7 @@ impl<'e> Trainer<'e> {
     /// tenants), only the batch, hyper-scalars, trained tensors and
     /// warm-start factors are uploaded per step.
     pub fn step(&mut self, x: HostTensor, y: Option<HostTensor>) -> Result<f32> {
+        let _sp = trace::span(trace::Name::Step);
         let engine = self.engine;
         // Copy-on-write trainers upload their private frozen copy once.
         if let FrozenParams::Owned { host, dev } = &mut self.frozen {
@@ -324,6 +326,7 @@ impl<'e> Trainer<'e> {
     where
         F: FnMut(u64) -> ImageBatch,
     {
+        let _sp = trace::span(trace::Name::Burst);
         if let Some(p) = &self.faults {
             // Chaos hooks fire before any step mutates state, so a
             // failed/panicked burst leaves the last good checkpoint as

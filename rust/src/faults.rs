@@ -32,6 +32,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::trace;
 use crate::util::rng::Rng;
 use crate::util::sync::MutexExt;
 
@@ -211,6 +212,7 @@ impl FaultPlan {
         if fail {
             // lint: allow(bounds: i < NB, see above)
             self.injected[i].fetch_add(1, Ordering::Relaxed);
+            trace::instant(trace::Name::Inject);
         }
         fail
     }

@@ -36,6 +36,7 @@ use crate::compress::Method;
 use crate::coordinator::{Checkpoint, Session, Trainer};
 use crate::faults::{FaultPlan, RetryDecision, RetryPolicy, RetryState};
 use crate::runtime::Engine;
+use crate::trace;
 use crate::util::sync::{into_inner_ok, MutexExt};
 
 pub use report::{FleetFaults, FleetReport, StateCharge, StateGauge,
@@ -96,6 +97,11 @@ pub struct FleetSpec {
     /// its plan. Defaults to fail-fast; [`FleetSpec::chaos`] flips it
     /// to [`RetryPolicy::default`].
     pub retry: RetryPolicy,
+    /// Record a span trace of the run (`--trace`; see
+    /// [`crate::serve::ServeSpec::trace`] for the contract).
+    pub trace: bool,
+    /// Per-thread trace ring capacity in events (`--trace-buf`).
+    pub trace_buf: usize,
 }
 
 impl FleetSpec {
@@ -117,6 +123,8 @@ impl FleetSpec {
             checkpoint_dir: None,
             faults: None,
             retry: RetryPolicy { retries: 0, quarantine: 0 },
+            trace: false,
+            trace_buf: trace::Tracer::DEFAULT_BUF,
         }
     }
 
@@ -184,6 +192,18 @@ impl FleetSpec {
         self
     }
 
+    /// Record a span trace of the run.
+    pub fn trace(mut self, on: bool) -> FleetSpec {
+        self.trace = on;
+        self
+    }
+
+    /// Per-thread trace ring capacity in events.
+    pub fn trace_buf(mut self, n: usize) -> FleetSpec {
+        self.trace_buf = n;
+        self
+    }
+
     /// Deterministic per-tenant seed derivation (pure function of the
     /// spec — a tenant's plan is identical whether it runs in a fleet of
     /// 1 or 1000, which is what makes serial-vs-fleet runs comparable).
@@ -236,6 +256,11 @@ fn run_tenant(
 /// they appear in [`FleetReport::failed`] and the rest of the fleet
 /// completes.
 pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
+    // Tracer goes live before any engine work so compiles and the
+    // frozen build land in the trace; dropped after the pool joins.
+    let tracer = spec.trace.then(|| trace::Tracer::new(spec.trace_buf));
+    let trace_guard =
+        tracer.as_ref().map(|t| trace::install(Arc::clone(t)));
     // Pin the fleet's shared frozen set for the whole run: the set is
     // refcounted and tenants come and go (a moment with every tenant
     // torn down would otherwise evict it), but one fleet must pay the
@@ -259,6 +284,9 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
     let t0 = Instant::now();
     let (slots, worker_stats) =
         run_work_stealing(spec.workers, spec.tenants, |worker, id| {
+            // Ambient trace context for everything this tenant records.
+            let _tctx = trace::ctx(id, worker);
+            let _sp = trace::span(trace::Name::FleetExec);
             // Whole-tenant bounded retry: a fleet tenant has no
             // between-burst checkpoints, so the unit of recovery is
             // the tenant — a re-run from scratch is a pure replay of
@@ -293,13 +321,17 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
                     }
                     Err(e) => match state.on_failure(&spec.retry) {
                         RetryDecision::Retry(backoff) => {
+                            trace::instant(trace::Name::Retry);
                             retried.fetch_add(
                                 1,
                                 std::sync::atomic::Ordering::Relaxed,
                             );
                             std::thread::sleep(backoff);
+                            trace::instant_dur(
+                                trace::Name::Backoff, backoff);
                         }
                         RetryDecision::Quarantine => {
+                            trace::instant(trace::Name::Quarantine);
                             quarantined_ids
                                 .lock_ok()
                                 .push((id, format!("{e:#}")));
@@ -312,6 +344,11 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
         });
     let wall_s = t0.elapsed().as_secs_f64();
     engine.set_faults(None);
+    // Pool has joined: stop recording, read the quiesced rings.
+    drop(trace_guard);
+    let metrics =
+        tracer.as_ref().map(|t| t.metrics()).unwrap_or_default();
+    let trace_doc = tracer.as_ref().map(|t| t.export());
     if let Some(p) = &spec.faults {
         faults.record_plan(p);
     }
@@ -352,6 +389,8 @@ pub fn run_fleet(engine: &Engine, spec: &FleetSpec) -> Result<FleetReport> {
         worker_stats,
         engine: engine.stats(),
         faults,
+        metrics,
+        trace: trace_doc,
     })
 }
 

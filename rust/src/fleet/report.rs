@@ -11,6 +11,7 @@ use crate::coordinator::FinetuneReport;
 use crate::faults::{FaultPlan, BOUNDARIES};
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
+use crate::trace::metrics::Snapshot;
 use crate::util::fs::write_atomic_in;
 use crate::util::json::{arr, num, obj, push_finite_or_flag, s, Json};
 
@@ -197,6 +198,11 @@ pub struct FleetReport {
     pub engine: EngineStats,
     /// Fault-injection + recovery accounting (zeroed when no chaos).
     pub faults: FleetFaults,
+    /// Counters-only trace metrics (always present, all-zeros when the
+    /// run was untraced; never wall-clock-derived).
+    pub metrics: Snapshot,
+    /// The `--trace` run's Chrome-trace document; `None` untraced.
+    pub trace: Option<Json>,
 }
 
 impl FleetReport {
@@ -374,6 +380,7 @@ impl FleetReport {
                 })),
             ),
             ("faults", self.faults.to_json()),
+            ("metrics", self.metrics.to_json()),
         ])
     }
 
@@ -386,6 +393,22 @@ impl FleetReport {
             &format!("{stem}.json"),
             format!("{}\n", self.to_json()).as_bytes(),
         )
+    }
+
+    /// Write the `--trace` run's `trace.json` under `dir`, atomically;
+    /// `false` (and no file) when the run was untraced.
+    pub fn save_trace(&self, dir: &Path) -> Result<bool> {
+        match &self.trace {
+            Some(doc) => {
+                write_atomic_in(
+                    dir,
+                    "trace.json",
+                    format!("{doc}\n").as_bytes(),
+                )?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
     }
 }
 

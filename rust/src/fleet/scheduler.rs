@@ -15,6 +15,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
+use crate::trace;
 use crate::util::sync::{into_inner_ok, MutexExt};
 
 /// Per-worker execution counters, surfaced in the fleet report.
@@ -91,6 +92,9 @@ where
                     }
                 }
                 let Some((i, stolen)) = task else { break };
+                if stolen {
+                    trace::instant(trace::Name::Steal);
+                }
                 let out = catch_unwind(AssertUnwindSafe(|| f(w, i)));
                 // lint: allow(bounds: w < workers == stats.len())
                 let mut st = stats[w].lock_ok();

@@ -34,4 +34,8 @@ pub mod runtime;
 #[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod serve;
 pub mod tensor;
+// Tracing shares the serve stack's panic-free contract: a full ring or
+// a missing tracer degrades recording, never the run.
+#[deny(clippy::unwrap_used, clippy::expect_used)]
+pub mod trace;
 pub mod util;

@@ -87,19 +87,25 @@ USAGE:
             --depth 2 [--rank R] [--steps N] [--lr F] [--seed S]
             [--quick] [--ckpt DIR] [--out DIR]
             [--chaos SEED] [--retries K] [--quarantine Q]
+            [--trace] [--trace-buf N]
       concurrent multi-tenant fine-tuning against one shared engine;
-      writes <out>/fleet.json
+      writes <out>/fleet.json (--trace adds <out>/trace.json)
   asi serve --tenants N --workers W --bursts K [--burst-steps S]
             [--high-every M] [--aging A] [--fifo] [--model mcunet]
             [--method asi] [--depth D] [--rank R] [--lr F] [--seed S]
             [--quick] [--ckpt DIR] [--out DIR]
             [--chaos SEED] [--retries K] [--quarantine Q]
+            [--trace] [--trace-buf N]
       streaming continual-adaptation service: burst-granular priority
       scheduling with aging, checkpoint/yield/re-enqueue tenants, and
       a dedicated async checkpoint writer; writes <out>/serve.json.
       --chaos injects a seeded, deterministic fault storm (engine,
       upload, checkpoint, stream, writer I/O, panics, stalls) and
-      turns on bounded retry + consecutive-failure quarantine
+      turns on bounded retry + consecutive-failure quarantine.
+      --trace records a span trace of the run (engine, trainer,
+      scheduler, writer, fault events) into <out>/trace.json in
+      Chrome trace-event format; --trace-buf bounds the per-thread
+      event ring. Traced runs stay bit-identical to untraced ones
   asi rank-select --model mcunet --budget-kb N [--greedy]
   asi audit <exec>        per-opcode HLO audit of one artifact
   asi engine-stats        compile/run statistics after a smoke run
@@ -234,7 +240,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "fleet",
         &["tenants", "workers", "model", "method", "depth", "rank", "steps",
           "lr", "seed", "quick", "ckpt", "out", "artifacts",
-          "chaos", "retries", "quarantine"],
+          "chaos", "retries", "quarantine", "trace", "trace-buf"],
     )?;
     let model = args.get("model", "mcunet");
     let method_key = args.get("method", "asi");
@@ -269,6 +275,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if args.has("quarantine") {
         spec = spec.quarantine(args.get("quarantine", "3").parse()?);
     }
+    spec = spec.trace(args.has("trace"));
+    if args.has("trace-buf") {
+        spec = spec.trace_buf(args.get("trace-buf", "65536").parse()?);
+    }
 
     let engine = Engine::load(&artifacts_dir(args)).context("loading engine")?;
     println!(
@@ -283,6 +293,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     print!("{}", report.render());
     report.save(&out_dir(args), "fleet")?;
     println!("wrote {}/fleet.json", out_dir(args).display());
+    if report.save_trace(&out_dir(args))? {
+        println!("wrote {}/trace.json ({} events, {} dropped)",
+                 out_dir(args).display(),
+                 report.metrics.events,
+                 report.metrics.dropped);
+    }
     if chaos {
         // Injected-fault runs are expected to shed tenants; the report
         // rows (status fields + faults section) are the contract, not
@@ -313,7 +329,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &["tenants", "workers", "bursts", "burst-steps", "high-every",
           "aging", "fifo", "model", "method", "depth", "rank", "lr",
           "seed", "quick", "ckpt", "out", "artifacts",
-          "chaos", "retries", "quarantine"],
+          "chaos", "retries", "quarantine", "trace", "trace-buf"],
     )?;
     let model = args.get("model", "mcunet");
     let method_key = args.get("method", "asi");
@@ -355,6 +371,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("quarantine") {
         spec = spec.quarantine(args.get("quarantine", "3").parse()?);
     }
+    spec = spec.trace(args.has("trace"));
+    if args.has("trace-buf") {
+        spec = spec.trace_buf(args.get("trace-buf", "65536").parse()?);
+    }
 
     let engine = Engine::load(&artifacts_dir(args)).context("loading engine")?;
     println!(
@@ -371,6 +391,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print!("{}", report.render());
     report.save(&out_dir(args), "serve")?;
     println!("wrote {}/serve.json", out_dir(args).display());
+    if report.save_trace(&out_dir(args))? {
+        println!("wrote {}/trace.json ({} events, {} dropped)",
+                 out_dir(args).display(),
+                 report.metrics.events,
+                 report.metrics.dropped);
+    }
     let high = report.latency(Priority::High);
     if high.count > 0 {
         println!(

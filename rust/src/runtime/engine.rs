@@ -28,6 +28,7 @@ use anyhow::{bail, Context, Result};
 use super::manifest::{ExecEntry, Manifest};
 use super::value::{DType, HostTensor};
 use crate::faults::{Boundary, FaultPlan};
+use crate::trace;
 use crate::util::json::{num, obj, Json};
 use crate::util::sync::RwLockExt;
 
@@ -431,6 +432,7 @@ impl Engine {
             map.entry(name.to_string()).or_default().clone()
         };
         cell.get_or_try_init(|| {
+            let _sp = trace::span(trace::Name::Compile);
             let entry = self.manifest.exec(name)?;
             let path = self.dir.join(&entry.file);
             // lint: allow(measurement: compile_s telemetry only)
@@ -505,6 +507,9 @@ impl Engine {
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.h2d_bytes.fetch_add(h2d, Ordering::Relaxed);
         self.stats.d2h_bytes.fetch_add(d2h, Ordering::Relaxed);
+        if d2h > 0 {
+            trace::instant(trace::Name::D2h);
+        }
     }
 
     /// Execute `name` on `inputs`; returns the flat output tuple.
@@ -517,6 +522,7 @@ impl Engine {
             .iter()
             .map(|t| t.to_literal())
             .collect::<Result<_>>()?;
+        let _sp = trace::span(trace::Name::Execute);
         // lint: allow(measurement: run_s telemetry only)
         let t0 = Instant::now();
         // lint: allow(invariant: executable() only returns populated cells)
@@ -557,6 +563,7 @@ impl Engine {
     /// across every tenant.
     pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
         self.fault_check(Boundary::H2dUpload)?;
+        let _sp = trace::span(trace::Name::H2d);
         let buf = match t {
             HostTensor::F32 { shape, data } => self
                 .client
@@ -614,6 +621,7 @@ impl Engine {
                 Err(idx) => &owned[idx],
             })
             .collect();
+        let _sp = trace::span(trace::Name::Execute);
         // lint: allow(measurement: run_s telemetry only)
         let t0 = Instant::now();
         // lint: allow(invariant: executable() only returns populated cells)
@@ -695,8 +703,10 @@ impl Engine {
         let mut slot = cell.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(set) = slot.upgrade() {
             self.stats.frozen_hits.fetch_add(1, Ordering::Relaxed);
+            trace::instant(trace::Name::FrozenHit);
             return Ok((set, false));
         }
+        let _sp = trace::span(trace::Name::FrozenBuild);
         let entry = self.manifest.exec(exec_name)?;
         let model = entry.model.clone();
         let full = self

@@ -46,6 +46,7 @@ use crate::faults::{Boundary, FaultPlan, RetryDecision, RetryPolicy,
                     RetryState};
 use crate::fleet::{derive_plan, StateCharge, StateGauge, TenantPlan};
 use crate::runtime::Engine;
+use crate::trace;
 use crate::util::sync::{into_inner_ok, MutexExt};
 
 pub use report::{percentile, BurstRecord, FaultClassStats, FaultsReport,
@@ -109,6 +110,13 @@ pub struct ServeSpec {
     /// fail a tenant on its first error, the pre-fault-layer behavior
     /// — and flips to [`RetryPolicy::default`] when chaos is enabled.
     pub retry: RetryPolicy,
+    /// Record a span trace of the run (`--trace`): the report grows a
+    /// live `metrics` section and a `trace.json` export. Off = the
+    /// tracer is never installed and recording costs one relaxed
+    /// atomic load per site.
+    pub trace: bool,
+    /// Per-thread trace ring capacity in events (`--trace-buf`).
+    pub trace_buf: usize,
 }
 
 impl ServeSpec {
@@ -136,6 +144,8 @@ impl ServeSpec {
             writer_capacity: 64,
             faults: None,
             retry: RetryPolicy { retries: 0, quarantine: 0 },
+            trace: false,
+            trace_buf: trace::Tracer::DEFAULT_BUF,
         }
     }
 
@@ -223,6 +233,18 @@ impl ServeSpec {
     /// Consecutive-failure quarantine threshold (0 disables).
     pub fn quarantine(mut self, n: u32) -> ServeSpec {
         self.retry.quarantine = n;
+        self
+    }
+
+    /// Record a span trace of the run (see [`ServeSpec::trace`]).
+    pub fn trace(mut self, on: bool) -> ServeSpec {
+        self.trace = on;
+        self
+    }
+
+    /// Per-thread trace ring capacity in events.
+    pub fn trace_buf(mut self, n: usize) -> ServeSpec {
+        self.trace_buf = n;
         self
     }
 
@@ -344,6 +366,7 @@ fn run_tenant_burst<'g>(
             if let Some(p) = &spec.faults {
                 p.check(Boundary::CheckpointLoad)?;
             }
+            let _sp = trace::span(trace::Name::Resume);
             fspec.resume(ck)?
         }
         None => Trainer::new(&fspec)?,
@@ -402,7 +425,10 @@ fn run_tenant_burst<'g>(
                 || spec.faults.is_some()
                 || spec.retry.retries > 0
             {
-                let ck = Arc::new(Checkpoint::of(&tr));
+                let ck = {
+                    let _sp = trace::span(trace::Name::Snapshot);
+                    Arc::new(Checkpoint::of(&tr))
+                };
                 // Stream the burst checkpoint to disk via the writer
                 // thread; the tenant's own state handoff is the same
                 // (shared) in-memory snapshot — no tensor copy on the
@@ -496,6 +522,13 @@ pub fn run_serve_with(
     spec: &ServeSpec,
     stream: &dyn StreamSource,
 ) -> Result<ServeReport> {
+    // Install the tracer before any engine work so compiles and the
+    // frozen build/pin land in the trace. The guard is dropped (and
+    // recording disabled) after the writer joins — the report and
+    // export below read quiesced rings.
+    let tracer = spec.trace.then(|| trace::Tracer::new(spec.trace_buf));
+    let trace_guard =
+        tracer.as_ref().map(|t| trace::install(Arc::clone(t)));
     // Pin the shared frozen set for the whole run. Between bursts every
     // tenant exists only as a checkpoint (no live trainer), so without
     // this run-scope refcount an idle instant would drop the last Arc
@@ -570,6 +603,14 @@ pub fn run_serve_with(
         |t: &TenantTask| format!("tenant-{}", t.plan.id),
         |ctx, mut task: TenantTask| {
             let id = task.plan.id;
+            // Ambient trace context: every event this dispatch records
+            // (engine, trainer, writer submit, fault) carries the
+            // tenant/worker attribution.
+            let _tctx = trace::ctx(id, ctx.worker);
+            trace::instant_dur(trace::Name::QueueWait, ctx.waited);
+            if ctx.aged {
+                trace::instant(trace::Name::AgingBoost);
+            }
             // Catch injected (and genuine) panics here rather than in
             // the pool's last-resort net: a panicked burst mutated
             // nothing (hooks fire before the first step; between
@@ -655,6 +696,7 @@ pub fn run_serve_with(
                     let msg = format!("{e:#}");
                     return match task.retry.on_failure(&spec.retry) {
                         RetryDecision::Retry(backoff) => {
+                            trace::instant(trace::Name::Retry);
                             // lint: allow(bounds: class() < CLASSES)
                             fault_stats.lock_ok()[task.prio.class()]
                                 .retried += 1;
@@ -668,10 +710,13 @@ pub fn run_serve_with(
                             // stream cursor in `task.burst`, so the
                             // re-dispatch is a pure replay.
                             std::thread::sleep(backoff);
+                            trace::instant_dur(
+                                trace::Name::Backoff, backoff);
                             let prio = task.prio;
                             Outcome::Requeue(task, prio)
                         }
                         RetryDecision::Quarantine => {
+                            trace::instant(trace::Name::Quarantine);
                             // lint: allow(bounds: class() < CLASSES)
                             fault_stats.lock_ok()[task.prio.class()]
                                 .quarantined += 1;
@@ -696,6 +741,7 @@ pub fn run_serve_with(
                     // Yield: drop the worker back into the pool,
                     // re-enter at our class for the already-claimed
                     // next burst.
+                    trace::instant(trace::Name::Preempt);
                     let prio = task.prio;
                     Outcome::Requeue(task, prio)
                 }
@@ -712,6 +758,12 @@ pub fn run_serve_with(
     // Chaos ends with the workload: report assembly and whatever the
     // caller runs on this engine next are not under test.
     engine.set_faults(None);
+    // Recording stops here; pool + writer have joined, so the rings
+    // are quiesced and the export below is complete.
+    drop(trace_guard);
+    let metrics =
+        tracer.as_ref().map(|t| t.metrics()).unwrap_or_default();
+    let trace_doc = tracer.as_ref().map(|t| t.export());
     let mut tenants = into_inner_ok(done);
     tenants.sort_by_key(|t| t.tenant);
     let mut failed = into_inner_ok(failed);
@@ -773,6 +825,8 @@ pub fn run_serve_with(
         writer: writer_stats,
         engine: engine.stats(),
         faults,
+        metrics,
+        trace: trace_doc,
     })
 }
 

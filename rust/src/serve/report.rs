@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::faults::{FaultPlan, BOUNDARIES};
 use crate::metrics::Table;
 use crate::runtime::EngineStats;
+use crate::trace::metrics::Snapshot;
 use crate::util::fs::write_atomic_in;
 use crate::util::json::{arr, num, obj, push_finite_or_flag, s, Json};
 
@@ -329,6 +330,14 @@ pub struct ServeReport {
     pub engine: EngineStats,
     /// Fault-injection + recovery accounting (zeroed when no chaos).
     pub faults: FaultsReport,
+    /// Counters-only trace metrics (event tallies per category + ring
+    /// drops). All-zeros when the run was untraced — the section is
+    /// always present so the report schema is stable, and it never
+    /// holds a wall-clock-derived value.
+    pub metrics: Snapshot,
+    /// The full Chrome-trace document of a `--trace` run (exported via
+    /// [`ServeReport::save_trace`]); `None` when untraced.
+    pub trace: Option<Json>,
 }
 
 impl ServeReport {
@@ -630,6 +639,7 @@ impl ServeReport {
                 })),
             ),
             ("faults", self.faults.to_json()),
+            ("metrics", self.metrics.to_json()),
         ])
     }
 
@@ -640,6 +650,23 @@ impl ServeReport {
             &format!("{stem}.json"),
             format!("{}\n", self.to_json()).as_bytes(),
         )
+    }
+
+    /// Write the `--trace` run's `trace.json` under `dir`, atomically.
+    /// Returns whether a trace existed to write (untraced runs write
+    /// nothing and return `false`).
+    pub fn save_trace(&self, dir: &Path) -> Result<bool> {
+        match &self.trace {
+            Some(doc) => {
+                write_atomic_in(
+                    dir,
+                    "trace.json",
+                    format!("{doc}\n").as_bytes(),
+                )?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
     }
 }
 
@@ -756,6 +783,8 @@ mod tests {
                                   ..Default::default() },
             engine: EngineStats::default(),
             faults: FaultsReport::empty(2, 3),
+            metrics: Snapshot::default(),
+            trace: None,
         }
     }
 

@@ -30,6 +30,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::trace;
 use crate::util::sync::{into_inner_ok, MutexExt};
 
 /// Scheduling class of a stream task. Order is meaningful: lower
@@ -120,6 +121,7 @@ impl<T> RunQueue<T> {
     }
 
     pub fn push(&mut self, item: T, prio: Priority) {
+        trace::instant(trace::Name::Enqueue);
         self.pushes += 1;
         self.entries.push_back(Entry {
             item,
@@ -166,6 +168,7 @@ impl<T> RunQueue<T> {
             item: e.item,
         };
         self.pops += 1;
+        trace::instant(trace::Name::Pop);
         Some(popped)
     }
 }

@@ -24,6 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Checkpoint;
 use crate::faults::{Boundary, FaultPlan, RetryPolicy};
+use crate::trace;
 use crate::util::fs::write_atomic_in;
 
 /// One unit of deferred I/O.
@@ -100,11 +101,13 @@ impl Writer {
     /// (and counts the stall) when the writer is `capacity` jobs
     /// behind. Errors only if the writer thread is gone.
     pub fn submit(&self, job: WriteJob) -> Result<()> {
+        trace::instant(trace::Name::WriterEnqueue);
         let tx = self.tx.as_ref().context("writer already finished")?;
         match tx.try_send(job) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(job)) => {
                 self.blocked.fetch_add(1, Ordering::Relaxed);
+                let _sp = trace::span(trace::Name::BlockedSend);
                 if tx.send(job).is_err() {
                     bail!("writer thread terminated with jobs pending");
                 }
@@ -154,6 +157,7 @@ fn drain(
 ) -> WriterStats {
     let mut st = WriterStats::default();
     while let Ok(job) = rx.recv() {
+        let _sp = trace::span(trace::Name::Write);
         if let Some(d) = throttle {
             std::thread::sleep(d);
         }

@@ -1,0 +1,63 @@
+//! The tracer's single wall-clock read point.
+//!
+//! Every trace timestamp in the process flows through [`Clock`]: events
+//! carry microseconds since the owning [`super::Tracer`]'s origin, so a
+//! trace file starts at `ts == 0` and stays within `u64` for any
+//! realistic run length. Keeping the `Instant::now` calls in this one
+//! shim (the same shape as `util::timer` for the benches) is what lets
+//! the asi-lint determinism pass keep its wall-clock ban on the rest of
+//! the crate: tracing reads time, but only *here*, and nothing read
+//! here may feed back into report rows — the serve/fleet e2e tests
+//! assert bit-identical tenant rows with tracing on vs off.
+
+use std::time::{Duration, Instant};
+
+/// Microsecond reads against a fixed origin.
+#[derive(Debug)]
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock { origin: Instant::now() }
+    }
+
+    /// Microseconds since this clock's origin (saturating far beyond
+    /// any plausible run length).
+    pub fn now_us(&self) -> u64 {
+        us(self.origin.elapsed())
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::new()
+    }
+}
+
+/// Duration -> whole microseconds, saturating at `u64::MAX`.
+pub fn us(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotone_from_zero() {
+        let c = Clock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a, "clock went backwards: {a} -> {b}");
+    }
+
+    #[test]
+    fn us_conversion() {
+        assert_eq!(us(Duration::from_micros(7)), 7);
+        assert_eq!(us(Duration::from_millis(2)), 2000);
+        assert_eq!(us(Duration::ZERO), 0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Counter / gauge / histogram registry behind the tracer.
+//!
+//! Everything here is a relaxed atomic: recording threads bump counts
+//! and histogram buckets without coordination, and the exporter reads a
+//! consistent picture only after the run's workers have quiesced (the
+//! same contract as the rings). Two export surfaces with different
+//! rules:
+//!
+//! * **counters** (per-category event counts + the ring-drop tally) are
+//!   plain tallies, so they may embed into `serve.json` / `fleet.json`
+//!   as the `metrics` section — no wall-clock-derived value ever lands
+//!   in those reports;
+//! * **gauges and duration histograms** carry measured magnitudes and
+//!   export only into `trace.json`, which is a diagnostic artifact with
+//!   no determinism contract.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{arr, num, obj, Json};
+
+use super::{Cat, CATS};
+
+/// log2 µs duration buckets: bucket 0 is `[0, 1)` µs, bucket `i >= 1`
+/// is `[2^(i-1), 2^i)` µs, and the last bucket absorbs everything
+/// beyond (~2^18 µs ≈ 4 min with 20 buckets).
+pub const HIST_BUCKETS: usize = 20;
+
+/// Process-level gauges (current value + high-water mark).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Threads that have registered a ring with the tracer.
+    Threads,
+}
+
+pub const GAUGES: [Gauge; 1] = [Gauge::Threads];
+
+impl Gauge {
+    fn idx(self) -> usize {
+        match self {
+            Gauge::Threads => 0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::Threads => "threads",
+        }
+    }
+}
+
+const N_CATS: usize = CATS.len();
+const N_GAUGES: usize = GAUGES.len();
+
+/// The tracer's metric store.
+pub struct Registry {
+    cats: [AtomicU64; N_CATS],
+    dropped: AtomicU64,
+    gauges: [AtomicU64; N_GAUGES],
+    gauge_peaks: [AtomicU64; N_GAUGES],
+    hists: [[AtomicU64; HIST_BUCKETS]; N_CATS],
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            cats: std::array::from_fn(|_| AtomicU64::new(0)),
+            dropped: AtomicU64::new(0),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauge_peaks: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| {
+                std::array::from_fn(|_| AtomicU64::new(0))
+            }),
+        }
+    }
+
+    /// One event recorded in `c` (counted whether or not the ring later
+    /// drops it — `retained == events - dropped` is the export
+    /// invariant `lint_artifacts.py` checks).
+    pub fn count_cat(&self, c: Cat) {
+        if let Some(a) = self.cats.get(c.idx()) {
+            a.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One event overwritten out of a full ring.
+    pub fn count_dropped(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cat_count(&self, c: Cat) -> u64 {
+        self.cats
+            .get(c.idx())
+            .map_or(0, |a| a.load(Ordering::Relaxed))
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Set a gauge's current value, folding the high-water mark.
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        if let Some(a) = self.gauges.get(g.idx()) {
+            a.store(v, Ordering::Relaxed);
+        }
+        if let Some(p) = self.gauge_peaks.get(g.idx()) {
+            p.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    /// (current, peak) of one gauge.
+    pub fn gauge(&self, g: Gauge) -> (u64, u64) {
+        (
+            self.gauges
+                .get(g.idx())
+                .map_or(0, |a| a.load(Ordering::Relaxed)),
+            self.gauge_peaks
+                .get(g.idx())
+                .map_or(0, |a| a.load(Ordering::Relaxed)),
+        )
+    }
+
+    /// Record a span duration into the category's log2 histogram.
+    pub fn observe_dur(&self, c: Cat, dur_us: u64) {
+        let b = ((u64::BITS - dur_us.leading_zeros()) as usize)
+            .min(HIST_BUCKETS - 1);
+        if let Some(h) = self.hists.get(c.idx()) {
+            if let Some(a) = h.get(b) {
+                a.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// The deterministic (count-valued) slice of the registry — what
+    /// embeds into `serve.json` / `fleet.json`.
+    pub fn snapshot(&self) -> Snapshot {
+        let cats: Vec<(&'static str, u64)> = CATS
+            .iter()
+            .map(|c| (c.name(), self.cat_count(*c)))
+            .collect();
+        Snapshot {
+            events: cats.iter().map(|(_, n)| n).sum(),
+            dropped: self.dropped(),
+            cats,
+        }
+    }
+
+    /// Gauges + duration histograms, for `trace.json` only.
+    pub fn diagnostics_json(&self) -> Json {
+        obj(vec![
+            (
+                "gauges",
+                obj(GAUGES
+                    .iter()
+                    .map(|g| {
+                        let (cur, peak) = self.gauge(*g);
+                        (
+                            g.name(),
+                            obj(vec![
+                                ("current", num(cur as f64)),
+                                ("peak", num(peak as f64)),
+                            ]),
+                        )
+                    })
+                    .collect()),
+            ),
+            (
+                "dur_hist_us",
+                obj(CATS
+                    .iter()
+                    .map(|c| {
+                        let buckets = self
+                            .hists
+                            .get(c.idx())
+                            .map(|h| {
+                                h.iter()
+                                    .map(|a| {
+                                        num(a.load(Ordering::Relaxed)
+                                            as f64)
+                                    })
+                                    .collect::<Vec<Json>>()
+                            })
+                            .unwrap_or_default();
+                        (c.name(), arr(buckets))
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+/// Counters-only snapshot: total events recorded, ring drops, and the
+/// per-category breakdown (every category always present, so the
+/// untraced `metrics` section is a stable all-zeros object).
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub events: u64,
+    pub dropped: u64,
+    pub cats: Vec<(&'static str, u64)>,
+}
+
+impl Default for Snapshot {
+    fn default() -> Snapshot {
+        Snapshot {
+            events: 0,
+            dropped: 0,
+            cats: CATS.iter().map(|c| (c.name(), 0)).collect(),
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("events", num(self.events as f64)),
+            ("dropped", num(self.dropped as f64)),
+            (
+                "cats",
+                obj(self
+                    .cats
+                    .iter()
+                    .map(|(k, v)| (*k, num(*v as f64)))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_tally_per_category() {
+        let r = Registry::new();
+        r.count_cat(Cat::Engine);
+        r.count_cat(Cat::Engine);
+        r.count_cat(Cat::Writer);
+        r.count_dropped();
+        let s = r.snapshot();
+        assert_eq!(s.events, 3);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(r.cat_count(Cat::Engine), 2);
+        assert_eq!(r.cat_count(Cat::Writer), 1);
+        assert_eq!(r.cat_count(Cat::Fleet), 0);
+        // Every category key is present even at zero.
+        assert_eq!(s.cats.len(), CATS.len());
+    }
+
+    #[test]
+    fn gauge_keeps_peak() {
+        let r = Registry::new();
+        r.gauge_set(Gauge::Threads, 3);
+        r.gauge_set(Gauge::Threads, 7);
+        r.gauge_set(Gauge::Threads, 2);
+        assert_eq!(r.gauge(Gauge::Threads), (2, 7));
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2() {
+        let r = Registry::new();
+        for d in [0, 1, 2, 3, 4, 1000, u64::MAX] {
+            r.observe_dur(Cat::Sched, d);
+        }
+        let json = r.diagnostics_json().to_string();
+        assert!(json.contains("dur_hist_us"), "{json}");
+        // 0 -> bucket 0; 1 -> bucket 1; 2,3 -> bucket 2; 4 -> bucket 3;
+        // 1000 -> bucket 10; MAX -> last bucket.
+        let h = &r.hists[Cat::Sched.idx()];
+        let get = |i: usize| h[i].load(Ordering::Relaxed);
+        assert_eq!(get(0), 1);
+        assert_eq!(get(1), 1);
+        assert_eq!(get(2), 2);
+        assert_eq!(get(3), 1);
+        assert_eq!(get(10), 1);
+        assert_eq!(get(HIST_BUCKETS - 1), 1);
+    }
+
+    #[test]
+    fn default_snapshot_is_all_zeros_with_full_keys() {
+        let s = Snapshot::default();
+        assert_eq!(s.events, 0);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.cats.len(), CATS.len());
+        let json = s.to_json().to_string();
+        assert!(json.contains("\"engine\":0"), "{json}");
+        assert!(!json.contains("null"), "{json}");
+    }
+}

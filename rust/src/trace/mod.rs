@@ -1,0 +1,717 @@
+//! Span tracing + metrics across the serve/fleet/engine stack.
+//!
+//! The serving stack's reports are end-of-run aggregates; this module
+//! is the per-event timeline behind them. A [`Tracer`] records compact
+//! events — interned [`Name`], [`Cat`]egory, ambient tenant/worker ids,
+//! start + duration in µs via the [`clock`] shim — into per-thread
+//! bounded rings ([`ring::Ring`]), tallies them in a counter / gauge /
+//! histogram [`metrics::Registry`], and exports the merged timeline as
+//! Chrome Trace Event Format (`results/trace.json`, loadable in
+//! `chrome://tracing` / Perfetto).
+//!
+//! **Disabled is the default and costs one relaxed atomic load.** Every
+//! recording entry point ([`span`], [`instant`], [`instant_dur`],
+//! [`ctx`]) first checks [`enabled`] and returns a disarmed no-op when
+//! no tracer is installed — no clock read, no thread-local touch, no
+//! allocation. Tracing is strictly observational: nothing recorded here
+//! may feed a report row, and the e2e tests assert `serve.json` /
+//! `fleet.json` tenant rows are bit-identical with tracing on vs off
+//! (including under `--chaos`).
+//!
+//! **Recording is contention-free.** Each thread lazily registers one
+//! bounded ring with the installed tracer (the only cross-thread
+//! rendezvous, once per thread per install); after that the hot path is
+//! a thread-local lookup plus a push into a preallocated buffer — the
+//! ring's mutex is only ever taken by its owning thread while the run
+//! is live, and by the exporter after the workers have quiesced. Full
+//! rings drop their *oldest* event and count it, so a long run keeps
+//! the most recent window instead of growing without bound.
+//!
+//! One tracer is installed process-wide at a time ([`install`] returns
+//! an RAII guard; the CLI installs for `--trace` runs). Concurrent
+//! installs don't corrupt anything — threads re-home to the newest
+//! tracer at their next event — but interleaved runs will see each
+//! other's events, so tests that assert counts serialize their traced
+//! sections.
+
+pub mod clock;
+pub mod export;
+pub mod metrics;
+pub mod ring;
+
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::sync::MutexExt;
+
+use clock::Clock;
+use metrics::{Gauge, Registry, Snapshot};
+use ring::{Event, Ring};
+
+/// Event categories — the `cat` field of the Chrome trace, and the keys
+/// of the `metrics.cats` section (`lint_artifacts.py` rejects anything
+/// outside this set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cat {
+    Engine,
+    Trainer,
+    Sched,
+    Writer,
+    Fleet,
+    Fault,
+}
+
+/// All categories, in export order.
+pub const CATS: [Cat; 6] = [
+    Cat::Engine,
+    Cat::Trainer,
+    Cat::Sched,
+    Cat::Writer,
+    Cat::Fleet,
+    Cat::Fault,
+];
+
+impl Cat {
+    pub fn idx(self) -> usize {
+        match self {
+            Cat::Engine => 0,
+            Cat::Trainer => 1,
+            Cat::Sched => 2,
+            Cat::Writer => 3,
+            Cat::Fleet => 4,
+            Cat::Fault => 5,
+        }
+    }
+
+    /// Stable key used in `trace.json` and the `metrics` sections.
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Engine => "engine",
+            Cat::Trainer => "trainer",
+            Cat::Sched => "sched",
+            Cat::Writer => "writer",
+            Cat::Fleet => "fleet",
+            Cat::Fault => "fault",
+        }
+    }
+}
+
+/// Interned event names: the discriminant is the event's name id, the
+/// label only materializes at export. Adding a span = adding a variant
+/// here (+ its label/category arm) and one `trace::span(..)` at the
+/// site — see DESIGN.md "Observability".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Name {
+    // engine
+    Compile,
+    Execute,
+    H2d,
+    D2h,
+    FrozenBuild,
+    FrozenHit,
+    // trainer
+    Burst,
+    Step,
+    Snapshot,
+    Resume,
+    // serve scheduler
+    Enqueue,
+    Pop,
+    QueueWait,
+    AgingBoost,
+    Preempt,
+    // writer thread
+    WriterEnqueue,
+    BlockedSend,
+    Write,
+    // fleet work-stealing
+    FleetExec,
+    Steal,
+    // fault layer
+    Inject,
+    Retry,
+    Backoff,
+    Quarantine,
+}
+
+impl Name {
+    pub fn label(self) -> &'static str {
+        match self {
+            Name::Compile => "compile",
+            Name::Execute => "execute",
+            Name::H2d => "h2d",
+            Name::D2h => "d2h",
+            Name::FrozenBuild => "frozen_build",
+            Name::FrozenHit => "frozen_hit",
+            Name::Burst => "burst",
+            Name::Step => "step",
+            Name::Snapshot => "snapshot",
+            Name::Resume => "resume",
+            Name::Enqueue => "enqueue",
+            Name::Pop => "pop",
+            Name::QueueWait => "queue_wait",
+            Name::AgingBoost => "aging_boost",
+            Name::Preempt => "preempt",
+            Name::WriterEnqueue => "writer_enqueue",
+            Name::BlockedSend => "blocked_send",
+            Name::Write => "write",
+            Name::FleetExec => "fleet_exec",
+            Name::Steal => "steal",
+            Name::Inject => "inject",
+            Name::Retry => "retry",
+            Name::Backoff => "backoff",
+            Name::Quarantine => "quarantine",
+        }
+    }
+
+    pub fn cat(self) -> Cat {
+        match self {
+            Name::Compile
+            | Name::Execute
+            | Name::H2d
+            | Name::D2h
+            | Name::FrozenBuild
+            | Name::FrozenHit => Cat::Engine,
+            Name::Burst | Name::Step | Name::Snapshot | Name::Resume => {
+                Cat::Trainer
+            }
+            Name::Enqueue
+            | Name::Pop
+            | Name::QueueWait
+            | Name::AgingBoost
+            | Name::Preempt => Cat::Sched,
+            Name::WriterEnqueue | Name::BlockedSend | Name::Write => {
+                Cat::Writer
+            }
+            Name::FleetExec | Name::Steal => Cat::Fleet,
+            Name::Inject | Name::Retry | Name::Backoff | Name::Quarantine => {
+                Cat::Fault
+            }
+        }
+    }
+}
+
+/// "no tenant/worker" sentinel in compact events (omitted at export).
+pub(crate) const NONE_ID: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// The tracer and its process-wide installation slot.
+// ---------------------------------------------------------------------------
+
+/// One tracing session: a clock origin, the ring registry, and the
+/// metric store. Created per `--trace` run and installed process-wide
+/// for its duration.
+pub struct Tracer {
+    clock: Clock,
+    cap: usize,
+    rings: Mutex<Vec<Arc<Mutex<Ring>>>>,
+    registry: Registry,
+}
+
+impl Tracer {
+    /// Default per-thread ring capacity (events). ~40 B/event, so the
+    /// default is ~2.6 MB per recording thread.
+    pub const DEFAULT_BUF: usize = 65_536;
+
+    pub fn new(buf_events: usize) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            clock: Clock::new(),
+            cap: buf_events.max(16),
+            rings: Mutex::new(Vec::new()),
+            registry: Registry::new(),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Counters-only snapshot (the report-embeddable `metrics` section).
+    pub fn metrics(&self) -> Snapshot {
+        self.registry.snapshot()
+    }
+
+    /// Merge the rings into a Chrome-trace JSON document. Call after
+    /// the traced run's workers have quiesced (recording threads may
+    /// otherwise add events between the copy and the snapshot).
+    pub fn export(&self) -> Json {
+        export::export(self)
+    }
+
+    /// Atomically write `trace.json` under `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        crate::util::fs::write_atomic_in(
+            dir,
+            "trace.json",
+            format!("{}\n", self.export()).as_bytes(),
+        )
+    }
+
+    /// Register the calling thread's ring (once per thread per install).
+    fn register_ring(&self) -> Arc<Mutex<Ring>> {
+        let r = Arc::new(Mutex::new(Ring::new(self.cap)));
+        let mut rings = self.rings.lock_ok();
+        rings.push(Arc::clone(&r));
+        self.registry.gauge_set(Gauge::Threads, rings.len() as u64);
+        r
+    }
+
+    /// Registered rings and their retained events, in registration
+    /// (= export tid) order.
+    pub(crate) fn collect(&self) -> Vec<(u32, Event)> {
+        let rings = self.rings.lock_ok();
+        let mut out = Vec::new();
+        for (tid, ring) in rings.iter().enumerate() {
+            let r = ring.lock_ok();
+            for e in r.iter() {
+                out.push((tid as u32, *e));
+            }
+        }
+        out
+    }
+
+    /// Rings registered so far (test + diagnostics hook).
+    pub fn ring_count(&self) -> usize {
+        self.rings.lock_ok().len()
+    }
+
+    /// Total allocations across all rings — stable after each thread's
+    /// first event, which the no-alloc-after-warmup test asserts.
+    pub fn ring_allocs(&self) -> u64 {
+        self.rings.lock_ok().iter().map(|r| r.lock_ok().allocs()).sum()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("cap", &self.cap)
+            .field("rings", &self.ring_count())
+            .finish_non_exhaustive()
+    }
+}
+
+/// The single relaxed-atomic branch every disabled-path check costs.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Install generation; threads re-home their cached ring when it moves.
+static EPOCH: AtomicU64 = AtomicU64::new(0);
+/// The installed tracer (guarded; read once per thread per epoch).
+static CURRENT: Mutex<Option<Arc<Tracer>>> = Mutex::new(None);
+
+/// Is a tracer installed? Inlined single relaxed load — the entire
+/// disabled-path cost of every instrumentation site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install `t` as the process tracer until the returned guard drops.
+#[must_use = "the tracer uninstalls when the guard drops"]
+pub fn install(t: Arc<Tracer>) -> Installed {
+    {
+        let mut cur = CURRENT.lock_ok();
+        *cur = Some(Arc::clone(&t));
+        EPOCH.fetch_add(1, Ordering::Relaxed);
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+    Installed { tracer: t }
+}
+
+/// RAII installation: dropping uninstalls (only if this guard's tracer
+/// is still the installed one, so overlapping sessions can't clobber
+/// each other's teardown).
+pub struct Installed {
+    tracer: Arc<Tracer>,
+}
+
+impl Installed {
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+}
+
+impl Drop for Installed {
+    fn drop(&mut self) {
+        let mut cur = CURRENT.lock_ok();
+        if cur.as_ref().is_some_and(|c| Arc::ptr_eq(c, &self.tracer)) {
+            ENABLED.store(false, Ordering::Relaxed);
+            *cur = None;
+            EPOCH.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local recording state.
+// ---------------------------------------------------------------------------
+
+struct Slot {
+    epoch: u64,
+    tracer: Option<Arc<Tracer>>,
+    ring: Option<Arc<Mutex<Ring>>>,
+}
+
+thread_local! {
+    static SLOT: RefCell<Slot> = const {
+        RefCell::new(Slot { epoch: 0, tracer: None, ring: None })
+    };
+    /// Ambient (tenant, worker) attribution for events recorded on this
+    /// thread — set by the dispatch loops via [`ctx`].
+    static CTX: Cell<(u32, u32)> = const { Cell::new((NONE_ID, NONE_ID)) };
+}
+
+/// Run `f` against the installed tracer + this thread's ring,
+/// re-homing the cached pair if the install epoch moved. Returns `None`
+/// when no tracer is installed.
+fn with_slot<R>(f: impl FnOnce(&Tracer, &Mutex<Ring>) -> R) -> Option<R> {
+    SLOT.with(|s| {
+        let mut slot = s.borrow_mut();
+        let epoch = EPOCH.load(Ordering::Relaxed);
+        if slot.epoch != epoch {
+            slot.epoch = epoch;
+            let cur = CURRENT.lock_ok().clone();
+            slot.ring = cur.as_ref().map(|t| t.register_ring());
+            slot.tracer = cur;
+        }
+        match (&slot.tracer, &slot.ring) {
+            (Some(t), Some(r)) => Some(f(t, r)),
+            _ => None,
+        }
+    })
+}
+
+fn record(name: Name, ts_us: u64, dur_us: u64) {
+    let (tenant, worker) = CTX.with(Cell::get);
+    with_slot(|t, ring| {
+        t.registry.count_cat(name.cat());
+        t.registry.observe_dur(name.cat(), dur_us);
+        let dropped = ring.lock_ok().push(Event {
+            name,
+            ts_us,
+            dur_us,
+            tenant,
+            worker,
+        });
+        if dropped {
+            t.registry.count_dropped();
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Recording API — the instrumentation sites call only these.
+// ---------------------------------------------------------------------------
+
+/// RAII span: records one duration event from creation to drop. Created
+/// disarmed (a pure no-op) when tracing is disabled.
+#[must_use = "a span measures until it drops; bind it to a _guard"]
+pub struct Span {
+    name: Name,
+    start_us: u64,
+    epoch: u64,
+    armed: bool,
+}
+
+impl Span {
+    fn disarmed(name: Name) -> Span {
+        Span { name, start_us: 0, epoch: 0, armed: false }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed || !enabled() {
+            return;
+        }
+        // If the install changed while the span was open, its origin is
+        // meaningless against the new clock: skip rather than record a
+        // garbage duration.
+        if EPOCH.load(Ordering::Relaxed) != self.epoch {
+            return;
+        }
+        let now = with_slot(|t, _| t.clock.now_us());
+        if let Some(now) = now {
+            record(
+                self.name,
+                self.start_us,
+                now.saturating_sub(self.start_us),
+            );
+        }
+    }
+}
+
+/// Open a span; it records when the guard drops.
+pub fn span(name: Name) -> Span {
+    if !enabled() {
+        return Span::disarmed(name);
+    }
+    match with_slot(|t, _| t.clock.now_us()) {
+        Some(start_us) => Span {
+            name,
+            start_us,
+            epoch: EPOCH.load(Ordering::Relaxed),
+            armed: true,
+        },
+        None => Span::disarmed(name),
+    }
+}
+
+/// Record a zero-duration marker event.
+pub fn instant(name: Name) {
+    if !enabled() {
+        return;
+    }
+    let ts = with_slot(|t, _| t.clock.now_us());
+    if let Some(ts) = ts {
+        record(name, ts, 0);
+    }
+}
+
+/// Record an event whose duration was measured elsewhere (e.g. a queue
+/// wait): it is back-dated so `[ts, ts + dur]` ends now.
+pub fn instant_dur(name: Name, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    let now = with_slot(|t, _| t.clock.now_us());
+    if let Some(now) = now {
+        let d = clock::us(dur);
+        record(name, now.saturating_sub(d), d);
+    }
+}
+
+/// Set the ambient (tenant, worker) attribution for this thread until
+/// the guard drops (nests; the previous context is restored).
+pub fn ctx(tenant: usize, worker: usize) -> CtxGuard {
+    if !enabled() {
+        return CtxGuard { prev: (NONE_ID, NONE_ID), armed: false };
+    }
+    let clip = |v: usize| u32::try_from(v).unwrap_or(NONE_ID - 1);
+    let prev =
+        CTX.with(|c| c.replace((clip(tenant), clip(worker))));
+    CtxGuard { prev, armed: true }
+}
+
+/// Restores the previous ambient context on drop.
+pub struct CtxGuard {
+    prev: (u32, u32),
+    armed: bool,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            CTX.with(|c| c.set(self.prev));
+        }
+    }
+}
+
+/// Tracing state is process-global: any test that installs a tracer
+/// must hold this lock so parallel test threads can't cross-pollute
+/// each other's event counts (shared with the export tests).
+#[cfg(test)]
+pub(crate) static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn events_of(t: &Tracer) -> Vec<(u32, Event)> {
+        t.collect()
+    }
+
+    #[test]
+    fn disabled_paths_are_noops() {
+        let _l = TEST_LOCK.lock_ok();
+        assert!(!enabled());
+        let sp = span(Name::Execute);
+        assert!(!sp.armed);
+        drop(sp);
+        instant(Name::Inject);
+        instant_dur(Name::QueueWait, Duration::from_millis(1));
+        let g = ctx(3, 1);
+        assert!(!g.armed);
+    }
+
+    #[test]
+    fn spans_record_balanced_open_close_with_ctx() {
+        let _l = TEST_LOCK.lock_ok();
+        let t = Tracer::new(1024);
+        let guard = install(Arc::clone(&t));
+        {
+            let _c = ctx(7, 2);
+            let _outer = span(Name::Burst);
+            for _ in 0..3 {
+                let _inner = span(Name::Step);
+            }
+        }
+        instant(Name::Inject);
+        drop(guard);
+        assert!(!enabled());
+        let evs = events_of(&t);
+        assert_eq!(evs.len(), 5, "3 steps + 1 burst + 1 instant");
+        let m = t.metrics();
+        assert_eq!(m.events, 5);
+        assert_eq!(m.dropped, 0);
+        // Inner spans drop (record) before the outer guard.
+        let names: Vec<Name> =
+            evs.iter().map(|(_, e)| e.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                Name::Step,
+                Name::Step,
+                Name::Step,
+                Name::Burst,
+                Name::Inject
+            ]
+        );
+        for (_, e) in &evs {
+            if e.name != Name::Inject {
+                assert_eq!((e.tenant, e.worker), (7, 2));
+            }
+        }
+        // Nesting: the burst span contains every step span.
+        let burst = evs.iter().find(|(_, e)| e.name == Name::Burst).unwrap().1;
+        for (_, e) in evs.iter().filter(|(_, e)| e.name == Name::Step) {
+            assert!(e.ts_us >= burst.ts_us);
+            assert!(e.ts_us + e.dur_us <= burst.ts_us + burst.dur_us);
+        }
+    }
+
+    #[test]
+    fn prop_span_tree_stays_balanced_and_nested() {
+        let _l = TEST_LOCK.lock_ok();
+        // Random open/close trees: every opened span records exactly
+        // one event, and a child's [ts, ts+dur] window nests inside its
+        // parent's (same thread, RAII ordering).
+        crate::util::prop::cases(0x7ACE, 25, |g| {
+            let t = Tracer::new(4096);
+            let guard = install(Arc::clone(&t));
+            fn grow(g: &mut crate::util::prop::Gen, depth: usize) -> usize {
+                let _sp = span(Name::Step);
+                let kids =
+                    if depth >= 4 { 0 } else { g.usize_in(0, 3) };
+                let mut n = 1;
+                for _ in 0..kids {
+                    n += grow(g, depth + 1);
+                }
+                n
+            }
+            let opened = grow(g, 0);
+            drop(guard);
+            let evs = t.collect();
+            if evs.len() != opened {
+                return Err(format!(
+                    "{} spans opened, {} events recorded",
+                    opened,
+                    evs.len()
+                ));
+            }
+            // RAII drop order: later-recorded same-thread spans either
+            // contain or are disjoint from earlier ones; every window
+            // must be well-formed and within the last (outermost) one.
+            let Some((_, outer)) = evs.last() else {
+                return Err("no events".into());
+            };
+            for (_, e) in &evs {
+                if e.ts_us < outer.ts_us
+                    || e.ts_us + e.dur_us > outer.ts_us + outer.dur_us
+                {
+                    return Err(format!(
+                        "span [{}, +{}] escapes the root [{}, +{}]",
+                        e.ts_us, e.dur_us, outer.ts_us, outer.dur_us
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _l = TEST_LOCK.lock_ok();
+        let t = Tracer::new(16); // clamp floor
+        let guard = install(Arc::clone(&t));
+        for _ in 0..40 {
+            instant(Name::Pop);
+        }
+        drop(guard);
+        let m = t.metrics();
+        assert_eq!(m.events, 40);
+        assert_eq!(m.dropped, 24, "40 pushed into a 16-slot ring");
+        assert_eq!(t.collect().len(), 16);
+    }
+
+    #[test]
+    fn hot_path_is_allocation_free_after_warmup() {
+        let _l = TEST_LOCK.lock_ok();
+        // Mirror of the kernels' pack-pool assertion: the first event
+        // registers (allocates) this thread's ring; after that warmup,
+        // recording must be store-only however many events flow,
+        // including straight through overflow.
+        let t = Tracer::new(64);
+        let guard = install(Arc::clone(&t));
+        instant(Name::Execute); // warmup: ring registered + allocated
+        let rings = t.ring_count();
+        let allocs = t.ring_allocs();
+        assert_eq!((rings, allocs), (1, 1));
+        for _ in 0..3 {
+            for _ in 0..200 {
+                let _sp = span(Name::Step);
+            }
+            assert_eq!(t.ring_allocs(), allocs, "event hot path allocated");
+            assert_eq!(t.ring_count(), rings);
+        }
+        drop(guard);
+        assert!(t.metrics().dropped > 0, "overflow path was exercised");
+    }
+
+    #[test]
+    fn ctx_nests_and_restores() {
+        let _l = TEST_LOCK.lock_ok();
+        let t = Tracer::new(64);
+        let guard = install(Arc::clone(&t));
+        {
+            let _a = ctx(1, 0);
+            {
+                let _b = ctx(2, 1);
+                instant(Name::Retry);
+            }
+            instant(Name::Retry);
+        }
+        instant(Name::Retry);
+        drop(guard);
+        let ids: Vec<(u32, u32)> = t
+            .collect()
+            .iter()
+            .map(|(_, e)| (e.tenant, e.worker))
+            .collect();
+        assert_eq!(ids, vec![(2, 1), (1, 0), (NONE_ID, NONE_ID)]);
+    }
+
+    #[test]
+    fn second_install_rehomes_the_thread() {
+        let _l = TEST_LOCK.lock_ok();
+        let a = Tracer::new(64);
+        {
+            let _g = install(Arc::clone(&a));
+            instant(Name::Pop);
+        }
+        let b = Tracer::new(64);
+        {
+            let _g = install(Arc::clone(&b));
+            instant(Name::Pop);
+            instant(Name::Pop);
+        }
+        assert_eq!(a.metrics().events, 1);
+        assert_eq!(b.metrics().events, 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! Per-thread bounded event ring.
+//!
+//! Each recording thread owns exactly one [`Ring`]; the owning thread
+//! is the only writer, and the exporter only reads after the run's
+//! workers have quiesced, so the hot path never contends. Capacity is
+//! fixed at construction (`--trace-buf`): once full, a push overwrites
+//! the *oldest* event and bumps `dropped` — a long run degrades to "the
+//! most recent N events per thread" instead of growing without bound,
+//! and the dropped tally keeps the export honest about it
+//! (`lint_artifacts.py` cross-checks event counts against it).
+
+use super::Name;
+
+/// One recorded event, compact and `Copy`: interned name (the `Name`
+/// discriminant), start + duration in µs against the tracer clock, and
+/// the ambient tenant/worker ids (`u32::MAX` = none).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub name: Name,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tenant: u32,
+    pub worker: u32,
+}
+
+/// Fixed-capacity drop-oldest ring. Allocates exactly once (in
+/// [`Ring::new`]); `push` is store-only, which the no-alloc-after-
+/// warmup test asserts via [`Ring::allocs`].
+#[derive(Debug)]
+pub struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+    /// Allocations this ring has made — 1 forever, by construction.
+    allocs: u64,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Ring {
+        let cap = cap.max(1);
+        Ring {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+            allocs: 1,
+        }
+    }
+
+    /// Record one event; returns `true` iff an older event was
+    /// overwritten (dropped) to make room.
+    pub fn push(&mut self, e: Event) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+            return false;
+        }
+        if let Some(slot) = self.buf.get_mut(self.head) {
+            *slot = e;
+        }
+        self.head = (self.head + 1) % self.cap;
+        self.dropped += 1;
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Allocation count (the no-alloc hot-path assertion reads this;
+    /// it can only ever be 1).
+    pub fn allocs(&self) -> u64 {
+        debug_assert!(self.buf.capacity() == self.cap);
+        self.allocs
+    }
+
+    /// Retained events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        // head <= len always: it only advances once len == cap.
+        let (wrapped, tail) = self.buf.split_at(self.head.min(self.buf.len()));
+        tail.iter().chain(wrapped.iter())
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> Event {
+        Event {
+            name: Name::Step,
+            ts_us: i,
+            dur_us: 1,
+            tenant: u32::MAX,
+            worker: u32::MAX,
+        }
+    }
+
+    #[test]
+    fn fills_then_drops_oldest_counting_exactly() {
+        let mut r = Ring::new(4);
+        for i in 0..4 {
+            assert!(!r.push(ev(i)), "push {i} must not drop below cap");
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 0);
+        // Three more pushes: exactly three oldest events drop.
+        for i in 4..7 {
+            assert!(r.push(ev(i)), "push {i} must overwrite the oldest");
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 3);
+        let ts: Vec<u64> = r.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![3, 4, 5, 6], "oldest dropped, order kept");
+    }
+
+    #[test]
+    fn wraps_all_the_way_around() {
+        let mut r = Ring::new(3);
+        for i in 0..9 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.dropped(), 6);
+        let ts: Vec<u64> = r.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn push_never_reallocates() {
+        let mut r = Ring::new(8);
+        assert_eq!(r.allocs(), 1);
+        for i in 0..1000 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.allocs(), 1, "hot path must be store-only");
+        assert_eq!(r.capacity(), 8);
+        assert_eq!(r.len(), 8);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut r = Ring::new(0);
+        assert!(!r.push(ev(0)));
+        assert!(r.push(ev(1)));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+    }
+}

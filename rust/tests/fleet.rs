@@ -105,6 +105,8 @@ fn fake_report(workers: usize, tenants: usize, wall_s: f64) -> FleetReport {
         worker_stats: Vec::new(),
         engine: EngineStats::default(),
         faults: FleetFaults::default(),
+        metrics: asi::trace::metrics::Snapshot::default(),
+        trace: None,
     }
 }
 

@@ -774,3 +774,177 @@ fn failed_dispatch_keeps_records_of_its_completed_bursts() {
         "completed bursts of a failed dispatch must keep their records"
     );
 }
+
+// Traced e2e runs install a process-global tracer; serialize them so
+// concurrent tests can't cross-install (other tests recording a few
+// events into an active tracer is harmless — every coverage assertion
+// below is a lower bound — but two tracers must not race).
+static TRACE_E2E_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Parse-level checks every exported trace document must satisfy (the
+/// same invariants `tools/lint_artifacts.py` enforces on `trace.json`).
+fn assert_trace_doc_consistent(doc: &asi::util::json::Json,
+                               metrics: &asi::trace::metrics::Snapshot) {
+    let text = doc.to_string();
+    assert!(!text.contains("null"), "trace must not contain nulls");
+    let evs = doc.get("traceEvents").as_arr().unwrap();
+    assert_eq!(
+        evs.len() as u64,
+        metrics.events - metrics.dropped,
+        "retained events must equal recorded - dropped"
+    );
+    let cat_sum: u64 = metrics.cats.iter().map(|(_, n)| n).sum();
+    assert_eq!(cat_sum, metrics.events, "cats must partition events");
+    let mut last_ts = -1.0;
+    for e in evs {
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert_eq!(e.get("pid").as_f64(), Some(1.0));
+        assert!(e.get("tid").as_f64().is_some());
+        let ts = e.get("ts").as_f64().unwrap();
+        assert!(ts >= last_ts, "ts must be globally monotone");
+        last_ts = ts;
+        assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+        let cat = e.get("cat").as_str().unwrap();
+        assert!(
+            asi::trace::CATS.iter().any(|c| c.name() == cat),
+            "unknown category {cat}"
+        );
+    }
+}
+
+fn cat_count(m: &asi::trace::metrics::Snapshot, name: &str) -> u64 {
+    m.cats
+        .iter()
+        .find(|(k, _)| *k == name)
+        .map(|(_, n)| *n)
+        .unwrap_or(0)
+}
+
+#[test]
+fn traced_serve_is_bit_identical_and_covers_the_stack() {
+    // The tracer's contract: --trace observes the run without touching
+    // it. Same spec with and without tracing -> bit-identical tenant
+    // rows and final checkpoints, plus a schema-consistent trace that
+    // actually covers engine / trainer / scheduler / writer events.
+    let Some(dir) = artifacts() else { return };
+    let _l = TRACE_E2E_LOCK.lock().unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let ck_plain = std::env::temp_dir().join("asi_trace_plain_e2e");
+    let ck_traced = std::env::temp_dir().join("asi_trace_traced_e2e");
+    let _ = std::fs::remove_dir_all(&ck_plain);
+    let _ = std::fs::remove_dir_all(&ck_traced);
+    let base = ServeSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(3)
+        .workers(2)
+        .bursts(2)
+        .burst_steps(3)
+        .high_every(2)
+        .base_seed(13);
+
+    let plain = run_serve(
+        &engine,
+        &base.clone().checkpoint_dir(ck_plain.clone()),
+    )
+    .unwrap();
+    assert!(plain.trace.is_none(), "untraced run must not export");
+    assert_eq!(plain.metrics.events, 0, "untraced metrics stay zeroed");
+
+    let traced = run_serve(
+        &engine,
+        &base.clone().checkpoint_dir(ck_traced.clone()).trace(true),
+    )
+    .unwrap();
+    assert!(plain.failed.is_empty() && traced.failed.is_empty());
+
+    // Bit-identity: tracing changed nothing the report promises.
+    assert_eq!(plain.tenants.len(), traced.tenants.len());
+    for (p, t) in plain.tenants.iter().zip(&traced.tenants) {
+        assert_eq!(p.tenant, t.tenant);
+        assert_eq!(p.steps, t.steps);
+        assert_eq!(
+            p.final_loss.map(f32::to_bits),
+            t.final_loss.map(f32::to_bits),
+            "tenant {} loss diverged under tracing",
+            p.tenant
+        );
+        assert_eq!(p.accuracy.to_bits(), t.accuracy.to_bits());
+        let sub = format!("tenant-{:04}", p.tenant);
+        let a = Checkpoint::load(&ck_plain.join(&sub), "final").unwrap();
+        let b = Checkpoint::load(&ck_traced.join(&sub), "final").unwrap();
+        assert_eq!(a.step_idx, b.step_idx);
+        assert_tensors_bit_identical("trained", &a.trained, &b.trained);
+        assert_tensors_bit_identical("us", &a.us, &b.us);
+    }
+
+    // Coverage: the one traced run must have observed every layer.
+    let m = &traced.metrics;
+    assert!(m.events > 0);
+    for cat in ["engine", "trainer", "sched", "writer"] {
+        assert!(
+            cat_count(m, cat) > 0,
+            "no {cat} events recorded; metrics: {m:?}"
+        );
+    }
+    assert_trace_doc_consistent(traced.trace.as_ref().unwrap(), m);
+
+    // The export writes (and re-writes atomically) as trace.json.
+    assert!(traced.save_trace(&ck_traced).unwrap());
+    assert!(ck_traced.join("trace.json").exists());
+    assert!(!plain.save_trace(&ck_plain).unwrap());
+    assert!(!ck_plain.join("trace.json").exists());
+    let _ = std::fs::remove_dir_all(&ck_plain);
+    let _ = std::fs::remove_dir_all(&ck_traced);
+}
+
+#[test]
+fn traced_chaos_serve_is_bit_identical_and_records_faults() {
+    // Tracing composes with the fault layer: a traced chaos run keeps
+    // the storm's bit-identity guarantee (same seed -> same surviving
+    // rows as an untraced chaos run) and the trace records the `fault`
+    // category (injections, retries, backoffs).
+    let Some(dir) = artifacts() else { return };
+    let _l = TRACE_E2E_LOCK.lock().unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    const TENANTS: usize = 4;
+    let base = ServeSpec::new("mcunet", Method::asi(2, 4))
+        .tenants(TENANTS)
+        .workers(2)
+        .bursts(2)
+        .burst_steps(3)
+        .high_every(2)
+        .base_seed(11)
+        .chaos(9)
+        .retries(6)
+        .quarantine(4);
+
+    let plain = run_serve(&engine, &base).unwrap();
+    let traced = run_serve(&engine, &base.clone().trace(true)).unwrap();
+    assert!(traced.faults.total_injected() > 0, "storm never fired");
+
+    // The storm is deterministic, so the two runs shed (or kept) the
+    // same tenants — and survivors trained identically.
+    let ids = |rep: &asi::serve::ServeReport| -> Vec<usize> {
+        rep.tenants.iter().map(|t| t.tenant).collect()
+    };
+    assert_eq!(ids(&plain), ids(&traced));
+    assert_eq!(
+        plain.quarantined.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+        traced.quarantined.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+    );
+    for (p, t) in plain.tenants.iter().zip(&traced.tenants) {
+        assert_eq!(
+            p.final_loss.map(f32::to_bits),
+            t.final_loss.map(f32::to_bits),
+            "tenant {} loss diverged under tracing+chaos",
+            p.tenant
+        );
+        assert_eq!(p.accuracy.to_bits(), t.accuracy.to_bits());
+    }
+
+    let m = &traced.metrics;
+    assert!(
+        cat_count(m, "fault") > 0,
+        "chaos run must record fault events; metrics: {m:?}"
+    );
+    assert_trace_doc_consistent(traced.trace.as_ref().unwrap(), m);
+}

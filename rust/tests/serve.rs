@@ -287,7 +287,8 @@ fn cli_accepts_serve_flag_set() {
     let args = Args::parse_from(
         ["serve", "--tenants", "8", "--bursts", "4", "--burst-steps",
          "10", "--high-every", "4", "--aging", "8", "--fifo", "--quick",
-         "--chaos", "1", "--retries", "3", "--quarantine", "5"]
+         "--chaos", "1", "--retries", "3", "--quarantine", "5",
+         "--trace", "--trace-buf", "4096"]
             .map(String::from),
     );
     args.expect_known(
@@ -295,7 +296,7 @@ fn cli_accepts_serve_flag_set() {
         &["tenants", "workers", "bursts", "burst-steps", "high-every",
           "aging", "fifo", "model", "method", "depth", "rank", "lr",
           "seed", "quick", "ckpt", "out", "artifacts", "chaos",
-          "retries", "quarantine"],
+          "retries", "quarantine", "trace", "trace-buf"],
     )
     .unwrap();
     assert_eq!(args.get("bursts", "1"), "4");
@@ -303,6 +304,8 @@ fn cli_accepts_serve_flag_set() {
     assert_eq!(args.get("retries", "2"), "3");
     assert_eq!(args.get("quarantine", "3"), "5");
     assert!(args.has("fifo"));
+    assert!(args.has("trace"));
+    assert_eq!(args.get("trace-buf", "65536"), "4096");
 }
 
 #[test]

@@ -1,0 +1,16 @@
+//! Seeded-bad fixture: the `trace/clock.rs` exemption is for that one
+//! file only. A sibling under `trace/` reading the wall clock directly
+//! (instead of going through `trace::clock`) must still be flagged.
+
+use std::time::Instant;
+
+pub struct Event {
+    pub ts_us: u64,
+}
+
+/// Stamping events off a raw clock read bypasses the tracer's single
+/// time source — a determinism finding, not an exempt site.
+pub fn stamp_event() -> Event {
+    let t0 = Instant::now(); //~ ERROR determinism
+    Event { ts_us: t0.elapsed().as_micros() as u64 }
+}

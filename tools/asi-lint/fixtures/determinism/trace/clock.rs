@@ -1,0 +1,25 @@
+//! Exemption fixture: this file's stripped path ends with
+//! `trace/clock.rs`, the one trace-module file allowed to read the
+//! wall clock (it is the tracer's single time source, mirroring the
+//! `util/timer.rs` carve-out). Every `Instant::now` / `SystemTime`
+//! site below must produce ZERO determinism findings — no markers,
+//! no `// lint: allow` annotations.
+
+use std::time::{Duration, Instant};
+
+/// Monotonic origin for span timestamps.
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Clock {
+    pub fn start() -> Self {
+        Self { origin: Instant::now() }
+    }
+
+    /// Microseconds since the clock's origin.
+    pub fn now_us(&self) -> u64 {
+        let elapsed: Duration = Instant::now() - self.origin;
+        elapsed.as_micros() as u64
+    }
+}

@@ -574,7 +574,8 @@ pub fn determinism(src: &Source) -> Vec<Finding> {
     let mut findings = Vec::new();
     let toks = &src.file_toks;
     let n = toks.len();
-    let timer_file = src.rel.ends_with("util/timer.rs");
+    let timer_file = src.rel.ends_with("util/timer.rs")
+        || src.rel.ends_with("trace/clock.rs");
     // `use std::time::SystemTime;` names the type without reading the
     // clock — only expression sites are findings.
     let mut in_use = false;
@@ -604,10 +605,10 @@ pub fn determinism(src: &Source) -> Vec<Finding> {
                     toks[i].line,
                     "determinism",
                     format!(
-                        "`{what}` outside util::timer — wall-clock \
-                         reads are measurement-only; annotate the \
-                         site with `// lint: allow(measurement: \
-                         ...)` if this one is"
+                        "`{what}` outside util::timer / trace::clock \
+                         — wall-clock reads are measurement-only; \
+                         annotate the site with `// lint: \
+                         allow(measurement: ...)` if this one is"
                     ),
                 ));
             }

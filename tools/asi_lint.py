@@ -695,7 +695,7 @@ WALLCLOCK_RE = re.compile(r"\bInstant\s*::\s*now\b|\bSystemTime\b")
 RANDOM_RE = re.compile(
     r"\bthread_rng\b|\bfrom_entropy\b|\brand\s*::\s*random\b|"
     r"\bRandomState\s*::\s*new\b")
-TIMER_ALLOW_FILES = ("util/timer.rs",)
+TIMER_ALLOW_FILES = ("util/timer.rs", "trace/clock.rs")
 HASH_DECL_RE = re.compile(
     r"\b([a-z_][a-z0-9_]*)\s*:\s*&?\s*(?:mut\s+)?(?:std\s*::\s*collections\s*::\s*)?Hash(?:Map|Set)\s*<")
 HASH_BIND_RE = re.compile(
@@ -719,9 +719,9 @@ def pass_determinism(src):
             continue
         findings.append(Finding(
             src, ln, "determinism",
-            f"`{m.group(0)}` outside util::timer — wall-clock reads are "
-            "measurement-only; annotate the site with "
-            "`// lint: allow(measurement: ...)` if this one is",
+            f"`{m.group(0)}` outside util::timer / trace::clock — "
+            "wall-clock reads are measurement-only; annotate the site "
+            "with `// lint: allow(measurement: ...)` if this one is",
         ))
     for m in RANDOM_RE.finditer(src.stripped):
         ln = src.line(m.start())

@@ -35,6 +35,7 @@ NULL_OK = {
 DEFAULT_TARGETS = [
     "results/fleet.json",
     "results/serve.json",
+    "results/trace.json",
     "BENCH_*.json",
 ]
 
@@ -176,6 +177,121 @@ def check_fault_partition(path, doc):
     return errs
 
 
+# Span categories the tracer can emit (must track `Cat::name()` in
+# rust/src/trace/mod.rs).
+TRACE_CATS = {"engine", "trainer", "sched", "writer", "fleet", "fault"}
+
+
+def check_metrics_section(path, doc):
+    """serve.json / fleet.json carry an integral `metrics` section
+    (counters only — all zeros when the run was untraced) whose cats
+    must sum to the event total. Returns (errors, metrics-or-None)."""
+    if not isinstance(doc, dict):
+        return [], None
+    m = doc.get("metrics")
+    if not isinstance(m, dict):
+        return [f"{path}: missing top-level 'metrics' section"], None
+    errs = []
+    counts = {}
+    for key in ("events", "dropped"):
+        counts[key] = _int_or_none(m.get(key))
+        if counts[key] is None or counts[key] < 0:
+            errs.append(
+                f"{path}: metrics.{key} is not a non-negative integer"
+            )
+    cats = m.get("cats")
+    if not isinstance(cats, dict):
+        errs.append(f"{path}: metrics.cats is not an object")
+        return errs, None
+    total = 0
+    for k, v in cats.items():
+        if k not in TRACE_CATS:
+            errs.append(
+                f"{path}: metrics.cats has unknown category {k!r} "
+                f"(want a subset of {sorted(TRACE_CATS)})"
+            )
+        n = _int_or_none(v)
+        if n is None or n < 0:
+            errs.append(
+                f"{path}: metrics.cats.{k} is not a non-negative "
+                "integer"
+            )
+        else:
+            total += n
+    if not errs and total != counts["events"]:
+        errs.append(
+            f"{path}: metrics.cats sum to {total} but "
+            f"metrics.events is {counts['events']}"
+        )
+    if not errs and counts["dropped"] > counts["events"]:
+        errs.append(
+            f"{path}: metrics.dropped ({counts['dropped']}) exceeds "
+            f"metrics.events ({counts['events']})"
+        )
+    return errs, (m if not errs else None)
+
+
+# Per-event required fields of a Chrome trace-event row and the check
+# each value must pass.
+TRACE_EVENT_FIELDS = (
+    ("name", lambda v: isinstance(v, str) and v != ""),
+    ("cat", lambda v: v in TRACE_CATS),
+    ("ph", lambda v: v == "X"),
+    ("ts", lambda v: _int_or_none(v) is not None and v >= 0),
+    ("dur", lambda v: _int_or_none(v) is not None and v >= 0),
+    ("pid", lambda v: _int_or_none(v) == 1),
+    ("tid", lambda v: _int_or_none(v) is not None and v >= 0),
+)
+
+
+def check_trace_schema(path, doc):
+    """Schema checks for trace.json (Chrome trace-event object form):
+    a `traceEvents` array of complete (`ph: "X"`) events with known
+    categories, monotone non-negative timestamps, and an embedded
+    `metrics` section whose counters agree with the array — the
+    exporter's `len(traceEvents) == events - dropped` contract."""
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    errs, metrics = check_metrics_section(path, doc)
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list):
+        errs.append(f"{path}: missing 'traceEvents' array")
+        return errs
+    last_ts = 0
+    for i, e in enumerate(evs):
+        if not isinstance(e, dict):
+            errs.append(f"{path}: traceEvents[{i}] is not an object")
+            continue
+        for key, ok in TRACE_EVENT_FIELDS:
+            if key not in e:
+                errs.append(
+                    f"{path}: traceEvents[{i}] has no '{key}' field"
+                )
+            elif not ok(e[key]):
+                errs.append(
+                    f"{path}: traceEvents[{i}].{key} is invalid: "
+                    f"{e[key]!r}"
+                )
+        ts = _int_or_none(e.get("ts"))
+        if ts is not None:
+            if ts < last_ts:
+                errs.append(
+                    f"{path}: traceEvents[{i}].ts went backwards "
+                    f"({ts} after {last_ts}) — events must be "
+                    "sorted by timestamp"
+                )
+            last_ts = max(last_ts, ts)
+    if metrics is not None:
+        want = _int_or_none(metrics.get("events")) \
+            - _int_or_none(metrics.get("dropped"))
+        if len(evs) != want:
+            errs.append(
+                f"{path}: traceEvents has {len(evs)} row(s) but "
+                f"metrics says events - dropped = {want}"
+            )
+    return errs
+
+
 # Microkernel families the GEMM dispatch layer can report (must track
 # `dispatch_name()` in rust/src/tensor/kernels/mod.rs).
 DISPATCH_NAMES = {"avx2+fma", "neon", "scalar"}
@@ -214,6 +330,9 @@ def lint(path):
     if os.path.basename(path) in FAULTED_REPORTS:
         errs.extend(check_fault_schema(path, doc))
         errs.extend(check_fault_partition(path, doc))
+        errs.extend(check_metrics_section(path, doc)[0])
+    if os.path.basename(path) == "trace.json":
+        errs.extend(check_trace_schema(path, doc))
     if os.path.basename(path) == "BENCH_tensor_ops.json":
         errs.extend(check_tensor_ops_schema(path, doc))
     return errs
