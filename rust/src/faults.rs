@@ -198,7 +198,6 @@ impl FaultPlan {
     /// One injection decision at `b` (advances the boundary's call
     /// counter; counts the injection if it fires).
     pub fn decide(&self, b: Boundary) -> bool {
-        // lint: allow(bounds: Boundary::idx() < NB by construction)
         let i = b.idx();
         // lint: allow(bounds: i < NB, see above)
         let n = self.calls[i].fetch_add(1, Ordering::Relaxed);

@@ -36,19 +36,22 @@ impl StateGauge {
         StateGauge::default()
     }
 
-    /// Charge `bytes` while a tenant's state is live.
+    /// Charge `bytes` while a tenant's state is live. The gauge is a
+    /// pair of independent monotone counters read only after the pool
+    /// joins; no other memory is published through it, so Relaxed is
+    /// the whole story (atomics-policy pass).
     pub fn acquire(&self, bytes: u64) {
-        let now = self.current.fetch_add(bytes, Ordering::SeqCst) + bytes;
-        self.peak.fetch_max(now, Ordering::SeqCst);
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
     }
 
     /// Return a tenant's charge when its state is dropped.
     pub fn release(&self, bytes: u64) {
-        self.current.fetch_sub(bytes, Ordering::SeqCst);
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
     }
 
     pub fn peak_bytes(&self) -> u64 {
-        self.peak.load(Ordering::SeqCst)
+        self.peak.load(Ordering::Relaxed)
     }
 
     /// RAII variant of acquire/release: the charge is returned on drop

@@ -21,7 +21,7 @@ pub mod experiments;
 // The serve/fleet/runtime/faults stack is panic-free by contract: a
 // tenant failure is a report row, never an abort (asi-lint pass 3
 // checks the same property tool-side; `tools/asi_lint.py`). Sanctioned
-// exceptions carry a fn-level `#[allow]` plus a `// lint: allow(..)`
+// exceptions carry a fn-level `#[allow]` plus a `lint: allow`
 // comment stating the invariant.
 #[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod faults;

@@ -241,6 +241,7 @@ where
     F: Fn(&TaskCtx, T) -> Outcome<T> + Sync,
 {
     if initial.is_empty() {
+        // lint: allow(hotpath: Vec::new is capacity-0; it never touches the heap)
         return Vec::new();
     }
     let workers = workers.clamp(1, initial.len());
@@ -254,6 +255,7 @@ where
     let cv = Condvar::new();
     let stats: Vec<Mutex<WorkerStats>> = (0..workers)
         .map(|w| Mutex::new(WorkerStats { worker: w, ..Default::default() }))
+        // lint: allow(warmup: per-worker stats slots built once, before any worker starts)
         .collect();
 
     std::thread::scope(|s| {
@@ -263,6 +265,7 @@ where
             let stats = &stats;
             let f = &f;
             let label = &label;
+            // lint: allow(warmup: one scoped worker spawned per slot at pool startup, never per task)
             s.spawn(move || {
                 let mut guard = state.lock_ok();
                 loop {
@@ -314,6 +317,7 @@ where
                         Err(payload) => {
                             let msg = payload
                                 .downcast_ref::<&str>()
+                                // lint: allow(hotpath: panic recovery path — a worker just died; allocation is the least of it)
                                 .map(|s| s.to_string())
                                 .or_else(|| {
                                     payload
@@ -321,6 +325,7 @@ where
                                         .cloned()
                                 })
                                 .unwrap_or_else(|| {
+                                    // lint: allow(hotpath: panic recovery path — a worker just died; allocation is the least of it)
                                     "non-string panic payload".to_string()
                                 });
                             // lint: allow(bounds: w < stats.len())
@@ -339,6 +344,7 @@ where
         }
     });
 
+    // lint: allow(hotpath: teardown — the scope has joined; stats collection is after the hot loop)
     stats.into_iter().map(into_inner_ok).collect()
 }
 

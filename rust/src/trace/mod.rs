@@ -255,6 +255,7 @@ impl Tracer {
 
     /// Register the calling thread's ring (once per thread per install).
     fn register_ring(&self) -> Arc<Mutex<Ring>> {
+        // lint: allow(warmup: one ring per thread, built on that thread's first record; steady-state records only index into it)
         let r = Arc::new(Mutex::new(Ring::new(self.cap)));
         let mut rings = self.rings.lock_ok();
         rings.push(Arc::clone(&r));

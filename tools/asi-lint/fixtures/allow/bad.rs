@@ -1,0 +1,7 @@
+//! allow-hygiene fixture: an empty-reason allow is itself a finding —
+//! and it bypasses its own suppression.
+
+pub fn helper(n: usize) -> Vec<f32> {
+    // lint: allow() //~ ERROR allow
+    vec![0.0; n]
+}

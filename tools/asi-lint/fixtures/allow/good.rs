@@ -1,0 +1,6 @@
+//! allow-hygiene fixture: a reasoned allow names its invariant.
+
+pub fn helper(n: usize) -> Vec<f32> {
+    // lint: allow(warmup: fixture buffer built once, reused by the caller)
+    vec![0.0; n]
+}

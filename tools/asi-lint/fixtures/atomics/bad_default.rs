@@ -1,0 +1,15 @@
+//! atomics-policy fixture: outside trace/ and serve/ the default
+//! policy is Relaxed-only; SeqCst always needs a reasoned allow.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static EPOCH: AtomicUsize = AtomicUsize::new(0);
+
+pub fn advance() {
+    EPOCH.fetch_add(1, Ordering::AcqRel); //~ ERROR atomics-policy
+}
+
+pub fn audited_sample() -> usize {
+    // lint: allow(ordering: audit read must see every prior epoch bump — documented exception)
+    EPOCH.load(Ordering::SeqCst)
+}

@@ -1,0 +1,14 @@
+//! atomics-policy fixture: serve/ owns cross-thread handoff, so an
+//! Acquire/Release publish pair is within policy.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static READY: AtomicBool = AtomicBool::new(false);
+
+pub fn publish() {
+    READY.store(true, Ordering::Release);
+}
+
+pub fn is_ready() -> bool {
+    READY.load(Ordering::Acquire)
+}

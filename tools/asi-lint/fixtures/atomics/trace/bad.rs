@@ -1,0 +1,20 @@
+//! atomics-policy fixture: trace/ counters stay Relaxed, so SeqCst
+//! and Release both violate; the load-then-store pair in `bump` is a
+//! torn read-modify-write even at an allowed ordering.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+pub fn count() -> u64 {
+    DROPPED.load(Ordering::SeqCst) //~ ERROR atomics-policy
+}
+
+pub fn publish(n: u64) {
+    DROPPED.store(n, Ordering::Release); //~ ERROR atomics-policy
+}
+
+pub fn bump() {
+    let n = DROPPED.load(Ordering::Relaxed);
+    DROPPED.store(n + 1, Ordering::Relaxed); //~ ERROR atomics-policy
+}

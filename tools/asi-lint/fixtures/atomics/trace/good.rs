@@ -1,0 +1,14 @@
+//! atomics-policy fixture: Relaxed counters with atomic RMW are the
+//! sanctioned shape for trace/.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static RECORDS: AtomicU64 = AtomicU64::new(0);
+
+pub fn bump() {
+    RECORDS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn count() -> u64 {
+    RECORDS.load(Ordering::Relaxed)
+}

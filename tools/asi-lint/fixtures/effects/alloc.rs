@@ -1,0 +1,21 @@
+//! Effect-engine parity fixture: allocation propagation and the
+//! allow-certification cut. Analyzed as one crate with the other
+//! effects fixtures; `--dump-effects` over it must match
+//! expected_effects.txt in both drivers.
+
+pub fn alloc_leaf(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}
+
+pub fn alloc_mid(n: usize) -> Vec<f32> {
+    alloc_leaf(n)
+}
+
+pub fn certified_mid(n: usize) -> Vec<f32> {
+    // lint: allow(warmup: certified call — the allocation taint stops here)
+    alloc_leaf(n)
+}
+
+pub fn clean_top(n: usize) -> usize {
+    certified_mid(n).len()
+}

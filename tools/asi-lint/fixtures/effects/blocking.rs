@@ -1,0 +1,10 @@
+//! Effect-engine parity fixture: blocks/panics propagate through the
+//! raw call-edge set (allows never cut them).
+
+pub fn block_leaf(rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    rx.recv().unwrap()
+}
+
+pub fn panic_top(rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    block_leaf(rx) + 1
+}

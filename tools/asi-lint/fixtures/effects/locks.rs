@@ -1,0 +1,19 @@
+//! Effect-engine parity fixture: self-rooted lock acquisitions and
+//! wall-clock reads, carried transitively.
+
+pub struct Gate {
+    inner: std::sync::Mutex<u64>,
+}
+
+impl Gate {
+    pub fn tick(&self) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        *g += 1;
+        *g
+    }
+
+    pub fn timed_tick(&self) -> u64 {
+        let _t = std::time::Instant::now();
+        self.tick()
+    }
+}

@@ -1,0 +1,26 @@
+//! hotpath-alloc fixture, transitive case: `mk_buf` is not hot, but
+//! the effect engine carries its allocation into `step`'s call site.
+//! `run_burst` shows an allow certifying the call instead.
+
+fn mk_buf(n: usize) -> Vec<f32> {
+    vec![0.0; n]
+}
+
+fn total(buf: &[f32]) -> f32 {
+    let mut s = 0.0;
+    for v in buf {
+        s += *v;
+    }
+    s
+}
+
+pub fn step(n: usize) -> f32 {
+    let buf = mk_buf(n); //~ ERROR hotpath-alloc
+    total(&buf)
+}
+
+pub fn run_burst(n: usize) -> f32 {
+    // lint: allow(warmup: first-burst buffer growth, pooled thereafter)
+    let buf = mk_buf(n);
+    total(&buf)
+}

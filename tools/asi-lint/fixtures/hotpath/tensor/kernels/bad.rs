@@ -1,0 +1,16 @@
+//! hotpath-alloc fixture: everything under tensor/kernels/ is a
+//! designated hot region, so every direct allocation form must fire.
+
+pub fn pack_panel(b: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(b.len()); //~ ERROR hotpath-alloc
+    out.extend_from_slice(b);
+    out
+}
+
+pub fn row_copy(b: &[f32]) -> Vec<f32> {
+    b.to_vec() //~ ERROR hotpath-alloc
+}
+
+pub fn zeros(n: usize) -> Vec<f32> {
+    vec![0.0; n] //~ ERROR hotpath-alloc
+}

@@ -1,0 +1,13 @@
+//! hotpath-alloc fixture: in-place work is fine, and a warmup-only
+//! allocation under a reasoned allow is certified, not reported.
+
+pub fn scale(buf: &mut [f32], s: f32) {
+    for v in buf.iter_mut() {
+        *v *= s;
+    }
+}
+
+pub fn warm_panel(n: usize) -> Vec<f32> {
+    // lint: allow(warmup: one-time panel buffer, pooled thereafter)
+    vec![0.0; n]
+}

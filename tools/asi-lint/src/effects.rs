@@ -1,0 +1,408 @@
+//! The shared interprocedural effect engine, ported token-for-token
+//! from `tools/asi_lint.py`. One pass over every function infers a
+//! per-function [`Effects`] summary — `allocates`, `blocks` (send/
+//! recv/sleep/join), `panics`, `wall_clock`, and the set of
+//! `self.`-rooted lock cells it acquires — then a componentwise
+//! monotone fixpoint over the crate call graph folds callee summaries
+//! in. The lock pass consumes the `locks` component (replacing its
+//! old private summary builder), the hotpath-alloc pass consumes
+//! `allocates`, and `--dump-effects` renders the whole table as the
+//! cross-driver parity golden.
+//!
+//! Scope limits that keep the over-approximation honest: only
+//! *uniquely named* functions get a summary (without type-based
+//! method resolution, every `new` in the crate would collapse into
+//! one), and for locks only `self.`-rooted cells propagate (a local
+//! guard variable's name means nothing in another function). An
+//! allocation site under `// lint: allow(...)` is certified
+//! warmup-only and does not set `allocates` — callers of
+//! `Workspace::take` must not re-certify the pool-miss path. The
+//! `allocates` component propagates only through calls on
+//! non-allowed lines (`alloc_calls`), so one allow certifies a whole
+//! statement; the other components propagate through the raw edge
+//! set — an allow on a lock acquisition documents a finding, it does
+//! not change what callers must know.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+use crate::passes::{is_acquire, is_ident, receiver_root};
+use crate::{Source, Tok};
+
+/// Types whose `::new` / `::with_capacity` / `::from` constructors
+/// heap-allocate. Arc/Rc allocate on construction but their
+/// `.clone()` is a refcount bump, so `HEAP_CLONE_TYPES` (the
+/// `.clone()`-is-an-allocation set) excludes them.
+pub const ALLOC_TYPES: [&str; 10] = [
+    "Vec", "VecDeque", "Box", "String", "HashMap", "HashSet",
+    "BTreeMap", "BTreeSet", "Arc", "Rc",
+];
+pub const HEAP_CLONE_TYPES: [&str; 8] = [
+    "Vec", "VecDeque", "Box", "String", "HashMap", "HashSet",
+    "BTreeMap", "BTreeSet",
+];
+pub const ALLOC_ASSOC_FNS: [&str; 3] = ["new", "with_capacity", "from"];
+pub const ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+pub const ALLOC_METHODS: [&str; 4] =
+    ["to_vec", "to_string", "to_owned", "collect"];
+const BLOCK_METHODS: [&str; 6] =
+    ["send", "recv", "recv_timeout", "join", "wait", "wait_timeout"];
+const PANIC_MACROS: [&str; 7] = [
+    "panic", "unreachable", "todo", "unimplemented", "assert",
+    "assert_eq", "assert_ne",
+];
+const PANIC_METHODS: [&str; 2] = ["unwrap", "expect"];
+
+/// One function's effect summary. Boolean components OR under merge;
+/// `locks` unions — the lattice join is componentwise.
+#[derive(Debug, Clone, Default)]
+pub struct Effects {
+    pub allocates: bool,
+    pub blocks: bool,
+    pub panics: bool,
+    pub wall_clock: bool,
+    pub locks: BTreeSet<String>,
+}
+
+impl Effects {
+    pub fn merge(&mut self, other: &Effects) -> bool {
+        let before = (
+            self.allocates,
+            self.blocks,
+            self.panics,
+            self.wall_clock,
+            self.locks.len(),
+        );
+        self.allocates |= other.allocates;
+        self.blocks |= other.blocks;
+        self.panics |= other.panics;
+        self.wall_clock |= other.wall_clock;
+        self.locks.extend(other.locks.iter().cloned());
+        before
+            != (
+                self.allocates,
+                self.blocks,
+                self.panics,
+                self.wall_clock,
+                self.locks.len(),
+            )
+    }
+}
+
+fn text(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map_or("", |t| t.text.as_str())
+}
+
+/// `toks[i]` is `<`; return the index just past its matching `>`.
+pub fn skip_generics(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0i32;
+    let n = toks.len();
+    while i < n {
+        match toks[i].text.as_str() {
+            "<" => depth += 1,
+            ">" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    n
+}
+
+/// Direct heap-allocation sites in a token stream: `(line, what)`
+/// pairs. `heap_vars` gates the `.clone()` rule — only a clone whose
+/// receiver chain is rooted at a known heap-typed local is an
+/// allocation (field receivers are not tracked; documented limit).
+pub fn direct_allocs(
+    toks: &[Tok],
+    heap_vars: &HashSet<String>,
+) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        let ln = toks[i].line;
+        let nxt = text(toks, i + 1);
+        let prv = if i > 0 { text(toks, i - 1) } else { "" };
+        if ALLOC_TYPES.contains(&t) && nxt == "::" {
+            let mut j = i + 2;
+            if text(toks, j) == "<" {
+                j = skip_generics(toks, j); // Vec::<f32>::new
+                if text(toks, j) == "::" {
+                    j += 1;
+                }
+            }
+            if ALLOC_ASSOC_FNS.contains(&text(toks, j))
+                && text(toks, j + 1) == "("
+            {
+                out.push((ln, format!("{t}::{}", toks[j].text)));
+            }
+        } else if ALLOC_MACROS.contains(&t) && nxt == "!" {
+            out.push((ln, format!("{t}!")));
+        } else if ALLOC_METHODS.contains(&t) && prv == "." {
+            let mut j = i + 1;
+            if text(toks, j) == "::" && text(toks, j + 1) == "<" {
+                j = skip_generics(toks, j + 1); // .collect::<Vec<_>>()
+            }
+            if text(toks, j) == "(" {
+                out.push((ln, format!(".{t}()")));
+            }
+        } else if t == "clone" && prv == "." && nxt == "(" {
+            if let Some(root) = receiver_root(toks, i) {
+                let head = root.split('.').next().unwrap_or("");
+                if heap_vars.contains(head) {
+                    out.push((ln, ".clone()".to_string()));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Locals/params whose type (or initializer) is a known heap
+/// container: `name: [&]['a ][mut ]Vec<..>` ascriptions plus
+/// `let [mut] name = <rhs with allocation evidence>` bindings.
+pub fn collect_heap_vars(toks: &[Tok]) -> HashSet<String> {
+    let mut heap: HashSet<String> = HashSet::new();
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        if is_ident(t) && i + 2 < n && text(toks, i + 1) == ":" {
+            let mut j = i + 2;
+            while j < n {
+                match toks[j].text.as_str() {
+                    "&" | "mut" => j += 1,
+                    "'" => j += 2, // lifetime: quote + name
+                    _ => break,
+                }
+            }
+            if j < n && HEAP_CLONE_TYPES.contains(&toks[j].text.as_str())
+            {
+                heap.insert(t.to_string());
+            }
+        }
+        if t == "let" {
+            let mut j = i + 1;
+            if j < n && toks[j].text == "mut" {
+                j += 1;
+            }
+            if !(j < n && is_ident(&toks[j].text)) {
+                continue;
+            }
+            let name = toks[j].text.clone();
+            let mut k = j + 1;
+            while k < n && toks[k].text != "=" && toks[k].text != ";" {
+                k += 1;
+            }
+            if !(k < n && toks[k].text == "=") {
+                continue;
+            }
+            let mut d = 0i32;
+            let mut m = k + 1;
+            while m < n {
+                let tm = toks[m].text.as_str();
+                match tm {
+                    "(" | "[" | "{" => d += 1,
+                    ")" | "]" | "}" => d -= 1,
+                    ";" if d <= 0 => break,
+                    _ => {}
+                }
+                let nx = text(toks, m + 1);
+                let pv = if m > 0 { text(toks, m - 1) } else { "" };
+                let cloned_heap = tm == "clone" && pv == "." && {
+                    receiver_root(toks, m).is_some_and(|r| {
+                        heap.contains(
+                            r.split('.').next().unwrap_or(""),
+                        )
+                    })
+                };
+                if (ALLOC_TYPES.contains(&tm) && nx == "::")
+                    || (ALLOC_MACROS.contains(&tm) && nx == "!")
+                    || (ALLOC_METHODS.contains(&tm) && pv == ".")
+                    || cloned_heap
+                {
+                    heap.insert(name.clone());
+                    break;
+                }
+                m += 1;
+            }
+        }
+    }
+    heap
+}
+
+/// One scan of a function: its locally-inferred Effects plus two
+/// callee-name sets — `calls` (every identifier applied with `(` that
+/// is not a guard acquisition; the same edge set the old lock
+/// summaries used) and `alloc_calls` (the subset made on lines *not*
+/// under an allow-comment). The allocates component propagates only
+/// through alloc_calls, so an allow certifies a whole statement —
+/// `Arc::new(Mutex::new(Ring::new(..)))` under one allow taints
+/// nothing.
+pub fn local_effects(
+    src: &Source,
+    toks: &[Tok],
+) -> (Effects, BTreeSet<String>, BTreeSet<String>) {
+    let mut eff = Effects::default();
+    let mut calls = BTreeSet::new();
+    let mut alloc_calls = BTreeSet::new();
+    let heap_vars = collect_heap_vars(toks);
+    for (ln, _what) in direct_allocs(toks, &heap_vars) {
+        if !src.allowed(ln) {
+            eff.allocates = true;
+            break;
+        }
+    }
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].text.as_str();
+        let ln = toks[i].line;
+        let nxt = text(toks, i + 1);
+        let prv = if i > 0 { text(toks, i - 1) } else { "" };
+        if is_acquire(toks, i) {
+            if let Some(root) = receiver_root(toks, i) {
+                if root.starts_with("self.") {
+                    eff.locks.insert(root);
+                }
+            }
+            continue;
+        }
+        if BLOCK_METHODS.contains(&t) && nxt == "(" && prv == "." {
+            eff.blocks = true;
+        } else if t == "sleep" && nxt == "(" {
+            eff.blocks = true;
+        } else if PANIC_MACROS.contains(&t) && nxt == "!" {
+            eff.panics = true;
+        } else if PANIC_METHODS.contains(&t) && nxt == "(" && prv == "."
+        {
+            eff.panics = true;
+        } else if t == "Instant" && nxt == "::" && text(toks, i + 2) == "now"
+        {
+            eff.wall_clock = true;
+        } else if t == "SystemTime" {
+            eff.wall_clock = true;
+        }
+        if is_ident(t) && nxt == "(" && !crate::passes::is_acquire_name(t)
+        {
+            calls.insert(t.to_string());
+            if !src.allowed(ln) {
+                alloc_calls.insert(t.to_string());
+            }
+        }
+    }
+    (eff, calls, alloc_calls)
+}
+
+/// fn name -> Effects for every uniquely named function, local
+/// inference merged with callee summaries to fixpoint. The join is
+/// monotone and componentwise, so the fixpoint is order-independent —
+/// this table must match the Python driver's `--dump-effects`
+/// byte-for-byte. `allocates` propagates through the allow-filtered
+/// edge set; the other components through the raw one.
+pub fn build_effect_summaries(
+    sources: &[Source],
+) -> HashMap<String, Effects> {
+    let mut local: HashMap<String, Effects> = HashMap::new();
+    let mut calls: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut alloc_calls: HashMap<String, BTreeSet<String>> =
+        HashMap::new();
+    let mut def_count: HashMap<String, usize> = HashMap::new();
+    for src in sources {
+        for f in &src.fns {
+            *def_count.entry(f.name.clone()).or_insert(0) += 1;
+            let (eff, callees, acallees) =
+                local_effects(src, &f.body_toks);
+            local.entry(f.name.clone()).or_default().merge(&eff);
+            calls.entry(f.name.clone()).or_default().extend(callees);
+            alloc_calls
+                .entry(f.name.clone())
+                .or_default()
+                .extend(acallees);
+        }
+    }
+    let unique: HashSet<&String> = def_count
+        .iter()
+        .filter(|&(_, &c)| c == 1)
+        .map(|(n, _)| n)
+        .collect();
+    let mut summaries: HashMap<String, Effects> = HashMap::new();
+    for name in &unique {
+        summaries.insert((*name).clone(), local[*name].clone());
+    }
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (name, callees) in &calls {
+            if !summaries.contains_key(name) {
+                continue;
+            }
+            for c in callees {
+                if c == name {
+                    continue;
+                }
+                let Some(o) = summaries.get(c).cloned() else {
+                    continue;
+                };
+                let alloc_edge = alloc_calls
+                    .get(name)
+                    .is_some_and(|s| s.contains(c));
+                let cur = summaries
+                    .get_mut(name)
+                    .expect("present: checked above");
+                if o.blocks && !cur.blocks {
+                    cur.blocks = true;
+                    changed = true;
+                }
+                if o.panics && !cur.panics {
+                    cur.panics = true;
+                    changed = true;
+                }
+                if o.wall_clock && !cur.wall_clock {
+                    cur.wall_clock = true;
+                    changed = true;
+                }
+                if !o.locks.is_subset(&cur.locks) {
+                    cur.locks.extend(o.locks.iter().cloned());
+                    changed = true;
+                }
+                if o.allocates && !cur.allocates && alloc_edge {
+                    cur.allocates = true;
+                    changed = true;
+                }
+            }
+        }
+    }
+    summaries
+}
+
+/// Stable one-line-per-function rendering — the parity golden shared
+/// with the Python driver's `--dump-effects`.
+pub fn dump_effects(summaries: &HashMap<String, Effects>) -> Vec<String> {
+    let mut names: Vec<&String> = summaries.keys().collect();
+    names.sort();
+    names
+        .iter()
+        .map(|name| {
+            let e = &summaries[*name];
+            let locks = if e.locks.is_empty() {
+                "-".to_string()
+            } else {
+                e.locks
+                    .iter()
+                    .map(String::as_str)
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            format!(
+                "{name}: alloc={} block={} panic={} wall={} locks={locks}",
+                e.allocates as u8,
+                e.blocks as u8,
+                e.panics as u8,
+                e.wall_clock as u8
+            )
+        })
+        .collect()
+}

@@ -26,10 +26,11 @@
 //! finding line (or alone on the line above) suppresses a site;
 //! fixture files mark expected findings with `//~ ERROR <pass>`.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use proc_macro2::{Delimiter, TokenStream, TokenTree};
 
+pub mod effects;
 pub mod passes;
 
 /// One flattened token: text plus 1-based source line. Delimiters
@@ -141,6 +142,10 @@ pub struct Source {
     /// Line -> reason for `// lint: allow(reason)`. A lone
     /// allow-comment line also registers the next line.
     pub allows: BTreeMap<usize, String>,
+    /// One entry per allow comment: origin line, the lines it covers,
+    /// and its reason — the unit `--list-allows` / `--check-allows`
+    /// and the allow-hygiene pass work over.
+    pub allow_spans: Vec<AllowSpan>,
     /// Line -> pass name for fixture `//~ ERROR <pass>` markers.
     pub markers: BTreeMap<usize, String>,
     /// Lines whose `//` comment carries a safety contract
@@ -183,7 +188,7 @@ impl Source {
                 }
             })
             .collect();
-        let (allows, markers) = scan_comments(text);
+        let (allows, markers, allow_spans) = scan_comments(text);
         let mut safety_lines = std::collections::BTreeSet::new();
         let mut bridge_lines = std::collections::BTreeSet::new();
         for (idx, raw) in text.lines().enumerate() {
@@ -204,6 +209,7 @@ impl Source {
             file_toks,
             fns,
             allows,
+            allow_spans,
             markers,
             safety_lines,
             bridge_lines,
@@ -220,6 +226,16 @@ impl Source {
             .iter()
             .any(|&(a, b)| a <= line && line <= b)
     }
+}
+
+/// One `// lint: allow(reason)` comment: where it sits, which lines
+/// it suppresses (its own, plus the next when it stands alone), and
+/// the reason text inside the parens.
+#[derive(Debug, Clone)]
+pub struct AllowSpan {
+    pub origin: usize,
+    pub covered: Vec<usize>,
+    pub reason: String,
 }
 
 /// `file:line: [pass] message`.
@@ -247,9 +263,11 @@ impl std::fmt::Display for Finding {
 /// `lint: allow(` inside one does not occur in practice).
 fn scan_comments(
     text: &str,
-) -> (BTreeMap<usize, String>, BTreeMap<usize, String>) {
+) -> (BTreeMap<usize, String>, BTreeMap<usize, String>, Vec<AllowSpan>)
+{
     let mut allows = BTreeMap::new();
     let mut markers = BTreeMap::new();
+    let mut spans = Vec::new();
     for (idx, raw) in text.lines().enumerate() {
         let ln = idx + 1;
         let Some(rest) = comment_tail(raw) else {
@@ -258,15 +276,22 @@ fn scan_comments(
         let lone = raw.trim_start().starts_with("//");
         if let Some(reason) = parse_allow(rest) {
             allows.insert(ln, reason.clone());
+            let mut covered = vec![ln];
             if lone {
-                allows.insert(ln + 1, reason);
+                allows.insert(ln + 1, reason.clone());
+                covered.push(ln + 1);
             }
+            spans.push(AllowSpan {
+                origin: ln,
+                covered,
+                reason,
+            });
         }
         if let Some(pass) = parse_marker(rest) {
             markers.insert(ln, pass);
         }
     }
-    (allows, markers)
+    (allows, markers, spans)
 }
 
 /// Text after the first `//` that is outside a string/char literal,
@@ -336,7 +361,9 @@ fn parse_marker(comment: &str) -> Option<String> {
     let word: String = rest
         .trim_start()
         .chars()
-        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .take_while(|c| {
+            c.is_ascii_alphanumeric() || *c == '_' || *c == '-'
+        })
         .collect();
     if word.is_empty() {
         None
@@ -345,19 +372,26 @@ fn parse_marker(comment: &str) -> Option<String> {
     }
 }
 
-/// Run all five passes over a set of sources (one analysis group:
-/// interprocedural lock summaries and the raw-float-field
-/// classification are computed across the whole group), filter
-/// allow-listed and test-region findings, dedupe by
-/// `(file, line, pass)`, and sort.
-pub fn run_passes(sources: &[Source]) -> Vec<Finding> {
-    let summaries = passes::build_lock_summaries(sources);
+/// Run every pass over a set of sources (one analysis group: the
+/// effect summaries and the raw-float-field classification are
+/// computed across the whole group), dedupe by `(file, line, pass)`,
+/// and apply the central allow/test-region filter. Returns
+/// `(findings, suppressed)`: suppressed holds the findings an
+/// allow-comment absorbed (`check_allows` uses them to spot stale
+/// allows). Passes emit raw findings; only this function filters —
+/// except `allow`-pass findings, which bypass both filters (an empty
+/// reason must not suppress its own report).
+pub fn run_passes(sources: &[Source]) -> (Vec<Finding>, Vec<Finding>) {
+    let summaries = effects::build_effect_summaries(sources);
     let fn_names: HashSet<String> = sources
         .iter()
         .flat_map(|s| s.fns.iter().map(|f| f.name.clone()))
         .collect();
     let raw_fields = passes::collect_raw_float_fields(sources);
-    let mut out = Vec::new();
+    let mut seen: HashSet<(String, usize, &'static str)> =
+        HashSet::new();
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
     for src in sources {
         let mut fs = Vec::new();
         fs.extend(passes::lock(src, &summaries, &fn_names));
@@ -365,16 +399,84 @@ pub fn run_passes(sources: &[Source]) -> Vec<Finding> {
         fs.extend(passes::panic_hygiene(src));
         fs.extend(passes::schema(src, &raw_fields));
         fs.extend(passes::unsafe_discipline(src));
-        fs.retain(|f| !src.allowed(f.line) && !src.in_tests(f.line));
-        out.extend(fs);
+        fs.extend(passes::hotpath(src, &summaries, &fn_names));
+        fs.extend(passes::atomics(src));
+        fs.extend(passes::allow_hygiene(src));
+        for f in fs {
+            if !seen.insert((f.rel.clone(), f.line, f.pass)) {
+                continue;
+            }
+            if f.pass == "allow" {
+                findings.push(f);
+                continue;
+            }
+            if src.in_tests(f.line) {
+                continue;
+            }
+            if src.allowed(f.line) {
+                suppressed.push(f);
+                continue;
+            }
+            findings.push(f);
+        }
     }
-    out.sort_by(|a, b| {
-        (&a.rel, a.line, a.pass).cmp(&(&b.rel, b.line, b.pass))
-    });
-    out.dedup_by(|a, b| {
-        a.rel == b.rel && a.line == b.line && a.pass == b.pass
-    });
-    out
+    let key = |f: &Finding| (f.rel.clone(), f.line, f.pass);
+    findings.sort_by_key(key);
+    suppressed.sort_by_key(key);
+    (findings, suppressed)
+}
+
+/// Lines holding a direct heap-allocation site: an allow covering one
+/// certifies the site for the effect engine (`allocates` does not
+/// taint callers) even when the file/function is not a hot region, so
+/// `check_allows` counts it as used.
+pub fn alloc_cert_lines(src: &Source) -> BTreeSet<usize> {
+    let mut lines = BTreeSet::new();
+    for f in &src.fns {
+        let heap_vars = effects::collect_heap_vars(&f.body_toks);
+        for (ln, _what) in
+            effects::direct_allocs(&f.body_toks, &heap_vars)
+        {
+            lines.insert(ln);
+        }
+    }
+    lines
+}
+
+/// Stale-allow audit: every allow span must either absorb at least
+/// one finding or certify an allocation site for the effect engine
+/// (test regions are exempt from linting entirely, so an allow inside
+/// one is stale by definition). Returns problem lines, formatted.
+pub fn check_allows(
+    sources: &[Source],
+    suppressed: &[Finding],
+) -> Vec<String> {
+    let mut sup: BTreeMap<&str, BTreeSet<usize>> = BTreeMap::new();
+    for f in suppressed {
+        sup.entry(f.rel.as_str()).or_default().insert(f.line);
+    }
+    let mut problems = Vec::new();
+    for src in sources {
+        let certs = alloc_cert_lines(src);
+        for span in &src.allow_spans {
+            if span.reason.is_empty() {
+                continue; // reported by the allow-hygiene pass
+            }
+            let used = span.covered.iter().any(|ln| {
+                sup.get(src.rel.as_str())
+                    .is_some_and(|s| s.contains(ln))
+                    || certs.contains(ln)
+            });
+            if !used {
+                problems.push(format!(
+                    "{}:{}: stale `lint: allow({})` — it no longer \
+                     suppresses any finding; delete it",
+                    src.rel, span.origin, span.reason
+                ));
+            }
+        }
+    }
+    problems
 }
 
 #[cfg(test)]

@@ -1,11 +1,378 @@
 //! CLI mirror of `python3 tools/asi_lint.py`: lint `rust/src/` (or
 //! `--root DIR`), print one `asi-lint: file:line: [pass] message` row
-//! per finding plus a tally line, exit 1 when anything was found.
+//! per finding plus a tally line. Shares the Python driver's output
+//! contract byte-for-byte: `--format sarif` emits a SARIF 2.1.0
+//! document on stdout (tally to stderr), `--baseline FILE` suppresses
+//! checked-in debt (stale entries fail the run), `--diff REF` keeps
+//! only findings on lines changed vs a git ref, `--check-allows`
+//! fails on stale allow comments, `--dump-effects` prints the
+//! effect-engine table (the cross-driver parity golden), and
+//! `--list-allows` inventories suppressions. Exit codes: 0 clean,
+//! 1 findings / stale entries, 2 internal error (bad flag,
+//! unreadable input, git failure).
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use asi_lint::{run_passes, Source};
+use asi_lint::effects::{build_effect_summaries, dump_effects};
+use asi_lint::{check_allows, run_passes, Finding, Source};
+
+/// Pass id -> one-line description; mirrors the Python driver's
+/// `PASS_DESCRIPTIONS` for the SARIF rule table.
+const PASS_DESCRIPTIONS: [(&str, &str); 8] = [
+    (
+        "lock",
+        "Lock discipline: guard liveness, guards across panic/channel \
+         boundaries, transitive re-acquisition.",
+    ),
+    (
+        "determinism",
+        "Wall-clock, unseeded randomness, HashMap iteration order \
+         feeding artifacts.",
+    ),
+    ("panic", "No unwrap/expect/indexing in runtime modules."),
+    ("schema", "Json::Num only through the omit-or-flag scheme."),
+    (
+        "unsafe",
+        "unsafe confined to tensor/kernels/ with SAFETY contracts.",
+    ),
+    (
+        "hotpath-alloc",
+        "No direct or transitively reachable heap allocation in \
+         designated hot regions.",
+    ),
+    (
+        "atomics-policy",
+        "Ordering sites match the per-module policy table; no split \
+         load/store read-modify-write.",
+    ),
+    ("allow", "Allow hygiene: every suppression carries a reason."),
+];
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + renderer matching Python's
+// `json.dumps(doc, indent=2)` byte-for-byte: 2-space indent, `": "`
+// key separator, trailing `,` only between items, empty containers
+// inline, ensure_ascii escaping (non-ASCII -> \uXXXX, astral ->
+// surrogate pair).
+// ---------------------------------------------------------------------------
+
+enum Json {
+    Str(String),
+    Num(usize),
+    Arr(Vec<Json>),
+    Obj(Vec<(&'static str, Json)>),
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c if c.is_ascii() => out.push(c),
+            c => {
+                let cp = c as u32;
+                if cp <= 0xffff {
+                    out.push_str(&format!("\\u{cp:04x}"));
+                } else {
+                    let v = cp - 0x1_0000;
+                    out.push_str(&format!(
+                        "\\u{:04x}\\u{:04x}",
+                        0xd800 + (v >> 10),
+                        0xdc00 + (v & 0x3ff)
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+impl Json {
+    fn render(&self, indent: usize, out: &mut String) {
+        let pad = "  ".repeat(indent);
+        let inner = "  ".repeat(indent + 1);
+        match self {
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&json_escape(s));
+                out.push('"');
+            }
+            Json::Num(n) => out.push_str(&n.to_string()),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, it) in items.iter().enumerate() {
+                    out.push_str(&inner);
+                    it.render(indent + 1, out);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    out.push_str(&inner);
+                    out.push('"');
+                    out.push_str(&json_escape(k));
+                    out.push_str("\": ");
+                    v.render(indent + 1, out);
+                    if i + 1 < fields.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn sarif_doc(findings: &[Finding]) -> Json {
+    let mut descs: Vec<(&str, &str)> = PASS_DESCRIPTIONS.to_vec();
+    descs.sort();
+    let rules: Vec<Json> = descs
+        .iter()
+        .map(|(p, d)| {
+            Json::Obj(vec![
+                ("id", Json::Str((*p).to_string())),
+                (
+                    "shortDescription",
+                    Json::Obj(vec![("text", Json::Str((*d).to_string()))]),
+                ),
+            ])
+        })
+        .collect();
+    let results: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::Obj(vec![
+                ("ruleId", Json::Str(f.pass.to_string())),
+                ("level", Json::Str("error".to_string())),
+                (
+                    "message",
+                    Json::Obj(vec![("text", Json::Str(f.msg.clone()))]),
+                ),
+                (
+                    "locations",
+                    Json::Arr(vec![Json::Obj(vec![(
+                        "physicalLocation",
+                        Json::Obj(vec![
+                            (
+                                "artifactLocation",
+                                Json::Obj(vec![(
+                                    "uri",
+                                    Json::Str(f.rel.clone()),
+                                )]),
+                            ),
+                            (
+                                "region",
+                                Json::Obj(vec![(
+                                    "startLine",
+                                    Json::Num(f.line),
+                                )]),
+                            ),
+                        ]),
+                    )])]),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        (
+            "$schema",
+            Json::Str(
+                "https://json.schemastore.org/sarif-2.1.0.json"
+                    .to_string(),
+            ),
+        ),
+        ("version", Json::Str("2.1.0".to_string())),
+        (
+            "runs",
+            Json::Arr(vec![Json::Obj(vec![
+                (
+                    "tool",
+                    Json::Obj(vec![(
+                        "driver",
+                        Json::Obj(vec![
+                            ("name", Json::Str("asi-lint".to_string())),
+                            ("rules", Json::Arr(rules)),
+                        ]),
+                    )]),
+                ),
+                ("results", Json::Arr(results)),
+            ])]),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: finding lines verbatim, matched by (file, pass, msg) so
+// an entry survives unrelated edits above the site. Stale entries
+// fail the run — debt only shrinks.
+// ---------------------------------------------------------------------------
+
+type BaselineKey = (String, String, String);
+
+/// Parse one `file:line: [pass] msg` entry. The file part is greedy
+/// (rightmost `:line: [pass] ` wins), matching the Python driver's
+/// `^(.*):(\d+): \[([\w-]+)\] (.*)$` regex.
+fn parse_baseline_line(raw: &str) -> Option<BaselineKey> {
+    let mut search_end = raw.len();
+    while let Some(p) = raw[..search_end].rfind(": [") {
+        let left = &raw[..p];
+        let close = raw[p + 3..].find(']').map(|c| p + 3 + c);
+        if let (Some(colon), Some(close)) = (left.rfind(':'), close) {
+            let digits = &left[colon + 1..];
+            let pass = &raw[p + 3..close];
+            if !digits.is_empty()
+                && digits.bytes().all(|b| b.is_ascii_digit())
+                && !pass.is_empty()
+                && pass.bytes().all(|b| {
+                    b.is_ascii_alphanumeric() || b == b'_' || b == b'-'
+                })
+                && raw[close + 1..].starts_with(' ')
+            {
+                return Some((
+                    left[..colon].to_string(),
+                    pass.to_string(),
+                    raw[close + 2..].to_string(),
+                ));
+            }
+        }
+        search_end = p;
+    }
+    None
+}
+
+fn load_baseline(path: &str) -> Result<Vec<(String, BaselineKey)>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut entries = Vec::new();
+    for raw in text.lines() {
+        let raw = raw.trim();
+        if raw.is_empty() || raw.starts_with('#') {
+            continue;
+        }
+        match parse_baseline_line(raw) {
+            Some(key) => entries.push((raw.to_string(), key)),
+            None => {
+                return Err(format!("unparseable baseline entry: '{raw}'"));
+            }
+        }
+    }
+    Ok(entries)
+}
+
+/// Suppress findings matching a baseline entry. Returns
+/// `(kept, stale_raw_lines)`.
+fn apply_baseline(
+    findings: Vec<Finding>,
+    entries: &[(String, BaselineKey)],
+) -> (Vec<Finding>, Vec<String>) {
+    let keys: BTreeSet<&BaselineKey> =
+        entries.iter().map(|(_, k)| k).collect();
+    let mut kept = Vec::new();
+    let mut used: BTreeSet<BaselineKey> = BTreeSet::new();
+    for f in findings {
+        let key = (f.rel.clone(), f.pass.to_string(), f.msg.clone());
+        if keys.contains(&key) {
+            used.insert(key);
+        } else {
+            kept.push(f);
+        }
+    }
+    let stale = entries
+        .iter()
+        .filter(|(_, k)| !used.contains(k))
+        .map(|(raw, _)| raw.clone())
+        .collect();
+    (kept, stale)
+}
+
+// ---------------------------------------------------------------------------
+// Diff mode: keep only findings on lines changed vs a git ref — a
+// strict subset of the full run.
+// ---------------------------------------------------------------------------
+
+/// file -> changed line numbers vs `git_ref` (`git diff -U0`).
+/// `None` on git failure (caller exits 2).
+fn git_changed_lines(
+    repo: &Path,
+    git_ref: &str,
+) -> Option<BTreeMap<String, BTreeSet<usize>>> {
+    let out = match std::process::Command::new("git")
+        .arg("-C")
+        .arg(repo)
+        .args(["diff", "--unified=0", git_ref, "--"])
+        .output()
+    {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("asi-lint: git diff failed: {e}");
+            return None;
+        }
+    };
+    if !out.status.success() {
+        eprintln!(
+            "asi-lint: git diff {git_ref} failed: {}",
+            String::from_utf8_lossy(&out.stderr).trim()
+        );
+        return None;
+    }
+    let mut changed: BTreeMap<String, BTreeSet<usize>> = BTreeMap::new();
+    let mut cur: Option<String> = None;
+    for line in String::from_utf8_lossy(&out.stdout).lines() {
+        if let Some(p) = line.strip_prefix("+++ ") {
+            cur = p.trim().strip_prefix("b/").map(str::to_string);
+        } else if line.starts_with("@@") {
+            let Some(file) = cur.as_ref() else { continue };
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let Some(plus) =
+                parts.get(2).and_then(|p| p.strip_prefix('+'))
+            else {
+                continue;
+            };
+            let (start, cnt) = match plus.split_once(',') {
+                Some((s, c)) => (s.parse::<usize>(), c.parse::<usize>()),
+                None => (plus.parse::<usize>(), Ok(1)),
+            };
+            if let (Ok(start), Ok(cnt)) = (start, cnt) {
+                let set = changed.entry(file.clone()).or_default();
+                for ln in start..start + cnt {
+                    set.insert(ln);
+                }
+            }
+        }
+    }
+    Some(changed)
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
 
 /// Recursively collect `.rs` files under `root` in sorted order
 /// (directories and files both sorted, like the Python driver's
@@ -32,8 +399,46 @@ fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
     Ok(out)
 }
 
+/// Print findings in text or SARIF form, then the tally line — to
+/// stdout in text mode, stderr in SARIF mode (stdout stays pure JSON).
+fn print_findings(findings: &[Finding], n_sources: usize, sarif: bool) {
+    let mut by_pass: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in findings {
+        *by_pass.entry(f.pass).or_insert(0) += 1;
+    }
+    let tally = if by_pass.is_empty() {
+        "clean".to_string()
+    } else {
+        by_pass
+            .iter()
+            .map(|(p, n)| format!("{p}: {n}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let tally_line = format!(
+        "asi-lint: {n_sources} file(s), {} finding(s) ({tally})",
+        findings.len()
+    );
+    if sarif {
+        let mut buf = String::new();
+        sarif_doc(findings).render(0, &mut buf);
+        println!("{buf}");
+        eprintln!("{tally_line}");
+    } else {
+        for f in findings {
+            println!("asi-lint: {f}");
+        }
+        println!("{tally_line}");
+    }
+}
+
 fn main() -> ExitCode {
     let mut root = String::from("rust/src");
+    let mut sarif = false;
+    let mut baseline: Option<String> = None;
+    let mut diff_ref: Option<String> = None;
+    let mut do_check_allows = false;
+    let mut mode = "lint";
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -44,13 +449,47 @@ fn main() -> ExitCode {
                     return ExitCode::from(2);
                 }
             },
+            "--list-allows" => mode = "list-allows",
+            "--dump-effects" => mode = "dump-effects",
+            "--check-allows" => do_check_allows = true,
+            "--format" => match args.next().as_deref() {
+                Some("text") => sarif = false,
+                Some("sarif") => sarif = true,
+                other => {
+                    eprintln!(
+                        "asi-lint: unknown format '{}'",
+                        other.unwrap_or("")
+                    );
+                    return ExitCode::from(2);
+                }
+            },
+            "--baseline" => match args.next() {
+                Some(p) => baseline = Some(p),
+                None => {
+                    eprintln!("asi-lint: --baseline needs a file");
+                    return ExitCode::from(2);
+                }
+            },
+            "--diff" => match args.next() {
+                Some(r) => diff_ref = Some(r),
+                None => {
+                    eprintln!("asi-lint: --diff needs a git ref");
+                    return ExitCode::from(2);
+                }
+            },
             "-h" | "--help" => {
                 println!(
-                    "asi-lint [--root DIR]\n\nStatic analysis for \
-                     the asi crate (lock discipline, determinism, \
-                     panic hygiene, report-schema discipline). \
+                    "asi-lint [--root DIR] [--format text|sarif] \
+                     [--baseline FILE] [--diff REF] [--check-allows] \
+                     [--dump-effects] [--list-allows]\n\nStatic \
+                     analysis for the asi crate: lock discipline, \
+                     determinism, panic hygiene, report-schema \
+                     discipline, unsafe discipline, hot-path \
+                     allocation, atomics policy, allow hygiene. \
                      Mirrors tools/asi_lint.py; DIR defaults to \
-                     rust/src, resolved against the repo root."
+                     rust/src, resolved against the repo root. Exit \
+                     codes: 0 clean, 1 findings or stale \
+                     baseline/allow entries, 2 internal error."
                 );
                 return ExitCode::SUCCESS;
             }
@@ -86,7 +525,7 @@ fn main() -> ExitCode {
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
             Err(e) => {
-                eprintln!("asi-lint: reading {}: {e}", path.display());
+                eprintln!("asi-lint: cannot read {}: {e}", path.display());
                 return ExitCode::from(2);
             }
         };
@@ -104,35 +543,67 @@ fn main() -> ExitCode {
             }
         }
     }
-    let findings = run_passes(&sources);
-    for f in &findings {
-        println!("asi-lint: {f}");
-    }
-    let mut by_pass: Vec<(&str, usize)> = Vec::new();
-    for f in &findings {
-        match by_pass.iter_mut().find(|(p, _)| *p == f.pass) {
-            Some((_, n)) => *n += 1,
-            None => by_pass.push((f.pass, 1)),
+    if mode == "list-allows" {
+        let mut n = 0usize;
+        for src in &sources {
+            for span in &src.allow_spans {
+                println!(
+                    "{}:{}: allow({})",
+                    src.rel, span.origin, span.reason
+                );
+                n += 1;
+            }
         }
+        println!("asi-lint: {n} allow site(s)");
+        return ExitCode::SUCCESS;
     }
-    by_pass.sort();
-    let tally = if by_pass.is_empty() {
-        "clean".to_string()
-    } else {
-        by_pass
-            .iter()
-            .map(|(p, n)| format!("{p}: {n}"))
-            .collect::<Vec<_>>()
-            .join(", ")
-    };
-    println!(
-        "asi-lint: {} file(s), {} finding(s) ({tally})",
-        sources.len(),
-        findings.len()
-    );
-    if findings.is_empty() {
-        ExitCode::SUCCESS
-    } else {
+    let (mut findings, suppressed) = run_passes(&sources);
+    if mode == "dump-effects" {
+        for line in dump_effects(&build_effect_summaries(&sources)) {
+            println!("{line}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let mut failed = false;
+    if let Some(path) = &baseline {
+        let entries = match load_baseline(path) {
+            Ok(es) => es,
+            Err(e) => {
+                eprintln!("asi-lint: bad --baseline: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let (kept, stale) = apply_baseline(findings, &entries);
+        findings = kept;
+        for raw in &stale {
+            eprintln!("asi-lint: stale baseline entry: {raw}");
+        }
+        failed |= !stale.is_empty();
+    }
+    if let Some(git_ref) = &diff_ref {
+        let Some(changed) = git_changed_lines(&repo, git_ref) else {
+            return ExitCode::from(2);
+        };
+        findings.retain(|f| {
+            changed.get(&f.rel).is_some_and(|s| s.contains(&f.line))
+        });
+    }
+    print_findings(&findings, sources.len(), sarif);
+    failed |= !findings.is_empty();
+    if do_check_allows {
+        let problems = check_allows(&sources, &suppressed);
+        for p in &problems {
+            println!("asi-lint: {p}");
+        }
+        println!(
+            "asi-lint: --check-allows: {} stale allow(s)",
+            problems.len()
+        );
+        failed |= !problems.is_empty();
+    }
+    if failed {
         ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
     }
 }

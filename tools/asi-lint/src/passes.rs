@@ -1,12 +1,16 @@
-//! The five lint passes, ported token-for-token from
-//! `tools/asi_lint.py` (which stays the canonical driver — it runs in
-//! toolchain-less containers). Findings are raw here: the caller
-//! (`run_passes`) applies allow-comment and test-region filtering and
-//! the `(file, line, pass)` dedupe, exactly like the Python driver.
+//! The seven lint passes (plus allow hygiene), ported token-for-token
+//! from `tools/asi_lint.py` (which stays the canonical driver — it
+//! runs in toolchain-less containers). Findings are raw here: the
+//! caller (`run_passes`) applies allow-comment and test-region
+//! filtering and the `(file, line, pass)` dedupe, exactly like the
+//! Python driver. Interprocedural facts (lock roots, transitive
+//! allocation) come from the shared effect engine in
+//! [`crate::effects`].
 
 use std::collections::{BTreeSet, HashMap, HashSet};
 
-use crate::{Finding, FnInfo, Source, Tok};
+use crate::effects::{collect_heap_vars, direct_allocs, Effects};
+use crate::{Finding, Source, Tok};
 
 const ACQUIRE_METHODS: [&str; 9] = [
     "read", "write", "lock", "try_read", "try_write", "try_lock",
@@ -32,7 +36,7 @@ const NONINDEX_KEYWORDS: [&str; 17] = [
     "yield",
 ];
 
-fn is_ident(t: &str) -> bool {
+pub(crate) fn is_ident(t: &str) -> bool {
     let mut chars = t.chars();
     match chars.next() {
         Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
@@ -75,7 +79,7 @@ fn finding(
 /// receiver chain; return its normalized textual root (`self.frozen`
 /// for `self.frozen[k].read()`, `state` for `state.lock()`). None for
 /// call-result receivers with no stable cell identity.
-fn receiver_root(toks: &[Tok], i: usize) -> Option<String> {
+pub(crate) fn receiver_root(toks: &[Tok], i: usize) -> Option<String> {
     let mut parts: Vec<&str> = Vec::new();
     let mut j = i as isize - 1;
     let mut depth = 0i32;
@@ -261,7 +265,7 @@ struct LiveGuard {
     line: usize,
 }
 
-fn is_acquire(toks: &[Tok], i: usize) -> bool {
+pub(crate) fn is_acquire(toks: &[Tok], i: usize) -> bool {
     ACQUIRE_METHODS.contains(&toks[i].text.as_str())
         && i + 1 < toks.len()
         && toks[i + 1].text == "("
@@ -269,9 +273,15 @@ fn is_acquire(toks: &[Tok], i: usize) -> bool {
         && toks[i - 1].text == "."
 }
 
+/// Whether a bare identifier is an acquire-method name (so it is not
+/// counted as a call edge even without a `.` receiver).
+pub(crate) fn is_acquire_name(t: &str) -> bool {
+    ACQUIRE_METHODS.contains(&t)
+}
+
 pub fn lock(
     src: &Source,
-    summaries: &HashMap<String, BTreeSet<String>>,
+    effects: &HashMap<String, Effects>,
     fn_names: &HashSet<String>,
 ) -> Vec<Finding> {
     let mut findings = Vec::new();
@@ -389,11 +399,11 @@ pub fn lock(
                 && fn_names.contains(t)
                 && t != f.name
             {
-                if let Some(inner) = summaries.get(t) {
+                if let Some(inner) = effects.get(t) {
                     let hit: BTreeSet<&str> = live
                         .iter()
                         .map(|g| g.root.as_str())
-                        .filter(|r| inner.contains(*r))
+                        .filter(|r| inner.locks.contains(*r))
                         .collect();
                     if !hit.is_empty() {
                         let hit: Vec<&str> = hit.into_iter().collect();
@@ -415,89 +425,6 @@ pub fn lock(
         }
     }
     findings
-}
-
-/// One scan of a function body: `self.*` acquisition roots plus the
-/// set of callee names (for the call-graph fixpoint).
-fn local_lock_info(f: &FnInfo) -> (Vec<String>, BTreeSet<String>) {
-    let toks = &f.body_toks;
-    let n = toks.len();
-    let mut roots = Vec::new();
-    let mut callees = BTreeSet::new();
-    for i in 0..n {
-        let t = toks[i].text.as_str();
-        if is_acquire(toks, i) {
-            if let Some(r) = receiver_root(toks, i) {
-                roots.push(r);
-            }
-        } else if is_ident(t)
-            && i + 1 < n
-            && toks[i + 1].text == "("
-            && !ACQUIRE_METHODS.contains(&t)
-        {
-            callees.insert(t.to_string());
-        }
-    }
-    (roots, callees)
-}
-
-/// fn name -> set of `self.*` roots it acquires, transitively. Only
-/// uniquely named functions get a summary (no type-based method
-/// resolution here — every `new` in the crate would collapse into
-/// one), and only `self.`-rooted cells propagate (a local guard
-/// variable's name means nothing in another function).
-pub fn build_lock_summaries(
-    sources: &[Source],
-) -> HashMap<String, BTreeSet<String>> {
-    let mut local: HashMap<String, BTreeSet<String>> = HashMap::new();
-    let mut calls: HashMap<String, BTreeSet<String>> = HashMap::new();
-    let mut def_count: HashMap<String, usize> = HashMap::new();
-    for src in sources {
-        for f in &src.fns {
-            *def_count.entry(f.name.clone()).or_insert(0) += 1;
-            let (roots, callees) = local_lock_info(f);
-            local.entry(f.name.clone()).or_default().extend(
-                roots.into_iter().filter(|r| r.starts_with("self.")),
-            );
-            calls.entry(f.name.clone()).or_default().extend(callees);
-        }
-    }
-    let unique: HashSet<String> = def_count
-        .iter()
-        .filter(|&(_, &c)| c == 1)
-        .map(|(n, _)| n.clone())
-        .collect();
-    let mut summaries: HashMap<String, BTreeSet<String>> = local
-        .into_iter()
-        .filter(|(k, _)| unique.contains(k))
-        .collect();
-    let call_list: Vec<(String, BTreeSet<String>)> =
-        calls.into_iter().collect();
-    let mut changed = true;
-    while changed {
-        changed = false;
-        for (name, callees) in &call_list {
-            if !unique.contains(name) {
-                continue;
-            }
-            let mut add: BTreeSet<String> = BTreeSet::new();
-            for c in callees {
-                if c != name {
-                    if let Some(s) = summaries.get(c) {
-                        add.extend(s.iter().cloned());
-                    }
-                }
-            }
-            let cur = summaries.entry(name.clone()).or_default();
-            let before = cur.len();
-            cur.extend(add);
-            if cur.len() != before {
-                changed = true;
-            }
-        }
-    }
-    summaries.retain(|_, v| !v.is_empty());
-    summaries
 }
 
 // ---------------------------------------------------------------------------
@@ -1041,6 +968,254 @@ pub fn unsafe_discipline(src: &Source) -> Vec<Finding> {
                 "`unsafe` without a `// SAFETY:` contract — state \
                  the invariants on the same line or in the comment \
                  block directly above"
+                    .to_string(),
+            ));
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Pass 6: hot-path allocation
+// ---------------------------------------------------------------------------
+
+/// The designated hot regions: (path, Some(fn-name set) or None for
+/// "every function in the file"). Paths ending in `/` are directory
+/// prefixes, otherwise exact file tails, both relative to the lint
+/// root (the `rust/src/` prefix is stripped so fixtures scope the
+/// same way the panic/unsafe passes do).
+const HOT_REGIONS: [(&str, Option<&[&str]>); 5] = [
+    ("tensor/kernels/", None),
+    ("tensor/workspace.rs", Some(&["take", "give"])),
+    (
+        "coordinator/trainer.rs",
+        Some(&["step", "step_image", "run_burst"]),
+    ),
+    ("serve/scheduler.rs", Some(&["run_stream_pool"])),
+    (
+        "trace/",
+        Some(&[
+            "record", "span", "instant", "instant_dur", "with_slot",
+            "push", "count_cat", "count_dropped", "gauge_set",
+            "observe_dur",
+        ]),
+    ),
+];
+
+const HOTPATH_FIX: &str = "take the buffer from a Workspace pool or \
+                           mark a warmup-only site with \
+                           `// lint: allow(warmup: ...)`";
+
+/// `(is_hot_file, fn-name set or None)` for a lint-root-relative
+/// path; first matching region wins.
+fn hot_region(rel: &str) -> (bool, Option<&'static [&'static str]>) {
+    let tail = rel.split("rust/src/").last().unwrap_or(rel);
+    for (path, fns) in HOT_REGIONS {
+        if (path.ends_with('/') && tail.starts_with(path))
+            || tail == path
+        {
+            return (true, fns);
+        }
+    }
+    (false, None)
+}
+
+pub fn hotpath(
+    src: &Source,
+    effects: &HashMap<String, Effects>,
+    fn_names: &HashSet<String>,
+) -> Vec<Finding> {
+    let (hot, hot_fns) = hot_region(&src.rel);
+    if !hot {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for f in &src.fns {
+        if let Some(fns) = hot_fns {
+            if !fns.contains(&f.name.as_str()) {
+                continue;
+            }
+        }
+        let toks = &f.body_toks;
+        let heap_vars = collect_heap_vars(toks);
+        for (ln, what) in direct_allocs(toks, &heap_vars) {
+            findings.push(finding(
+                src,
+                ln,
+                "hotpath-alloc",
+                format!(
+                    "heap allocation (`{what}`) in a designated hot \
+                     region — the zero-alloc-after-warmup contract \
+                     forbids it; {HOTPATH_FIX}"
+                ),
+            ));
+        }
+        let n = toks.len();
+        for i in 0..n {
+            let t = toks[i].text.as_str();
+            if is_ident(t)
+                && i + 1 < n
+                && toks[i + 1].text == "("
+                && !is_acquire_name(t)
+                && t != f.name
+                && effects.get(t).is_some_and(|e| e.allocates)
+                && fn_names.contains(t)
+            {
+                findings.push(finding(
+                    src,
+                    toks[i].line,
+                    "hotpath-alloc",
+                    format!(
+                        "call to `{t}()` in a designated hot region \
+                         — `{t}` (transitively) performs heap \
+                         allocation; {HOTPATH_FIX}"
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Pass 7: atomics policy
+// ---------------------------------------------------------------------------
+
+const ORDERINGS: [&str; 5] =
+    ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Per-module ordering policy, first match wins (paths relative to
+/// the lint root, `/`-suffixed entries are directory prefixes).
+/// SeqCst is deliberately in no policy: a sequentially-consistent
+/// site always carries a `// lint: allow(...)` naming the reason.
+const ATOMIC_POLICY: [(&str, &[&str]); 2] = [
+    ("trace/", &["Relaxed"]),
+    ("serve/", &["Relaxed", "Acquire", "Release", "AcqRel"]),
+];
+const ATOMIC_DEFAULT: &[&str] = &["Relaxed"];
+
+/// `(scope label, allowed orderings)` for a lint-root-relative path.
+fn atomic_policy(rel: &str) -> (&'static str, &'static [&'static str]) {
+    let tail = rel.split("rust/src/").last().unwrap_or(rel);
+    for (path, allowed) in ATOMIC_POLICY {
+        if (path.ends_with('/') && tail.starts_with(path))
+            || tail == path
+        {
+            return (path, allowed);
+        }
+    }
+    ("default", ATOMIC_DEFAULT)
+}
+
+pub fn atomics(src: &Source) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let (scope, allowed) = atomic_policy(&src.rel);
+    let toks = &src.file_toks;
+    let n = toks.len();
+    for i in 0..n {
+        if toks[i].text == "Ordering"
+            && i + 2 < n
+            && toks[i + 1].text == "::"
+            && ORDERINGS.contains(&toks[i + 2].text.as_str())
+            && !allowed.contains(&toks[i + 2].text.as_str())
+        {
+            let o = toks[i + 2].text.as_str();
+            findings.push(finding(
+                src,
+                toks[i].line,
+                "atomics-policy",
+                format!(
+                    "`Ordering::{o}` violates the atomics policy for \
+                     `{scope}` (allowed: {}) — counters and metrics \
+                     stay Relaxed, cross-thread handoff uses \
+                     Acquire/Release pairs, and any exception \
+                     documents its reason with `// lint: allow(...)`",
+                    allowed.join(", ")
+                ),
+            ));
+        }
+    }
+    // Non-atomic read-modify-write: a separate atomic `load` then
+    // `store` on the same cell inside one function loses concurrent
+    // updates between the two. The Ordering token inside the argument
+    // list is what distinguishes an atomic access from e.g. a config
+    // load.
+    for f in &src.fns {
+        let toks = &f.body_toks;
+        let n = toks.len();
+        let mut loads: HashMap<String, usize> = HashMap::new();
+        for i in 0..n {
+            let t = toks[i].text.as_str();
+            if (t == "load" || t == "store")
+                && i >= 1
+                && toks[i - 1].text == "."
+                && i + 1 < n
+                && toks[i + 1].text == "("
+            {
+                let mut j = i + 1;
+                let mut depth = 0i32;
+                let mut has_ordering = false;
+                while j < n {
+                    match toks[j].text.as_str() {
+                        "(" => depth += 1,
+                        ")" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        "Ordering" => has_ordering = true,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if !has_ordering {
+                    continue;
+                }
+                let Some(root) = receiver_root(toks, i) else {
+                    continue;
+                };
+                if t == "load" {
+                    loads.entry(root).or_insert(toks[i].line);
+                } else if let Some(&load_ln) = loads.get(&root) {
+                    findings.push(finding(
+                        src,
+                        toks[i].line,
+                        "atomics-policy",
+                        format!(
+                            "separate atomic `load` (line {load_ln}) \
+                             then `store` on `{root}` — a non-atomic \
+                             read-modify-write loses concurrent \
+                             updates; use `fetch_*`/\
+                             `compare_exchange` or document the \
+                             single-writer invariant with \
+                             `// lint: allow(...)`"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Pass 8: allow hygiene (empty reasons). Stale-allow detection lives
+// in `check_allows` — it needs the suppressed-finding set, not a
+// per-file scan.
+// ---------------------------------------------------------------------------
+
+pub fn allow_hygiene(src: &Source) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for span in &src.allow_spans {
+        if span.reason.is_empty() {
+            findings.push(finding(
+                src,
+                span.origin,
+                "allow",
+                "`lint: allow()` with an empty reason — every \
+                 suppression names its invariant (e.g. \
+                 `// lint: allow(warmup: pool-miss growth)`)"
                     .to_string(),
             ));
         }

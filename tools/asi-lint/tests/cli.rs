@@ -1,0 +1,275 @@
+//! Exit-code and output-shape contract for the `asi-lint` binary,
+//! mirroring the CLI suite inside `tools/asi_lint.py --self-test`:
+//! 0 = clean, 1 = findings / stale baseline or allow entries,
+//! 2 = internal error (unknown flag, bad format, missing root).
+//! The `--dump-effects` test doubles as the cross-driver parity
+//! check: the binary must print the exact golden table the Python
+//! driver asserts.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_asi-lint"))
+}
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+/// Per-test scratch directory (recreated empty each call).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("asi-lint-cli-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn code(out: &Output) -> i32 {
+    out.status.code().expect("exit code")
+}
+
+#[test]
+fn clean_root_exits_zero() {
+    let dir = scratch("clean");
+    std::fs::write(dir.join("ok.rs"), "pub fn ok() -> u32 { 1 }\n")
+        .expect("write fixture");
+    let out = bin()
+        .args(["--root", dir.to_str().expect("utf-8 path")])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    assert!(
+        stdout(&out).contains("0 finding(s) (clean)"),
+        "stdout: {}",
+        stdout(&out)
+    );
+}
+
+#[test]
+fn findings_exit_one() {
+    let root = fixtures().join("atomics");
+    let out = bin()
+        .args(["--root", root.to_str().expect("utf-8 path")])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 1, "stdout: {}", stdout(&out));
+    assert!(
+        stdout(&out).contains("[atomics-policy]"),
+        "stdout: {}",
+        stdout(&out)
+    );
+}
+
+#[test]
+fn unknown_flag_exits_two() {
+    let out = bin().arg("--bogus").output().expect("run binary");
+    assert_eq!(code(&out), 2);
+    assert!(stderr(&out).contains("unknown argument"));
+}
+
+#[test]
+fn bad_format_exits_two() {
+    let out = bin()
+        .args(["--format", "xml"])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 2);
+    assert!(stderr(&out).contains("unknown format"));
+}
+
+#[test]
+fn missing_root_exits_two() {
+    let out = bin()
+        .args(["--root", "no/such/dir/anywhere"])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 2);
+    assert!(stderr(&out).contains("no such directory"));
+}
+
+#[test]
+fn sarif_output_has_required_shape() {
+    let root = fixtures().join("atomics");
+    let out = bin()
+        .args(["--root", root.to_str().expect("utf-8 path")])
+        .args(["--format", "sarif"])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 1);
+    let doc = stdout(&out);
+    // stdout is pure JSON (tally goes to stderr in SARIF mode).
+    assert!(doc.trim_start().starts_with('{'), "doc: {doc}");
+    for needle in [
+        "\"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\"",
+        "\"version\": \"2.1.0\"",
+        "\"name\": \"asi-lint\"",
+        "\"ruleId\": \"atomics-policy\"",
+        "\"startLine\"",
+    ] {
+        assert!(doc.contains(needle), "missing {needle} in: {doc}");
+    }
+    assert!(stderr(&out).contains("finding(s)"));
+}
+
+#[test]
+fn baseline_suppresses_and_goes_stale() {
+    let root = fixtures().join("atomics");
+    let root_s = root.to_str().expect("utf-8 path");
+    let plain = bin()
+        .args(["--root", root_s])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&plain), 1);
+    let text = stdout(&plain);
+    let mut lines: Vec<&str> = text.lines().collect();
+    let tally = lines.pop().expect("tally line");
+    assert!(tally.contains("finding(s)"), "tally: {tally}");
+    let entries: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            l.strip_prefix("asi-lint: ")
+                .expect("finding prefix")
+                .to_string()
+        })
+        .collect();
+    assert!(!entries.is_empty());
+
+    // Round-trip: a baseline built from the run's own findings makes
+    // the same run exit 0.
+    let dir = scratch("baseline");
+    let base = dir.join("baseline.txt");
+    std::fs::write(&base, format!("# debt\n{}\n", entries.join("\n")))
+        .expect("write baseline");
+    let ok = bin()
+        .args(["--root", root_s])
+        .args(["--baseline", base.to_str().expect("utf-8 path")])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&ok), 0, "stderr: {}", stderr(&ok));
+    assert!(stdout(&ok).contains("0 finding(s) (clean)"));
+
+    // A no-longer-matching entry is stale and fails the run.
+    std::fs::write(
+        &base,
+        format!(
+            "{}\ngone.rs:1: [lock] this finding no longer exists\n",
+            entries.join("\n")
+        ),
+    )
+    .expect("write baseline");
+    let stale = bin()
+        .args(["--root", root_s])
+        .args(["--baseline", base.to_str().expect("utf-8 path")])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&stale), 1);
+    assert!(stderr(&stale).contains("stale baseline entry: gone.rs:1:"));
+
+    // An unparseable entry is an internal error, not a finding.
+    std::fs::write(&base, "not a baseline line\n")
+        .expect("write baseline");
+    let bad = bin()
+        .args(["--root", root_s])
+        .args(["--baseline", base.to_str().expect("utf-8 path")])
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&bad), 2);
+    assert!(stderr(&bad).contains("bad --baseline"));
+}
+
+#[test]
+fn dump_effects_matches_shared_golden() {
+    let root = fixtures().join("effects");
+    let out = bin()
+        .args(["--root", root.to_str().expect("utf-8 path")])
+        .arg("--dump-effects")
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    let want = std::fs::read_to_string(
+        root.join("expected_effects.txt"),
+    )
+    .expect("golden readable");
+    let got: Vec<&str> = stdout(&out).lines().collect();
+    let want: Vec<&str> = want.lines().collect();
+    assert_eq!(got, want, "effects table diverges from the golden");
+}
+
+#[test]
+fn check_allows_flags_stale_allow() {
+    let dir = scratch("stale-allow");
+    std::fs::write(
+        dir.join("lib.rs"),
+        "// lint: allow(bogus: suppresses nothing)\n\
+         pub fn ok() -> u32 { 1 }\n",
+    )
+    .expect("write fixture");
+    let out = bin()
+        .args(["--root", dir.to_str().expect("utf-8 path")])
+        .arg("--check-allows")
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 1, "stdout: {}", stdout(&out));
+    let text = stdout(&out);
+    assert!(text.contains("stale `lint: allow(bogus:"), "{text}");
+    assert!(text.contains("--check-allows: 1 stale allow(s)"), "{text}");
+}
+
+#[test]
+fn check_allows_accepts_used_allow() {
+    let dir = scratch("used-allow");
+    std::fs::write(
+        dir.join("lib.rs"),
+        "pub fn build() -> Vec<u32> {\n    \
+         // lint: allow(warmup: built once at startup)\n    \
+         vec![0; 4]\n}\n",
+    )
+    .expect("write fixture");
+    let out = bin()
+        .args(["--root", dir.to_str().expect("utf-8 path")])
+        .arg("--check-allows")
+        .output()
+        .expect("run binary");
+    assert_eq!(
+        code(&out),
+        0,
+        "stdout: {}\nstderr: {}",
+        stdout(&out),
+        stderr(&out)
+    );
+    assert!(stdout(&out).contains("--check-allows: 0 stale allow(s)"));
+}
+
+#[test]
+fn list_allows_inventories_spans() {
+    let dir = scratch("list-allows");
+    std::fs::write(
+        dir.join("lib.rs"),
+        "pub fn build() -> Vec<u32> {\n    \
+         // lint: allow(warmup: built once at startup)\n    \
+         vec![0; 4]\n}\n",
+    )
+    .expect("write fixture");
+    let out = bin()
+        .args(["--root", dir.to_str().expect("utf-8 path")])
+        .arg("--list-allows")
+        .output()
+        .expect("run binary");
+    assert_eq!(code(&out), 0);
+    let text = stdout(&out);
+    assert!(
+        text.contains(":2: allow(warmup: built once at startup)"),
+        "{text}"
+    );
+    assert!(text.contains("asi-lint: 1 allow site(s)"), "{text}");
+}

@@ -3,10 +3,13 @@
 //! findings its `//~ ERROR <pass>` markers declare (same line, same
 //! pass), and every `good*.rs` fixture must be clean. All passes run
 //! on all fixtures — a bad file for one pass must not trip another by
-//! accident.
+//! accident. The `effects/` fixtures are excluded here (they are not
+//! marker fixtures) and asserted against their golden table in
+//! `effects_golden_matches` instead.
 
 use std::path::{Path, PathBuf};
 
+use asi_lint::effects::{build_effect_summaries, dump_effects};
 use asi_lint::{run_passes, Source};
 
 /// Directories under the fixture root, depth-first in sorted order
@@ -35,6 +38,17 @@ fn fixtures_match_their_markers() {
     let mut failures: Vec<String> = Vec::new();
     let mut n_files = 0usize;
     for dir in fixture_dirs(&root) {
+        // effects/ holds the effect-engine golden (no markers);
+        // artifacts/ holds SARIF schema fixtures (no Rust at all).
+        let skip = dir
+            .strip_prefix(&root)
+            .ok()
+            .and_then(|p| p.iter().next())
+            .and_then(|s| s.to_str())
+            .is_some_and(|s| s == "effects" || s == "artifacts");
+        if skip {
+            continue;
+        }
         let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
             .expect("fixture dir readable")
             .map(|e| e.expect("fixture entry").path())
@@ -73,7 +87,7 @@ fn fixtures_match_their_markers() {
                     .push(format!("parse error in {rel}: {e}")),
             }
         }
-        let findings = run_passes(&srcs);
+        let (findings, _suppressed) = run_passes(&srcs);
         for (src, path) in srcs.iter().zip(&files) {
             n_files += 1;
             let mine: Vec<_> = findings
@@ -118,8 +132,8 @@ fn fixtures_match_their_markers() {
         }
     }
     assert!(
-        n_files >= 8,
-        "expected at least 8 fixture files, walked {n_files}"
+        n_files >= 20,
+        "expected at least 20 fixture files, walked {n_files}"
     );
     assert!(
         failures.is_empty(),
@@ -165,12 +179,54 @@ fn real_crate_lints_clean() {
         }
     }
     assert!(sources.len() >= 40, "walked {} files", sources.len());
-    let findings = run_passes(&sources);
+    let (findings, _suppressed) = run_passes(&sources);
     let rendered: Vec<String> =
         findings.iter().map(|f| f.to_string()).collect();
     assert!(
         rendered.is_empty(),
         "the crate must lint clean:\n{}",
         rendered.join("\n")
+    );
+}
+
+/// Cross-driver parity golden: the effect engine's summary table over
+/// `fixtures/effects/*.rs` must match `expected_effects.txt` line for
+/// line — the same file `tools/asi_lint.py --self-test` asserts, so
+/// both drivers agree on the interprocedural fixpoint byte-for-byte.
+#[test]
+fn effects_golden_matches() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join("effects");
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("effects fixture dir readable")
+        .map(|e| e.expect("effects entry").path())
+        .filter(|p| {
+            p.is_file() && p.extension().is_some_and(|e| e == "rs")
+        })
+        .collect();
+    files.sort();
+    assert!(files.len() >= 3, "walked {} effects files", files.len());
+    let mut srcs = Vec::new();
+    for path in &files {
+        let rel = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .expect("utf-8 fixture name")
+            .to_string();
+        let text =
+            std::fs::read_to_string(path).expect("fixture readable");
+        srcs.push(Source::parse(&rel, &text).expect("fixture parses"));
+    }
+    let got = dump_effects(&build_effect_summaries(&srcs));
+    let want: Vec<String> =
+        std::fs::read_to_string(dir.join("expected_effects.txt"))
+            .expect("golden readable")
+            .lines()
+            .map(str::to_string)
+            .collect();
+    assert_eq!(
+        got, want,
+        "effect summaries diverge from the shared golden"
     );
 }

@@ -2,10 +2,24 @@
 """asi-lint: repo-invariant static analysis for the asi crate.
 
 The crate's acceptance story is bit-identical replay under concurrency
-and chaos. Five invariants carry it, and they were enforced only by
-hand review until now. This driver makes them machine-checked in any
-container (stdlib-only, no toolchain needed); the Rust crate at
-tools/asi-lint mirrors the same passes for toolchain-bearing sessions.
+and chaos, inside a fixed memory envelope. Seven invariants carry it,
+and they were enforced only by hand review until now. This driver
+makes them machine-checked in any container (stdlib-only, no toolchain
+needed); the Rust crate at tools/asi-lint mirrors the same passes for
+toolchain-bearing sessions.
+
+All interprocedural reasoning goes through one shared **effect
+engine**: every function gets a summary over the effect lattice
+{allocates, locks(roots), blocks, panics, wall_clock}, inferred from
+the token model and propagated to fixpoint over the crate call graph.
+The lock pass queries `locks`, the hotpath pass queries `allocates`;
+`--dump-effects` prints the summaries in a stable format that doubles
+as the cross-driver parity golden. Scope limits that keep the
+over-approximation honest: only *uniquely named* functions get a
+summary (without type-based method resolution every `new` in the
+crate would collapse into one), only `self.*`-rooted cells propagate
+for locks, and an allocation site under `// lint: allow(...)` is
+certified (warmup-only) and does not taint callers.
 
 Passes (each finding is `file:line: [pass] message`):
 
@@ -52,27 +66,66 @@ Passes (each finding is `file:line: [pass] message`):
           vendored stubs under rust/vendor/ sit outside the lint root
           and are never scanned.
 
+  hotpath-alloc
+          Hot-path allocation discipline. In the designated hot
+          regions (tensor/kernels/, Workspace take/give, the trainer
+          burst loop, the serve dispatch loop, the trace record path)
+          any direct heap allocation (`Vec::new`, `vec![`,
+          `with_capacity`, `Box::new`, `.to_vec()`, `.to_string()`,
+          `.to_owned()`, `.collect()`, `format!`, `.clone()` on a
+          heap-typed local) — or a call to a function whose effect
+          summary says it (transitively) allocates — is a finding.
+          The documented warmup-only sites carry
+          `// lint: allow(warmup: ...)`; an allowed site is certified
+          and stops tainting its callers.
+
+  atomics-policy
+          Every `Ordering::` site must match the per-module policy
+          table (trace/ counters stay Relaxed; serve/ cross-thread
+          handoff may use Acquire/Release/AcqRel; everything else is
+          Relaxed; SeqCst is never in a policy — it always needs a
+          `// lint: allow(...)` with a reason). Also flags the
+          non-atomic read-modify-write shape: a separate atomic
+          `load` then `store` on the same cell inside one function.
+
+  allow   Allow hygiene: a `// lint: allow()` with an empty reason is
+          itself a finding — every suppression names its invariant.
+
 Escape hatch: `// lint: allow(reason)` on the offending line, or alone
 on the line above it, suppresses every pass at that site. The reason is
-mandatory and is echoed in --list-allows so reviewers can audit them.
+mandatory and is echoed in --list-allows so reviewers can audit them;
+`--check-allows` additionally fails on *stale* allows (sites that no
+longer suppress anything).
 
 Usage:
   python3 tools/asi_lint.py                 # lint rust/src (default)
   python3 tools/asi_lint.py --root DIR ...  # lint another tree
-  python3 tools/asi_lint.py --self-test     # run the fixture suite
+  python3 tools/asi_lint.py --self-test     # fixture + CLI suite
   python3 tools/asi_lint.py --list-allows   # audit allow sites
+  python3 tools/asi_lint.py --check-allows  # lint + fail stale allows
+  python3 tools/asi_lint.py --dump-effects  # effect-summary golden
+  python3 tools/asi_lint.py --format sarif  # SARIF 2.1.0 to stdout
+  python3 tools/asi_lint.py --baseline F    # suppress known findings
+  python3 tools/asi_lint.py --diff REF      # findings on changed lines
 
-Exit code 1 on any finding (or fixture mismatch), 0 on a clean run.
+Exit codes: 0 clean, 1 findings (or fixture mismatch / stale baseline
+entry / stale allow), 2 internal error (unknown flag, unreadable file
+or baseline, git failure in --diff).
 
-Adding a pass: write `pass_<name>(src: Source) -> list[Finding]`,
-register it in PASSES, add good/bad fixtures under
+Adding a pass: write `pass_<name>(src: Source, ...) -> list[Finding]`,
+register it in run_passes, add good/bad fixtures under
 tools/asi-lint/fixtures/<name>/ (mark expected lines in bad files with
 `//~ ERROR <pass>`), and mirror it in tools/asi-lint/src/passes.rs.
+Do NOT filter allows/test regions inside the pass — run_passes does
+that centrally (so --check-allows can see what each allow suppresses).
 """
 
+import json
 import os
 import re
+import subprocess
 import sys
+import tempfile
 
 # ---------------------------------------------------------------------------
 # Source model: comment/string stripping, allow-comments, test regions,
@@ -82,19 +135,23 @@ import sys
 # ---------------------------------------------------------------------------
 
 ALLOW_RE = re.compile(r"//\s*lint:\s*allow\(([^)]*)\)")
-MARKER_RE = re.compile(r"//~\s*ERROR\s+(\w+)")
+MARKER_RE = re.compile(r"//~\s*ERROR\s+([\w-]+)")
 
 
 def strip_source(text):
     """Blank out comments and string/char literal bodies, preserving
     line structure and byte positions. Returns (stripped, allows,
-    markers, safety): allows maps line -> reason for
-    `// lint: allow(...)`, markers maps line -> pass name for fixture
-    `//~ ERROR p` comments, safety is the set of lines whose `//`
-    comment carries a safety contract (`SAFETY:` or `# Safety`).
+    allow_spans, markers, safety): allows maps line -> reason for
+    `// lint: allow(...)`, allow_spans is a list of
+    (comment_line, [covered lines], reason) — one entry per allow
+    comment, for --list-allows / --check-allows; markers maps line ->
+    pass name for fixture `//~ ERROR p` comments, safety is the set of
+    lines whose `//` comment carries a safety contract (`SAFETY:` or
+    `# Safety`).
     """
     out = []
     allows = {}
+    allow_spans = []
     markers = {}
     safety = set()
     i, n = 0, len(text)
@@ -119,10 +176,13 @@ def strip_source(text):
             m = ALLOW_RE.search(comment)
             if m:
                 # A lone allow-comment line covers the next line too.
-                target = line + 1 if comment_only_since_newline else line
-                allows[line] = m.group(1).strip()
+                reason = m.group(1).strip()
+                covered = [line]
+                allows[line] = reason
                 if comment_only_since_newline:
-                    allows[target] = m.group(1).strip()
+                    covered.append(line + 1)
+                    allows[line + 1] = reason
+                allow_spans.append((line, covered, reason))
             m = MARKER_RE.search(comment)
             if m:
                 markers[line] = m.group(1)
@@ -205,7 +265,7 @@ def strip_source(text):
             comment_only_since_newline = False
         out.append(ch)
         i += 1
-    return "".join(out), allows, markers, safety
+    return "".join(out), allows, allow_spans, markers, safety
 
 
 def line_starts(text):
@@ -304,7 +364,7 @@ class Source:
         self.path = path
         self.rel = rel.replace(os.sep, "/")
         self.text = text
-        (self.stripped, self.allows, self.markers,
+        (self.stripped, self.allows, self.allow_spans, self.markers,
          self.safety_lines) = strip_source(text)
         self.starts = line_starts(self.stripped)
         self.test_lines = test_region_lines(self.stripped, self.starts)
@@ -450,38 +510,12 @@ def fn_key(src, fn):
     return f"{src.rel}::{fn.name}"
 
 
-def local_lock_info(src, fn):
-    """One scan of a function body: returns (acquisitions, calls) where
-    acquisitions = [(root, tok_index, line)], calls = {callee names}."""
-    toks = tokenize(src.stripped, fn.body_start, fn.body_end, src.starts)
-    acqs = []
-    calls = set()
-    for i, (t, ln) in enumerate(toks):
-        if (
-            t in ACQUIRE_METHODS
-            and i + 1 < len(toks)
-            and toks[i + 1][0] == "("
-            and i >= 1
-            and toks[i - 1][0] == "."
-        ):
-            root = receiver_root(toks, i - 1)
-            if root:
-                acqs.append((root, i, ln))
-        elif (
-            re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t)
-            and i + 1 < len(toks)
-            and toks[i + 1][0] == "("
-            and t not in ACQUIRE_METHODS
-        ):
-            calls.add(t)
-    return toks, acqs, calls
-
-
-def pass_lock(src, summaries=None, fn_names=None):
-    """summaries: fn name -> set of roots it (transitively) locks.
-    fn_names: names defined in the linted tree (call-graph domain)."""
+def pass_lock(src, effects=None, fn_names=None):
+    """effects: fn name -> Effects (the shared engine's summaries);
+    the lock pass consumes the `locks` component. fn_names: names
+    defined in the linted tree (call-graph domain)."""
     findings = []
-    summaries = summaries or {}
+    effects = effects or {}
     for fn in src.functions:
         toks = tokenize(src.stripped, fn.body_start, fn.body_end, src.starts)
         n = len(toks)
@@ -603,7 +637,7 @@ def pass_lock(src, summaries=None, fn_names=None):
                 continue
 
             # guards across panic/channel boundaries
-            if live and not src.allowed(ln):
+            if live:
                 boundary = None
                 if t == "catch_unwind":
                     boundary = "catch_unwind"
@@ -630,13 +664,13 @@ def pass_lock(src, summaries=None, fn_names=None):
                 and re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*", t)
                 and i + 1 < n
                 and toks[i + 1][0] == "("
-                and t in summaries
+                and t in effects
+                and effects[t].locks
                 and (fn_names is None or t in fn_names)
                 and t != fn.name
             ):
                 held = {g["root"] for g in live}
-                inner = summaries[t]
-                hit = held & inner
+                hit = held & effects[t].locks
                 if hit:
                     r = ", ".join(sorted(hit))
                     findings.append(Finding(
@@ -645,46 +679,301 @@ def pass_lock(src, summaries=None, fn_names=None):
                         f"— `{t}` (transitively) locks the same cell",
                     ))
             i += 1
-    return [f for f in findings if not src.allowed(f.line)
-            and not src.in_tests(f.line)]
+    return findings
 
 
-def build_lock_summaries(sources):
-    """fn name -> set of `self.*` roots it acquires, transitively.
+# ---------------------------------------------------------------------------
+# Effect engine: per-function summaries over the effect lattice
+# {allocates, locks(roots), blocks, panics, wall_clock}, propagated to
+# fixpoint over the crate call graph. The lock pass queries `locks`,
+# the hotpath pass queries `allocates`; --dump-effects prints the
+# whole table as the cross-driver parity golden.
+#
+# Scope limits that keep the over-approximation honest: only
+# *uniquely named* functions get a summary (without type-based method
+# resolution, every `new` in the crate would collapse into one), and
+# for locks only `self.`-rooted cells propagate (a local guard
+# variable's name means nothing in another function). An allocation
+# site under `// lint: allow(...)` is certified warmup-only and does
+# not set `allocates` — callers of Workspace::take must not re-certify
+# the pool-miss path. Lock acquisitions stay raw: an allow on an
+# acquisition documents a finding at that site, it does not change
+# what callers must know.
+# ---------------------------------------------------------------------------
 
-    Scope limits that keep the over-approximation honest: only
-    *uniquely named* functions get a summary (without type-based
-    method resolution, every `new` in the crate would collapse into
-    one), and only `self.`-rooted cells propagate (a local guard
-    variable's name means nothing in another function). The PR-5
-    deadlock class — re-acquiring a cell you already hold — is
-    intra-procedural and unaffected by either limit."""
+# Types whose `::new` / `::with_capacity` / `::from` constructors heap-
+# allocate. Arc/Rc allocate on construction but their `.clone()` is a
+# refcount bump, so HEAP_CLONE_TYPES (the `.clone()`-is-an-allocation
+# set) excludes them.
+ALLOC_TYPES = {
+    "Vec", "VecDeque", "Box", "String", "HashMap", "HashSet",
+    "BTreeMap", "BTreeSet", "Arc", "Rc",
+}
+HEAP_CLONE_TYPES = {
+    "Vec", "VecDeque", "Box", "String", "HashMap", "HashSet",
+    "BTreeMap", "BTreeSet",
+}
+ALLOC_ASSOC_FNS = {"new", "with_capacity", "from"}
+ALLOC_MACROS = {"vec", "format"}
+ALLOC_METHODS = {"to_vec", "to_string", "to_owned", "collect"}
+BLOCK_METHODS = {"send", "recv", "recv_timeout", "join", "wait",
+                 "wait_timeout"}
+PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented",
+                "assert", "assert_eq", "assert_ne"}
+PANIC_METHODS = {"unwrap", "expect"}
+
+IDENT_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def is_ident(t):
+    return bool(IDENT_RE.fullmatch(t))
+
+
+class Effects:
+    """One function's effect summary. Boolean components OR under
+    merge; `locks` unions — the lattice join is componentwise."""
+    __slots__ = ("allocates", "blocks", "panics", "wall_clock", "locks")
+
+    def __init__(self):
+        self.allocates = False
+        self.blocks = False
+        self.panics = False
+        self.wall_clock = False
+        self.locks = set()
+
+    def merge(self, other):
+        before = (self.allocates, self.blocks, self.panics,
+                  self.wall_clock, len(self.locks))
+        self.allocates |= other.allocates
+        self.blocks |= other.blocks
+        self.panics |= other.panics
+        self.wall_clock |= other.wall_clock
+        self.locks |= other.locks
+        return before != (self.allocates, self.blocks, self.panics,
+                          self.wall_clock, len(self.locks))
+
+
+def skip_generics(toks, i):
+    """toks[i] is '<'; return the index just past its matching '>'."""
+    depth = 0
+    n = len(toks)
+    while i < n:
+        t = toks[i][0]
+        if t == "<":
+            depth += 1
+        elif t == ">":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return n
+
+
+def direct_allocs(toks, heap_vars):
+    """Direct heap-allocation sites in a token stream: list of
+    (line, what). heap_vars gates the `.clone()` rule — only a clone
+    whose receiver chain is rooted at a known heap-typed local is an
+    allocation (field receivers are not tracked; documented limit)."""
+    out = []
+    n = len(toks)
+    for i, (t, ln) in enumerate(toks):
+        nxt = toks[i + 1][0] if i + 1 < n else ""
+        prv = toks[i - 1][0] if i > 0 else ""
+        if t in ALLOC_TYPES and nxt == "::":
+            j = i + 2
+            if j < n and toks[j][0] == "<":  # Vec::<f32>::new
+                j = skip_generics(toks, j)
+                if j < n and toks[j][0] == "::":
+                    j += 1
+            if (j + 1 < n and toks[j][0] in ALLOC_ASSOC_FNS
+                    and toks[j + 1][0] == "("):
+                out.append((ln, f"{t}::{toks[j][0]}"))
+        elif t in ALLOC_MACROS and nxt == "!":
+            out.append((ln, f"{t}!"))
+        elif t in ALLOC_METHODS and prv == ".":
+            j = i + 1
+            if j + 1 < n and toks[j][0] == "::" and toks[j + 1][0] == "<":
+                j = skip_generics(toks, j + 1)  # .collect::<Vec<_>>()
+            if j < n and toks[j][0] == "(":
+                out.append((ln, f".{t}()"))
+        elif t == "clone" and prv == "." and nxt == "(":
+            root = receiver_root(toks, i - 1)
+            if root and root.split(".")[0] in heap_vars:
+                out.append((ln, ".clone()"))
+    return out
+
+
+def collect_heap_vars(toks):
+    """Locals/params whose type (or initializer) is a known heap
+    container: `name: [&]['a ][mut ]Vec<..>` ascriptions plus
+    `let [mut] name = <rhs with allocation evidence>` bindings."""
+    heap = set()
+    n = len(toks)
+    for i, (t, _) in enumerate(toks):
+        if is_ident(t) and i + 2 < n and toks[i + 1][0] == ":":
+            j = i + 2
+            while j < n:
+                tj = toks[j][0]
+                if tj in ("&", "mut"):
+                    j += 1
+                elif tj == "'":
+                    j += 2  # lifetime: quote + name
+                else:
+                    break
+            if j < n and toks[j][0] in HEAP_CLONE_TYPES:
+                heap.add(t)
+        if t == "let":
+            j = i + 1
+            if j < n and toks[j][0] == "mut":
+                j += 1
+            if not (j < n and is_ident(toks[j][0])):
+                continue
+            name = toks[j][0]
+            k = j + 1
+            while k < n and toks[k][0] not in ("=", ";"):
+                k += 1
+            if not (k < n and toks[k][0] == "="):
+                continue
+            d = 0
+            m = k + 1
+            while m < n:
+                tm = toks[m][0]
+                if tm in "([{":
+                    d += 1
+                elif tm in ")]}":
+                    d -= 1
+                elif tm == ";" and d <= 0:
+                    break
+                nx = toks[m + 1][0] if m + 1 < n else ""
+                pv = toks[m - 1][0] if m > 0 else ""
+                if (
+                    (tm in ALLOC_TYPES and nx == "::")
+                    or (tm in ALLOC_MACROS and nx == "!")
+                    or (tm in ALLOC_METHODS and pv == ".")
+                    or (tm == "clone" and pv == "."
+                        and (lambda r: r and r.split(".")[0] in heap)(
+                            receiver_root(toks, m - 1)))
+                ):
+                    heap.add(name)
+                    break
+                m += 1
+    return heap
+
+
+def local_effects(src, fn):
+    """One scan of a function: its locally-inferred Effects plus two
+    callee-name sets — `calls` (every identifier applied with `(` that
+    is not a guard acquisition; the same edge set the old lock
+    summaries used) and `alloc_calls` (the subset made on lines *not*
+    under an allow-comment). The allocates component propagates only
+    through alloc_calls, so an allow certifies a whole statement —
+    `Arc::new(Mutex::new(Ring::new(..)))` under one allow taints
+    nothing."""
+    toks = tokenize(src.stripped, fn.body_start, fn.body_end, src.starts)
+    eff = Effects()
+    calls = set()
+    alloc_calls = set()
+    heap_vars = collect_heap_vars(toks)
+    for ln, _what in direct_allocs(toks, heap_vars):
+        if not src.allowed(ln):
+            eff.allocates = True
+            break
+    n = len(toks)
+    for i, (t, ln) in enumerate(toks):
+        nxt = toks[i + 1][0] if i + 1 < n else ""
+        prv = toks[i - 1][0] if i > 0 else ""
+        is_acquire = (t in ACQUIRE_METHODS and nxt == "(" and prv == ".")
+        if is_acquire:
+            root = receiver_root(toks, i - 1)
+            if root and root.startswith("self."):
+                eff.locks.add(root)
+            continue
+        if t in BLOCK_METHODS and nxt == "(" and prv == ".":
+            eff.blocks = True
+        elif t == "sleep" and nxt == "(":
+            eff.blocks = True
+        elif t in PANIC_MACROS and nxt == "!":
+            eff.panics = True
+        elif t in PANIC_METHODS and nxt == "(" and prv == ".":
+            eff.panics = True
+        elif (t == "Instant" and nxt == "::" and i + 2 < n
+                and toks[i + 2][0] == "now"):
+            eff.wall_clock = True
+        elif t == "SystemTime":
+            eff.wall_clock = True
+        if is_ident(t) and nxt == "(" and t not in ACQUIRE_METHODS:
+            calls.add(t)
+            if not src.allowed(ln):
+                alloc_calls.add(t)
+    return eff, calls, alloc_calls
+
+
+def build_effect_summaries(sources):
+    """fn name -> Effects for every uniquely named function, local
+    inference merged with callee summaries to fixpoint. The join is
+    monotone and componentwise, so the fixpoint is order-independent —
+    the Rust port must produce the identical table (--dump-effects).
+    allocates propagates through the allow-filtered edge set; the
+    other components (locks, blocks, panics, wall_clock) through the
+    raw one."""
     local = {}
     calls = {}
+    alloc_calls = {}
     def_count = {}
     for src in sources:
         for fn in src.functions:
             def_count[fn.name] = def_count.get(fn.name, 0) + 1
-            _, acqs, callees = local_lock_info(src, fn)
-            local.setdefault(fn.name, set()).update(
-                r for (r, _, _) in acqs if r.startswith("self."))
+            eff, callees, acallees = local_effects(src, fn)
+            local.setdefault(fn.name, Effects()).merge(eff)
             calls.setdefault(fn.name, set()).update(callees)
+            alloc_calls.setdefault(fn.name, set()).update(acallees)
     unique = {n for n, c in def_count.items() if c == 1}
-    summaries = {k: set(v) for k, v in local.items() if k in unique}
+    summaries = {}
+    for name in unique:
+        s = Effects()
+        s.merge(local[name])
+        summaries[name] = s
     changed = True
     while changed:
         changed = False
         for name, callees in calls.items():
             if name not in unique:
                 continue
-            cur = summaries.setdefault(name, set())
-            before = len(cur)
+            cur = summaries[name]
             for c in callees:
-                if c in summaries and c != name:
-                    cur |= summaries[c]
-            if len(cur) != before:
-                changed = True
-    return {k: v for k, v in summaries.items() if v}
+                if c not in summaries or c == name:
+                    continue
+                o = summaries[c]
+                if o.blocks and not cur.blocks:
+                    cur.blocks = True
+                    changed = True
+                if o.panics and not cur.panics:
+                    cur.panics = True
+                    changed = True
+                if o.wall_clock and not cur.wall_clock:
+                    cur.wall_clock = True
+                    changed = True
+                if not o.locks <= cur.locks:
+                    cur.locks |= o.locks
+                    changed = True
+                if (o.allocates and not cur.allocates
+                        and c in alloc_calls.get(name, ())):
+                    cur.allocates = True
+                    changed = True
+    return summaries
+
+
+def dump_effects(summaries):
+    """Stable one-line-per-function rendering — the parity golden."""
+    lines = []
+    for name in sorted(summaries):
+        e = summaries[name]
+        locks = ",".join(sorted(e.locks)) if e.locks else "-"
+        lines.append(
+            f"{name}: alloc={int(e.allocates)} block={int(e.blocks)} "
+            f"panic={int(e.panics)} wall={int(e.wall_clock)} "
+            f"locks={locks}")
+    return lines
 
 
 # ---------------------------------------------------------------------------
@@ -710,8 +999,6 @@ def pass_determinism(src):
         ln = src.line(m.start())
         if src.rel.endswith(TIMER_ALLOW_FILES):
             continue
-        if src.allowed(ln) or src.in_tests(ln):
-            continue
         # `use std::time::SystemTime;` names the type without reading
         # the clock — only expression sites are findings.
         line_text = src.stripped[src.starts[ln - 1]:].split("\n", 1)[0]
@@ -725,8 +1012,6 @@ def pass_determinism(src):
         ))
     for m in RANDOM_RE.finditer(src.stripped):
         ln = src.line(m.start())
-        if src.allowed(ln) or src.in_tests(ln):
-            continue
         findings.append(Finding(
             src, ln, "determinism",
             f"unseeded randomness (`{m.group(0)}`) — every random draw "
@@ -751,8 +1036,6 @@ def pass_determinism(src):
             r")\s*\.\s*(iter|keys|values|into_iter|drain)\s*\(")
         for m in iter_re.finditer(body):
             ln = src.line(fn.body_start + m.start())
-            if src.allowed(ln) or src.in_tests(ln):
-                continue
             findings.append(Finding(
                 src, ln, "determinism",
                 f"iterating Hash{{Map,Set}} `{m.group(1)}` inside "
@@ -765,8 +1048,6 @@ def pass_determinism(src):
             body,
         ):
             ln = src.line(fn.body_start + m.start(1))
-            if src.allowed(ln) or src.in_tests(ln):
-                continue
             findings.append(Finding(
                 src, ln, "determinism",
                 f"for-loop over Hash{{Map,Set}} `{m.group(1)}` inside "
@@ -808,8 +1089,6 @@ def pass_panic(src):
     findings = []
     for m in UNWRAP_RE.finditer(src.stripped):
         ln = src.line(m.start())
-        if src.allowed(ln) or src.in_tests(ln):
-            continue
         findings.append(Finding(
             src, ln, "panic",
             f"`.{m.group(1)}(...)` in a runtime module — return a typed "
@@ -834,8 +1113,6 @@ def pass_panic(src):
         # `self.b[` style macro? attributes were stripped of nothing —
         # attribute brackets follow '#' or '!', already excluded.
         ln = src.line(i)
-        if src.allowed(ln) or src.in_tests(ln):
-            continue
         findings.append(Finding(
             src, ln, "panic",
             "slice/array indexing in a runtime module — use `.get()` "
@@ -920,8 +1197,6 @@ def pass_schema(src, raw_fields=frozenset()):
     if not src.rel.endswith("util/json.rs"):
         for m in JSON_NUM_RE.finditer(src.stripped):
             ln = src.line(m.start())
-            if src.allowed(ln) or src.in_tests(ln):
-                continue
             findings.append(Finding(
                 src, ln, "schema",
                 "`Json::Num` constructed outside util::json — go through "
@@ -931,8 +1206,6 @@ def pass_schema(src, raw_fields=frozenset()):
             ))
     for m in NUM_CALL_RE.finditer(src.stripped):
         ln = src.line(m.start())
-        if src.allowed(ln) or src.in_tests(ln):
-            continue
         if src.rel.endswith("util/json.rs"):
             continue
         arg = balanced_arg(src.stripped, src.stripped.find("(", m.start()))
@@ -993,8 +1266,6 @@ def pass_unsafe(src):
     sanctioned = in_unsafe_scope(src.rel)
     for m in UNSAFE_RE.finditer(src.stripped):
         ln = src.line(m.start())
-        if src.allowed(ln) or src.in_tests(ln):
-            continue
         if not sanctioned:
             findings.append(Finding(
                 src, ln, "unsafe",
@@ -1014,55 +1285,445 @@ def pass_unsafe(src):
 
 
 # ---------------------------------------------------------------------------
+# Pass 6: hot-path allocation discipline
+# ---------------------------------------------------------------------------
+
+# The designated hot regions: (path, fn-name set or None for "every
+# function in the file"). Paths ending in '/' are directory prefixes,
+# otherwise exact file tails, both relative to the lint root (the
+# rust/src/ prefix is stripped so fixtures scope the same way the
+# panic/unsafe passes do).
+HOT_REGIONS = [
+    ("tensor/kernels/", None),
+    ("tensor/workspace.rs", {"take", "give"}),
+    ("coordinator/trainer.rs", {"step", "step_image", "run_burst"}),
+    ("serve/scheduler.rs", {"run_stream_pool"}),
+    ("trace/", {"record", "span", "instant", "instant_dur", "with_slot",
+                "push", "count_cat", "count_dropped", "gauge_set",
+                "observe_dur"}),
+]
+
+HOTPATH_FIX = (
+    "take the buffer from a Workspace pool or mark a warmup-only site "
+    "with `// lint: allow(warmup: ...)`"
+)
+
+
+def hot_region(rel):
+    """(is_hot_file, fn-name set or None) for a lint-root-relative
+    path; first matching region wins."""
+    tail = rel.split("rust/src/")[-1]
+    for path, fns in HOT_REGIONS:
+        if (path.endswith("/") and tail.startswith(path)) or tail == path:
+            return True, fns
+    return False, None
+
+
+def pass_hotpath(src, effects, fn_names):
+    hot, hot_fns = hot_region(src.rel)
+    if not hot:
+        return []
+    findings = []
+    for fn in src.functions:
+        if hot_fns is not None and fn.name not in hot_fns:
+            continue
+        toks = tokenize(src.stripped, fn.body_start, fn.body_end,
+                        src.starts)
+        heap_vars = collect_heap_vars(toks)
+        for ln, what in direct_allocs(toks, heap_vars):
+            findings.append(Finding(
+                src, ln, "hotpath-alloc",
+                f"heap allocation (`{what}`) in a designated hot region "
+                "— the zero-alloc-after-warmup contract forbids it; "
+                + HOTPATH_FIX,
+            ))
+        n = len(toks)
+        for i, (t, ln) in enumerate(toks):
+            if (
+                is_ident(t)
+                and i + 1 < n
+                and toks[i + 1][0] == "("
+                and t not in ACQUIRE_METHODS
+                and t != fn.name
+                and t in effects
+                and effects[t].allocates
+                and (fn_names is None or t in fn_names)
+            ):
+                findings.append(Finding(
+                    src, ln, "hotpath-alloc",
+                    f"call to `{t}()` in a designated hot region — "
+                    f"`{t}` (transitively) performs heap allocation; "
+                    + HOTPATH_FIX,
+                ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Pass 7: atomics policy
+# ---------------------------------------------------------------------------
+
+ORDERINGS = {"Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"}
+
+# Per-module ordering policy, first match wins (paths relative to the
+# lint root, '/'-suffixed entries are directory prefixes). SeqCst is
+# deliberately in no policy: a sequentially-consistent site always
+# carries a `// lint: allow(...)` naming the reason. trace/ counters
+# and metrics are single-cell and stay Relaxed; serve/ owns the
+# cross-thread handoff (writer queue, stream cursors) where
+# Acquire/Release pairs publish memory.
+ATOMIC_POLICY = [
+    ("trace/", ("Relaxed",)),
+    ("serve/", ("Relaxed", "Acquire", "Release", "AcqRel")),
+]
+ATOMIC_DEFAULT = ("Relaxed",)
+
+
+def atomic_policy(rel):
+    """(scope label, allowed orderings) for a lint-root-relative path."""
+    tail = rel.split("rust/src/")[-1]
+    for path, allowed in ATOMIC_POLICY:
+        if (path.endswith("/") and tail.startswith(path)) or tail == path:
+            return path, allowed
+    return "default", ATOMIC_DEFAULT
+
+
+def pass_atomics(src):
+    findings = []
+    scope, allowed = atomic_policy(src.rel)
+    toks = tokenize(src.stripped, 0, len(src.stripped), src.starts)
+    n = len(toks)
+    for i, (t, ln) in enumerate(toks):
+        if (
+            t == "Ordering"
+            and i + 2 < n
+            and toks[i + 1][0] == "::"
+            and toks[i + 2][0] in ORDERINGS
+            and toks[i + 2][0] not in allowed
+        ):
+            o = toks[i + 2][0]
+            findings.append(Finding(
+                src, ln, "atomics-policy",
+                f"`Ordering::{o}` violates the atomics policy for "
+                f"`{scope}` (allowed: {', '.join(allowed)}) — counters "
+                "and metrics stay Relaxed, cross-thread handoff uses "
+                "Acquire/Release pairs, and any exception documents "
+                "its reason with `// lint: allow(...)`",
+            ))
+    # Non-atomic read-modify-write: a separate atomic `load` then
+    # `store` on the same cell inside one function loses concurrent
+    # updates between the two. The Ordering token inside the argument
+    # list is what distinguishes an atomic access from e.g. a config
+    # load.
+    for fn in src.functions:
+        toks = tokenize(src.stripped, fn.body_start, fn.body_end,
+                        src.starts)
+        n = len(toks)
+        loads = {}
+        for i, (t, ln) in enumerate(toks):
+            if (
+                t in ("load", "store")
+                and i >= 1
+                and toks[i - 1][0] == "."
+                and i + 1 < n
+                and toks[i + 1][0] == "("
+            ):
+                j = i + 1
+                depth = 0
+                has_ordering = False
+                while j < n:
+                    tj = toks[j][0]
+                    if tj == "(":
+                        depth += 1
+                    elif tj == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    elif tj == "Ordering":
+                        has_ordering = True
+                    j += 1
+                if not has_ordering:
+                    continue
+                root = receiver_root(toks, i - 1)
+                if not root:
+                    continue
+                if t == "load":
+                    loads.setdefault(root, ln)
+                elif root in loads:
+                    findings.append(Finding(
+                        src, ln, "atomics-policy",
+                        f"separate atomic `load` (line {loads[root]}) "
+                        f"then `store` on `{root}` — a non-atomic "
+                        "read-modify-write loses concurrent updates; "
+                        "use `fetch_*`/`compare_exchange` or document "
+                        "the single-writer invariant with "
+                        "`// lint: allow(...)`",
+                    ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Pass 8: allow hygiene (empty reasons). Stale-allow detection lives in
+# check_allows() — it needs the suppressed-finding set, not a per-file
+# scan.
+# ---------------------------------------------------------------------------
+
+def pass_allow_hygiene(src):
+    findings = []
+    for origin, _covered, reason in src.allow_spans:
+        if not reason:
+            findings.append(Finding(
+                src, origin, "allow",
+                "`lint: allow()` with an empty reason — every "
+                "suppression names its invariant (e.g. "
+                "`// lint: allow(warmup: pool-miss growth)`)",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
 def run_passes(sources):
-    summaries = build_lock_summaries(sources)
+    """Run every pass, dedupe, and apply the central allow/test-region
+    filter. Returns (findings, suppressed): suppressed holds the
+    findings an allow-comment absorbed (check_allows uses them to spot
+    stale allows). Passes emit raw findings; only run_passes filters —
+    except `allow`-pass findings, which bypass both filters (an empty
+    reason must not suppress its own report)."""
+    effects = build_effect_summaries(sources)
     fn_names = {fn.name for s in sources for fn in s.functions}
     raw_fields = collect_raw_float_fields(sources)
-    findings = []
+    raw = []
     for src in sources:
-        findings.extend(pass_lock(src, summaries, fn_names))
-        findings.extend(pass_determinism(src))
-        findings.extend(pass_panic(src))
-        findings.extend(pass_schema(src, raw_fields))
-        findings.extend(pass_unsafe(src))
+        raw.extend(pass_lock(src, effects, fn_names))
+        raw.extend(pass_determinism(src))
+        raw.extend(pass_panic(src))
+        raw.extend(pass_schema(src, raw_fields))
+        raw.extend(pass_unsafe(src))
+        raw.extend(pass_hotpath(src, effects, fn_names))
+        raw.extend(pass_atomics(src))
+        raw.extend(pass_allow_hygiene(src))
+    by_rel = {s.rel: s for s in sources}
     seen = set()
-    deduped = []
-    for f in findings:
+    findings = []
+    suppressed = []
+    for f in raw:
         key = (f.rel, f.line, f.pass_name)
-        if key not in seen:
-            seen.add(key)
-            deduped.append(f)
-    deduped.sort(key=lambda f: (f.rel, f.line, f.pass_name))
-    return deduped
+        if key in seen:
+            continue
+        seen.add(key)
+        src = by_rel[f.rel]
+        if f.pass_name == "allow":
+            findings.append(f)
+            continue
+        if src.in_tests(f.line):
+            continue
+        if src.allowed(f.line):
+            suppressed.append(f)
+            continue
+        findings.append(f)
+    findings.sort(key=lambda f: (f.rel, f.line, f.pass_name))
+    suppressed.sort(key=lambda f: (f.rel, f.line, f.pass_name))
+    return findings, suppressed
+
+
+def alloc_cert_lines(src):
+    """Lines holding a direct heap-allocation site: an allow covering
+    one certifies the site for the effect engine (allocates does not
+    taint callers) even when the file/function is not a hot region, so
+    check_allows counts it as used."""
+    lines = set()
+    for fn in src.functions:
+        toks = tokenize(src.stripped, fn.body_start, fn.body_end,
+                        src.starts)
+        heap_vars = collect_heap_vars(toks)
+        for ln, _what in direct_allocs(toks, heap_vars):
+            lines.add(ln)
+    return lines
+
+
+def check_allows(sources, suppressed):
+    """Stale-allow audit: every allow span must either absorb at least
+    one finding or certify an allocation site for the effect engine
+    (test regions are exempt from linting entirely, so an allow inside
+    one is stale by definition). Returns problem lines."""
+    sup = {}
+    for f in suppressed:
+        sup.setdefault(f.rel, set()).add(f.line)
+    problems = []
+    for src in sources:
+        certs = alloc_cert_lines(src)
+        for origin, covered, reason in src.allow_spans:
+            if not reason:
+                continue  # reported by the allow-hygiene pass
+            used = any(ln in sup.get(src.rel, ()) or ln in certs
+                       for ln in covered)
+            if not used:
+                problems.append(
+                    f"{src.rel}:{origin}: stale `lint: allow({reason})` "
+                    "— it no longer suppresses any finding; delete it")
+    return problems
 
 
 def list_allows(sources):
     n = 0
-    seen = set()
     for src in sources:
-        for ln in sorted(src.allows):
-            reason = src.allows[ln]
-            key = (src.rel, reason)
-            if key in seen:
-                continue  # a lone allow-comment registers two lines
-            seen.add(key)
-            print(f"{src.rel}:{ln}: allow({reason})")
+        for origin, _covered, reason in src.allow_spans:
+            print(f"{src.rel}:{origin}: allow({reason})")
             n += 1
     print(f"asi-lint: {n} allow site(s)")
 
 
-def self_test(fixture_root):
+# ---------------------------------------------------------------------------
+# Output infrastructure: SARIF export, baseline suppression, diff mode.
+# Shared contract with the Rust driver: same SARIF shape, same baseline
+# matching rule (file + pass + message, line-insensitive so a baseline
+# survives unrelated edits above the site), same diff filter (findings
+# on changed lines only — a strict subset of the full run).
+# ---------------------------------------------------------------------------
+
+PASS_DESCRIPTIONS = {
+    "lock": "Lock discipline: guard liveness, guards across panic/"
+            "channel boundaries, transitive re-acquisition.",
+    "determinism": "Wall-clock, unseeded randomness, HashMap iteration "
+                   "order feeding artifacts.",
+    "panic": "No unwrap/expect/indexing in runtime modules.",
+    "schema": "Json::Num only through the omit-or-flag scheme.",
+    "unsafe": "unsafe confined to tensor/kernels/ with SAFETY "
+              "contracts.",
+    "hotpath-alloc": "No direct or transitively reachable heap "
+                     "allocation in designated hot regions.",
+    "atomics-policy": "Ordering sites match the per-module policy "
+                      "table; no split load/store read-modify-write.",
+    "allow": "Allow hygiene: every suppression carries a reason.",
+}
+
+
+def sarif_doc(findings):
+    rules = [{"id": p, "shortDescription": {"text": d}}
+             for p, d in sorted(PASS_DESCRIPTIONS.items())]
+    results = [{
+        "ruleId": f.pass_name,
+        "level": "error",
+        "message": {"text": f.msg},
+        "locations": [{"physicalLocation": {
+            "artifactLocation": {"uri": f.rel},
+            "region": {"startLine": f.line},
+        }}],
+    } for f in findings]
+    return {
+        "$schema": "https://json.schemastore.org/sarif-2.1.0.json",
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {"name": "asi-lint", "rules": rules}},
+            "results": results,
+        }],
+    }
+
+
+BASELINE_LINE_RE = re.compile(r"^(.*):(\d+): \[([\w-]+)\] (.*)$")
+
+
+def load_baseline(path):
+    """Parse a baseline file (finding lines verbatim; '#' comments and
+    blanks ignored). Returns a list of (raw_line, (file, pass, msg))
+    or raises ValueError on an unparseable entry."""
+    entries = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for raw in fh:
+            raw = raw.strip()
+            if not raw or raw.startswith("#"):
+                continue
+            m = BASELINE_LINE_RE.match(raw)
+            if not m:
+                raise ValueError(f"unparseable baseline entry: {raw!r}")
+            entries.append((raw, (m.group(1), m.group(3), m.group(4))))
+    return entries
+
+
+def apply_baseline(findings, entries):
+    """Suppress findings matching a baseline entry (file + pass + msg,
+    line-insensitive). Returns (kept, stale_raw_lines)."""
+    keys = {key for _, key in entries}
+    kept = []
+    used = set()
+    for f in findings:
+        key = (f.rel, f.pass_name, f.msg)
+        if key in keys:
+            used.add(key)
+        else:
+            kept.append(f)
+    stale = [raw for raw, key in entries if key not in used]
+    return kept, stale
+
+
+DIFF_HUNK_RE = re.compile(r"@@ -\d+(?:,\d+)? \+(\d+)(?:,(\d+))? @@")
+
+
+def git_changed_lines(repo, ref):
+    """file -> set of changed line numbers vs `ref` (git diff -U0).
+    Returns None on git failure (caller exits 2)."""
+    try:
+        proc = subprocess.run(
+            ["git", "-C", repo, "diff", "--unified=0", ref, "--"],
+            capture_output=True, text=True)
+    except OSError as e:
+        print(f"asi-lint: git diff failed: {e}", file=sys.stderr)
+        return None
+    if proc.returncode != 0:
+        print(f"asi-lint: git diff {ref} failed: "
+              f"{proc.stderr.strip()}", file=sys.stderr)
+        return None
+    changed = {}
+    cur = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("+++ "):
+            p = line[4:].strip()
+            cur = p[2:] if p.startswith("b/") else None
+        elif line.startswith("@@") and cur is not None:
+            m = DIFF_HUNK_RE.match(line)
+            if m:
+                start = int(m.group(1))
+                cnt = 1 if m.group(2) is None else int(m.group(2))
+                for ln in range(start, start + cnt):
+                    changed.setdefault(cur, set()).add(ln)
+    return changed
+
+
+def print_findings(findings, n_sources, fmt):
+    if fmt == "sarif":
+        print(json.dumps(sarif_doc(findings), indent=2))
+        out = sys.stderr
+    else:
+        for f in findings:
+            print(f"asi-lint: {f}")
+        out = sys.stdout
+    by_pass = {}
+    for f in findings:
+        by_pass[f.pass_name] = by_pass.get(f.pass_name, 0) + 1
+    tally = ", ".join(
+        f"{k}: {v}" for k, v in sorted(by_pass.items())) or "clean"
+    print(f"asi-lint: {n_sources} file(s), {len(findings)} finding(s) "
+          f"({tally})", file=out)
+
+
+# ---------------------------------------------------------------------------
+# Self-test: fixture contract, effects golden, CLI exit-code suite.
+# ---------------------------------------------------------------------------
+
+def self_test_fixtures(fixture_root, failures):
     """Every fixture file named bad*.rs must produce exactly the
     findings its `//~ ERROR <pass>` markers declare (same line, same
     pass); good*.rs files must be clean. Fixture dirs are named after
     the pass they exercise but all passes run on all fixtures — a bad
-    file for one pass must not trip another by accident."""
-    failures = []
+    file for one pass must not trip another by accident. The effects/
+    dir is the parity golden, checked separately."""
     n_files = 0
     for dirpath, _, files in sorted(os.walk(fixture_root)):
+        rel_dir = os.path.relpath(dirpath, fixture_root)
+        if rel_dir.split(os.sep)[0] == "effects":
+            continue
         rs = [f for f in sorted(files) if f.endswith(".rs")]
         if not rs:
             continue
@@ -1079,7 +1740,7 @@ def self_test(fixture_root):
                 parts = rel.split(os.sep)
                 scoped = os.path.join(*parts[1:]) if len(parts) > 1 else rel
                 srcs.append(Source(path, scoped, fh.read()))
-        findings = run_passes(srcs)
+        findings, _suppressed = run_passes(srcs)
         for src in srcs:
             n_files += 1
             mine = [f for f in findings if f.rel == src.rel]
@@ -1099,6 +1760,157 @@ def self_test(fixture_root):
                 failures.append(
                     f"{src.rel}:{ln}: unexpected [{p}] finding in bad "
                     "fixture (add a //~ ERROR marker or fix the pass)")
+    return n_files
+
+
+def self_test_effects(fixture_root, failures):
+    """fixtures/effects/*.rs analyzed as one crate must dump exactly
+    expected_effects.txt — the same golden tests/fixtures.rs asserts
+    for the Rust port, so a drifting engine fails both drivers."""
+    eff_dir = os.path.join(fixture_root, "effects")
+    expect_path = os.path.join(eff_dir, "expected_effects.txt")
+    if not os.path.isdir(eff_dir) or not os.path.isfile(expect_path):
+        failures.append("fixtures/effects/ golden missing")
+        return 0
+    srcs = []
+    for f in sorted(os.listdir(eff_dir)):
+        if f.endswith(".rs"):
+            path = os.path.join(eff_dir, f)
+            with open(path, "r", encoding="utf-8") as fh:
+                srcs.append(Source(path, f, fh.read()))
+    got = dump_effects(build_effect_summaries(srcs))
+    with open(expect_path, "r", encoding="utf-8") as fh:
+        want = [l.rstrip("\n") for l in fh if l.strip()]
+    if got != want:
+        for line in sorted(set(want) - set(got)):
+            failures.append(f"effects golden: missing line {line!r}")
+        for line in sorted(set(got) - set(want)):
+            failures.append(f"effects golden: unexpected line {line!r}")
+    return len(srcs)
+
+
+def self_test_cli(failures):
+    """Exit-code and output-format contract, exercised through real
+    subprocess invocations of this script (satellite: 0 clean /
+    1 findings / 2 internal error, SARIF shape, baseline round-trip,
+    stale-allow detection)."""
+    script = os.path.abspath(__file__)
+
+    def run(*args):
+        return subprocess.run(
+            [sys.executable, script, *args],
+            capture_output=True, text=True)
+
+    with tempfile.TemporaryDirectory() as td:
+        with open(os.path.join(td, "clean.rs"), "w",
+                  encoding="utf-8") as fh:
+            fh.write("pub fn ok(a: u32) -> u32 { a + 1 }\n")
+        p = run("--root", td)
+        if p.returncode != 0:
+            failures.append(f"cli: clean tree exited {p.returncode}, "
+                            "want 0")
+        p = run("--root", os.path.join(td, "missing"))
+        if p.returncode != 2:
+            failures.append(f"cli: missing root exited {p.returncode}, "
+                            "want 2")
+        p = run("--no-such-flag")
+        if p.returncode != 2:
+            failures.append(f"cli: unknown flag exited {p.returncode}, "
+                            "want 2")
+        with open(os.path.join(td, "bad.rs"), "w",
+                  encoding="utf-8") as fh:
+            fh.write("pub fn f() -> u32 {\n"
+                     "    unsafe { core::mem::transmute(1u32) }\n"
+                     "}\n")
+        p = run("--root", td)
+        if p.returncode != 1:
+            failures.append(f"cli: finding tree exited {p.returncode}, "
+                            "want 1")
+        finding_lines = [
+            l[len("asi-lint: "):] for l in p.stdout.splitlines()
+            if l.startswith("asi-lint: ") and ": [" in l]
+        if not finding_lines:
+            failures.append("cli: no finding line to build a baseline "
+                            "from")
+            return
+        p = run("--root", td, "--format", "sarif")
+        if p.returncode != 1:
+            failures.append(f"cli: sarif run exited {p.returncode}, "
+                            "want 1")
+        try:
+            doc = json.loads(p.stdout)
+            assert doc["version"] == "2.1.0"
+            assert doc["runs"][0]["tool"]["driver"]["name"] == "asi-lint"
+            assert len(doc["runs"][0]["results"]) == len(finding_lines)
+            r0 = doc["runs"][0]["results"][0]
+            assert r0["locations"][0]["physicalLocation"]["region"][
+                "startLine"] >= 1
+        except (ValueError, KeyError, AssertionError, IndexError) as e:
+            failures.append(f"cli: sarif output malformed: {e}")
+        base = os.path.join(td, "baseline.txt")
+        with open(base, "w", encoding="utf-8") as fh:
+            fh.write("# known findings\n")
+            fh.write("\n".join(finding_lines) + "\n")
+        p = run("--root", td, "--baseline", base)
+        if p.returncode != 0:
+            failures.append(f"cli: baselined run exited {p.returncode}, "
+                            "want 0")
+        with open(base, "a", encoding="utf-8") as fh:
+            fh.write("gone.rs:1: [unsafe] no longer exists\n")
+        p = run("--root", td, "--baseline", base)
+        if p.returncode != 1 or "stale baseline entry" not in p.stderr:
+            failures.append("cli: stale baseline entry not reported "
+                            f"(exit {p.returncode})")
+        p = run("--root", td, "--baseline", os.path.join(td, "nope.txt"))
+        if p.returncode != 2:
+            failures.append(f"cli: missing baseline exited "
+                            f"{p.returncode}, want 2")
+        with open(os.path.join(td, "stale.rs"), "w",
+                  encoding="utf-8") as fh:
+            fh.write("pub fn g(a: u32) -> u32 {\n"
+                     "    a + 2 // lint: allow(bogus: nothing here)\n"
+                     "}\n")
+        p = run("--root", td, "--check-allows")
+        if p.returncode != 1 or "stale `lint: allow(" not in p.stdout:
+            failures.append("cli: stale allow not reported "
+                            f"(exit {p.returncode})")
+        # a *used* allow passes --check-allows: suppress bad.rs's
+        # finding and drop the stale file.
+        os.unlink(os.path.join(td, "stale.rs"))
+        with open(os.path.join(td, "bad.rs"), "w",
+                  encoding="utf-8") as fh:
+            fh.write("pub fn f() -> u32 {\n"
+                     "    // lint: allow(fixture: sanctioned transmute)\n"
+                     "    unsafe { core::mem::transmute(1u32) }\n"
+                     "}\n")
+        p = run("--root", td, "--check-allows")
+        if p.returncode != 0:
+            failures.append(f"cli: used allow flagged stale "
+                            f"(exit {p.returncode})")
+        # diff mode: an unrelated ref yields no changed lines in td,
+        # so findings filter to the empty set (diff ⊆ full).
+        os.unlink(os.path.join(td, "bad.rs"))
+        with open(os.path.join(td, "bad.rs"), "w",
+                  encoding="utf-8") as fh:
+            fh.write("pub fn f() -> u32 {\n"
+                     "    unsafe { core::mem::transmute(1u32) }\n"
+                     "}\n")
+        p = run("--root", td, "--diff", "HEAD")
+        if p.returncode != 0:
+            failures.append(f"cli: diff-filtered run exited "
+                            f"{p.returncode}, want 0 (no changed lines "
+                            "in a temp tree)")
+        p = run("--root", td, "--diff", "no-such-ref-xyzzy")
+        if p.returncode != 2:
+            failures.append(f"cli: bad git ref exited {p.returncode}, "
+                            "want 2")
+
+
+def self_test(fixture_root):
+    failures = []
+    n_files = self_test_fixtures(fixture_root, failures)
+    n_files += self_test_effects(fixture_root, failures)
+    self_test_cli(failures)
     for f in failures:
         print(f"asi-lint self-test: FAIL: {f}", file=sys.stderr)
     print(f"asi-lint self-test: {n_files} fixture file(s), "
@@ -1109,15 +1921,33 @@ def self_test(fixture_root):
 def main(argv):
     root = "rust/src"
     mode = "lint"
+    fmt = "text"
+    baseline = None
+    diff_ref = None
+    do_check_allows = False
     args = list(argv)
     while args:
         a = args.pop(0)
-        if a == "--root":
+        if a == "--root" and args:
             root = args.pop(0)
         elif a == "--self-test":
             mode = "self-test"
         elif a == "--list-allows":
             mode = "list-allows"
+        elif a == "--dump-effects":
+            mode = "dump-effects"
+        elif a == "--check-allows":
+            do_check_allows = True
+        elif a == "--format" and args:
+            fmt = args.pop(0)
+            if fmt not in ("text", "sarif"):
+                print(f"asi-lint: unknown format {fmt!r}",
+                      file=sys.stderr)
+                return 2
+        elif a == "--baseline" and args:
+            baseline = args.pop(0)
+        elif a == "--diff" and args:
+            diff_ref = args.pop(0)
         elif a in ("-h", "--help"):
             print(__doc__)
             return 0
@@ -1138,21 +1968,49 @@ def main(argv):
             if f.endswith(".rs"):
                 path = os.path.join(dirpath, f)
                 rel = os.path.join(root, os.path.relpath(path, root_abs))
-                with open(path, "r", encoding="utf-8") as fh:
-                    sources.append(Source(path, rel, fh.read()))
+                try:
+                    with open(path, "r", encoding="utf-8") as fh:
+                        sources.append(Source(path, rel, fh.read()))
+                except OSError as e:
+                    print(f"asi-lint: cannot read {path}: {e}",
+                          file=sys.stderr)
+                    return 2
     if mode == "list-allows":
         list_allows(sources)
         return 0
-    findings = run_passes(sources)
-    for f in findings:
-        print(f"asi-lint: {f}")
-    by_pass = {}
-    for f in findings:
-        by_pass[f.pass_name] = by_pass.get(f.pass_name, 0) + 1
-    tally = ", ".join(f"{k}: {v}" for k, v in sorted(by_pass.items())) or "clean"
-    print(f"asi-lint: {len(sources)} file(s), {len(findings)} finding(s) "
-          f"({tally})")
-    return 1 if findings else 0
+    findings, suppressed = run_passes(sources)
+    if mode == "dump-effects":
+        for line in dump_effects(build_effect_summaries(sources)):
+            print(line)
+        return 0
+    failed = False
+    if baseline is not None:
+        try:
+            entries = load_baseline(baseline)
+        except (OSError, ValueError) as e:
+            print(f"asi-lint: bad --baseline: {e}", file=sys.stderr)
+            return 2
+        findings, stale = apply_baseline(findings, entries)
+        for raw in stale:
+            print(f"asi-lint: stale baseline entry: {raw}",
+                  file=sys.stderr)
+        failed |= bool(stale)
+    if diff_ref is not None:
+        changed = git_changed_lines(repo, diff_ref)
+        if changed is None:
+            return 2
+        findings = [f for f in findings
+                    if f.line in changed.get(f.rel, ())]
+    print_findings(findings, len(sources), fmt)
+    failed |= bool(findings)
+    if do_check_allows:
+        problems = check_allows(sources, suppressed)
+        for p in problems:
+            print(f"asi-lint: {p}")
+        print(f"asi-lint: --check-allows: {len(problems)} stale "
+              "allow(s)")
+        failed |= bool(problems)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

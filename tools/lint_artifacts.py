@@ -14,7 +14,10 @@ nothing), but a `--require`d file that is missing FAILS the lint —
 use it for artifacts that are always written (the benches emit
 BENCH_*.json even without artifacts, so their absence is itself a
 regression). Any file that does exist must parse and must not contain
-nulls outside the allowlist. Exit code 1 on any violation.
+nulls outside the allowlist. Files ending in `.sarif` are checked
+against the asi-lint SARIF 2.1.0 shape instead (CI uploads the lint
+report as an artifact; a malformed one would poison code-scanning
+ingestion silently). Exit code 1 on any violation.
 """
 
 import glob
@@ -317,6 +320,86 @@ def check_tensor_ops_schema(path, doc):
     return errs
 
 
+def check_sarif(path, doc):
+    """Schema checks for asi-lint's `--format sarif` output (SARIF
+    2.1.0): the exact shape both drivers emit, so CI catches a
+    malformed report before uploading it. Every result must cite a
+    rule the driver declares and carry a message plus one physical
+    location with a file and a positive start line."""
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    errs = []
+    if doc.get("version") != "2.1.0":
+        errs.append(
+            f"{path}: version is {doc.get('version')!r}, want '2.1.0'"
+        )
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or len(runs) != 1 \
+            or not isinstance(runs[0], dict):
+        return errs + [f"{path}: 'runs' is not a one-element array"]
+    run = runs[0]
+    driver = (run.get("tool") or {}).get("driver") \
+        if isinstance(run.get("tool"), dict) else None
+    if not isinstance(driver, dict):
+        return errs + [f"{path}: missing tool.driver object"]
+    if driver.get("name") != "asi-lint":
+        errs.append(
+            f"{path}: tool.driver.name is {driver.get('name')!r}, "
+            "want 'asi-lint'"
+        )
+    rule_ids = {
+        r.get("id")
+        for r in driver.get("rules") or []
+        if isinstance(r, dict)
+    }
+    if not rule_ids:
+        errs.append(f"{path}: tool.driver.rules is empty")
+    results = run.get("results")
+    if not isinstance(results, list):
+        return errs + [f"{path}: missing 'results' array"]
+    for i, r in enumerate(results):
+        if not isinstance(r, dict):
+            errs.append(f"{path}: results[{i}] is not an object")
+            continue
+        if r.get("ruleId") not in rule_ids:
+            errs.append(
+                f"{path}: results[{i}].ruleId {r.get('ruleId')!r} is "
+                "not a declared rule"
+            )
+        msg = r.get("message")
+        if not isinstance(msg, dict) \
+                or not isinstance(msg.get("text"), str) \
+                or not msg["text"]:
+            errs.append(
+                f"{path}: results[{i}] has no message.text string"
+            )
+        locs = r.get("locations")
+        phys = locs[0].get("physicalLocation") \
+            if isinstance(locs, list) and len(locs) == 1 \
+            and isinstance(locs[0], dict) else None
+        if not isinstance(phys, dict):
+            errs.append(
+                f"{path}: results[{i}] has no single physicalLocation"
+            )
+            continue
+        art = phys.get("artifactLocation")
+        if not isinstance(art, dict) \
+                or not isinstance(art.get("uri"), str) \
+                or not art["uri"]:
+            errs.append(
+                f"{path}: results[{i}] has no artifactLocation.uri"
+            )
+        region = phys.get("region")
+        line = _int_or_none(region.get("startLine")) \
+            if isinstance(region, dict) else None
+        if line is None or line < 1:
+            errs.append(
+                f"{path}: results[{i}] has no positive "
+                "region.startLine"
+            )
+    return errs
+
+
 def lint(path):
     """Returns a list of violation strings for one existing file."""
     try:
@@ -324,6 +407,10 @@ def lint(path):
             doc = json.load(fh)
     except (OSError, ValueError) as e:
         return [f"{path}: unparseable JSON ({e})"]
+    if path.endswith(".sarif"):
+        # SARIF is a report about source, not run output: the null
+        # and fault-schema checks don't apply.
+        return check_sarif(path, doc)
     bad = []
     find_nulls(doc, "", bad)
     errs = [f"{path}: null value at '{p}'" for p in bad]
@@ -350,7 +437,7 @@ def self_test():
     for dirpath, _, files in sorted(os.walk(fix_root)):
         case = os.path.basename(dirpath)
         for f in sorted(files):
-            if not f.endswith(".json"):
+            if not f.endswith((".json", ".sarif")):
                 continue
             n_files += 1
             path = os.path.join(dirpath, f)
